@@ -1,0 +1,47 @@
+//! The §4.2 scenario as an application: you have a vertex sampling budget
+//! (feature-fetch bandwidth, GPU memory, ...). How large a batch can each
+//! sampler afford, and what does that do to convergence?
+//!
+//! ```bash
+//! cargo run --release --example budget_batchsize -- [dataset] [budget]
+//! ```
+
+use labor_gnn::data::Dataset;
+use labor_gnn::sampler::{IterSpec, SamplerKind};
+use labor_gnn::tune::{mean_deepest_vertices, solve_batch_size};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(|s| s.as_str()).unwrap_or("flickr-sim");
+    let ds = Dataset::load_or_generate(dataset, 0.1)?;
+    let budget: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or_else(|| ds.budget_v3());
+    let fanouts = [10usize, 10, 10];
+
+    println!("dataset {dataset}: |V^3| sampling budget = {budget}");
+    println!("{:<10} {:>12} {:>14}", "method", "batch size", "E[|V^3|] at bs");
+    let methods = [
+        ("LABOR-*", SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false }),
+        ("LABOR-1", SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false }),
+        ("LABOR-0", SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }),
+        ("NS", SamplerKind::Neighbor),
+    ];
+    let mut first = None;
+    let mut last = 0usize;
+    for (label, kind) in methods {
+        let bs = solve_batch_size(&ds, &kind, &fanouts, budget, 5);
+        let v3 = mean_deepest_vertices(&ds, &kind, &fanouts, bs, 5);
+        println!("{label:<10} {bs:>12} {v3:>14.0}");
+        if first.is_none() {
+            first = Some(bs);
+        }
+        last = bs;
+    }
+    if let Some(f) = first {
+        println!(
+            "\nLABOR-* affords a {:.1}x larger batch than NS under the same budget.",
+            f as f64 / last.max(1) as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the Rust
+runtime (L3).
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only gcn_tiny]
+
+Emits per config:
+    artifacts/<name>.train.hlo.txt
+    artifacts/<name>.fwd.hlo.txt
+and a single artifacts/manifest.json describing every artifact's shapes
+and flat calling convention (consumed by rust/src/runtime/manifest.rs).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import DEFAULT_BUILDS, make_config
+from .model import (
+    ModelConfig,
+    adam_init,
+    example_batch,
+    flat_train_args,
+    init_params,
+    make_forward,
+    make_train_step,
+    param_names,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(x) -> dict:
+    return {"dtype": str(x.dtype), "shape": list(x.shape)}
+
+
+def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
+    """Lower train_step + forward for one config; return its manifest."""
+    params = init_params(cfg)
+    m, v, t = adam_init(params)
+    feats, idxs, ws, labels, mask = example_batch(cfg)
+    train_args = flat_train_args(cfg, params, m, v, t, feats, idxs, ws, labels, mask)
+
+    train_step = make_train_step(cfg)
+    lowered = jax.jit(train_step).lower(*train_args)
+    train_path = os.path.join(out_dir, f"{cfg.name}.train.hlo.txt")
+    with open(train_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    fwd = make_forward(cfg)
+    names = param_names(cfg)
+    fwd_args = [params[n] for n in names] + [feats]
+    for i in range(3):
+        fwd_args += [idxs[i], ws[i]]
+    lowered_fwd = jax.jit(fwd).lower(*fwd_args)
+    fwd_path = os.path.join(out_dir, f"{cfg.name}.fwd.hlo.txt")
+    with open(fwd_path, "w") as f:
+        f.write(to_hlo_text(lowered_fwd))
+
+    return {
+        "name": cfg.name,
+        "arch": cfg.arch,
+        "batch_size": cfg.batch_size,
+        "k_max": cfg.k_max,
+        "v_caps": list(cfg.v_caps),
+        "num_features": cfg.num_features,
+        "hidden": cfg.hidden,
+        "num_classes": cfg.num_classes,
+        "multilabel": cfg.multilabel,
+        "lr": cfg.lr,
+        "param_names": names,
+        "param_shapes": {n: _shape_entry(params[n]) for n in names},
+        "train_artifact": os.path.basename(train_path),
+        "fwd_artifact": os.path.basename(fwd_path),
+        # flat calling convention documentation (runtime asserts against it)
+        "train_num_inputs": len(train_args),
+        "train_num_outputs": 3 * len(names) + 2,
+        "fwd_num_inputs": len(fwd_args),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single config by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"configs": []}
+    for dataset, arch in DEFAULT_BUILDS:
+        cfg = make_config(dataset, arch)
+        if args.only and cfg.name != args.only:
+            continue
+        print(f"lowering {cfg.name} (V caps {cfg.v_caps}, K {cfg.k_max}) ...", flush=True)
+        manifest["configs"].append(lower_config(cfg, args.out_dir))
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    # merge with an existing manifest when building a subset
+    if args.only and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        keep = [c for c in old.get("configs", []) if all(c["name"] != n["name"] for n in manifest["configs"])]
+        manifest["configs"] = keep + manifest["configs"]
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path} with {len(manifest['configs'])} configs")
+
+
+if __name__ == "__main__":
+    main()

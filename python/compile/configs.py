@@ -1,0 +1,65 @@
+"""Artifact configurations: one compiled (train_step, forward) pair per
+dataset x architecture.
+
+The padded vertex caps (V1, V2, V3) bound the per-layer input row counts of
+a sampled MFG. They were calibrated with ``repro calibrate-caps`` (p99 over
+NS batches — NS samples the most vertices of all methods, so its caps cover
+every sampler) at the default experiment settings: dataset scale 0.1,
+batch 1024, fanout 10. The Rust runtime re-checks every batch against the
+manifest and fails loudly if a cap is exceeded.
+
+K_MAX is 2x fanout: LABOR guarantees E[d_s] >= min(k, d_s) and importance
+sampling pushes some expected degrees above k; overflow beyond K_MAX is
+dropped with weight renormalization on the Rust side (documented
+approximation, DESIGN.md section 2 — never affects sampler statistics).
+"""
+
+from .model import ModelConfig
+
+# (V1, V2, V3) caps per dataset at scale 0.1, batch 1024, fanout 10 —
+# measured with `repro calibrate-caps` (NS max over batches * 1.15,
+# clipped at |V|).
+_CAPS = {
+    "reddit-sim": (9_584, 23_300, 23_300),  # |V| = 23.3k: caps clip at |V|
+    "products-sim": (9_826, 58_413, 180_885),
+    "yelp-sim": (8_289, 35_606, 69_704),
+    "flickr-sim": (3_901, 7_311, 8_905),  # |V| = 8.9k
+    "tiny": (3_100, 3_100, 3_100),
+}
+
+_FEATURES = {"reddit-sim": 602, "products-sim": 100, "yelp-sim": 300, "flickr-sim": 500, "tiny": 16}
+_CLASSES = {"reddit-sim": 41, "products-sim": 47, "yelp-sim": 50, "flickr-sim": 7, "tiny": 4}
+_MULTILABEL = {"yelp-sim"}
+
+BATCH_SIZE = 1024
+K_MAX = 20
+HIDDEN = 64  # paper uses 256; 64 keeps the CPU-only experiment grid tractable
+
+
+def make_config(dataset: str, arch: str = "gcn", hidden: int = HIDDEN,
+                batch_size: int = BATCH_SIZE, k_max: int = K_MAX) -> ModelConfig:
+    caps = _CAPS[dataset]
+    return ModelConfig(
+        name=f"{arch}_{dataset}",
+        arch=arch,
+        batch_size=batch_size,
+        k_max=k_max,
+        v_caps=caps,
+        num_features=_FEATURES[dataset],
+        hidden=hidden,
+        num_classes=_CLASSES[dataset],
+        multilabel=dataset in _MULTILABEL,
+    )
+
+
+# what `make artifacts` builds by default: the GCN for every dataset + the
+# GATv2 for the Table 5 experiment on the two smaller datasets
+DEFAULT_BUILDS = [
+    ("tiny", "gcn"),
+    ("flickr-sim", "gcn"),
+    ("yelp-sim", "gcn"),
+    ("reddit-sim", "gcn"),
+    ("products-sim", "gcn"),
+    ("flickr-sim", "gatv2"),
+    ("tiny", "gatv2"),
+]

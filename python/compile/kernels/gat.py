@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: padded-neighborhood GATv2 attention aggregation.
+
+Backs the GATv2 runtime experiment (paper Appendix A.6 / Table 5). Same
+gather-window strategy as ``spmm.py``: the grid tiles output rows, each
+step gathers the (BN, K, Hd, D) window of projected source features,
+computes GATv2 attention logits, masks padding, softmaxes over K, and
+contracts K.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gat_kernel(idx_ref, mask_ref, hsrc_ref, hdst_ref, att_ref, o_ref, *, slope):
+    idx = idx_ref[...]  # (BN, K)
+    mask = mask_ref[...]  # (BN, K)
+    g = hsrc_ref[idx]  # (BN, K, Hd, D)
+    z = g + hdst_ref[...][:, None, :, :]
+    z = jnp.where(z >= 0, z, slope * z)
+    e = jnp.einsum("nkhd,hd->nkh", z, att_ref[...])
+    neg = jnp.finfo(e.dtype).min
+    e = jnp.where(mask[:, :, None] > 0, e, neg)
+    alpha = jnp.exp(e - e.max(axis=1, keepdims=True))
+    alpha = alpha * mask[:, :, None]
+    denom = jnp.maximum(alpha.sum(axis=1, keepdims=True), 1e-12)
+    alpha = alpha / denom
+    o_ref[...] = jnp.einsum(
+        "nkh,nkhd->nhd", alpha, g, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _gat_pallas(idx, mask, h_src, h_dst, att, block_rows, slope: float):
+    n, k = idx.shape
+    _, hd, d = h_dst.shape
+    if block_rows is None:
+        from .spmm import auto_block_rows
+
+        block_rows = auto_block_rows(k, hd * d)
+    bn = min(block_rows, n)
+    grid = (pl.cdiv(n, bn),)
+    kernel = functools.partial(_gat_kernel, slope=slope)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec(h_src.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((bn, hd, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec(att.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, hd, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, hd, d), h_src.dtype),
+        interpret=True,
+    )(idx, mask, h_src, h_dst, att)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def gatv2_aggregate(idx, mask, h_src, h_dst, att, block_rows=None, slope: float = 0.2):
+    """Pallas GATv2 aggregation; see ``ref.gatv2_ref`` for semantics.
+
+    Differentiable in ``mask``/``h_src``/``h_dst``/``att``: the backward
+    pass is the VJP of the pure-jnp oracle (interpret-mode ``pallas_call``
+    has no reverse-mode autodiff); forward stays on the Pallas kernel.
+
+    Args:
+      idx:   i32[N, K] neighbor indices into ``h_src``.
+      mask:  f32[N, K] 1 = real edge, 0 = padding.
+      h_src: f32[M, Hd, D] projected source features.
+      h_dst: f32[N, Hd, D] projected destination features.
+      att:   f32[Hd, D] attention vectors.
+
+    Returns: f32[N, Hd, D].
+    """
+    return _gat_pallas(idx, mask, h_src, h_dst, att, block_rows, slope)
+
+
+def _gat_fwd(idx, mask, h_src, h_dst, att, block_rows, slope):
+    out = _gat_pallas(idx, mask, h_src, h_dst, att, block_rows, slope)
+    return out, (idx, mask, h_src, h_dst, att)
+
+
+def _gat_bwd(_block_rows, slope, res, g):
+    from .ref import gatv2_ref
+
+    idx, mask, h_src, h_dst, att = res
+    _, vjp = jax.vjp(
+        lambda hs, hd, a: gatv2_ref(idx, mask, hs, hd, a, slope), h_src, h_dst, att
+    )
+    ghs, ghd, gatt = vjp(g)
+    return None, None, ghs, ghd, gatt
+
+
+gatv2_aggregate.defvjp(_gat_fwd, _gat_bwd)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float32 tolerance for all shapes/dtypes covered by
+``python/tests`` (hypothesis sweeps).
+"""
+
+import jax.numpy as jnp
+
+
+def spmm_ref(idx, w, feats):
+    """Padded-neighborhood gather-SpMM reference.
+
+    out[n] = sum_k w[n, k] * feats[idx[n, k]]
+
+    Args:
+      idx: i32[N, K] neighbor row indices into ``feats`` (padding may point
+        anywhere valid; its weight must be 0).
+      w:   f32[N, K] edge weights (Hajek-normalized by the sampler).
+      feats: f32[M, F] input rows.
+
+    Returns: f32[N, F].
+    """
+    gathered = feats[idx]  # [N, K, F]
+    return jnp.einsum("nk,nkf->nf", w, gathered)
+
+
+def gatv2_ref(idx, mask, h_src, h_dst, att, slope: float = 0.2):
+    """Padded-neighborhood GATv2 attention aggregation reference.
+
+    Per head h:
+      e[n,k,h]  = att[h] . leaky_relu(h_src[idx[n,k],h] + h_dst[n,h])
+      alpha     = softmax_k(e) restricted to mask
+      out[n,h]  = sum_k alpha[n,k,h] * h_src[idx[n,k],h]
+
+    Args:
+      idx:   i32[N, K] neighbor row indices into ``h_src``.
+      mask:  f32[N, K] 1 for real edges, 0 for padding.
+      h_src: f32[M, Hd, D] projected source features (W_s x).
+      h_dst: f32[N, Hd, D] projected destination features (W_d x).
+      att:   f32[Hd, D] attention vectors.
+
+    Returns: f32[N, Hd, D].
+    """
+    g = h_src[idx]  # [N, K, Hd, D]
+    z = g + h_dst[:, None, :, :]
+    z = jnp.where(z >= 0, z, slope * z)  # LeakyReLU
+    e = jnp.einsum("nkhd,hd->nkh", z, att)
+    neg = jnp.finfo(e.dtype).min
+    e = jnp.where(mask[:, :, None] > 0, e, neg)
+    alpha = jnp.exp(e - e.max(axis=1, keepdims=True))
+    alpha = alpha * mask[:, :, None]
+    denom = alpha.sum(axis=1, keepdims=True)
+    alpha = alpha / jnp.maximum(denom, 1e-12)
+    return jnp.einsum("nkh,nkhd->nhd", alpha, g)

@@ -1,0 +1,318 @@
+"""Layer-2: the paper's models (GCN §4, GATv2 A.6) in JAX, plus losses and
+a hand-rolled Adam — everything that gets AOT-lowered into a single
+``train_step`` / ``forward`` HLO per dataset configuration.
+
+Batch layout (static shapes, chosen in ``configs.py``): the Rust
+coordinator packs each sampled MFG into the fixed *padded-neighborhood*
+format — per GNN layer `l` (compute order: deepest first),
+
+    idx_l: i32[V_{out,l}, K]   neighbor row indices into layer input rows
+    w_l:   f32[V_{out,l}, K]   Hajek edge weights (0 = padding)
+
+with the convention that layer input rows start with the layer's output
+(seed) rows, so residual/self connections are realized by slicing the
+prefix. Padded vertices carry zero features/weights and are masked out of
+the loss.
+"""
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gat import gatv2_aggregate
+from .kernels.spmm import spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape + architecture description of one compiled artifact."""
+
+    name: str
+    arch: str  # "gcn" | "gatv2"
+    batch_size: int  # B: number of (padded) seed rows
+    k_max: int  # K: padded per-vertex neighbor budget
+    v_caps: Tuple[int, ...]  # (V1, V2, V3): padded row counts per depth
+    num_features: int
+    hidden: int
+    num_classes: int
+    multilabel: bool
+    num_heads: int = 8  # GATv2 only
+    lr: float = 1e-3
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.v_caps)
+
+    def layer_rows(self) -> List[Tuple[int, int]]:
+        """(input_rows, output_rows) per GNN layer in compute order."""
+        dims = list(self.v_caps)[::-1] + [self.batch_size]
+        return [(dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+def init_gcn_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """3-layer GCN with residual skip connections (paper §4)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+    f, h, c = cfg.num_features, cfg.hidden, cfg.num_classes
+    return {
+        "w1": glorot(keys[0], (f, h)),
+        "b1": jnp.zeros((h,), jnp.float32),
+        "r1": glorot(keys[1], (f, h)),  # residual projection F -> H
+        "w2": glorot(keys[2], (h, h)),
+        "b2": jnp.zeros((h,), jnp.float32),
+        "w3": glorot(keys[3], (h, c)),
+        "b3": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def init_gatv2_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """3-layer GATv2 (paper A.6), ``num_heads`` heads, concat between
+    layers, mean over heads at the output layer."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 16)
+    f, h, c, hd = cfg.num_features, cfg.hidden, cfg.num_classes, cfg.num_heads
+    d = h // hd
+    assert h % hd == 0, "hidden must divide num_heads"
+    return {
+        "ws1": glorot(keys[0], (f, hd * d)),
+        "wd1": glorot(keys[1], (f, hd * d)),
+        "a1": glorot(keys[2], (hd, d)),
+        "ws2": glorot(keys[3], (h, hd * d)),
+        "wd2": glorot(keys[4], (h, hd * d)),
+        "a2": glorot(keys[5], (hd, d)),
+        "ws3": glorot(keys[6], (h, hd * c)),
+        "wd3": glorot(keys[7], (h, hd * c)),
+        "a3": glorot(keys[8], (hd, c)),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    if cfg.arch == "gcn":
+        return init_gcn_params(cfg, seed)
+    if cfg.arch == "gatv2":
+        return init_gatv2_params(cfg, seed)
+    raise ValueError(f"unknown arch {cfg.arch}")
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+
+
+def gcn_forward(params, cfg: ModelConfig, feats, idxs, ws):
+    """feats: f32[V_deepest, F]; idxs/ws: lists in compute order."""
+    rows = cfg.layer_rows()
+
+    # layer 1: F -> H (relu, residual projection)
+    (_, out1) = rows[0]
+    agg = spmm(idxs[0], ws[0], feats)  # [V2, F]
+    res = feats[:out1] @ params["r1"]
+    h = jax.nn.relu(agg @ params["w1"] + params["b1"] + res)
+
+    # layer 2: H -> H (relu, identity residual)
+    (_, out2) = rows[1]
+    agg = spmm(idxs[1], ws[1], h)
+    h = jax.nn.relu(agg @ params["w2"] + params["b2"] + h[:out2])
+
+    # layer 3: H -> C (linear head)
+    agg = spmm(idxs[2], ws[2], h)
+    logits = agg @ params["w3"] + params["b3"]
+    return logits
+
+
+def _gat_layer(x, idx, w, ws_p, wd_p, att, out_rows, hd):
+    """One GATv2 layer over the padded-neighborhood block."""
+    m = x.shape[0]
+    d = ws_p.shape[1] // hd
+    h_src = (x @ ws_p).reshape(m, hd, d)
+    h_dst = (x[:out_rows] @ wd_p).reshape(out_rows, hd, d)
+    mask = (w > 0).astype(x.dtype)
+    out = gatv2_aggregate(idx, mask, h_src, h_dst, att)  # [out, Hd, D]
+    return out
+
+
+def gatv2_forward(params, cfg: ModelConfig, feats, idxs, ws):
+    rows = cfg.layer_rows()
+    hd = cfg.num_heads
+
+    (_, out1) = rows[0]
+    h = _gat_layer(feats, idxs[0], ws[0], params["ws1"], params["wd1"], params["a1"], out1, hd)
+    h = jax.nn.elu(h.reshape(out1, -1))  # concat heads
+
+    (_, out2) = rows[1]
+    h = _gat_layer(h, idxs[1], ws[1], params["ws2"], params["wd2"], params["a2"], out2, hd)
+    h = jax.nn.elu(h.reshape(out2, -1))
+
+    (_, out3) = rows[2]
+    o = _gat_layer(h, idxs[2], ws[2], params["ws3"], params["wd3"], params["a3"], out3, hd)
+    return o.mean(axis=1)  # mean over heads -> [B, C]
+
+
+def forward(params, cfg: ModelConfig, feats, idxs, ws):
+    if cfg.arch == "gcn":
+        return gcn_forward(params, cfg, feats, idxs, ws)
+    return gatv2_forward(params, cfg, feats, idxs, ws)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def loss_fn(params, cfg: ModelConfig, feats, idxs, ws, labels, mask):
+    """Masked mean loss over the (padded) seed rows.
+
+    Single-label: softmax cross-entropy, ``labels: i32[B]``.
+    Multilabel:   sigmoid BCE, ``labels: f32[B, C]``.
+    """
+    logits = forward(params, cfg, feats, idxs, ws)
+    if cfg.multilabel:
+        logp = jax.nn.log_sigmoid(logits)
+        lognp = jax.nn.log_sigmoid(-logits)
+        per = -(labels * logp + (1.0 - labels) * lognp).mean(axis=-1)
+    else:
+        logz = jax.nn.log_softmax(logits, axis=-1)
+        per = -jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per * mask).sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled so the whole optimizer lowers into the same HLO)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params), jnp.zeros((), jnp.float32)
+
+
+def adam_step(params, grads, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = t + 1.0
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    params = jax.tree_util.tree_map(upd, params, m, v)
+    return params, m, v, t
+
+
+# ---------------------------------------------------------------------------
+# the two AOT entry points
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter ordering for the flat PJRT calling
+    convention (sorted dict order, matching jax pytree flattening)."""
+    return sorted(init_params(cfg).keys())
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns ``train_step(flat_args...) -> (new_params..., m..., v..., t,
+    loss)`` over flat, deterministically-ordered tensors — the exact
+    artifact signature the Rust runtime calls.
+
+    Flat input order:
+      params (sorted), m (sorted), v (sorted), t,
+      feats, idx1, w1, idx2, w2, idx3, w3, labels, mask, lr
+
+    ``lr`` is a runtime scalar input (not a baked constant) so the
+    hyperparameter-tuning experiment (paper A.8 / Figure 4) can sweep it
+    without recompiling artifacts.
+    """
+    names = param_names(cfg)
+    npar = len(names)
+
+    def train_step(*args):
+        params = dict(zip(names, args[:npar]))
+        m = dict(zip(names, args[npar : 2 * npar]))
+        v = dict(zip(names, args[2 * npar : 3 * npar]))
+        t = args[3 * npar]
+        feats = args[3 * npar + 1]
+        idxs = [args[3 * npar + 2], args[3 * npar + 4], args[3 * npar + 6]]
+        ws = [args[3 * npar + 3], args[3 * npar + 5], args[3 * npar + 7]]
+        labels = args[3 * npar + 8]
+        mask = args[3 * npar + 9]
+        lr = args[3 * npar + 10]
+
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, feats, idxs, ws, labels, mask
+        )
+        params, m, v, t = adam_step(params, grads, m, v, t, lr)
+        out = [params[n] for n in names]
+        out += [m[n] for n in names]
+        out += [v[n] for n in names]
+        out += [t, loss]
+        return tuple(out)
+
+    return train_step
+
+
+def make_forward(cfg: ModelConfig):
+    """Returns ``fwd(params..., feats, idx1, w1, idx2, w2, idx3, w3) ->
+    (logits,)`` for evaluation."""
+    names = param_names(cfg)
+    npar = len(names)
+
+    def fwd(*args):
+        params = dict(zip(names, args[:npar]))
+        feats = args[npar]
+        idxs = [args[npar + 1], args[npar + 3], args[npar + 5]]
+        ws = [args[npar + 2], args[npar + 4], args[npar + 6]]
+        return (forward(params, cfg, feats, idxs, ws),)
+
+    return fwd
+
+
+def example_batch(cfg: ModelConfig, seed: int = 0):
+    """Random example batch with the artifact's exact shapes (for lowering
+    and for tests)."""
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 12)
+    rows = cfg.layer_rows()
+    vin = rows[0][0]
+    feats = jax.random.normal(ks[0], (vin, cfg.num_features), jnp.float32)
+    idxs, ws = [], []
+    for li, (r_in, r_out) in enumerate(rows):
+        idx = jax.random.randint(ks[1 + li], (r_out, cfg.k_max), 0, r_in, jnp.int32)
+        w = jax.random.uniform(ks[4 + li], (r_out, cfg.k_max), jnp.float32)
+        w = w / w.sum(axis=1, keepdims=True)
+        idxs.append(idx)
+        ws.append(w)
+    if cfg.multilabel:
+        labels = (
+            jax.random.uniform(ks[7], (cfg.batch_size, cfg.num_classes)) < 0.2
+        ).astype(jnp.float32)
+    else:
+        labels = jax.random.randint(
+            ks[7], (cfg.batch_size,), 0, cfg.num_classes, jnp.int32
+        )
+    mask = jnp.ones((cfg.batch_size,), jnp.float32)
+    return feats, idxs, ws, labels, mask
+
+
+def flat_train_args(cfg: ModelConfig, params, m, v, t, feats, idxs, ws, labels, mask,
+                    lr=None):
+    names = param_names(cfg)
+    out = [params[n] for n in names]
+    out += [m[n] for n in names]
+    out += [v[n] for n in names]
+    out += [t, feats]
+    for i in range(3):
+        out += [idxs[i], ws[i]]
+    out += [labels, mask]
+    out += [jnp.float32(cfg.lr if lr is None else lr)]
+    return out

@@ -1,0 +1,147 @@
+"""Kernel-vs-oracle correctness: Pallas kernels against the pure-jnp refs,
+with hypothesis sweeps over shapes and dtypes (the core L1 signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.gat import gatv2_aggregate
+from compile.kernels.ref import gatv2_ref, spmm_ref
+from compile.kernels.spmm import spmm, vmem_estimate_bytes
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def make_spmm_case(rng, n, k, m, f, dtype=np.float32):
+    idx = rng.integers(0, m, (n, k)).astype(np.int32)
+    w = rng.random((n, k)).astype(dtype)
+    feats = rng.standard_normal((m, f)).astype(dtype)
+    return jnp.array(idx), jnp.array(w), jnp.array(feats)
+
+
+class TestSpmm:
+    def test_matches_ref_basic(self):
+        idx, w, feats = make_spmm_case(np.random.default_rng(0), 37, 7, 50, 13)
+        np.testing.assert_allclose(
+            np.array(spmm(idx, w, feats)), np.array(spmm_ref(idx, w, feats)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_zero_weights_give_zero_rows(self):
+        idx, w, feats = make_spmm_case(np.random.default_rng(1), 8, 4, 10, 5)
+        w = w.at[3].set(0.0)
+        out = np.array(spmm(idx, w, feats))
+        np.testing.assert_allclose(out[3], np.zeros(5), atol=1e-7)
+
+    def test_single_row_and_single_neighbor(self):
+        idx, w, feats = make_spmm_case(np.random.default_rng(2), 1, 1, 3, 4)
+        np.testing.assert_allclose(
+            np.array(spmm(idx, w, feats)), np.array(spmm_ref(idx, w, feats)),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_block_rows_variants_agree(self):
+        idx, w, feats = make_spmm_case(np.random.default_rng(3), 33, 5, 40, 8)
+        a = np.array(spmm(idx, w, feats, 4))
+        b = np.array(spmm(idx, w, feats, 32))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_gradients_match_ref(self):
+        idx, w, feats = make_spmm_case(np.random.default_rng(4), 12, 6, 20, 7)
+        ga = jax.grad(lambda w, f: (spmm(idx, w, f) ** 2).sum(), argnums=(0, 1))(w, feats)
+        gb = jax.grad(lambda w, f: (spmm_ref(idx, w, f) ** 2).sum(), argnums=(0, 1))(w, feats)
+        for x, y in zip(ga, gb):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis unavailable")
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 40),
+        k=st.integers(1, 12),
+        m=st.integers(1, 60),
+        f=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+        dtype=st.sampled_from([np.float32, np.float64]),
+    )
+    def test_hypothesis_shape_dtype_sweep(self, n, k, m, f, seed, dtype):
+        idx, w, feats = make_spmm_case(np.random.default_rng(seed), n, k, m, f, dtype)
+        tol = 1e-5 if dtype == np.float32 else 1e-10
+        np.testing.assert_allclose(
+            np.array(spmm(idx, w, feats)), np.array(spmm_ref(idx, w, feats)),
+            rtol=tol * 10, atol=tol,
+        )
+
+    def test_vmem_estimate_monotone(self):
+        assert vmem_estimate_bytes(16, 20, 602) > vmem_estimate_bytes(8, 20, 602)
+        assert vmem_estimate_bytes(16, 20, 602) < 16 * 1024 * 1024  # fits VMEM
+
+
+def make_gat_case(rng, n, k, m, hd, d):
+    idx = rng.integers(0, m, (n, k)).astype(np.int32)
+    mask = (rng.random((n, k)) < 0.7).astype(np.float32)
+    mask[:, 0] = 1.0  # at least one live edge per row
+    h_src = rng.standard_normal((m, hd, d)).astype(np.float32)
+    h_dst = rng.standard_normal((n, hd, d)).astype(np.float32)
+    att = rng.standard_normal((hd, d)).astype(np.float32)
+    return tuple(map(jnp.array, (idx, mask, h_src, h_dst, att)))
+
+
+class TestGat:
+    def test_matches_ref_basic(self):
+        case = make_gat_case(np.random.default_rng(0), 19, 6, 30, 4, 8)
+        np.testing.assert_allclose(
+            np.array(gatv2_aggregate(*case)), np.array(gatv2_ref(*case)),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_fully_masked_rows_do_not_nan(self):
+        idx, mask, h_src, h_dst, att = make_gat_case(np.random.default_rng(1), 6, 4, 10, 2, 4)
+        mask = mask.at[2].set(0.0)
+        out = np.array(gatv2_aggregate(idx, mask, h_src, h_dst, att))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out[2], 0.0, atol=1e-6)
+
+    def test_attention_is_convex_combination(self):
+        # with all-ones mask, output of each head lies in the convex hull of
+        # gathered neighbors: max |out| <= max |h_src|
+        case = make_gat_case(np.random.default_rng(2), 10, 5, 15, 2, 6)
+        idx, mask, h_src, h_dst, att = case
+        mask = jnp.ones_like(mask)
+        out = np.array(gatv2_aggregate(idx, mask, h_src, h_dst, att))
+        assert np.abs(out).max() <= np.abs(np.array(h_src)).max() + 1e-5
+
+    def test_gradients_match_ref(self):
+        idx, mask, h_src, h_dst, att = make_gat_case(np.random.default_rng(3), 7, 4, 12, 2, 4)
+        ga = jax.grad(
+            lambda hs, hd, a: (gatv2_aggregate(idx, mask, hs, hd, a) ** 2).sum(),
+            argnums=(0, 1, 2),
+        )(h_src, h_dst, att)
+        gb = jax.grad(
+            lambda hs, hd, a: (gatv2_ref(idx, mask, hs, hd, a) ** 2).sum(),
+            argnums=(0, 1, 2),
+        )(h_src, h_dst, att)
+        for x, y in zip(ga, gb):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis unavailable")
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 20),
+        k=st.integers(1, 8),
+        m=st.integers(1, 30),
+        hd=st.integers(1, 4),
+        d=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n, k, m, hd, d, seed):
+        case = make_gat_case(np.random.default_rng(seed), n, k, m, hd, d)
+        np.testing.assert_allclose(
+            np.array(gatv2_aggregate(*case)), np.array(gatv2_ref(*case)),
+            rtol=5e-5, atol=5e-5,
+        )

@@ -1,0 +1,163 @@
+"""L2 model tests: shapes, losses, Adam, and the flat AOT calling
+convention (train_step must behave identically through the flat interface
+used by the Rust runtime)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    adam_init,
+    adam_step,
+    example_batch,
+    flat_train_args,
+    forward,
+    init_params,
+    loss_fn,
+    make_forward,
+    make_train_step,
+    param_names,
+)
+
+
+def tiny_cfg(arch="gcn", multilabel=False):
+    return ModelConfig(
+        name="t",
+        arch=arch,
+        batch_size=8,
+        k_max=4,
+        v_caps=(24, 48, 96),
+        num_features=6,
+        hidden=16,
+        num_classes=3,
+        multilabel=multilabel,
+        num_heads=2,
+    )
+
+
+class TestForward:
+    @pytest.mark.parametrize("arch", ["gcn", "gatv2"])
+    def test_logit_shapes(self, arch):
+        cfg = tiny_cfg(arch)
+        params = init_params(cfg)
+        feats, idxs, ws, _, _ = example_batch(cfg)
+        logits = forward(params, cfg, feats, idxs, ws)
+        assert logits.shape == (8, 3)
+        assert np.isfinite(np.array(logits)).all()
+
+    def test_layer_rows_ordering(self):
+        cfg = tiny_cfg()
+        # compute order: deepest first — inputs 96 -> 48 -> 24 -> 8
+        assert cfg.layer_rows() == [(96, 48), (48, 24), (24, 8)]
+
+    def test_residual_path_matters(self):
+        # zeroing the residual projection must change the output
+        cfg = tiny_cfg()
+        params = init_params(cfg)
+        feats, idxs, ws, _, _ = example_batch(cfg)
+        a = forward(params, cfg, feats, idxs, ws)
+        params2 = dict(params, r1=jnp.zeros_like(params["r1"]))
+        b = forward(params2, cfg, feats, idxs, ws)
+        assert np.abs(np.array(a) - np.array(b)).max() > 1e-4
+
+
+class TestLoss:
+    def test_single_label_matches_manual_ce(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg)
+        feats, idxs, ws, labels, mask = example_batch(cfg)
+        loss = loss_fn(params, cfg, feats, idxs, ws, labels, mask)
+        logits = forward(params, cfg, feats, idxs, ws)
+        logz = jax.nn.log_softmax(logits, -1)
+        manual = -np.take_along_axis(np.array(logz), np.array(labels)[:, None], 1).mean()
+        np.testing.assert_allclose(float(loss), manual, rtol=1e-5)
+
+    def test_mask_excludes_padded_rows(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg)
+        feats, idxs, ws, labels, mask = example_batch(cfg)
+        # corrupt the last row's label; with mask=0 there the loss must not move
+        labels_bad = labels.at[-1].set((labels[-1] + 1) % 3)
+        mask0 = mask.at[-1].set(0.0)
+        l1 = loss_fn(params, cfg, feats, idxs, ws, labels, mask0)
+        l2 = loss_fn(params, cfg, feats, idxs, ws, labels_bad, mask0)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+    def test_multilabel_bce_bounds(self):
+        cfg = tiny_cfg(multilabel=True)
+        params = init_params(cfg)
+        feats, idxs, ws, labels, mask = example_batch(cfg)
+        loss = float(loss_fn(params, cfg, feats, idxs, ws, labels, mask))
+        assert 0.0 < loss < 10.0
+
+
+class TestAdam:
+    def test_matches_reference_formula(self):
+        params = {"w": jnp.array([1.0, 2.0])}
+        grads = {"w": jnp.array([0.1, -0.2])}
+        m, v, t = adam_init(params)
+        p2, m2, v2, t2 = adam_step(params, grads, m, v, t, lr=0.01)
+        # step 1: mhat = g, vhat = g^2  => update = lr * g / (|g| + eps)
+        expect = np.array([1.0, 2.0]) - 0.01 * np.sign([0.1, -0.2])
+        np.testing.assert_allclose(np.array(p2["w"]), expect, rtol=1e-4)
+        assert float(t2) == 1.0
+
+    def test_descends_quadratic(self):
+        params = {"w": jnp.array([5.0])}
+        m, v, t = adam_init(params)
+        for _ in range(300):
+            g = {"w": 2.0 * params["w"]}
+            params, m, v, t = adam_step(params, g, m, v, t, lr=0.05)
+        assert abs(float(params["w"][0])) < 0.5
+
+
+class TestFlatConvention:
+    def test_train_step_flat_roundtrip(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg)
+        m, v, t = adam_init(params)
+        feats, idxs, ws, labels, mask = example_batch(cfg)
+        args = flat_train_args(cfg, params, m, v, t, feats, idxs, ws, labels, mask)
+        step = make_train_step(cfg)
+        out = step(*args)
+        names = param_names(cfg)
+        n = len(names)
+        assert len(out) == 3 * n + 2
+        loss = out[-1]
+        assert np.isfinite(float(loss))
+        # params moved
+        assert np.abs(np.array(out[names.index("w1")]) - np.array(params["w1"])).max() > 0
+
+    def test_loss_decreases_over_flat_steps(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg)
+        m, v, t = adam_init(params)
+        feats, idxs, ws, labels, mask = example_batch(cfg)
+        step = jax.jit(make_train_step(cfg))
+        names = param_names(cfg)
+        n = len(names)
+        losses = []
+        for _ in range(30):
+            args = flat_train_args(cfg, params, m, v, t, feats, idxs, ws, labels, mask, lr=0.01)
+            out = step(*args)
+            params = dict(zip(names, out[:n]))
+            m = dict(zip(names, out[n : 2 * n]))
+            v = dict(zip(names, out[2 * n : 3 * n]))
+            t = out[3 * n]
+            losses.append(float(out[-1]))
+        assert losses[-1] < 0.5 * losses[0], losses
+
+    def test_forward_flat_matches_direct(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg)
+        feats, idxs, ws, _, _ = example_batch(cfg)
+        fwd = make_forward(cfg)
+        names = param_names(cfg)
+        args = [params[k] for k in names] + [feats]
+        for i in range(3):
+            args += [idxs[i], ws[i]]
+        (flat_logits,) = fwd(*args)
+        direct = forward(params, cfg, feats, idxs, ws)
+        np.testing.assert_allclose(np.array(flat_logits), np.array(direct), rtol=1e-6)

@@ -1,0 +1,47 @@
+//! Coordinator pipeline throughput: sampling workers + bounded queue, as a
+//! function of worker count (the L3 §Perf scaling check).
+
+use labor_gnn::coordinator::pipeline::{PipelineConfig, SamplingPipeline};
+use labor_gnn::data::Dataset;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let ds = Arc::new(Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset"));
+    let graph = Arc::new(ds.graph.clone());
+    let ids = Arc::new(ds.splits.train.clone());
+    let batches = 60u64;
+
+    println!("== pipeline throughput, labor-1, batch 1024, {batches} batches");
+    for workers in [1usize, 2, 4, 8] {
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+            &[10, 10, 10],
+        ));
+        let t0 = Instant::now();
+        let mut p = SamplingPipeline::spawn(
+            graph.clone(),
+            sampler,
+            ids.clone(),
+            PipelineConfig {
+                num_workers: workers,
+                queue_depth: 8,
+                batch_size: 1024,
+                num_batches: batches,
+                seed: 3,
+            },
+        );
+        let mut n = 0;
+        while let Some(b) = p.next() {
+            std::hint::black_box(b.mfg.vertex_counts());
+            n += 1;
+        }
+        p.join();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "workers={workers}: {n} batches in {dt:.2}s = {:.1} batches/s",
+            n as f64 / dt
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! PJRT execution latency: pack + train_step per dataset artifact — the L2
+//! hot-path numbers behind the it/s columns (skips configs whose artifacts
+//! are missing; run `make artifacts`).
+
+use labor_gnn::data::Dataset;
+use labor_gnn::runtime::{Engine, Manifest};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::train::Trainer;
+use labor_gnn::util::timer::bench;
+
+fn main() {
+    let Ok(man) = Manifest::load("artifacts") else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        return;
+    };
+    let engine = Engine::cpu().expect("pjrt cpu");
+    for name in ["gcn_tiny", "gcn_flickr-sim"] {
+        let Ok(model) = engine.load_model(&man, name) else {
+            eprintln!("SKIP {name}: artifact missing");
+            continue;
+        };
+        let dataset = name.trim_start_matches("gcn_");
+        let scale = if dataset == "tiny" { 1.0 } else { 0.1 };
+        let ds = Dataset::load_or_generate(dataset, scale).expect("dataset");
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+            &[10, 10, 10],
+        );
+        let b = model.cfg.batch_size.min(ds.splits.train.len());
+        let mut trainer = Trainer::new(model, 1).expect("trainer");
+        let seeds: Vec<u32> = ds.splits.train[..b].to_vec();
+        let mfg = sampler.sample(&ds.graph, &seeds, 0);
+
+        // pack-only cost
+        let r = bench(2, 10, || {
+            std::hint::black_box(trainer.packer.pack(&ds, &mfg).unwrap());
+        });
+        r.report(&format!("pack/{name}"));
+
+        // full step (pack + PJRT execute + state absorb)
+        let mut s = 0u64;
+        let r = bench(2, 10, || {
+            let mfg = sampler.sample(&ds.graph, &seeds, s);
+            std::hint::black_box(trainer.step(&ds, &mfg).unwrap());
+            s += 1;
+        });
+        r.report(&format!("train_step/{name}"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Sampler micro/throughput benchmarks (backs the it/s column of Table 2).
+//!
+//! `cargo bench --bench samplers` — uses the in-repo timing harness
+//! (crates.io criterion is unavailable in the offline build; the harness
+//! reports mean/p50/p95 and throughput per case).
+
+use labor_gnn::data::Dataset;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::util::timer::bench;
+
+fn main() {
+    let ds = Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset");
+    let seeds: Vec<u32> = ds.splits.train[..1024.min(ds.splits.train.len())].to_vec();
+    let fanouts = [10usize, 10, 10];
+    let budgets = vec![3000, 5000, 6000];
+
+    println!("== sampler throughput, flickr-sim scale 0.1, batch 1024, fanout 10, 3 layers");
+    let cases: Vec<(&str, SamplerKind)> = vec![
+        ("ns", SamplerKind::Neighbor),
+        ("labor-0", SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }),
+        ("labor-1", SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false }),
+        ("labor-*", SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false }),
+        (
+            "labor-0-seq",
+            SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        ),
+        ("ladies", SamplerKind::Ladies { budgets: budgets.clone() }),
+        ("pladies", SamplerKind::Pladies { budgets }),
+    ];
+    for (name, kind) in cases {
+        let sampler = MultiLayerSampler::new(kind, &fanouts);
+        let mut b = 0u64;
+        let r = bench(2, 10, || {
+            let mfg = sampler.sample(&ds.graph, &seeds, b);
+            std::hint::black_box(mfg.vertex_counts());
+            b += 1;
+        });
+        r.report(&format!("sample_mfg/{name}"));
+    }
+
+    println!("\n== single-layer scaling with batch size (labor-0)");
+    for bs in [128usize, 512, 2048] {
+        let seeds: Vec<u32> = ds.splits.train[..bs.min(ds.splits.train.len())].to_vec();
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[10],
+        );
+        let mut b = 0u64;
+        let r = bench(2, 20, || {
+            std::hint::black_box(sampler.sample(&ds.graph, &seeds, b).edge_counts());
+            b += 1;
+        });
+        r.report(&format!("labor0_1layer/batch{bs}"));
+    }
+}

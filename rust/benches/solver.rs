@@ -1,0 +1,59 @@
+//! Microbenchmarks of the LABOR inner loops: the `c_s` solvers (sorted vs
+//! the paper's iterative algorithm), the fixed-point step, and the hash
+//! RNG. These are the L3 hot path (§Perf).
+
+use labor_gnn::rng::{HashRng, StreamRng};
+use labor_gnn::sampler::labor::{solve_cs_iterative, solve_cs_sorted, LaborLayerState};
+use labor_gnn::sampler::IterSpec;
+use labor_gnn::util::timer::bench;
+
+fn main() {
+    println!("== c_s solver, heavy-tailed pi, k=10");
+    for d in [16usize, 64, 256, 1024] {
+        let mut rng = StreamRng::new(d as u64);
+        let pi: Vec<f64> = (0..d).map(|_| (3.0 * rng.next_f64()).exp()).collect();
+        let r = bench(10, 200, || {
+            std::hint::black_box(solve_cs_sorted(&pi, 10.min(d - 1)));
+        });
+        r.report(&format!("solve_cs_sorted/d{d}"));
+        let r = bench(10, 200, || {
+            std::hint::black_box(solve_cs_iterative(&pi, 10.min(d - 1)));
+        });
+        r.report(&format!("solve_cs_iterative/d{d}"));
+    }
+
+    println!("\n== full layer state: build + optimize (flickr-sim-like synthetic)");
+    let g = labor_gnn::graph::gen::dc_sbm(&labor_gnn::graph::gen::DcSbmConfig {
+        num_vertices: 8920,
+        num_arcs: 90_000,
+        num_communities: 7,
+        homophily: 0.7,
+        degree_exponent: 0.85,
+        seed: 1,
+    })
+    .graph;
+    let seeds: Vec<u32> = (0..1024).collect();
+    let r = bench(2, 20, || {
+        std::hint::black_box(LaborLayerState::new(&g, &seeds, 10));
+    });
+    r.report("labor_state_build/b1024");
+    for iters in [0usize, 1, 3] {
+        let r = bench(2, 10, || {
+            let mut st = LaborLayerState::new(&g, &seeds, 10);
+            st.optimize(IterSpec::Fixed(iters));
+            std::hint::black_box(st.objective());
+        });
+        r.report(&format!("labor_optimize/i{iters}"));
+    }
+
+    println!("\n== hash rng");
+    let rng = HashRng::new(7);
+    let r = bench(10, 100, || {
+        let mut acc = 0.0f64;
+        for t in 0..100_000u64 {
+            acc += rng.uniform(t);
+        }
+        std::hint::black_box(acc);
+    });
+    r.report("hash_rng/100k_uniforms");
+}

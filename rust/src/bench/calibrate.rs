@@ -1,0 +1,34 @@
+//! `repro calibrate-caps`: measure the padded-shape caps that
+//! `python/compile/configs.py` needs — p99 per-layer vertex counts under
+//! the *largest* sampler (NS) plus margin, at the experiment settings.
+
+use crate::data::Dataset;
+use crate::sampler::{MultiLayerSampler, SamplerKind};
+use anyhow::Result;
+
+pub fn run(dataset: &str, scale: f64, batch_size: usize, fanout: usize, repeats: usize) -> Result<()> {
+    let ds = Dataset::load_or_generate(dataset, scale)?;
+    let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[fanout; 3]);
+    let mut maxima = vec![0usize; 3];
+    for r in 0..repeats {
+        let start = (r * batch_size) % ds.splits.train.len();
+        let seeds: Vec<u32> = (0..batch_size.min(ds.splits.train.len()))
+            .map(|i| ds.splits.train[(start + i) % ds.splits.train.len()])
+            .collect();
+        let mfg = sampler.sample(&ds.graph, &seeds, 0xCA11B ^ r as u64);
+        for (d, v) in mfg.vertex_counts().iter().enumerate() {
+            maxima[d] = maxima[d].max(*v);
+        }
+    }
+    let nv = ds.graph.num_vertices();
+    let caps: Vec<usize> = maxima
+        .iter()
+        .map(|&m| (((m as f64) * 1.15) as usize).min(nv).max(batch_size + 1))
+        .collect();
+    println!(
+        "{dataset}: NS max per-layer vertices over {repeats} batches = {maxima:?} (|V|={nv})"
+    );
+    println!("suggested configs.py caps (max * 1.15, clipped at |V|): {caps:?}");
+    println!("    \"{dataset}\": ({}, {}, {}),", caps[0], caps[1], caps[2]);
+    Ok(())
+}

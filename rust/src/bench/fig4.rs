@@ -1,0 +1,114 @@
+//! Figure 4 (Appendix A.8): hyperparameter tuning for time-to-target
+//! validation accuracy — NS vs LABOR, sorted trial runtimes.
+//!
+//! HEBO is substituted by a budgeted random search (DESIGN.md §4); each
+//! trial trains with the proposed (lr, batch, fanouts, LABOR-i,
+//! layer-dependency) until the validation F1 target or the timeout.
+
+use crate::coordinator::batcher::EpochBatcher;
+use crate::data::Dataset;
+use crate::runtime::{Engine, Manifest};
+use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use crate::train::Trainer;
+use crate::tune::{RandomSearchTuner, TuneConfig};
+use crate::util::csv::{f, CsvWriter};
+use anyhow::Result;
+
+pub struct Fig4Opts {
+    pub dataset: String,
+    pub scale: f64,
+    pub artifact: String,
+    pub target_f1: f64,
+    pub trials: usize,
+    pub timeout_s: f64,
+    pub eval_every: u64,
+    pub eval_max: usize,
+    pub seed: u64,
+}
+
+fn trial(
+    engine: &Engine,
+    man: &Manifest,
+    ds: &Dataset,
+    o: &Fig4Opts,
+    cfg: &TuneConfig,
+) -> Result<Option<f64>> {
+    let model = engine.load_model(man, &o.artifact)?;
+    let k_cap = model.cfg.k_max;
+    let bs = cfg.batch_size.min(model.cfg.batch_size);
+    let fanouts: Vec<usize> = cfg.fanouts.iter().map(|&k| k.min(k_cap)).collect();
+    let kind = match cfg.labor_iterations {
+        None => SamplerKind::Neighbor,
+        Some(i) => SamplerKind::Labor {
+            iterations: IterSpec::Fixed(i),
+            layer_dependent: cfg.layer_dependent,
+        },
+    };
+    let sampler = MultiLayerSampler::new(kind, &fanouts);
+    let mut trainer = Trainer::new(model, o.seed)?;
+    trainer.lr = cfg.lr as f32;
+    let mut batcher = EpochBatcher::new(&ds.splits.train, bs, o.seed);
+    let t0 = std::time::Instant::now();
+    let mut step = 0u64;
+    loop {
+        let seeds = batcher.next_batch();
+        let mfg = sampler.sample(&ds.graph, &seeds, o.seed ^ (step << 18));
+        trainer.step(ds, &mfg)?;
+        step += 1;
+        if step % o.eval_every == 0 {
+            let val = &ds.splits.val[..o.eval_max.min(ds.splits.val.len())];
+            let f1 = trainer.evaluate(ds, &sampler, val, 0xF164)?;
+            if f1 >= o.target_f1 {
+                return Ok(Some(t0.elapsed().as_secs_f64()));
+            }
+        }
+        if t0.elapsed().as_secs_f64() > o.timeout_s {
+            return Ok(None);
+        }
+    }
+}
+
+pub fn run(o: &Fig4Opts) -> Result<()> {
+    let ds = Dataset::load_or_generate(&o.dataset, o.scale)?;
+    let engine = Engine::cpu()?;
+    let man = Manifest::load("artifacts")?;
+    let dir = super::results_dir();
+    let mut csv = CsvWriter::create(
+        dir.join(format!("fig4_{}.csv", o.dataset)),
+        &["sampler", "rank", "runtime_s", "lr", "batch", "fanouts", "labor_i", "layer_dep"],
+    )?;
+    for labor in [false, true] {
+        let name = if labor { "LABOR" } else { "NS" };
+        println!("-- tuning {name} on {} (target val F1 {})", o.dataset, o.target_f1);
+        let mut tuner = RandomSearchTuner::new(o.seed ^ labor as u64, labor);
+        tuner.batch_range = (64, 1024); // artifact batch cap (DESIGN.md §4)
+        tuner.fanout_range = (5, 20); // K_MAX cap
+        let trials = tuner.run(o.trials, |cfg| {
+            trial(&engine, &man, &ds, o, cfg).unwrap_or(None)
+        });
+        for (rank, t) in trials.iter().enumerate() {
+            let rt = t.runtime_s.map(|x| format!("{x:.2}")).unwrap_or("timeout".into());
+            println!(
+                "  #{rank:<3} {rt:>9}s  lr={:<9.5} bs={:<5} fanouts={:?} i={:?} dep={}",
+                t.config.lr,
+                t.config.batch_size,
+                t.config.fanouts,
+                t.config.labor_iterations,
+                t.config.layer_dependent
+            );
+            csv.row(&[
+                name.to_string(),
+                f(rank as f64),
+                t.runtime_s.map(f).unwrap_or_default(),
+                f(t.config.lr),
+                f(t.config.batch_size as f64),
+                format!("{:?}", t.config.fanouts).replace(',', ";"),
+                t.config.labor_iterations.map(|i| f(i as f64)).unwrap_or_default(),
+                f(t.config.layer_dependent as u8 as f64),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("(wrote {}/fig4_{}.csv)", dir.display(), o.dataset);
+    Ok(())
+}

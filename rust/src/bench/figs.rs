@@ -1,0 +1,192 @@
+//! Training-run harness behind Figures 1, 2 and 3 (and the test-F1 / it/s
+//! columns of Table 2).
+//!
+//! * Figure 1: loss + validation F1 against **cumulative sampled
+//!   vertices/edges** at a fixed batch size.
+//! * Figure 3 (A.4): the same series re-keyed by iteration count (one CSV
+//!   serves both).
+//! * Figure 2: convergence under a **vertex sampling budget**, with
+//!   batch sizes solved per method (Table 3).
+
+use crate::coordinator::batcher::EpochBatcher;
+use crate::data::Dataset;
+use crate::runtime::{Engine, Manifest};
+use crate::sampler::{MultiLayerSampler, SamplerKind};
+use crate::train::Trainer;
+use crate::util::csv::{f, CsvWriter};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub dataset: String,
+    pub scale: f64,
+    /// artifact config name, e.g. `gcn_flickr-sim`
+    pub artifact: String,
+    pub fanouts: Vec<usize>,
+    pub batch_size: usize,
+    pub steps: u64,
+    pub eval_every: u64,
+    /// evaluation subset size (validation seeds)
+    pub eval_max: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub step: u64,
+    pub loss: f32,
+    pub val_f1: Option<f64>,
+    pub cum_vertices: u64,
+    pub cum_edges: u64,
+    pub wall_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunSeries {
+    pub method: String,
+    pub points: Vec<Point>,
+    pub test_f1: f64,
+    pub it_per_s: f64,
+}
+
+/// Train one method for `steps` optimizer steps, recording the Figure 1/3
+/// series and a final test F1 over a test subset.
+pub fn run_training(
+    engine: &Engine,
+    man: &Manifest,
+    ds: &Dataset,
+    kind: SamplerKind,
+    o: &RunOpts,
+) -> Result<RunSeries> {
+    let model = engine.load_model(man, &o.artifact)?;
+    let b_cap = model.cfg.batch_size;
+    let bs = o.batch_size.min(b_cap);
+    if bs < o.batch_size {
+        eprintln!(
+            "note: batch {} capped to artifact batch {} for {}",
+            o.batch_size,
+            b_cap,
+            kind.label()
+        );
+    }
+    let sampler = MultiLayerSampler::new(kind.clone(), &o.fanouts);
+    let mut trainer = Trainer::new(model, o.seed)?;
+    trainer.lr = o.lr;
+    let mut batcher = EpochBatcher::new(&ds.splits.train, bs, o.seed ^ 0xF16);
+    let mut points = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut train_time = 0.0f64;
+    for step in 0..o.steps {
+        let seeds = batcher.next_batch();
+        let ts = std::time::Instant::now();
+        let mfg = sampler.sample(&ds.graph, &seeds, o.seed ^ (step << 20));
+        let rec = trainer.step(ds, &mfg)?;
+        train_time += ts.elapsed().as_secs_f64();
+        let val_f1 = if (step + 1) % o.eval_every == 0 || step + 1 == o.steps {
+            let val = &ds.splits.val[..o.eval_max.min(ds.splits.val.len())];
+            Some(trainer.evaluate(ds, &sampler, val, 0xE7A1)?)
+        } else {
+            None
+        };
+        points.push(Point {
+            step: step + 1,
+            loss: rec.loss,
+            val_f1,
+            cum_vertices: rec.cum_vertices,
+            cum_edges: rec.cum_edges,
+            wall_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+    let test = &ds.splits.test[..o.eval_max.min(ds.splits.test.len())];
+    let test_f1 = trainer.evaluate(ds, &sampler, test, 0x7E57)?;
+    Ok(RunSeries {
+        method: kind.label(),
+        points,
+        test_f1,
+        it_per_s: o.steps as f64 / train_time,
+    })
+}
+
+fn write_series(path: &std::path::Path, s: &RunSeries) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        path,
+        &["step", "loss", "val_f1", "cum_vertices", "cum_edges", "wall_s"],
+    )?;
+    for p in &s.points {
+        csv.row(&[
+            f(p.step as f64),
+            f(p.loss as f64),
+            p.val_f1.map(f).unwrap_or_default(),
+            f(p.cum_vertices as f64),
+            f(p.cum_edges as f64),
+            f(p.wall_s),
+        ])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 1 (+ Figure 3 + Table 2 F1/it-s columns): every method at the
+/// same batch size. `only` restricts to one method label (case-insensitive)
+/// so large grids can run one process per method (bounded memory).
+pub fn fig1(o: &RunOpts, repeats_for_budgets: usize, only: Option<&str>) -> Result<Vec<RunSeries>> {
+    let ds = Dataset::load_or_generate(&o.dataset, o.scale)?;
+    let engine = Engine::cpu()?;
+    let man = Manifest::load("artifacts")?;
+    let methods: Vec<_> =
+        super::paper_methods(&ds, &o.fanouts, o.batch_size.min(1024), repeats_for_budgets)
+            .into_iter()
+            .filter(|k| only.is_none_or(|m| k.label().eq_ignore_ascii_case(m)))
+            .collect();
+    let dir = super::results_dir();
+    let mut out = Vec::new();
+    println!(
+        "{:<10} {:>10} {:>9} {:>12} {:>12}",
+        "method", "test F1", "it/s", "cum |V|", "cum |E|"
+    );
+    for kind in methods {
+        let s = run_training(&engine, &man, &ds, kind, o)?;
+        write_series(
+            &dir.join(format!("fig1_{}_{}.csv", o.dataset, super::slug(&s.method))),
+            &s,
+        )?;
+        let last = s.points.last().unwrap();
+        println!(
+            "{:<10} {:>10.4} {:>9.2} {:>12} {:>12}",
+            s.method, s.test_f1, s.it_per_s, last.cum_vertices, last.cum_edges
+        );
+        out.push(s);
+    }
+    println!("(wrote {}/fig1_{}_*.csv — x-axis cum_vertices/cum_edges = Fig 1, x-axis step = Fig 3)", dir.display(), o.dataset);
+    Ok(out)
+}
+
+/// Figure 2: convergence under the dataset's vertex budget; batch size per
+/// method from the Table 3 solver (capped at the artifact batch cap).
+pub fn fig2(o: &RunOpts, repeats: usize) -> Result<Vec<RunSeries>> {
+    let table3 = super::table34::table3(&o.dataset, o.scale, o.fanouts[0], repeats)?;
+    let ds = Dataset::load_or_generate(&o.dataset, o.scale)?;
+    let engine = Engine::cpu()?;
+    let man = Manifest::load("artifacts")?;
+    let dir = super::results_dir();
+    let mut out = Vec::new();
+    for (label, bs) in table3 {
+        let kind = SamplerKind::parse(&label.to_lowercase()).expect("table3 labels parse");
+        let mut opts = o.clone();
+        opts.batch_size = bs;
+        let s = run_training(&engine, &man, &ds, kind, &opts)?;
+        write_series(
+            &dir.join(format!("fig2_{}_{}.csv", o.dataset, super::slug(&s.method))),
+            &s,
+        )?;
+        let lastf1 = s.points.iter().rev().find_map(|p| p.val_f1).unwrap_or(0.0);
+        println!(
+            "{:<10} batch {:>6}  final val F1 {:>7.4}  it/s {:>7.2}",
+            s.method, opts.batch_size, lastf1, s.it_per_s
+        );
+        out.push(s);
+    }
+    println!("(wrote {}/fig2_{}_*.csv)", dir.display(), o.dataset);
+    Ok(out)
+}

@@ -1,0 +1,50 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §6 for the experiment index). Each submodule
+//! prints the paper-shaped rows and writes CSV series under `results/`.
+
+pub mod calibrate;
+pub mod figs;
+pub mod table1;
+pub mod table2;
+pub mod table34;
+pub mod table5;
+pub mod fig4;
+
+use crate::data::Dataset;
+use crate::sampler::{IterSpec, SamplerKind};
+use crate::tune::ladies_budgets_matching;
+
+/// The paper's method roster (Table 2 order): PLADIES, LADIES, LABOR-\*,
+/// LABOR-1, LABOR-0, NS — with LADIES/PLADIES budgets matched to LABOR-\*
+/// exactly as §4.1 prescribes.
+pub fn paper_methods(
+    ds: &Dataset,
+    fanouts: &[usize],
+    batch_size: usize,
+    repeats: usize,
+) -> Vec<SamplerKind> {
+    let reference = SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false };
+    let budgets = ladies_budgets_matching(ds, &reference, fanouts, batch_size, repeats);
+    vec![
+        SamplerKind::Pladies { budgets: budgets.clone() },
+        SamplerKind::Ladies { budgets },
+        reference,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Neighbor,
+    ]
+}
+
+/// Output directory for experiment CSVs.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(
+        std::env::var("LABOR_RESULTS_DIR").unwrap_or_else(|_| "results".into()),
+    );
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Slugify a method label for file names (`LABOR-*` → `labor-star`).
+pub fn slug(label: &str) -> String {
+    label.to_lowercase().replace('*', "star").replace(' ', "-")
+}

@@ -1,0 +1,60 @@
+//! Table 1: dataset properties — |V|, |E|, avg degree, #feats, budget,
+//! split percentages (plus degree-skew diagnostics of the generator).
+
+use crate::data::{Dataset, SPECS};
+use crate::graph::stats::DegreeStats;
+use crate::util::csv::{f, CsvWriter};
+use anyhow::Result;
+
+pub fn run(scale: f64, datasets: &[String]) -> Result<()> {
+    let dir = super::results_dir();
+    let mut csv = CsvWriter::create(
+        dir.join("table1.csv"),
+        &["dataset", "V", "E", "avg_deg", "feats", "budget_v3", "train_pct", "val_pct", "test_pct", "max_deg", "p99_deg", "top1pct_edge_share"],
+    )?;
+    println!(
+        "{:<14} {:>9} {:>12} {:>9} {:>7} {:>10} {:>17}",
+        "dataset", "|V|", "|E|", "|E|/|V|", "feats", "V3 budget", "train-val-test %"
+    );
+    for spec in SPECS {
+        if !datasets.is_empty() && !datasets.iter().any(|d| d == spec.name) {
+            continue;
+        }
+        if spec.name == "tiny" && !datasets.iter().any(|d| d == "tiny") {
+            continue;
+        }
+        let ds = Dataset::load_or_generate(spec.name, scale)?;
+        let st = DegreeStats::compute(&ds.graph);
+        let (tr, va) = (spec.train_frac * 100.0, spec.val_frac * 100.0);
+        let te = 100.0 - tr - va;
+        println!(
+            "{:<14} {:>9} {:>12} {:>9.2} {:>7} {:>10} {:>9.0}-{:.0}-{:.0}",
+            spec.name,
+            st.num_vertices,
+            st.num_edges,
+            st.avg_degree,
+            spec.num_features,
+            ds.budget_v3(),
+            tr,
+            va,
+            te
+        );
+        csv.row(&[
+            spec.name.to_string(),
+            f(st.num_vertices as f64),
+            f(st.num_edges as f64),
+            f(st.avg_degree),
+            f(spec.num_features as f64),
+            f(ds.budget_v3() as f64),
+            f(tr),
+            f(va),
+            f(te),
+            f(st.max_degree as f64),
+            f(st.p99_degree as f64),
+            f(st.top1pct_edge_share),
+        ])?;
+    }
+    csv.flush()?;
+    println!("\n(wrote {}/table1.csv)", dir.display());
+    Ok(())
+}

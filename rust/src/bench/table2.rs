@@ -1,0 +1,80 @@
+//! Table 2: average per-layer |V^l| / |E^l| and sampling throughput for
+//! every method (batch = 1024, fanout = 10, LADIES/PLADIES budgets matched
+//! to LABOR-\*). Test F1 comes from the Figure 1 training runs (the
+//! harness prints both when `--train` is set; sampling statistics alone
+//! take seconds, training takes minutes).
+
+use crate::coordinator::metrics::SamplerStats;
+use crate::data::Dataset;
+use crate::sampler::MultiLayerSampler;
+use crate::util::csv::{f, CsvWriter};
+use anyhow::Result;
+use std::time::Instant;
+
+pub struct Table2Opts {
+    pub dataset: String,
+    pub scale: f64,
+    pub batch_size: usize,
+    pub fanout: usize,
+    pub repeats: usize,
+}
+
+pub fn run(o: &Table2Opts) -> Result<Vec<(String, SamplerStats)>> {
+    let ds = Dataset::load_or_generate(&o.dataset, o.scale)?;
+    let fanouts = vec![o.fanout; 3];
+    let methods = super::paper_methods(&ds, &fanouts, o.batch_size, o.repeats.min(10));
+
+    let dir = super::results_dir();
+    let mut csv = CsvWriter::create(
+        dir.join(format!("table2_{}.csv", o.dataset)),
+        &["method", "V3", "E2", "V2", "E1", "V1", "E0", "V0", "sample_it_per_s"],
+    )?;
+    println!(
+        "{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7} {:>9}",
+        "method", "|V3|k", "|E2|k", "|V2|k", "|E1|k", "|V1|k", "|E0|k", "|V0|", "it/s"
+    );
+
+    let mut out = Vec::new();
+    for kind in methods {
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &fanouts);
+        let mut stats = SamplerStats::new(&label, 3);
+        for r in 0..o.repeats {
+            let start = (r * o.batch_size) % ds.splits.train.len();
+            let seeds: Vec<u32> = (0..o.batch_size.min(ds.splits.train.len()))
+                .map(|i| ds.splits.train[(start + i) % ds.splits.train.len()])
+                .collect();
+            let t0 = Instant::now();
+            let mfg = sampler.sample(&ds.graph, &seeds, 0xAB1E ^ r as u64);
+            stats.push(&mfg, t0.elapsed());
+        }
+        let row = stats.table_row(3);
+        println!(
+            "{:<10} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>7} {:>9.1}",
+            label,
+            row[0],
+            row[1],
+            row[2],
+            row[3],
+            row[4],
+            row[5],
+            o.batch_size,
+            stats.batches_per_sec()
+        );
+        csv.row(&[
+            label.clone(),
+            f(row[0] * 1e3),
+            f(row[1] * 1e3),
+            f(row[2] * 1e3),
+            f(row[3] * 1e3),
+            f(row[4] * 1e3),
+            f(row[5] * 1e3),
+            f(o.batch_size as f64),
+            f(stats.batches_per_sec()),
+        ])?;
+        out.push((label, stats));
+    }
+    csv.flush()?;
+    println!("\n(wrote {}/table2_{}.csv)", dir.display(), o.dataset);
+    Ok(out)
+}

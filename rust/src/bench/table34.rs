@@ -1,0 +1,88 @@
+//! Table 3 (batch sizes under a vertex budget, §4.2) and Table 4 (|V^3| vs
+//! number of fixed-point iterations, §4.3).
+
+use crate::data::Dataset;
+use crate::sampler::{IterSpec, SamplerKind};
+use crate::tune::{mean_deepest_vertices, solve_batch_size};
+use crate::util::csv::{f, CsvWriter};
+use anyhow::Result;
+
+/// Table 3: solve the batch size so each method's E[|V^3|] matches the
+/// dataset's Table 1 budget.
+pub fn table3(dataset: &str, scale: f64, fanout: usize, repeats: usize) -> Result<Vec<(String, usize)>> {
+    let ds = Dataset::load_or_generate(dataset, scale)?;
+    let budget = ds.budget_v3();
+    let fanouts = vec![fanout; 3];
+    let methods: Vec<SamplerKind> = vec![
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Neighbor,
+    ];
+    let dir = super::results_dir();
+    let mut csv = CsvWriter::create(
+        dir.join(format!("table3_{dataset}.csv")),
+        &["method", "batch_size", "budget"],
+    )?;
+    println!("dataset {dataset}: |V^3| budget = {budget}");
+    println!("{:<10} {:>11}", "method", "batch size");
+    let mut out = Vec::new();
+    for kind in methods {
+        let bs = solve_batch_size(&ds, &kind, &fanouts, budget, repeats);
+        println!("{:<10} {:>11}", kind.label(), bs);
+        csv.row(&[kind.label(), f(bs as f64), f(budget as f64)])?;
+        out.push((kind.label(), bs));
+    }
+    csv.flush()?;
+    println!("(wrote {}/table3_{dataset}.csv)", dir.display());
+    Ok(out)
+}
+
+/// Table 4: mean |V^3| (thousands) vs the number of importance-sampling
+/// fixed-point iterations (NS, 0, 1, 2, 3, *).
+pub fn table4(
+    dataset: &str,
+    scale: f64,
+    batch_size: usize,
+    fanout: usize,
+    repeats: usize,
+) -> Result<Vec<(String, f64)>> {
+    let ds = Dataset::load_or_generate(dataset, scale)?;
+    let fanouts = vec![fanout; 3];
+    let mut columns: Vec<(String, SamplerKind)> = vec![("NS".into(), SamplerKind::Neighbor)];
+    for i in 0..=3usize {
+        columns.push((
+            format!("{i}"),
+            SamplerKind::Labor { iterations: IterSpec::Fixed(i), layer_dependent: false },
+        ));
+    }
+    columns.push((
+        "*".into(),
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false },
+    ));
+
+    let dir = super::results_dir();
+    let mut csv = CsvWriter::create(
+        dir.join(format!("table4_{dataset}.csv")),
+        &["iterations", "v3"],
+    )?;
+    let mut out = Vec::new();
+    print!("{dataset:<14}");
+    for (label, kind) in &columns {
+        let v3 = mean_deepest_vertices(&ds, kind, &fanouts, batch_size, repeats);
+        print!(" {label}:{:>8.1}k", v3 / 1e3);
+        csv.row(&[label.clone(), f(v3)])?;
+        out.push((label.clone(), v3));
+    }
+    println!();
+    csv.flush()?;
+    println!("(wrote {}/table4_{dataset}.csv)", dir.display());
+
+    // monotonicity sanity (Appendix A.5): more iterations, fewer vertices
+    for w in out[1..].windows(2) {
+        if w[1].1 > w[0].1 * 1.02 {
+            eprintln!("WARNING: fixed-point objective not monotone: {w:?}");
+        }
+    }
+    Ok(out)
+}

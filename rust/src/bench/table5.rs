@@ -1,0 +1,60 @@
+//! Table 5 (Appendix A.6): GATv2 runtime per training iteration for every
+//! sampler. The paper's claim: runtimes correlate with |E^*| because GAT
+//! compute/memory is per-edge, so LADIES variants are slowest (OOM on the
+//! densest datasets). We report ms/iteration on the CPU PJRT backend plus
+//! the per-batch edge totals that drive them.
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, Manifest};
+use crate::sampler::MultiLayerSampler;
+use crate::train::Trainer;
+use crate::util::csv::{f, CsvWriter};
+use anyhow::Result;
+
+pub struct Table5Opts {
+    pub dataset: String,
+    pub scale: f64,
+    pub batch_size: usize,
+    pub fanout: usize,
+    pub iters: usize,
+}
+
+pub fn run(o: &Table5Opts) -> Result<()> {
+    let ds = Dataset::load_or_generate(&o.dataset, o.scale)?;
+    let engine = Engine::cpu()?;
+    let man = Manifest::load("artifacts")?;
+    let artifact = format!("gatv2_{}", o.dataset);
+    let fanouts = vec![o.fanout; 3];
+    let methods = super::paper_methods(&ds, &fanouts, o.batch_size, 5);
+
+    let dir = super::results_dir();
+    let mut csv = CsvWriter::create(
+        dir.join(format!("table5_{}.csv", o.dataset)),
+        &["method", "ms_per_iter", "total_edges"],
+    )?;
+    println!("{:<10} {:>12} {:>14}", "method", "ms/iter", "edges/batch");
+    for kind in methods {
+        let label = kind.label();
+        let model = engine.load_model(&man, &artifact)?;
+        let b = model.cfg.batch_size.min(o.batch_size).min(ds.splits.train.len());
+        let sampler = MultiLayerSampler::new(kind, &fanouts);
+        let mut trainer = Trainer::new(model, 5)?;
+        let seeds: Vec<u32> = ds.splits.train[..b].to_vec();
+        let mut total_ms = 0.0;
+        let mut edges = 0usize;
+        for it in 0..o.iters {
+            let mfg = sampler.sample(&ds.graph, &seeds, 0x7AB5 ^ it as u64);
+            edges = mfg.edge_counts().iter().sum();
+            let rec = trainer.step(&ds, &mfg)?;
+            if it > 0 {
+                total_ms += rec.wall_ms; // skip warmup iteration
+            }
+        }
+        let ms = total_ms / (o.iters - 1).max(1) as f64;
+        println!("{:<10} {:>12.1} {:>14}", label, ms, edges);
+        csv.row(&[label, f(ms), f(edges as f64)])?;
+    }
+    csv.flush()?;
+    println!("(wrote {}/table5_{}.csv)", dir.display(), o.dataset);
+    Ok(())
+}

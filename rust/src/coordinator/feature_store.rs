@@ -1,0 +1,138 @@
+//! Feature store with a simulated slow tier.
+//!
+//! Paper §4.1 ("Comparing LABOR variants"): the right LABOR-i depends on
+//! *feature access speed* — features on host memory fetched over PCI-e make
+//! vertex-count minimization (LABOR-\*) win; GPU-resident features favor
+//! LABOR-0. We model a storage tier with a per-request latency and a
+//! per-byte cost so that experiments can sweep that spectrum on CPU-only
+//! hardware (substitution documented in DESIGN.md §4).
+
+use std::time::{Duration, Instant};
+
+/// Storage-tier latency model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierModel {
+    /// fixed cost per gather request (e.g. a PCI-e doorbell + DMA setup)
+    pub request_latency: Duration,
+    /// sustained bandwidth in bytes/second
+    pub bandwidth_bps: f64,
+}
+
+impl TierModel {
+    /// Instant local memory (no simulation).
+    pub fn local() -> Self {
+        Self { request_latency: Duration::ZERO, bandwidth_bps: f64::INFINITY }
+    }
+
+    /// PCI-e 3.0 x16-ish host-memory tier: ~10 µs latency, ~12 GB/s.
+    pub fn pcie() -> Self {
+        Self { request_latency: Duration::from_micros(10), bandwidth_bps: 12.0e9 }
+    }
+
+    /// An NVMe-ish tier: ~80 µs latency, ~3 GB/s.
+    pub fn nvme() -> Self {
+        Self { request_latency: Duration::from_micros(80), bandwidth_bps: 3.0e9 }
+    }
+
+    /// Simulated transfer time for `bytes`.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        if self.bandwidth_bps.is_infinite() {
+            return self.request_latency;
+        }
+        self.request_latency + Duration::from_secs_f64(bytes as f64 / self.bandwidth_bps)
+    }
+}
+
+/// Gathers vertex feature rows, accounting (and optionally sleeping) for
+/// the simulated tier.
+pub struct FeatureStore<'a> {
+    features: &'a [f32],
+    dim: usize,
+    tier: TierModel,
+    /// when false, the tier cost is accounted but not slept — useful for
+    /// deterministic unit tests and for analytic experiments
+    pub simulate_sleep: bool,
+    pub bytes_fetched: u64,
+    pub requests: u64,
+    pub simulated_time: Duration,
+}
+
+impl<'a> FeatureStore<'a> {
+    pub fn new(features: &'a [f32], dim: usize, tier: TierModel) -> Self {
+        assert_eq!(features.len() % dim, 0);
+        Self {
+            features,
+            dim,
+            tier,
+            simulate_sleep: false,
+            bytes_fetched: 0,
+            requests: 0,
+            simulated_time: Duration::ZERO,
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.features.len() / self.dim
+    }
+
+    /// Gather rows `ids` into `out` (resized to `ids.len() * dim`).
+    /// Returns the (simulated) fetch duration for this request.
+    pub fn gather(&mut self, ids: &[u32], out: &mut Vec<f32>) -> Duration {
+        let t0 = Instant::now();
+        out.clear();
+        out.reserve(ids.len() * self.dim);
+        for &v in ids {
+            let base = v as usize * self.dim;
+            out.extend_from_slice(&self.features[base..base + self.dim]);
+        }
+        let bytes = ids.len() * self.dim * 4;
+        self.bytes_fetched += bytes as u64;
+        self.requests += 1;
+        let simulated = self.tier.transfer_time(bytes);
+        self.simulated_time += simulated;
+        let real = t0.elapsed();
+        if self.simulate_sleep && simulated > real {
+            std::thread::sleep(simulated - real);
+            return simulated;
+        }
+        real.max(simulated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_copies_correct_rows() {
+        let feats: Vec<f32> = (0..20).map(|x| x as f32).collect(); // 5 rows x 4
+        let mut fs = FeatureStore::new(&feats, 4, TierModel::local());
+        let mut out = Vec::new();
+        fs.gather(&[1, 3], &mut out);
+        assert_eq!(out, vec![4.0, 5.0, 6.0, 7.0, 12.0, 13.0, 14.0, 15.0]);
+        assert_eq!(fs.bytes_fetched, 2 * 4 * 4);
+        assert_eq!(fs.requests, 1);
+    }
+
+    #[test]
+    fn tier_costs_scale_with_bytes() {
+        let pcie = TierModel::pcie();
+        let t1 = pcie.transfer_time(1 << 20);
+        let t2 = pcie.transfer_time(1 << 24);
+        assert!(t2 > t1);
+        // 16 MiB at 12 GB/s ≈ 1.4 ms
+        assert!(t2 > Duration::from_micros(1000) && t2 < Duration::from_millis(3));
+        assert_eq!(TierModel::local().transfer_time(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn simulated_time_accumulates_without_sleeping() {
+        let feats = vec![0.0f32; 400];
+        let mut fs = FeatureStore::new(&feats, 4, TierModel::nvme());
+        let mut out = Vec::new();
+        fs.gather(&[0; 50], &mut out);
+        fs.gather(&[1; 50], &mut out);
+        assert_eq!(fs.requests, 2);
+        assert!(fs.simulated_time >= Duration::from_micros(160)); // 2 requests
+    }
+}

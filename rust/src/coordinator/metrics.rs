@@ -1,0 +1,96 @@
+//! Sampler metrics: per-layer |V|/|E| accumulators and throughput — the
+//! quantities of paper Table 2 and Table 4.
+
+use crate::sampler::Mfg;
+use crate::util::stats::Welford;
+use std::time::Duration;
+
+/// Accumulates per-layer statistics over many sampled batches.
+#[derive(Clone, Debug)]
+pub struct SamplerStats {
+    pub name: String,
+    /// vertex counts per layer depth (index 0 = |V^1|)
+    pub vertices: Vec<Welford>,
+    /// edge counts per layer depth (index 0 = |E^0|)
+    pub edges: Vec<Welford>,
+    pub sample_time: Welford,
+    pub batches: u64,
+}
+
+impl SamplerStats {
+    pub fn new(name: &str, num_layers: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            vertices: vec![Welford::default(); num_layers],
+            edges: vec![Welford::default(); num_layers],
+            sample_time: Welford::default(),
+            batches: 0,
+        }
+    }
+
+    pub fn push(&mut self, mfg: &Mfg, elapsed: Duration) {
+        for (d, layer) in mfg.layers.iter().enumerate() {
+            self.vertices[d].push(layer.num_inputs() as f64);
+            self.edges[d].push(layer.num_edges() as f64);
+        }
+        self.sample_time.push(elapsed.as_secs_f64());
+        self.batches += 1;
+    }
+
+    /// mean |V^l| (1-based depth, paper notation)
+    pub fn mean_vertices(&self, depth: usize) -> f64 {
+        self.vertices[depth - 1].mean()
+    }
+
+    /// mean |E^l| (0-based, paper notation: E^0 is adjacent to the seeds)
+    pub fn mean_edges(&self, depth: usize) -> f64 {
+        self.edges[depth].mean()
+    }
+
+    /// sampling-only throughput (batches/s)
+    pub fn batches_per_sec(&self) -> f64 {
+        let m = self.sample_time.mean();
+        if m > 0.0 {
+            1.0 / m
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Table 2-style row: `V^L E^{L-1} ... V^1 E^0` in thousands.
+    pub fn table_row(&self, num_layers: usize) -> Vec<f64> {
+        let mut row = Vec::new();
+        for d in (1..=num_layers).rev() {
+            row.push(self.mean_vertices(d) / 1e3);
+            row.push(self.edges[d - 1].mean() / 1e3);
+        }
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+
+    #[test]
+    fn accumulates_layer_counts() {
+        let g = crate::sampler::testutil::test_graph();
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[5, 5],
+        );
+        let mut stats = SamplerStats::new("LABOR-0", 2);
+        for b in 0..10 {
+            let t0 = std::time::Instant::now();
+            let mfg = sampler.sample(&g, &(0..64).collect::<Vec<_>>(), b);
+            stats.push(&mfg, t0.elapsed());
+        }
+        assert_eq!(stats.batches, 10);
+        assert!(stats.mean_vertices(1) > 64.0);
+        assert!(stats.mean_vertices(2) >= stats.mean_vertices(1));
+        assert!(stats.mean_edges(0) > 0.0);
+        assert!(stats.batches_per_sec() > 0.0);
+        assert_eq!(stats.table_row(2).len(), 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! The L3 streaming coordinator: epoch batching, a parallel sampling
+//! pipeline with bounded-queue backpressure, a feature store with a
+//! simulated slow tier, and the metrics that back the paper's tables.
+
+pub mod batcher;
+pub mod feature_store;
+pub mod metrics;
+pub mod pipeline;
+
+pub use batcher::EpochBatcher;
+pub use feature_store::{FeatureStore, TierModel};
+pub use metrics::SamplerStats;
+pub use pipeline::{PipelineConfig, SampledBatch, SamplingPipeline};

@@ -1,0 +1,205 @@
+//! Streaming sampling pipeline: parallel sampler workers feeding the
+//! trainer through a bounded queue (backpressure), with in-order delivery.
+//!
+//! This is the L3 "data-pipeline" role of the paper's system: graph
+//! sampling is CPU work that must overlap training compute. N worker
+//! threads pull batch indices from a shared cursor, sample MFGs, and push
+//! `(batch_id, mfg)` into a bounded channel; the consumer reorders them so
+//! training sees batches in the deterministic `EpochBatcher` order
+//! regardless of worker scheduling.
+
+use super::batcher::EpochBatcher;
+use crate::graph::CscGraph;
+use crate::sampler::{Mfg, MultiLayerSampler};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// One unit of work delivered to the trainer.
+pub struct SampledBatch {
+    pub batch_id: u64,
+    pub seeds: Vec<u32>,
+    pub mfg: Mfg,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub num_workers: usize,
+    /// bounded queue depth per pipeline (backpressure: workers block when
+    /// the trainer falls behind by this many batches)
+    pub queue_depth: usize,
+    pub batch_size: usize,
+    /// total batches to produce
+    pub num_batches: u64,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { num_workers: 4, queue_depth: 8, batch_size: 1024, num_batches: 100, seed: 0 }
+    }
+}
+
+/// Handle to a running pipeline; iterate with [`SamplingPipeline::next`].
+pub struct SamplingPipeline {
+    rx: mpsc::Receiver<SampledBatch>,
+    reorder: BTreeMap<u64, SampledBatch>,
+    next_id: u64,
+    num_batches: u64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SamplingPipeline {
+    /// Spawn the workers. Batches are derived from `EpochBatcher` so the
+    /// seed sequence is identical to single-threaded iteration.
+    pub fn spawn(
+        graph: Arc<CscGraph>,
+        sampler: Arc<MultiLayerSampler>,
+        train_ids: Arc<Vec<u32>>,
+        cfg: PipelineConfig,
+    ) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<SampledBatch>(cfg.queue_depth.max(1));
+        let cursor = Arc::new(AtomicU64::new(0));
+
+        // Pre-materialize the seed batches so that workers can claim
+        // arbitrary batch ids without a shared mutable batcher. This is
+        // cheap: ids only, no sampling.
+        let mut batcher = EpochBatcher::new(&train_ids, cfg.batch_size, cfg.seed);
+        batcher.drop_last = true;
+        let batches: Arc<Vec<Vec<u32>>> =
+            Arc::new((0..cfg.num_batches).map(|_| batcher.next_batch()).collect());
+
+        let mut workers = Vec::new();
+        for _ in 0..cfg.num_workers.max(1) {
+            let graph = graph.clone();
+            let sampler = sampler.clone();
+            let batches = batches.clone();
+            let cursor = cursor.clone();
+            let tx = tx.clone();
+            let num_batches = cfg.num_batches;
+            let seed = cfg.seed;
+            workers.push(std::thread::spawn(move || {
+                loop {
+                    let id = cursor.fetch_add(1, Ordering::Relaxed);
+                    if id >= num_batches {
+                        return;
+                    }
+                    let seeds = batches[id as usize].clone();
+                    let mfg = sampler.sample(&graph, &seeds, seed ^ id);
+                    if tx.send(SampledBatch { batch_id: id, seeds, mfg }).is_err() {
+                        return; // consumer dropped
+                    }
+                }
+            }));
+        }
+        drop(tx);
+        Self { rx, reorder: BTreeMap::new(), next_id: 0, num_batches: cfg.num_batches, workers }
+    }
+
+    /// Next batch in order; `None` when the configured batch count is
+    /// exhausted.
+    pub fn next(&mut self) -> Option<SampledBatch> {
+        if self.next_id >= self.num_batches {
+            return None;
+        }
+        loop {
+            if let Some(b) = self.reorder.remove(&self.next_id) {
+                self.next_id += 1;
+                return Some(b);
+            }
+            match self.rx.recv() {
+                Ok(b) => {
+                    self.reorder.insert(b.batch_id, b);
+                }
+                Err(_) => return None, // workers gone and buffer exhausted
+            }
+        }
+    }
+
+    /// Join all workers (for clean shutdown accounting in tests).
+    pub fn join(self) {
+        drop(self.rx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{IterSpec, SamplerKind};
+
+    fn setup(num_batches: u64, workers: usize, depth: usize) -> SamplingPipeline {
+        let g = Arc::new(crate::sampler::testutil::test_graph());
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[5, 5],
+        ));
+        let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
+        SamplingPipeline::spawn(
+            g,
+            sampler,
+            ids,
+            PipelineConfig {
+                num_workers: workers,
+                queue_depth: depth,
+                batch_size: 64,
+                num_batches,
+                seed: 11,
+            },
+        )
+    }
+
+    #[test]
+    fn delivers_exactly_n_batches_in_order() {
+        let mut p = setup(23, 4, 4);
+        let mut ids = Vec::new();
+        while let Some(b) = p.next() {
+            ids.push(b.batch_id);
+            assert_eq!(b.seeds.len(), 64);
+            assert_eq!(b.mfg.layers.len(), 2);
+        }
+        assert_eq!(ids, (0..23).collect::<Vec<u64>>());
+        p.join();
+    }
+
+    #[test]
+    fn parallel_matches_single_threaded_sampling() {
+        // determinism: worker count must not change delivered MFGs
+        let collect = |workers: usize| -> Vec<Vec<usize>> {
+            let mut p = setup(12, workers, 3);
+            let mut out = Vec::new();
+            while let Some(b) = p.next() {
+                out.push(b.mfg.vertex_counts());
+            }
+            p.join();
+            out
+        };
+        assert_eq!(collect(1), collect(7));
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        // with a slow consumer, the queue can never hold more than depth
+        // batches: workers block. We observe this indirectly: all batches
+        // still arrive exactly once, in order, with depth 1.
+        let mut p = setup(10, 6, 1);
+        let mut got = 0;
+        while let Some(b) = p.next() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            assert_eq!(b.batch_id, got);
+            got += 1;
+        }
+        assert_eq!(got, 10);
+        p.join();
+    }
+
+    #[test]
+    fn early_drop_shuts_workers_down() {
+        let mut p = setup(1000, 4, 2);
+        let _ = p.next();
+        p.join(); // must not hang
+    }
+}

@@ -1,0 +1,436 @@
+//! Dataset registry: Table-1-calibrated synthetic datasets.
+//!
+//! The paper's datasets (reddit, ogbn-products, yelp, flickr) are replaced
+//! by DC-SBM graphs matched on |V|, |E|, average degree, degree skew,
+//! feature dimension, class count, label type (yelp is multilabel) and
+//! train/val/test split fractions (paper Table 1). The default `scale` is
+//! 0.1 (one tenth of the paper's sizes) so the full experiment grid runs on
+//! one machine; `--scale 1.0` reproduces paper-sized graphs.
+//!
+//! Features are class-conditional Gaussians over random unit directions, so
+//! the convergence experiments (Figures 1–3) have real signal to learn.
+
+use crate::graph::gen::{dc_sbm, DcSbmConfig};
+use crate::graph::{io, CscGraph};
+use crate::rng::StreamRng;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+/// Static description of a synthetic dataset (pre-scaling).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// |V| at scale 1.0 (paper Table 1)
+    pub num_vertices: usize,
+    /// |E| (directed arcs) at scale 1.0
+    pub num_arcs: u64,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub multilabel: bool,
+    /// (train, val) fractions; test is the remainder — paper Table 1
+    pub train_frac: f64,
+    pub val_frac: f64,
+    /// |V^3| vertex sampling budget at scale 1.0 (paper Table 1)
+    pub budget_v3: usize,
+    /// DC-SBM shape knobs
+    pub homophily: f64,
+    pub degree_exponent: f64,
+    pub seed: u64,
+}
+
+/// All Table 1 rows, plus a `tiny` config for tests and CI.
+pub const SPECS: &[DatasetSpec] = &[
+    DatasetSpec {
+        name: "reddit-sim",
+        num_vertices: 233_000,
+        num_arcs: 115_000_000,
+        num_features: 602,
+        num_classes: 41,
+        multilabel: false,
+        train_frac: 0.66,
+        val_frac: 0.10,
+        budget_v3: 60_000,
+        homophily: 0.85,
+        degree_exponent: 0.75,
+        seed: 0xEDD17,
+    },
+    DatasetSpec {
+        name: "products-sim",
+        num_vertices: 2_450_000,
+        num_arcs: 61_900_000,
+        num_features: 100,
+        num_classes: 47,
+        multilabel: false,
+        train_frac: 0.08,
+        val_frac: 0.02,
+        budget_v3: 400_000,
+        homophily: 0.85,
+        degree_exponent: 0.8,
+        seed: 0x9800D,
+    },
+    DatasetSpec {
+        name: "yelp-sim",
+        num_vertices: 717_000,
+        num_arcs: 14_000_000,
+        num_features: 300,
+        num_classes: 50,
+        multilabel: true,
+        train_frac: 0.75,
+        val_frac: 0.10,
+        budget_v3: 200_000,
+        homophily: 0.8,
+        degree_exponent: 0.8,
+        seed: 0x7E19,
+    },
+    DatasetSpec {
+        name: "flickr-sim",
+        num_vertices: 89_200,
+        num_arcs: 900_000,
+        num_features: 500,
+        num_classes: 7,
+        multilabel: false,
+        train_frac: 0.50,
+        val_frac: 0.25,
+        budget_v3: 70_000,
+        homophily: 0.7,
+        degree_exponent: 0.85,
+        seed: 0xF11C4,
+    },
+    DatasetSpec {
+        name: "tiny",
+        num_vertices: 3_000,
+        num_arcs: 60_000,
+        num_features: 16,
+        num_classes: 4,
+        multilabel: false,
+        train_frac: 0.5,
+        val_frac: 0.25,
+        budget_v3: 2_000,
+        homophily: 0.8,
+        degree_exponent: 0.7,
+        seed: 0x717,
+    },
+];
+
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    SPECS.iter().find(|s| s.name == name)
+}
+
+/// Train/validation/test vertex id splits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Splits {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+/// A fully materialized dataset.
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    /// effective scale applied to |V|, |E| and the budget
+    pub scale: f64,
+    pub graph: CscGraph,
+    /// row-major `|V| x num_features`
+    pub features: Vec<f32>,
+    /// single-label targets (class id per vertex); for multilabel datasets
+    /// this holds the primary community and `multilabels` holds the multi-hot
+    pub labels: Vec<u16>,
+    /// `|V| x num_classes` multi-hot targets, only for multilabel datasets
+    pub multilabels: Option<Vec<u8>>,
+    pub splits: Splits,
+}
+
+impl Dataset {
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.spec.num_features
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.spec.num_classes
+    }
+
+    /// |V^3| sampling budget at the dataset's scale (Table 1, last column).
+    pub fn budget_v3(&self) -> usize {
+        ((self.spec.budget_v3 as f64 * self.scale).round() as usize).max(100)
+    }
+
+    /// feature row of a vertex
+    #[inline]
+    pub fn feature(&self, v: u32) -> &[f32] {
+        let f = self.spec.num_features;
+        &self.features[v as usize * f..(v as usize + 1) * f]
+    }
+
+    /// multi-hot label row (multilabel datasets only)
+    #[inline]
+    pub fn multilabel_row(&self, v: u32) -> Option<&[u8]> {
+        let ml = self.multilabels.as_ref()?;
+        let c = self.spec.num_classes;
+        Some(&ml[v as usize * c..(v as usize + 1) * c])
+    }
+
+    /// Generate from scratch (deterministic in spec.seed and scale).
+    pub fn generate(spec: &DatasetSpec, scale: f64) -> Dataset {
+        assert!(scale > 0.0 && scale <= 1.0, "scale must be in (0,1]");
+        let nv = ((spec.num_vertices as f64 * scale) as usize).max(4 * spec.num_classes);
+        let na = ((spec.num_arcs as f64 * scale) as u64).max(nv as u64);
+        let g = dc_sbm(&DcSbmConfig {
+            num_vertices: nv,
+            num_arcs: na,
+            num_communities: spec.num_classes,
+            homophily: spec.homophily,
+            degree_exponent: spec.degree_exponent,
+            seed: spec.seed,
+        });
+        let mut rng = StreamRng::new(spec.seed ^ 0xFEA7);
+
+        // class-conditional Gaussian features over random unit directions
+        let f = spec.num_features;
+        let c = spec.num_classes;
+        let mut mus = vec![0.0f32; c * f];
+        for mu in mus.chunks_exact_mut(f) {
+            let mut norm = 0.0f64;
+            for x in mu.iter_mut() {
+                let v = rng.normal();
+                *x = v as f32;
+                norm += v * v;
+            }
+            let inv = (1.0 / norm.sqrt()) as f32;
+            mu.iter_mut().for_each(|x| *x *= inv);
+        }
+
+        // multilabel: primary community + 0..2 extra deterministic labels
+        let multilabels = if spec.multilabel {
+            let mut ml = vec![0u8; nv * c];
+            for v in 0..nv {
+                let prim = g.communities[v] as usize;
+                ml[v * c + prim] = 1;
+                let extra = rng.below(3) as usize;
+                for e in 0..extra {
+                    let l = rng.below(c as u64) as usize;
+                    ml[v * c + l] = 1;
+                    let _ = e;
+                }
+            }
+            Some(ml)
+        } else {
+            None
+        };
+
+        const SIGNAL: f32 = 1.0;
+        const NOISE: f32 = 1.0;
+        let mut features = vec![0.0f32; nv * f];
+        for v in 0..nv {
+            let row = &mut features[v * f..(v + 1) * f];
+            match &multilabels {
+                Some(ml) => {
+                    let labels: Vec<usize> =
+                        (0..c).filter(|&l| ml[v * c + l] == 1).collect();
+                    let w = SIGNAL / labels.len() as f32;
+                    for &l in &labels {
+                        let mu = &mus[l * f..(l + 1) * f];
+                        for (x, m) in row.iter_mut().zip(mu) {
+                            *x += w * m;
+                        }
+                    }
+                }
+                None => {
+                    let l = g.communities[v] as usize;
+                    let mu = &mus[l * f..(l + 1) * f];
+                    for (x, m) in row.iter_mut().zip(mu) {
+                        *x += SIGNAL * m;
+                    }
+                }
+            }
+            for x in row.iter_mut() {
+                *x += NOISE * rng.normal() as f32 / (f as f32).sqrt();
+            }
+        }
+
+        // splits: shuffled ids cut by the Table 1 fractions
+        let mut ids: Vec<u32> = (0..nv as u32).collect();
+        rng.shuffle(&mut ids);
+        let ntrain = (nv as f64 * spec.train_frac) as usize;
+        let nval = (nv as f64 * spec.val_frac) as usize;
+        let splits = Splits {
+            train: ids[..ntrain].to_vec(),
+            val: ids[ntrain..ntrain + nval].to_vec(),
+            test: ids[ntrain + nval..].to_vec(),
+        };
+
+        Dataset {
+            spec: spec.clone(),
+            scale,
+            graph: g.graph,
+            features,
+            labels: g.communities,
+            multilabels,
+            splits,
+        }
+    }
+
+    fn cache_path(name: &str, scale: f64) -> PathBuf {
+        PathBuf::from(
+            std::env::var("LABOR_DATA_DIR").unwrap_or_else(|_| "data".to_string()),
+        )
+        .join(format!("{name}-s{scale:.3}.bin"))
+    }
+
+    /// Load from the `data/` cache, generating (and caching) on a miss.
+    pub fn load_or_generate(name: &str, scale: f64) -> anyhow::Result<Dataset> {
+        let spec =
+            spec(name).ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+        let path = Self::cache_path(name, scale);
+        if path.exists() {
+            match Self::load(spec, scale, &path) {
+                Ok(ds) => return Ok(ds),
+                Err(e) => eprintln!("cache read failed ({e}); regenerating"),
+            }
+        }
+        let ds = Self::generate(spec, scale);
+        if let Err(e) = ds.save(&path) {
+            eprintln!("warning: could not cache dataset to {path:?}: {e}");
+        }
+        Ok(ds)
+    }
+
+    fn save(&self, path: &PathBuf) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        io::write_graph(&mut w, &self.graph)?;
+        io::write_f32_slice(&mut w, &self.features)?;
+        io::write_u16_slice(&mut w, &self.labels)?;
+        match &self.multilabels {
+            Some(ml) => {
+                io::write_u64(&mut w, 1)?;
+                io::write_u64(&mut w, ml.len() as u64)?;
+                w.write_all(ml)?;
+            }
+            None => io::write_u64(&mut w, 0)?,
+        }
+        io::write_u32_slice(&mut w, &self.splits.train)?;
+        io::write_u32_slice(&mut w, &self.splits.val)?;
+        io::write_u32_slice(&mut w, &self.splits.test)?;
+        w.flush()
+    }
+
+    fn load(spec: &DatasetSpec, scale: f64, path: &PathBuf) -> std::io::Result<Dataset> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let graph = io::read_graph(&mut r)?;
+        let features = io::read_f32_slice(&mut r)?;
+        let labels = io::read_u16_slice(&mut r)?;
+        let multilabels = if io::read_u64(&mut r)? == 1 {
+            let n = io::read_u64(&mut r)? as usize;
+            let mut ml = vec![0u8; n];
+            r.read_exact(&mut ml)?;
+            Some(ml)
+        } else {
+            None
+        };
+        let splits = Splits {
+            train: io::read_u32_slice(&mut r)?,
+            val: io::read_u32_slice(&mut r)?,
+            test: io::read_u32_slice(&mut r)?,
+        };
+        Ok(Dataset { spec: spec.clone(), scale, graph, features, labels, multilabels, splits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_paper_datasets() {
+        for name in ["reddit-sim", "products-sim", "yelp-sim", "flickr-sim", "tiny"] {
+            assert!(spec(name).is_some(), "{name} missing");
+        }
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn tiny_dataset_shapes() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 1.0);
+        assert_eq!(ds.num_vertices(), 3000);
+        assert_eq!(ds.features.len(), 3000 * 16);
+        assert_eq!(ds.labels.len(), 3000);
+        assert!(ds.multilabels.is_none());
+        let total = ds.splits.train.len() + ds.splits.val.len() + ds.splits.test.len();
+        assert_eq!(total, 3000);
+        assert_eq!(ds.splits.train.len(), 1500);
+        // no overlap across splits
+        let mut all: Vec<u32> = ds
+            .splits
+            .train
+            .iter()
+            .chain(&ds.splits.val)
+            .chain(&ds.splits.test)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 3000);
+    }
+
+    #[test]
+    fn features_carry_class_signal() {
+        // within-class feature similarity must exceed across-class
+        let ds = Dataset::generate(spec("tiny").unwrap(), 1.0);
+        let dot = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+        };
+        let (mut intra, mut inter) = (0.0, 0.0);
+        let (mut ni, mut nx) = (0, 0);
+        for v in 0..300u32 {
+            for u in 300..600u32 {
+                let d = dot(ds.feature(v), ds.feature(u));
+                if ds.labels[v as usize] == ds.labels[u as usize] {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        assert!(intra / ni as f64 > inter / nx as f64 + 0.1);
+    }
+
+    #[test]
+    fn multilabel_rows_have_primary_label() {
+        let mut s = spec("tiny").unwrap().clone();
+        s.multilabel = true;
+        let ds = Dataset::generate(&s, 1.0);
+        let ml = ds.multilabels.as_ref().unwrap();
+        for v in 0..ds.num_vertices() {
+            assert_eq!(ml[v * 4 + ds.labels[v] as usize], 1);
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("labor_ds_cache_{}", std::process::id()));
+        std::env::set_var("LABOR_DATA_DIR", &dir);
+        let a = Dataset::load_or_generate("tiny", 0.5).unwrap();
+        let b = Dataset::load_or_generate("tiny", 0.5).unwrap(); // cache hit
+        std::env::remove_var("LABOR_DATA_DIR");
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.splits, b.splits);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scale_shrinks_budget() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 1.0);
+        assert_eq!(ds.budget_v3(), 2000);
+        let ds2 = Dataset::generate(spec("tiny").unwrap(), 0.5);
+        assert_eq!(ds2.budget_v3(), 1000);
+    }
+}

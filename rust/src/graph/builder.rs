@@ -1,0 +1,165 @@
+//! COO → CSC construction with sorting, deduplication and validation.
+
+use super::csc::CscGraph;
+
+/// Builds a [`CscGraph`] from an edge list. Duplicate edges are merged
+/// (weights summed when present); self-loops are kept (callers that don't
+/// want them filter first).
+pub struct CscBuilder {
+    num_vertices: usize,
+    /// (dst, src, weight)
+    coo: Vec<(u32, u32, f32)>,
+    weighted: bool,
+}
+
+impl CscBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        Self { num_vertices, coo: Vec::new(), weighted: false }
+    }
+
+    /// Add unweighted edges `(t, s)` meaning `t -> s`.
+    pub fn edges(mut self, es: &[(u32, u32)]) -> Self {
+        self.coo.extend(es.iter().map(|&(t, s)| (s, t, 1.0)));
+        self
+    }
+
+    /// Add one unweighted edge `t -> s`.
+    pub fn edge(&mut self, t: u32, s: u32) {
+        self.coo.push((s, t, 1.0));
+    }
+
+    /// Add a weighted edge `t -> s` with weight `a_ts`.
+    pub fn weighted_edge(&mut self, t: u32, s: u32, a_ts: f32) {
+        self.weighted = true;
+        self.coo.push((s, t, a_ts));
+    }
+
+    pub fn num_pending_edges(&self) -> usize {
+        self.coo.len()
+    }
+
+    /// Consume and build. O(|E| log |E|).
+    pub fn build(mut self) -> Result<CscGraph, String> {
+        let nv = self.num_vertices;
+        for &(s, t, _) in &self.coo {
+            if s as usize >= nv || t as usize >= nv {
+                return Err(format!("edge ({t} -> {s}) out of range (|V|={nv})"));
+            }
+        }
+        // sort by (dst, src) so each neighbor slice comes out sorted
+        self.coo.sort_unstable_by_key(|&(s, t, _)| ((s as u64) << 32) | t as u64);
+
+        let mut indptr = vec![0u64; nv + 1];
+        let mut indices = Vec::with_capacity(self.coo.len());
+        let mut weights: Vec<f32> = Vec::new();
+        let mut last: Option<(u32, u32)> = None;
+        for &(s, t, w) in &self.coo {
+            if last == Some((s, t)) {
+                // duplicate edge: merge (sum weights)
+                if self.weighted {
+                    *weights.last_mut().unwrap() += w;
+                }
+                continue;
+            }
+            last = Some((s, t));
+            indptr[s as usize + 1] += 1;
+            indices.push(t);
+            if self.weighted {
+                weights.push(w);
+            }
+        }
+        for s in 0..nv {
+            indptr[s + 1] += indptr[s];
+        }
+        let g = CscGraph {
+            indptr,
+            indices,
+            weights: if self.weighted { Some(weights) } else { None },
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+/// Convenience: build the reverse (out-edge) adjacency of a CSC graph, i.e.
+/// a CSC over the transposed edge set. Needed by generators that emit
+/// undirected graphs as two directed arcs.
+pub fn transpose(g: &CscGraph) -> CscGraph {
+    let mut b = CscBuilder::new(g.num_vertices());
+    for s in 0..g.num_vertices() as u32 {
+        match g.in_weights(s) {
+            Some(ws) => {
+                for (&t, &w) in g.in_neighbors(s).iter().zip(ws) {
+                    b.weighted_edge(s, t, w);
+                }
+            }
+            None => {
+                for &t in g.in_neighbors(s) {
+                    b.edge(s, t);
+                }
+            }
+        }
+    }
+    b.build().expect("transpose of a valid graph is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StreamRng;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn dedup_merges_edges() {
+        let g = CscBuilder::new(3).edges(&[(0, 1), (0, 1), (2, 1)]).build().unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.in_neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn weighted_dedup_sums() {
+        let mut b = CscBuilder::new(2);
+        b.weighted_edge(0, 1, 1.5);
+        b.weighted_edge(0, 1, 2.5);
+        let g = b.build().unwrap();
+        assert_eq!(g.in_weights(1).unwrap(), &[4.0]);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let r = CscBuilder::new(2).edges(&[(0, 5)]).build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap();
+        let gt = transpose(&g);
+        assert_eq!(gt.in_neighbors(0), &[2, 3]); // out-edges of 0 in g
+        let gtt = transpose(&gt);
+        assert_eq!(g, gtt);
+    }
+
+    #[test]
+    fn prop_build_preserves_edge_set() {
+        for_cases(0xC5C, 20, |rng: &mut StreamRng| {
+            let nv = 2 + rng.below(60) as usize;
+            let ne = rng.below(300) as usize;
+            let mut edges = Vec::new();
+            for _ in 0..ne {
+                edges.push((rng.below(nv as u64) as u32, rng.below(nv as u64) as u32));
+            }
+            let g = CscBuilder::new(nv).edges(&edges).build().unwrap();
+            g.validate().unwrap();
+            // every input edge is present
+            for &(t, s) in &edges {
+                assert!(g.has_edge(t, s));
+            }
+            // and the edge count equals the number of distinct pairs
+            let mut set = edges.clone();
+            set.sort_unstable();
+            set.dedup();
+            assert_eq!(g.num_edges() as usize, set.len());
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! CSC (compressed sparse column) graph: in-neighbor slices per vertex.
+
+/// A directed graph stored as in-edge adjacency (CSC): `in_neighbors(s)`
+/// returns the sources `t` of all edges `t -> s` as one contiguous slice.
+///
+/// Vertex ids are `u32` (all paper datasets are far below 4B vertices);
+/// offsets are `u64` to allow >4B edges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscGraph {
+    /// `indptr[s]..indptr[s+1]` indexes `indices` for vertex `s`; length |V|+1.
+    pub indptr: Vec<u64>,
+    /// Concatenated in-neighbor lists, each sorted ascending; length |E|.
+    pub indices: Vec<u32>,
+    /// Optional per-edge weights `A_ts`, parallel to `indices` (Appendix A.7).
+    pub weights: Option<Vec<f32>>,
+}
+
+impl CscGraph {
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of (directed) edges.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        *self.indptr.last().unwrap()
+    }
+
+    /// In-degree `d_s` of vertex `s`.
+    #[inline]
+    pub fn in_degree(&self, s: u32) -> usize {
+        (self.indptr[s as usize + 1] - self.indptr[s as usize]) as usize
+    }
+
+    /// In-neighbor slice `N(s)` (sorted ascending).
+    #[inline]
+    pub fn in_neighbors(&self, s: u32) -> &[u32] {
+        let lo = self.indptr[s as usize] as usize;
+        let hi = self.indptr[s as usize + 1] as usize;
+        &self.indices[lo..hi]
+    }
+
+    /// Edge weights `A_ts` for edges into `s`, if the graph is weighted.
+    #[inline]
+    pub fn in_weights(&self, s: u32) -> Option<&[f32]> {
+        let w = self.weights.as_ref()?;
+        let lo = self.indptr[s as usize] as usize;
+        let hi = self.indptr[s as usize + 1] as usize;
+        Some(&w[lo..hi])
+    }
+
+    /// Average in-degree |E|/|V|.
+    pub fn avg_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_vertices().max(1) as f64
+    }
+
+    /// True iff `t -> s` is an edge (binary search over the sorted slice).
+    pub fn has_edge(&self, t: u32, s: u32) -> bool {
+        self.in_neighbors(s).binary_search(&t).is_ok()
+    }
+
+    /// Structural validation; used by tests, the builder, and `io` loads.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.is_empty() {
+            return Err("indptr must have at least one entry".into());
+        }
+        if self.indptr[0] != 0 {
+            return Err("indptr[0] != 0".into());
+        }
+        let nv = self.num_vertices();
+        for s in 0..nv {
+            if self.indptr[s] > self.indptr[s + 1] {
+                return Err(format!("indptr not monotone at {s}"));
+            }
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err("indptr tail != |indices|".into());
+        }
+        for (i, &t) in self.indices.iter().enumerate() {
+            if t as usize >= nv {
+                return Err(format!("index {t} out of range at position {i}"));
+            }
+        }
+        for s in 0..nv as u32 {
+            let nbrs = self.in_neighbors(s);
+            if !nbrs.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("neighbors of {s} not sorted/unique"));
+            }
+        }
+        if let Some(w) = &self.weights {
+            if w.len() != self.indices.len() {
+                return Err("weights length != |indices|".into());
+            }
+            if !w.iter().all(|x| x.is_finite() && *x > 0.0) {
+                return Err("weights must be finite and positive".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::CscBuilder;
+
+    fn diamond() -> CscGraph {
+        // edges: 0->2, 1->2, 0->3, 2->3
+        CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap()
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.in_degree(2), 2);
+        assert_eq!(g.in_neighbors(2), &[0, 1]);
+        assert_eq!(g.in_neighbors(3), &[0, 2]);
+        assert!((g.avg_degree() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn has_edge_checks() {
+        let g = diamond();
+        assert!(g.has_edge(0, 2));
+        assert!(g.has_edge(2, 3));
+        assert!(!g.has_edge(2, 0));
+        assert!(!g.has_edge(3, 3));
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = diamond();
+        assert!(g.validate().is_ok());
+        g.indices[0] = 99;
+        assert!(g.validate().is_err());
+
+        let mut g2 = diamond();
+        g2.indptr[1] = 5;
+        assert!(g2.validate().is_err());
+
+        let mut g3 = diamond();
+        g3.weights = Some(vec![1.0; 3]); // wrong length
+        assert!(g3.validate().is_err());
+
+        let mut g4 = diamond();
+        g4.weights = Some(vec![1.0, -1.0, 1.0, 1.0]); // negative weight
+        assert!(g4.validate().is_err());
+    }
+}

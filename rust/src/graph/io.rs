@@ -1,0 +1,163 @@
+//! Binary (de)serialization of graphs and dense arrays for the dataset
+//! cache under `data/`. Format: little-endian, sectioned, versioned.
+
+use super::csc::CscGraph;
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LABORGR1";
+
+pub fn write_u64<W: Write>(w: &mut W, x: u64) -> io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+
+pub fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn write_u32_slice<W: Write>(w: &mut W, xs: &[u32]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    // bulk little-endian write
+    let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w.write_all(&bytes)
+}
+
+pub fn read_u32_slice<R: Read>(r: &mut R) -> io::Result<Vec<u32>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+pub fn write_u64_slice<W: Write>(w: &mut W, xs: &[u64]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w.write_all(&bytes)
+}
+
+pub fn read_u64_slice<R: Read>(r: &mut R) -> io::Result<Vec<u64>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+pub fn write_f32_slice<W: Write>(w: &mut W, xs: &[f32]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w.write_all(&bytes)
+}
+
+pub fn read_f32_slice<R: Read>(r: &mut R) -> io::Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+pub fn write_u16_slice<W: Write>(w: &mut W, xs: &[u16]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w.write_all(&bytes)
+}
+
+pub fn read_u16_slice<R: Read>(r: &mut R) -> io::Result<Vec<u16>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 2];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Serialize a graph to `w`.
+pub fn write_graph<W: Write>(w: &mut W, g: &CscGraph) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    write_u64_slice(w, &g.indptr)?;
+    write_u32_slice(w, &g.indices)?;
+    match &g.weights {
+        Some(ws) => {
+            write_u64(w, 1)?;
+            write_f32_slice(w, ws)?;
+        }
+        None => write_u64(w, 0)?,
+    }
+    Ok(())
+}
+
+/// Deserialize and validate a graph from `r`.
+pub fn read_graph<R: Read>(r: &mut R) -> io::Result<CscGraph> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let indptr = read_u64_slice(r)?;
+    let indices = read_u32_slice(r)?;
+    let weights = if read_u64(r)? == 1 { Some(read_f32_slice(r)?) } else { None };
+    let g = CscGraph { indptr, indices, weights };
+    g.validate().map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    Ok(g)
+}
+
+pub fn save_graph<P: AsRef<Path>>(path: P, g: &CscGraph) -> io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    write_graph(&mut w, g)?;
+    w.flush()
+}
+
+pub fn load_graph<P: AsRef<Path>>(path: P) -> io::Result<CscGraph> {
+    let mut r = BufReader::new(File::open(path)?);
+    read_graph(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::CscBuilder;
+
+    #[test]
+    fn graph_roundtrip() {
+        let mut b = CscBuilder::new(5);
+        b.weighted_edge(0, 1, 2.0);
+        b.weighted_edge(3, 1, 0.5);
+        b.weighted_edge(4, 2, 1.0);
+        let g = b.build().unwrap();
+        let mut buf = Vec::new();
+        write_graph(&mut buf, &g).unwrap();
+        let back = read_graph(&mut &buf[..]).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn unweighted_roundtrip_file() {
+        let g = CscBuilder::new(3).edges(&[(0, 1), (1, 2)]).build().unwrap();
+        let path = std::env::temp_dir().join("labor_io_test.bin");
+        save_graph(&path, &g).unwrap();
+        let back = load_graph(&path).unwrap();
+        assert_eq!(g, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let g = CscBuilder::new(2).edges(&[(0, 1)]).build().unwrap();
+        let mut buf = Vec::new();
+        write_graph(&mut buf, &g).unwrap();
+        buf[0] = b'X';
+        assert!(read_graph(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_data_rejected() {
+        let g = CscBuilder::new(2).edges(&[(0, 1)]).build().unwrap();
+        let mut buf = Vec::new();
+        write_graph(&mut buf, &g).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_graph(&mut &buf[..]).is_err());
+    }
+}

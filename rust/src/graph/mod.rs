@@ -1,0 +1,13 @@
+//! Graph storage substrate.
+//!
+//! GNN sampling consumes **incoming** edges of seed vertices, so the native
+//! layout is CSC (compressed sparse column over destinations): for a seed
+//! `s` we need `N(s) = {t | (t -> s) in E}` as a contiguous slice.
+
+pub mod builder;
+pub mod csc;
+pub mod gen;
+pub mod io;
+pub mod stats;
+
+pub use csc::CscGraph;

@@ -1,0 +1,58 @@
+//! Degree-distribution summaries (backs `repro bench table1`).
+
+use super::csc::CscGraph;
+
+/// Summary statistics of a graph's in-degree distribution.
+#[derive(Clone, Debug)]
+pub struct DegreeStats {
+    pub num_vertices: usize,
+    pub num_edges: u64,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub median_degree: usize,
+    pub p99_degree: usize,
+    /// fraction of edges held by the top-1% highest-degree vertices
+    pub top1pct_edge_share: f64,
+}
+
+impl DegreeStats {
+    pub fn compute(g: &CscGraph) -> Self {
+        let nv = g.num_vertices();
+        let mut degs: Vec<usize> = (0..nv as u32).map(|v| g.in_degree(v)).collect();
+        degs.sort_unstable();
+        let total: usize = degs.iter().sum();
+        let top = nv.max(100) / 100;
+        let top1: usize = degs[nv - top..].iter().sum();
+        Self {
+            num_vertices: nv,
+            num_edges: g.num_edges(),
+            avg_degree: g.avg_degree(),
+            max_degree: *degs.last().unwrap_or(&0),
+            median_degree: degs[nv / 2],
+            p99_degree: degs[(nv as f64 * 0.99) as usize],
+            top1pct_edge_share: if total > 0 { top1 as f64 / total as f64 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::CscBuilder;
+
+    #[test]
+    fn stats_on_star_graph() {
+        // star: all vertices point at 0
+        let n = 100u32;
+        let mut b = CscBuilder::new(n as usize);
+        for t in 1..n {
+            b.edge(t, 0);
+        }
+        let g = b.build().unwrap();
+        let s = DegreeStats::compute(&g);
+        assert_eq!(s.max_degree, 99);
+        assert_eq!(s.median_degree, 0);
+        assert_eq!(s.num_edges, 99);
+        assert!((s.top1pct_edge_share - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,49 @@
+//! # labor-gnn — Layer-Neighbor Sampling (LABOR) for GNN mini-batch training
+//!
+//! A from-scratch reproduction of *“Layer-Neighbor Sampling — Defusing
+//! Neighborhood Explosion in GNNs”* (Balın & Çatalyürek, NeurIPS 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the LABOR-i /
+//!   LABOR-\* samplers, the PLADIES Poisson layer sampler, the Neighbor
+//!   Sampling and LADIES baselines, plus every substrate they need: CSC
+//!   graph storage, synthetic Table-1-calibrated datasets, a streaming
+//!   mini-batch pipeline with backpressure, a feature store with a
+//!   simulated slow tier, and the training driver.
+//! * **Layer 2** — a 3-layer GCN (and GATv2) written in JAX
+//!   (`python/compile/model.py`), AOT-lowered once to HLO text.
+//! * **Layer 1** — the aggregation hot-spot as a Pallas gather-SpMM kernel
+//!   (`python/compile/kernels/`), lowered inside the same HLO.
+//!
+//! At run time, Python is never on the path: [`runtime`] loads the AOT
+//! artifacts through PJRT (the `xla` crate) and [`train`] drives training
+//! end-to-end from Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use labor_gnn::data::Dataset;
+//! use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+//!
+//! let ds = Dataset::load_or_generate("flickr-sim", 1.0).unwrap();
+//! let sampler = MultiLayerSampler::new(
+//!     SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+//!     &[10, 10, 10],
+//! );
+//! let seeds: Vec<u32> = ds.splits.train[..1000].to_vec();
+//! let mfg = sampler.sample(&ds.graph, &seeds, 0);
+//! for (l, layer) in mfg.layers.iter().enumerate() {
+//!     println!("layer {l}: |V|={} |E|={}", layer.num_inputs(), layer.num_edges());
+//! }
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod graph;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod train;
+pub mod tune;
+pub mod util;

@@ -1,0 +1,225 @@
+//! `repro` — the LABOR reproduction CLI.
+//!
+//! Subcommands regenerate every table and figure of the paper (DESIGN.md
+//! §6) plus utilities:
+//!
+//! ```text
+//! repro table1  [--scale 0.1] [--dataset <name>]*
+//! repro table2  --dataset flickr-sim [--batch-size 1024 --fanout 10 --repeats 20]
+//! repro table3  --dataset flickr-sim [--fanout 10 --repeats 5]
+//! repro table4  --dataset flickr-sim [--batch-size 1024 --fanout 10 --repeats 10]
+//! repro table5  --dataset flickr-sim [--iters 8]
+//! repro fig1    --dataset flickr-sim [--steps 300 --eval-every 20]
+//! repro fig2    --dataset flickr-sim [--steps 300]
+//! repro fig4    --dataset tiny --target-f1 0.85 [--trials 12 --timeout 30]
+//! repro calibrate-caps --dataset products-sim
+//! repro train   --dataset flickr-sim --method labor-1 [--steps 200 ...]
+//! ```
+
+use anyhow::{anyhow, Result};
+use labor_gnn::bench;
+use labor_gnn::sampler::SamplerKind;
+use std::collections::HashMap;
+
+struct Args {
+    flags: HashMap<String, String>,
+    multi: HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut multi: HashMap<String, Vec<String>> = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?
+                .to_string();
+            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            multi.entry(key.clone()).or_default().push(val.clone());
+            flags.insert(key, val);
+            i += 2;
+        }
+        Ok(Self { flags, multi })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.usize_or(key, default as usize)? as u64)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    fn require(&self, key: &str) -> Result<String> {
+        self.get(key).map(|s| s.to_string()).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+}
+
+fn run_opts(a: &Args, dataset: &str) -> Result<bench::figs::RunOpts> {
+    let fanout = a.usize_or("fanout", 10)?;
+    Ok(bench::figs::RunOpts {
+        dataset: dataset.to_string(),
+        scale: a.f64_or("scale", 0.1)?,
+        artifact: a.str_or("artifact", &format!("gcn_{dataset}")),
+        fanouts: vec![fanout; 3],
+        batch_size: a.usize_or("batch-size", 1024)?,
+        steps: a.u64_or("steps", 300)?,
+        eval_every: a.u64_or("eval-every", 20)?,
+        eval_max: a.usize_or("eval-max", 2048)?,
+        lr: a.f64_or("lr", 1e-3)? as f32,
+        seed: a.u64_or("seed", 0)?,
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("usage: repro <table1|table2|table3|table4|table5|fig1|fig2|fig3|fig4|calibrate-caps|train> [--flags]");
+        eprintln!("see `repro help` / README.md");
+        std::process::exit(2);
+    };
+    let a = Args::parse(&argv[1..])?;
+    let scale = a.f64_or("scale", 0.1)?;
+
+    match cmd.as_str() {
+        "table1" => {
+            let datasets = a.multi.get("dataset").cloned().unwrap_or_default();
+            bench::table1::run(scale, &datasets)?;
+        }
+        "table2" => {
+            let o = bench::table2::Table2Opts {
+                dataset: a.require("dataset")?,
+                scale,
+                batch_size: a.usize_or("batch-size", 1024)?,
+                fanout: a.usize_or("fanout", 10)?,
+                repeats: a.usize_or("repeats", 20)?,
+            };
+            bench::table2::run(&o)?;
+        }
+        "table3" => {
+            bench::table34::table3(
+                &a.require("dataset")?,
+                scale,
+                a.usize_or("fanout", 10)?,
+                a.usize_or("repeats", 5)?,
+            )?;
+        }
+        "table4" => {
+            bench::table34::table4(
+                &a.require("dataset")?,
+                scale,
+                a.usize_or("batch-size", 1024)?,
+                a.usize_or("fanout", 10)?,
+                a.usize_or("repeats", 10)?,
+            )?;
+        }
+        "table5" => {
+            let o = bench::table5::Table5Opts {
+                dataset: a.require("dataset")?,
+                scale,
+                batch_size: a.usize_or("batch-size", 1024)?,
+                fanout: a.usize_or("fanout", 10)?,
+                iters: a.usize_or("iters", 8)?,
+            };
+            bench::table5::run(&o)?;
+        }
+        "fig1" | "fig3" => {
+            let dataset = a.require("dataset")?;
+            let o = run_opts(&a, &dataset)?;
+            bench::figs::fig1(&o, a.usize_or("repeats", 5)?, a.get("method"))?;
+        }
+        "fig2" => {
+            let dataset = a.require("dataset")?;
+            let o = run_opts(&a, &dataset)?;
+            bench::figs::fig2(&o, a.usize_or("repeats", 5)?)?;
+        }
+        "fig4" => {
+            let dataset = a.require("dataset")?;
+            let o = bench::fig4::Fig4Opts {
+                artifact: a.str_or("artifact", &format!("gcn_{dataset}")),
+                dataset,
+                scale,
+                target_f1: a.f64_or("target-f1", 0.8)?,
+                trials: a.usize_or("trials", 10)?,
+                timeout_s: a.f64_or("timeout", 30.0)?,
+                eval_every: a.u64_or("eval-every", 10)?,
+                eval_max: a.usize_or("eval-max", 1024)?,
+                seed: a.u64_or("seed", 0)?,
+            };
+            bench::fig4::run(&o)?;
+        }
+        "calibrate-caps" => {
+            bench::calibrate::run(
+                &a.require("dataset")?,
+                scale,
+                a.usize_or("batch-size", 1024)?,
+                a.usize_or("fanout", 10)?,
+                a.usize_or("repeats", 10)?,
+            )?;
+        }
+        "train" => {
+            let dataset = a.require("dataset")?;
+            let o = run_opts(&a, &dataset)?;
+            let method = a.str_or("method", "labor-0");
+            let mut kind = SamplerKind::parse(&method)
+                .ok_or_else(|| anyhow!("unknown method '{method}'"))?;
+            let ds = labor_gnn::data::Dataset::load_or_generate(&dataset, scale)?;
+            // LADIES/PLADIES need budgets: match them to LABOR-* (§4.1)
+            if matches!(kind, SamplerKind::Ladies { .. } | SamplerKind::Pladies { .. }) {
+                let budgets = labor_gnn::tune::ladies_budgets_matching(
+                    &ds,
+                    &SamplerKind::Labor {
+                        iterations: labor_gnn::sampler::IterSpec::Converge,
+                        layer_dependent: false,
+                    },
+                    &o.fanouts,
+                    o.batch_size,
+                    3,
+                );
+                kind = match kind {
+                    SamplerKind::Ladies { .. } => SamplerKind::Ladies { budgets },
+                    _ => SamplerKind::Pladies { budgets },
+                };
+            }
+            let engine = labor_gnn::runtime::Engine::cpu()?;
+            let man = labor_gnn::runtime::Manifest::load("artifacts")?;
+            let s = bench::figs::run_training(&engine, &man, &ds, kind, &o)?;
+            println!(
+                "method {} trained {} steps: final loss {:.4}, test F1 {:.4}, {:.2} it/s",
+                s.method,
+                o.steps,
+                s.points.last().unwrap().loss,
+                s.test_f1,
+                s.it_per_s
+            );
+        }
+        "help" | "--help" | "-h" => {
+            println!("see module docs in rust/src/main.rs and README.md");
+        }
+        other => {
+            return Err(anyhow!("unknown subcommand '{other}'"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Counter-based deterministic random number generation.
+//!
+//! LABOR's central trick (paper §3.2) is that *all seed vertices share the
+//! same uniform variate `r_t` for a candidate neighbor `t`*: vertex `s`
+//! samples `t` iff `r_t <= c_s * pi_t`.  A counter-based (hash) generator
+//! gives us `r_t = h(seed, t)` without materializing or synchronizing any
+//! state, which also makes the **layer-dependency** option of Appendix A.8
+//! (reuse the same `r_t` across layers) a one-line change: simply exclude
+//! the layer index from the hash.
+//!
+//! The hash is SplitMix64 (Steele et al.), a well-tested 64-bit finalizer
+//! with full avalanche; we map the top 24 bits to an `f32` in `[0, 1)`
+//! (or 53 bits to `f64`).
+
+/// SplitMix64 finalizer: a bijective mix of a 64-bit value.
+#[inline(always)]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Combine two 64-bit words into one hash (used for (seed, id) pairs).
+#[inline(always)]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    splitmix64(a ^ splitmix64(b))
+}
+
+/// Map a `u64` hash to a uniform `f64` in `[0, 1)` using the top 53 bits.
+#[inline(always)]
+pub fn u64_to_unit_f64(h: u64) -> f64 {
+    ((h >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Map a `u64` hash to a uniform `f32` in `[0, 1)` using the top 24 bits.
+#[inline(always)]
+pub fn u64_to_unit_f32(h: u64) -> f32 {
+    ((h >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+}
+
+/// A stateless, counter-based uniform generator keyed by a 64-bit seed.
+///
+/// `uniform(id)` is a pure function of `(seed, id)`; two `HashRng`s with the
+/// same seed agree everywhere. This is what lets LABOR share `r_t` across
+/// seed vertices (and across layers, when layer dependency is on).
+#[derive(Clone, Copy, Debug)]
+pub struct HashRng {
+    seed: u64,
+}
+
+impl HashRng {
+    pub fn new(seed: u64) -> Self {
+        // pre-mix so that seeds 0,1,2.. are far apart in hash space
+        Self { seed: splitmix64(seed) }
+    }
+
+    /// Derive an independent stream (e.g. per layer or per batch).
+    pub fn derive(&self, stream: u64) -> Self {
+        Self { seed: mix2(self.seed, stream) }
+    }
+
+    /// Uniform `f64` in `[0,1)` for the given id (e.g. a vertex id).
+    #[inline(always)]
+    pub fn uniform(&self, id: u64) -> f64 {
+        u64_to_unit_f64(mix2(self.seed, id))
+    }
+
+    /// Raw 64-bit hash of an id under this stream.
+    #[inline(always)]
+    pub fn hash(&self, id: u64) -> u64 {
+        mix2(self.seed, id)
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0) via 128-bit multiply (unbiased
+    /// enough for sampling: bias is O(n / 2^64)).
+    #[inline(always)]
+    pub fn uniform_u64(&self, id: u64, n: u64) -> u64 {
+        (((mix2(self.seed, id) as u128) * (n as u128)) >> 64) as u64
+    }
+}
+
+/// A small stateful PRNG (xoshiro-like via SplitMix64 stream) for places
+/// where we want a sequential stream rather than keyed access: generators,
+/// shuffles, synthetic features.
+#[derive(Clone, Debug)]
+pub struct StreamRng {
+    state: u64,
+}
+
+impl StreamRng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: splitmix64(seed ^ 0xA5A5_5A5A_DEAD_BEEF) }
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        splitmix64(self.state)
+    }
+
+    #[inline(always)]
+    pub fn next_f64(&mut self) -> f64 {
+        u64_to_unit_f64(self.next_u64())
+    }
+
+    #[inline(always)]
+    pub fn next_f32(&mut self) -> f32 {
+        u64_to_unit_f32(self.next_u64())
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline(always)]
+    pub fn below(&mut self, n: u64) -> u64 {
+        (((self.next_u64() as u128) * (n as u128)) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k <= n) via partial
+    /// Fisher–Yates on a sparse map (O(k) memory).
+    pub fn sample_distinct(&mut self, n: u64, k: usize, out: &mut Vec<u64>) {
+        out.clear();
+        debug_assert!(k as u64 <= n);
+        let mut swapped: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        for i in 0..k as u64 {
+            let j = i + self.below(n - i);
+            let vi = *swapped.get(&i).unwrap_or(&i);
+            let vj = *swapped.get(&j).unwrap_or(&j);
+            out.push(vj);
+            swapped.insert(j, vi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values_are_stable() {
+        // regression guard: sampled subgraphs must be reproducible across runs
+        assert_eq!(splitmix64(0), 0xE220A8397B1DCDAF);
+        assert_eq!(splitmix64(1), 0x910A2DEC89025CC1);
+    }
+
+    #[test]
+    fn uniform_is_in_unit_interval() {
+        let rng = HashRng::new(42);
+        for t in 0..10_000u64 {
+            let r = rng.uniform(t);
+            assert!((0.0..1.0).contains(&r), "r={r}");
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_variance_match_u01() {
+        let rng = HashRng::new(7);
+        let n = 200_000u64;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for t in 0..n {
+            let r = rng.uniform(t);
+            sum += r;
+            sumsq += r * r;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn uniform_bucket_counts_are_flat() {
+        // coarse chi-square-ish check over 16 buckets
+        let rng = HashRng::new(3);
+        let n = 160_000;
+        let mut buckets = [0usize; 16];
+        for t in 0..n {
+            buckets[(rng.uniform(t) * 16.0) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        for (i, &b) in buckets.iter().enumerate() {
+            assert!(
+                (b as f64 - expect).abs() < expect * 0.05,
+                "bucket {i} = {b}, expect ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn derive_gives_decorrelated_streams() {
+        let a = HashRng::new(1).derive(0);
+        let b = HashRng::new(1).derive(1);
+        let n = 10_000u64;
+        let mut cov = 0.0;
+        for t in 0..n {
+            cov += (a.uniform(t) - 0.5) * (b.uniform(t) - 0.5);
+        }
+        assert!((cov / n as f64).abs() < 0.01);
+    }
+
+    #[test]
+    fn same_seed_same_values() {
+        let a = HashRng::new(99);
+        let b = HashRng::new(99);
+        for t in 0..100 {
+            assert_eq!(a.uniform(t).to_bits(), b.uniform(t).to_bits());
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = StreamRng::new(5);
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            rng.sample_distinct(50, 20, &mut out);
+            assert_eq!(out.len(), 20);
+            let mut s = out.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 20, "duplicates in {out:?}");
+            assert!(out.iter().all(|&x| x < 50));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_full_range_is_permutation() {
+        let mut rng = StreamRng::new(11);
+        let mut out = Vec::new();
+        rng.sample_distinct(10, 10, &mut out);
+        let mut s = out.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = StreamRng::new(13);
+        let n = 100_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean: f64 = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut rng = StreamRng::new(17);
+        let mut v: Vec<u32> = (0..1000).collect();
+        rng.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..1000).collect::<Vec<_>>());
+        assert_ne!(v[..20], s[..20]); // astronomically unlikely to be sorted
+    }
+}

@@ -1,0 +1,95 @@
+//! The PJRT engine: one CPU client, artifact loading, compile cache, and
+//! execution of the flat-literal calling convention.
+
+use super::manifest::{ArtifactConfig, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Wraps the PJRT CPU client and a compile cache keyed by artifact file.
+pub struct Engine {
+    client: PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached per path).
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key} — run `make artifacts`"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {key}"))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Load both executables of a manifest config.
+    pub fn load_model(&self, manifest: &Manifest, name: &str) -> Result<CompiledModel> {
+        let cfg = manifest.config(name)?.clone();
+        let train = self.load_hlo_text(&manifest.artifact_path(&cfg.train_artifact))?;
+        let fwd = self.load_hlo_text(&manifest.artifact_path(&cfg.fwd_artifact))?;
+        Ok(CompiledModel { cfg, train, fwd })
+    }
+}
+
+/// A loaded (train_step, forward) pair plus its static shape config.
+pub struct CompiledModel {
+    pub cfg: ArtifactConfig,
+    train: std::sync::Arc<PjRtLoadedExecutable>,
+    fwd: std::sync::Arc<PjRtLoadedExecutable>,
+}
+
+impl CompiledModel {
+    /// Run one train step. `args` follows the manifest's flat convention:
+    /// `params.., m.., v.., t, feats, idx1, w1, idx2, w2, idx3, w3, labels,
+    /// mask`. Returns the flat outputs `params.., m.., v.., t, loss`.
+    pub fn train_step_refs(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        anyhow::ensure!(
+            args.len() == self.cfg.train_num_inputs,
+            "train_step expects {} inputs, got {}",
+            self.cfg.train_num_inputs,
+            args.len()
+        );
+        let bufs = self.train.execute::<&Literal>(args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let out = tuple.to_tuple()?;
+        anyhow::ensure!(
+            out.len() == self.cfg.train_num_outputs,
+            "train_step returned {} outputs, expected {}",
+            out.len(),
+            self.cfg.train_num_outputs
+        );
+        Ok(out)
+    }
+
+    /// Run the forward pass: `params.., feats, idx1, w1, idx2, w2, idx3,
+    /// w3` → logits `[B, C]`.
+    pub fn forward_refs(&self, args: &[&Literal]) -> Result<Literal> {
+        anyhow::ensure!(
+            args.len() == self.cfg.fwd_num_inputs,
+            "forward expects {} inputs, got {}",
+            self.cfg.fwd_num_inputs,
+            args.len()
+        );
+        let bufs = self.fwd.execute::<&Literal>(args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple1()?)
+    }
+}

@@ -1,0 +1,159 @@
+//! The artifact manifest: shapes and calling conventions of every compiled
+//! model, written by `python/compile/aot.py` and re-validated here.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled (train, forward) artifact pair.
+#[derive(Clone, Debug)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub arch: String,
+    pub batch_size: usize,
+    pub k_max: usize,
+    /// padded per-layer input row caps `(V1, V2, V3)` — `v_caps[d]` is the
+    /// cap for depth `d+1`
+    pub v_caps: Vec<usize>,
+    pub num_features: usize,
+    pub hidden: usize,
+    pub num_classes: usize,
+    pub multilabel: bool,
+    pub lr: f64,
+    /// deterministic flat parameter order (sorted names)
+    pub param_names: Vec<String>,
+    /// parameter shapes, parallel to `param_names`
+    pub param_shapes: Vec<Vec<usize>>,
+    pub train_artifact: String,
+    pub fwd_artifact: String,
+    pub train_num_inputs: usize,
+    pub train_num_outputs: usize,
+    pub fwd_num_inputs: usize,
+}
+
+impl ArtifactConfig {
+    /// number of GNN layers (always 3 in this reproduction)
+    pub fn num_layers(&self) -> usize {
+        self.v_caps.len()
+    }
+
+    /// `(input_rows, output_rows)` per layer in compute order
+    /// (deepest layer first — mirrors `ModelConfig.layer_rows`).
+    pub fn layer_rows(&self) -> Vec<(usize, usize)> {
+        let mut dims: Vec<usize> = self.v_caps.iter().rev().copied().collect();
+        dims.push(self.batch_size);
+        (0..dims.len() - 1).map(|i| (dims[i], dims[i + 1])).collect()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| j.get(k).ok_or_else(|| anyhow!("manifest missing key '{k}'"));
+        let names: Vec<String> = get("param_names")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_names not an array"))?
+            .iter()
+            .map(|x| x.as_str().unwrap_or_default().to_string())
+            .collect();
+        let shapes_obj = get("param_shapes")?;
+        let mut param_shapes = Vec::new();
+        for n in &names {
+            let e = shapes_obj
+                .get(n)
+                .and_then(|x| x.get("shape"))
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("missing shape for param {n}"))?;
+            param_shapes.push(e.iter().map(|d| d.as_usize().unwrap_or(0)).collect());
+        }
+        Ok(Self {
+            name: get("name")?.as_str().unwrap_or_default().to_string(),
+            arch: get("arch")?.as_str().unwrap_or_default().to_string(),
+            batch_size: get("batch_size")?.as_usize().unwrap_or(0),
+            k_max: get("k_max")?.as_usize().unwrap_or(0),
+            v_caps: get("v_caps")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("v_caps not an array"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            num_features: get("num_features")?.as_usize().unwrap_or(0),
+            hidden: get("hidden")?.as_usize().unwrap_or(0),
+            num_classes: get("num_classes")?.as_usize().unwrap_or(0),
+            multilabel: get("multilabel")?.as_bool().unwrap_or(false),
+            lr: get("lr")?.as_f64().unwrap_or(1e-3),
+            param_names: names,
+            param_shapes,
+            train_artifact: get("train_artifact")?.as_str().unwrap_or_default().to_string(),
+            fwd_artifact: get("fwd_artifact")?.as_str().unwrap_or_default().to_string(),
+            train_num_inputs: get("train_num_inputs")?.as_usize().unwrap_or(0),
+            train_num_outputs: get("train_num_outputs")?.as_usize().unwrap_or(0),
+            fwd_num_inputs: get("fwd_num_inputs")?.as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ArtifactConfig>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let configs = j
+            .get("configs")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow!("manifest has no configs"))?
+            .iter()
+            .map(ArtifactConfig::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ArtifactConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("artifact config '{name}' not in manifest — rebuild artifacts"))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"configs": [{
+        "name": "gcn_tiny", "arch": "gcn", "batch_size": 1024, "k_max": 20,
+        "v_caps": [3100, 3100, 3100], "num_features": 16, "hidden": 64,
+        "num_classes": 4, "multilabel": false, "lr": 0.001,
+        "param_names": ["b1", "w1"],
+        "param_shapes": {"b1": {"dtype": "float32", "shape": [64]},
+                          "w1": {"dtype": "float32", "shape": [16, 64]}},
+        "train_artifact": "gcn_tiny.train.hlo.txt",
+        "fwd_artifact": "gcn_tiny.fwd.hlo.txt",
+        "train_num_inputs": 31, "train_num_outputs": 23, "fwd_num_inputs": 14
+    }]}"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join(format!("labor_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.config("gcn_tiny").unwrap();
+        assert_eq!(c.batch_size, 1024);
+        assert_eq!(c.v_caps, vec![3100, 3100, 3100]);
+        assert_eq!(c.param_shapes[1], vec![16, 64]);
+        assert_eq!(c.layer_rows(), vec![(3100, 3100), (3100, 3100), (3100, 1024)]);
+        assert!(m.config("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the JAX/Pallas
+//! model once to HLO **text** (the id-safe interchange format for
+//! xla_extension 0.5.1 — see DESIGN.md), and this module compiles it on the
+//! PJRT CPU client and executes it with batches packed by [`packer`].
+
+pub mod engine;
+pub mod manifest;
+pub mod packer;
+pub mod tensor;
+
+pub use engine::{CompiledModel, Engine};
+pub use manifest::{ArtifactConfig, Manifest};
+pub use packer::{PackedBatch, Packer};

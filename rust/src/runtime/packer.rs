@@ -1,0 +1,249 @@
+//! Batch packing: sampled [`Mfg`]s → the fixed padded-neighborhood tensor
+//! layout the compiled model expects (see `python/compile/model.py`).
+//!
+//! Per GNN layer (compute order = deepest first):
+//!   * `idx: i32[V_out_cap, K]` — neighbor row indices into the layer's
+//!     (padded) input rows; padding points at row 0 with weight 0.
+//!   * `w: f32[V_out_cap, K]` — Hajek edge weights.
+//!
+//! Seeds beyond `K` sampled neighbors have the overflow dropped with the
+//! kept weights renormalized (documented approximation — DESIGN.md §2); the
+//! overflow count is reported so experiments can verify it stays marginal.
+
+use super::manifest::ArtifactConfig;
+use super::tensor::{f32_tensor, i32_tensor};
+use crate::data::Dataset;
+use crate::sampler::Mfg;
+use anyhow::Result;
+use xla::Literal;
+
+/// The packed tensors of one batch, in the artifact's flat batch order:
+/// `feats, idx1, w1, idx2, w2, idx3, w3, labels, mask`.
+pub struct PackedBatch {
+    pub feats: Literal,
+    /// (idx, w) per layer in compute order (deepest first)
+    pub layers: Vec<(Literal, Literal)>,
+    pub labels: Literal,
+    pub mask: Literal,
+    /// number of real (unpadded) seeds
+    pub num_seeds: usize,
+    /// edges dropped by the K_MAX cap
+    pub overflow_edges: usize,
+    /// total edges in the Mfg
+    pub total_edges: usize,
+}
+
+impl PackedBatch {
+    /// Flatten into the artifact batch-argument order.
+    pub fn batch_args(self) -> Vec<Literal> {
+        let mut out = vec![self.feats];
+        for (idx, w) in self.layers {
+            out.push(idx);
+            out.push(w);
+        }
+        out.push(self.labels);
+        out.push(self.mask);
+        out
+    }
+}
+
+/// Packs sampled MFGs for one artifact config.
+pub struct Packer {
+    pub cfg: ArtifactConfig,
+}
+
+impl Packer {
+    pub fn new(cfg: ArtifactConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Pack an MFG plus its seeds' labels into literals. `mfg` must have
+    /// `cfg.num_layers()` layers and fit within the manifest caps.
+    pub fn pack(&self, ds: &Dataset, mfg: &Mfg) -> Result<PackedBatch> {
+        let cfg = &self.cfg;
+        let l = cfg.num_layers();
+        anyhow::ensure!(mfg.layers.len() == l, "mfg has {} layers, config {l}", mfg.layers.len());
+        let k = cfg.k_max;
+
+        // cap check (deepest layer d: inputs |V^{d+1}| <= v_caps[d])
+        for (d, layer) in mfg.layers.iter().enumerate() {
+            let cap = cfg.v_caps[d];
+            anyhow::ensure!(
+                layer.num_inputs() <= cap,
+                "layer {} inputs {} exceed cap {} — recalibrate configs.py",
+                d + 1,
+                layer.num_inputs(),
+                cap
+            );
+        }
+        let seeds = &mfg.layers[0].seeds;
+        anyhow::ensure!(seeds.len() <= cfg.batch_size, "batch larger than artifact B");
+
+        // features: deepest layer inputs, padded to v_caps.last()
+        let f = cfg.num_features;
+        let deep_inputs = mfg.feature_vertices();
+        let vin_cap = *cfg.v_caps.last().unwrap();
+        let mut feats = vec![0.0f32; vin_cap * f];
+        for (row, &v) in deep_inputs.iter().enumerate() {
+            feats[row * f..(row + 1) * f].copy_from_slice(ds.feature(v));
+        }
+        let feats = f32_tensor(&feats, &[vin_cap, f])?;
+
+        // layers in compute order: deepest (index l-1) first
+        let mut layers = Vec::with_capacity(l);
+        let mut overflow = 0usize;
+        let mut total = 0usize;
+        let rows = cfg.layer_rows();
+        for (ci, (_r_in, r_out)) in rows.iter().enumerate() {
+            let layer = &mfg.layers[l - 1 - ci];
+            total += layer.num_edges();
+            let mut idx = vec![0i32; r_out * k];
+            let mut w = vec![0.0f32; r_out * k];
+            let mut fill = vec![0usize; layer.seeds.len()];
+            let mut kept_sum = vec![0.0f64; layer.seeds.len()];
+            let mut all_sum = vec![0.0f64; layer.seeds.len()];
+            for e in 0..layer.num_edges() {
+                let dst = layer.edge_dst[e] as usize;
+                all_sum[dst] += layer.edge_weight[e] as f64;
+                let slot = fill[dst];
+                if slot >= k {
+                    overflow += 1;
+                    continue;
+                }
+                idx[dst * k + slot] = layer.edge_src[e] as i32;
+                w[dst * k + slot] = layer.edge_weight[e];
+                kept_sum[dst] += layer.edge_weight[e] as f64;
+                fill[dst] = slot + 1;
+            }
+            // renormalize rows that lost overflow edges
+            for dst in 0..layer.seeds.len() {
+                if fill[dst] >= k && kept_sum[dst] > 0.0 && kept_sum[dst] < all_sum[dst] {
+                    let scale = (all_sum[dst] / kept_sum[dst]) as f32;
+                    for slot in 0..fill[dst] {
+                        w[dst * k + slot] *= scale;
+                    }
+                }
+            }
+            layers.push((i32_tensor(&idx, &[*r_out, k])?, f32_tensor(&w, &[*r_out, k])?));
+        }
+
+        // labels + mask over (padded) seeds
+        let b = cfg.batch_size;
+        let mut mask = vec![0.0f32; b];
+        for m in mask.iter_mut().take(seeds.len()) {
+            *m = 1.0;
+        }
+        let labels = if cfg.multilabel {
+            let c = cfg.num_classes;
+            let mut y = vec![0.0f32; b * c];
+            for (i, &s) in seeds.iter().enumerate() {
+                let row = ds.multilabel_row(s).expect("multilabel dataset");
+                for (j, &v) in row.iter().enumerate() {
+                    y[i * c + j] = v as f32;
+                }
+            }
+            f32_tensor(&y, &[b, c])?
+        } else {
+            let mut y = vec![0i32; b];
+            for (i, &s) in seeds.iter().enumerate() {
+                y[i] = ds.labels[s as usize] as i32;
+            }
+            i32_tensor(&y, &[b])?
+        };
+
+        Ok(PackedBatch {
+            feats,
+            layers,
+            labels,
+            mask: f32_tensor(&mask, &[b])?,
+            num_seeds: seeds.len(),
+            overflow_edges: overflow,
+            total_edges: total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{spec, Dataset};
+    use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+
+    fn tiny_cfg() -> ArtifactConfig {
+        ArtifactConfig {
+            name: "gcn_tiny".into(),
+            arch: "gcn".into(),
+            batch_size: 64,
+            k_max: 8,
+            v_caps: vec![600, 1500, 3000],
+            num_features: 16,
+            hidden: 64,
+            num_classes: 4,
+            multilabel: false,
+            lr: 1e-3,
+            param_names: vec![],
+            param_shapes: vec![],
+            train_artifact: String::new(),
+            fwd_artifact: String::new(),
+            train_num_inputs: 0,
+            train_num_outputs: 0,
+            fwd_num_inputs: 0,
+        }
+    }
+
+    #[test]
+    fn pack_shapes_and_mask() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 0.3);
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[4, 4, 4],
+        );
+        let seeds: Vec<u32> = ds.splits.train[..50].to_vec();
+        let mfg = sampler.sample(&ds.graph, &seeds, 7);
+        let packer = Packer::new(tiny_cfg());
+        let pb = packer.pack(&ds, &mfg).unwrap();
+        assert_eq!(pb.num_seeds, 50);
+        assert_eq!(pb.layers.len(), 3);
+        assert_eq!(pb.feats.element_count(), 3000 * 16);
+        // mask: 50 ones then zeros
+        let m = pb.mask.to_vec::<f32>().unwrap();
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 50);
+        assert_eq!(m.len(), 64);
+        // per-row weights (first compute layer) sum to ~1 or 0
+        let w = pb.layers[0].1.to_vec::<f32>().unwrap();
+        for row in w.chunks_exact(8).take(200) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-4 || (s - 1.0).abs() < 1e-3, "row sum {s}");
+        }
+    }
+
+    #[test]
+    fn cap_violation_is_loud() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 0.3);
+        let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[8, 8, 8]);
+        let seeds: Vec<u32> = ds.splits.train[..60].to_vec();
+        let mfg = sampler.sample(&ds.graph, &seeds, 3);
+        let mut cfg = tiny_cfg();
+        cfg.v_caps = vec![4, 4, 4]; // absurdly small
+        let packer = Packer::new(cfg);
+        assert!(packer.pack(&ds, &mfg).is_err());
+    }
+
+    #[test]
+    fn overflow_edges_renormalized() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 0.3);
+        // NS fanout 12 > k_max 8 forces overflow
+        let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[12, 4, 4]);
+        let seeds: Vec<u32> = ds.splits.train[..40].to_vec();
+        let mfg = sampler.sample(&ds.graph, &seeds, 3);
+        let packer = Packer::new(tiny_cfg());
+        let pb = packer.pack(&ds, &mfg).unwrap();
+        // the layer adjacent to the seeds is the LAST compute layer
+        let w = pb.layers[2].1.to_vec::<f32>().unwrap();
+        assert!(pb.overflow_edges > 0);
+        for (i, row) in w.chunks_exact(8).take(pb.num_seeds).enumerate() {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-4 || (s - 1.0).abs() < 1e-3, "seed {i} row sum {s}");
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Literal construction helpers: fast, shape-checked host buffers for the
+//! PJRT calling convention.
+
+use anyhow::Result;
+use xla::{ElementType, Literal};
+
+/// f32 tensor of arbitrary rank from a flat row-major buffer.
+pub fn f32_tensor(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let mut lit = Literal::create_from_shape(ElementType::F32.primitive_type(), dims);
+    lit.copy_raw_from(data)?;
+    Ok(lit)
+}
+
+/// i32 tensor of arbitrary rank from a flat row-major buffer.
+pub fn i32_tensor(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let mut lit = Literal::create_from_shape(ElementType::S32.primitive_type(), dims);
+    lit.copy_raw_from(data)?;
+    Ok(lit)
+}
+
+/// f32 scalar.
+pub fn f32_scalar(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Read back a rank-any f32 literal as a flat vector.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Glorot-uniform initialization matching `python/compile/model.py`
+/// (same distribution; exact values need not match across languages).
+pub fn glorot_init(rng: &mut crate::rng::StreamRng, dims: &[usize]) -> Vec<f32> {
+    let n: usize = dims.iter().product();
+    let fan_in = dims[0] as f64;
+    let fan_out = *dims.last().unwrap() as f64;
+    let scale = (6.0 / (fan_in + fan_out)).sqrt();
+    (0..n).map(|_| ((rng.next_f64() * 2.0 - 1.0) * scale) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_tensor(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = i32_tensor(&[7, -1, 0], &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -1, 0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_tensor(&[1.0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut rng = crate::rng::StreamRng::new(0);
+        let v = glorot_init(&mut rng, &[100, 50]);
+        let bound = (6.0f64 / 150.0).sqrt() as f32;
+        assert_eq!(v.len(), 5000);
+        assert!(v.iter().all(|x| x.abs() <= bound));
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.01);
+    }
+}

@@ -1,0 +1,213 @@
+//! LADIES — layer-dependent importance sampling (Zou et al. 2019), the
+//! paper's layer-sampling baseline (§2).
+//!
+//! Per layer: assign each candidate `t ∈ N(S)` the probability
+//! `p_t ∝ Σ_{s∈S, t→s} 1/d_s²` (the squared column norm of the
+//! row-normalized adjacency restricted to `S`), draw `n` samples **with
+//! replacement**, keep the distinct vertices `T`, and connect every edge
+//! `t → s` with `t ∈ T`. As in the LADIES implementation, the sampled
+//! adjacency is row-normalized — the Hajek estimator (Eq. 4b).
+
+use super::{finalize_inputs, hajek_normalize, LayerSampler, SampleCtx, SampledLayer};
+use crate::graph::CscGraph;
+use crate::rng::{mix2, StreamRng};
+use crate::util::alias::AliasTable;
+
+/// The LADIES layer sampler. `budgets[l]` = number of vertices to draw
+/// (with replacement) at layer `l`.
+pub struct LadiesSampler {
+    pub budgets: Vec<usize>,
+}
+
+/// Candidate set and LADIES importance distribution for one layer; shared
+/// with PLADIES (which reuses `p` but samples without replacement via
+/// Poisson trials).
+pub(crate) struct LayerCandidates {
+    pub candidates: Vec<u32>,
+    /// stamp-array candidate index over |V| (§Perf: no hashing on the
+    /// sampling hot path); `u32::MAX` = not a candidate
+    index_of: Vec<u32>,
+    /// unnormalized importance mass `Σ_{s: t→s} 1/d_s²`
+    pub mass: Vec<f64>,
+}
+
+impl LayerCandidates {
+    pub fn build(g: &CscGraph, seeds: &[u32]) -> Self {
+        let mut candidates: Vec<u32> = Vec::new();
+        let mut index_of: Vec<u32> = vec![u32::MAX; g.num_vertices()];
+        let mut mass: Vec<f64> = Vec::new();
+        for &s in seeds {
+            let d = g.in_degree(s);
+            if d == 0 {
+                continue;
+            }
+            let w = 1.0 / (d as f64 * d as f64);
+            for &t in g.in_neighbors(s) {
+                let mut ti = index_of[t as usize];
+                if ti == u32::MAX {
+                    ti = candidates.len() as u32;
+                    index_of[t as usize] = ti;
+                    candidates.push(t);
+                    mass.push(0.0);
+                }
+                mass[ti as usize] += w;
+            }
+        }
+        Self { candidates, index_of, mass }
+    }
+
+    /// candidate-local id of vertex `t` (must be a candidate)
+    #[inline]
+    pub fn local(&self, t: u32) -> usize {
+        debug_assert_ne!(self.index_of[t as usize], u32::MAX);
+        self.index_of[t as usize] as usize
+    }
+}
+
+/// Materialize the bipartite block between a chosen vertex set `T`
+/// (bitmask over candidates with per-candidate HT weight `1/π_t`) and the
+/// seeds; shared by LADIES and PLADIES.
+pub(crate) fn connect_chosen(
+    g: &CscGraph,
+    seeds: &[u32],
+    cand: &LayerCandidates,
+    chosen_ht: &[Option<f64>], // per-candidate 1/π_t if chosen
+) -> SampledLayer {
+    let mut edge_src: Vec<u32> = Vec::new();
+    let mut edge_dst: Vec<u32> = Vec::new();
+    let mut raw: Vec<f64> = Vec::new();
+    for (si, &s) in seeds.iter().enumerate() {
+        for &t in g.in_neighbors(s) {
+            let ti = cand.local(t);
+            if let Some(ht) = chosen_ht[ti] {
+                edge_src.push(t);
+                edge_dst.push(si as u32);
+                raw.push(ht);
+            }
+        }
+    }
+    let edge_weight = hajek_normalize(&edge_dst, &raw, seeds.len());
+    let inputs = finalize_inputs(g.num_vertices(), seeds, &mut edge_src);
+    SampledLayer { seeds: seeds.to_vec(), inputs, edge_src, edge_dst, edge_weight }
+}
+
+impl LayerSampler for LadiesSampler {
+    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+        let n = self.budgets[ctx.layer];
+        let cand = LayerCandidates::build(g, seeds);
+        if cand.candidates.is_empty() {
+            return SampledLayer {
+                seeds: seeds.to_vec(),
+                inputs: seeds.to_vec(),
+                ..Default::default()
+            };
+        }
+        let total_mass: f64 = cand.mass.iter().sum();
+        let mut chosen: Vec<Option<f64>> = vec![None; cand.candidates.len()];
+        if n >= cand.candidates.len() {
+            // budget covers everything: exact neighborhood
+            for (ti, c) in chosen.iter_mut().enumerate() {
+                let _ = ti;
+                *c = Some(1.0);
+            }
+        } else {
+            let table = AliasTable::new(&cand.mass);
+            let mut rng = StreamRng::new(mix2(ctx.batch_seed, 0x1AD1E5 ^ ctx.layer as u64));
+            for _ in 0..n {
+                let ti = table.sample(&mut rng) as usize;
+                // HT weight for with-replacement draws: 1/(n·p_t); the
+                // constant n washes out in Hajek normalization
+                chosen[ti] = Some(total_mass / cand.mass[ti]);
+            }
+        }
+        connect_chosen(g, seeds, &cand, &chosen)
+    }
+
+    fn name(&self) -> String {
+        "LADIES".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testutil::{skewed_graph, test_graph};
+
+    fn ctx(b: u64) -> SampleCtx {
+        SampleCtx { batch_seed: b, layer: 0 }
+    }
+
+    #[test]
+    fn respects_budget_as_upper_bound_on_new_vertices() {
+        let g = test_graph();
+        let s = LadiesSampler { budgets: vec![50] };
+        let seeds: Vec<u32> = (0..100).collect();
+        let sl = s.sample_layer(&g, &seeds, ctx(1));
+        sl.validate(&g).unwrap();
+        // distinct sampled sources ≤ n (with replacement dedups)
+        let mut srcs: Vec<u32> = sl.edge_src.iter().map(|&i| sl.inputs[i as usize]).collect();
+        srcs.sort_unstable();
+        srcs.dedup();
+        assert!(srcs.len() <= 50, "got {}", srcs.len());
+    }
+
+    #[test]
+    fn all_edges_into_seeds_from_chosen_set_are_present() {
+        // layer sampling connects every (t, s) pair with t chosen
+        let g = test_graph();
+        let s = LadiesSampler { budgets: vec![30] };
+        let seeds: Vec<u32> = (0..60).collect();
+        let sl = s.sample_layer(&g, &seeds, ctx(2));
+        let chosen: std::collections::HashSet<u32> =
+            sl.edge_src.iter().map(|&i| sl.inputs[i as usize]).collect();
+        for (si, &sv) in seeds.iter().enumerate() {
+            for &t in g.in_neighbors(sv) {
+                if chosen.contains(&t) {
+                    let found = (0..sl.num_edges()).any(|e| {
+                        sl.edge_dst[e] as usize == si
+                            && sl.inputs[sl.edge_src[e] as usize] == t
+                    });
+                    assert!(found, "edge {t}->{sv} missing though {t} was chosen");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn big_budget_degenerates_to_full_neighborhood() {
+        let g = skewed_graph();
+        let s = LadiesSampler { budgets: vec![10_000] };
+        let seeds = vec![0u32, 1, 2];
+        let sl = s.sample_layer(&g, &seeds, ctx(3));
+        let total_deg: usize = seeds.iter().map(|&v| g.in_degree(v)).sum();
+        assert_eq!(sl.num_edges(), total_deg);
+    }
+
+    #[test]
+    fn importance_mass_favors_high_connectivity() {
+        // a candidate touching many low-degree seeds must outweigh one
+        // touching a single high-degree seed
+        let g = skewed_graph();
+        let seeds: Vec<u32> = (1..50).collect();
+        let cand = LayerCandidates::build(&g, &seeds);
+        // vertex 0 is in-neighbor of every seed (star) => huge mass
+        let m0 = cand.mass[cand.local(0)];
+        let other_max = cand
+            .candidates
+            .iter()
+            .filter(|&&t| t != 0)
+            .map(|&t| cand.mass[cand.local(t)])
+            .fold(0.0f64, f64::max);
+        assert!(m0 > other_max, "m0={m0} other={other_max}");
+    }
+
+    #[test]
+    fn isolated_seeds_produce_no_edges() {
+        use crate::graph::builder::CscBuilder;
+        let g = CscBuilder::new(4).edges(&[(0, 1)]).build().unwrap();
+        let s = LadiesSampler { budgets: vec![5] };
+        let sl = s.sample_layer(&g, &[2, 3], ctx(1));
+        assert_eq!(sl.num_edges(), 0);
+        assert_eq!(sl.inputs, vec![2, 3]);
+    }
+}

@@ -1,0 +1,403 @@
+//! GNN mini-batch samplers — the paper's contribution (LABOR, PLADIES) and
+//! its baselines (Neighbor Sampling, LADIES).
+//!
+//! All samplers share one interface: given a graph and a set of seed
+//! vertices, produce a [`SampledLayer`] — a bipartite message-flow block
+//! from sampled *input* vertices to the seeds, with Hajek-normalized edge
+//! weights so that `H_s ≈ Σ_e w_e · M_src(e)` estimates the full mean
+//! aggregation of Eq. (2). A [`MultiLayerSampler`] applies a layer sampler
+//! recursively (the inputs of one layer become the seeds of the next) to
+//! build the full [`Mfg`] for an `L`-layer GNN.
+
+pub mod labor;
+pub mod ladies;
+pub mod neighbor;
+pub mod pladies;
+pub mod poisson;
+pub mod weighted;
+
+use crate::graph::CscGraph;
+
+/// One sampled bipartite layer (a "message flow block").
+///
+/// Conventions:
+/// * `inputs` starts with `seeds` (`inputs[..seeds.len()] == seeds`), so a
+///   model can realize residual/self connections; the remaining entries are
+///   the newly sampled in-neighbors, deduplicated.
+/// * edges are stored as local indices: `edge_src[e]` indexes `inputs`,
+///   `edge_dst[e]` indexes `seeds`.
+/// * `edge_weight` holds Hajek-normalized weights: for every seed `s` with
+///   at least one sampled in-edge, the weights of its in-edges sum to 1.
+#[derive(Clone, Debug, Default)]
+pub struct SampledLayer {
+    pub seeds: Vec<u32>,
+    pub inputs: Vec<u32>,
+    pub edge_src: Vec<u32>,
+    pub edge_dst: Vec<u32>,
+    pub edge_weight: Vec<f32>,
+}
+
+impl SampledLayer {
+    /// |V| of the input side (the paper's per-layer vertex count).
+    pub fn num_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// |E| of the sampled bipartite block.
+    pub fn num_edges(&self) -> usize {
+        self.edge_src.len()
+    }
+
+    /// Number of sampled in-edges of each seed (d̃_s).
+    pub fn sampled_degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.seeds.len()];
+        for &dst in &self.edge_dst {
+            d[dst as usize] += 1;
+        }
+        d
+    }
+
+    /// Structural validation used throughout the test-suite.
+    pub fn validate(&self, g: &CscGraph) -> Result<(), String> {
+        if self.inputs.len() < self.seeds.len() {
+            return Err("inputs shorter than seeds".into());
+        }
+        if self.inputs[..self.seeds.len()] != self.seeds[..] {
+            return Err("inputs must start with seeds".into());
+        }
+        // inputs unique
+        let mut seen = std::collections::HashSet::new();
+        for &v in &self.inputs {
+            if !seen.insert(v) {
+                return Err(format!("duplicate input vertex {v}"));
+            }
+        }
+        if self.edge_src.len() != self.edge_dst.len()
+            || self.edge_src.len() != self.edge_weight.len()
+        {
+            return Err("edge array length mismatch".into());
+        }
+        let mut wsum = vec![0.0f64; self.seeds.len()];
+        let mut seen_edges = std::collections::HashSet::new();
+        for e in 0..self.edge_src.len() {
+            let (src, dst) = (self.edge_src[e] as usize, self.edge_dst[e] as usize);
+            if src >= self.inputs.len() || dst >= self.seeds.len() {
+                return Err("edge endpoint out of range".into());
+            }
+            if !seen_edges.insert((src, dst)) {
+                return Err(format!("duplicate edge ({src},{dst})"));
+            }
+            let (t, s) = (self.inputs[src], self.seeds[dst]);
+            if !g.has_edge(t, s) {
+                return Err(format!("sampled edge {t}->{s} not in graph"));
+            }
+            let w = self.edge_weight[e];
+            if !(w.is_finite() && w > 0.0 && w <= 1.0 + 1e-4) {
+                return Err(format!("bad edge weight {w}"));
+            }
+            wsum[dst] += w as f64;
+        }
+        for (i, &ws) in wsum.iter().enumerate() {
+            if ws != 0.0 && (ws - 1.0).abs() > 1e-4 {
+                return Err(format!("weights of seed #{i} sum to {ws}, expected 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-call context: which batch / layer is being sampled, so that
+/// deterministic hash-RNG streams decorrelate across batches and layers.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCtx {
+    pub batch_seed: u64,
+    pub layer: usize,
+}
+
+/// A single-layer sampler.
+pub trait LayerSampler: Send + Sync {
+    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer;
+    fn name(&self) -> String;
+}
+
+/// Which algorithm to use (paper §2–3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SamplerKind {
+    /// Neighbor Sampling (Hamilton et al. 2017): per-seed uniform fanout.
+    Neighbor,
+    /// LABOR-i / LABOR-\* (§3.2): `iterations` importance-sampling
+    /// fixed-point steps; `layer_dependent` reuses the same `r_t` across
+    /// layers (Appendix A.8).
+    Labor { iterations: IterSpec, layer_dependent: bool },
+    /// LABOR with sequential Poisson rounding (Appendix A.3): exactly
+    /// `min(k, d_s)` neighbors per seed.
+    LaborSequential { iterations: IterSpec, layer_dependent: bool },
+    /// LADIES (Zou et al. 2019): with-replacement layer importance sampling.
+    Ladies { budgets: Vec<usize> },
+    /// PLADIES (§3.1): LADIES probabilities, Poisson sampling, unbiased.
+    Pladies { budgets: Vec<usize> },
+}
+
+/// Number of LABOR importance-sampling iterations: fixed `i` or `*`
+/// (iterate to convergence of objective (12), tol 1e-4, cap 50).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterSpec {
+    Fixed(usize),
+    Converge,
+}
+
+impl SamplerKind {
+    /// Parse names like `ns`, `labor-0`, `labor-1`, `labor-*`, `ladies`,
+    /// `pladies` (harness CLI). LADIES budgets must be set separately.
+    pub fn parse(name: &str) -> Option<SamplerKind> {
+        match name {
+            "ns" | "neighbor" => Some(SamplerKind::Neighbor),
+            "ladies" => Some(SamplerKind::Ladies { budgets: vec![] }),
+            "pladies" => Some(SamplerKind::Pladies { budgets: vec![] }),
+            _ => {
+                let rest = name.strip_prefix("labor-")?;
+                let it = if rest == "*" {
+                    IterSpec::Converge
+                } else {
+                    IterSpec::Fixed(rest.parse().ok()?)
+                };
+                Some(SamplerKind::Labor { iterations: it, layer_dependent: false })
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SamplerKind::Neighbor => "NS".into(),
+            SamplerKind::Labor { iterations, .. } => match iterations {
+                IterSpec::Fixed(i) => format!("LABOR-{i}"),
+                IterSpec::Converge => "LABOR-*".into(),
+            },
+            SamplerKind::LaborSequential { iterations, .. } => match iterations {
+                IterSpec::Fixed(i) => format!("LABOR-{i}-seq"),
+                IterSpec::Converge => "LABOR-*-seq".into(),
+            },
+            SamplerKind::Ladies { .. } => "LADIES".into(),
+            SamplerKind::Pladies { .. } => "PLADIES".into(),
+        }
+    }
+}
+
+/// A multi-layer message-flow graph: `layers[0]` is adjacent to the batch
+/// seeds (edges `E^0`, inputs `V^1`); `layers[L-1]` is the deepest
+/// (inputs `V^L`).
+#[derive(Clone, Debug, Default)]
+pub struct Mfg {
+    pub layers: Vec<SampledLayer>,
+}
+
+impl Mfg {
+    /// Per-layer input vertex counts `[|V^1|, .., |V^L|]`.
+    pub fn vertex_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.num_inputs()).collect()
+    }
+
+    /// Per-layer edge counts `[|E^0|, .., |E^{L-1}|]`.
+    pub fn edge_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.num_edges()).collect()
+    }
+
+    /// The vertices whose features must be fetched (deepest layer inputs).
+    pub fn feature_vertices(&self) -> &[u32] {
+        &self.layers.last().expect("non-empty mfg").inputs
+    }
+}
+
+/// Applies a [`LayerSampler`] recursively over `L` layers.
+pub struct MultiLayerSampler {
+    pub kind: SamplerKind,
+    /// fanout per layer, `fanouts[0]` next to the seeds; ignored by
+    /// LADIES/PLADIES (they use `budgets` from the kind)
+    pub fanouts: Vec<usize>,
+    sampler: Box<dyn LayerSampler>,
+}
+
+impl MultiLayerSampler {
+    pub fn new(kind: SamplerKind, fanouts: &[usize]) -> Self {
+        let sampler: Box<dyn LayerSampler> = match &kind {
+            SamplerKind::Neighbor => {
+                Box::new(neighbor::NeighborSampler { fanouts: fanouts.to_vec() })
+            }
+            SamplerKind::Labor { iterations, layer_dependent } => {
+                Box::new(labor::LaborSampler {
+                    fanouts: fanouts.to_vec(),
+                    iterations: *iterations,
+                    layer_dependent: *layer_dependent,
+                    sequential: false,
+                })
+            }
+            SamplerKind::LaborSequential { iterations, layer_dependent } => {
+                Box::new(labor::LaborSampler {
+                    fanouts: fanouts.to_vec(),
+                    iterations: *iterations,
+                    layer_dependent: *layer_dependent,
+                    sequential: true,
+                })
+            }
+            SamplerKind::Ladies { budgets } => {
+                Box::new(ladies::LadiesSampler { budgets: budgets.clone() })
+            }
+            SamplerKind::Pladies { budgets } => {
+                Box::new(pladies::PladiesSampler { budgets: budgets.clone() })
+            }
+        };
+        Self { kind, fanouts: fanouts.to_vec(), sampler }
+    }
+
+    /// Number of layers sampled per batch.
+    pub fn num_layers(&self) -> usize {
+        match &self.kind {
+            SamplerKind::Ladies { budgets } | SamplerKind::Pladies { budgets } => budgets.len(),
+            _ => self.fanouts.len(),
+        }
+    }
+
+    /// Sample the full message-flow graph for one batch of seeds.
+    pub fn sample(&self, g: &CscGraph, seeds: &[u32], batch_seed: u64) -> Mfg {
+        let mut layers = Vec::with_capacity(self.num_layers());
+        let mut cur: Vec<u32> = seeds.to_vec();
+        for layer in 0..self.num_layers() {
+            let sl = self.sampler.sample_layer(g, &cur, SampleCtx { batch_seed, layer });
+            cur = sl.inputs.clone();
+            layers.push(sl);
+        }
+        Mfg { layers }
+    }
+
+    pub fn name(&self) -> String {
+        self.kind.label()
+    }
+}
+
+/// Shared helper: deduplicate the union of seeds and sampled sources into
+/// the `inputs` vector (seeds first), remapping global ids to local ones.
+///
+/// `edge_src_global` is rewritten in place into local input indices.
+/// §Perf: a stamp array over `|V|` replaces hashing (sampling is the L3
+/// hot path; see EXPERIMENTS.md §Perf).
+pub(crate) fn finalize_inputs(
+    num_vertices: usize,
+    seeds: &[u32],
+    edge_src_global: &mut [u32],
+) -> Vec<u32> {
+    let mut inputs: Vec<u32> = seeds.to_vec();
+    let mut local: Vec<u32> = vec![u32::MAX; num_vertices];
+    for (i, &s) in seeds.iter().enumerate() {
+        local[s as usize] = i as u32;
+    }
+    for src in edge_src_global.iter_mut() {
+        let mut id = local[*src as usize];
+        if id == u32::MAX {
+            id = inputs.len() as u32;
+            local[*src as usize] = id;
+            inputs.push(*src);
+        }
+        *src = id;
+    }
+    inputs
+}
+
+/// Shared helper: Hajek row-normalization. `raw[e]` holds the
+/// Horvitz–Thompson weight `1/π_e` of edge `e`; normalize per seed so each
+/// seed's incident weights sum to 1 (paper Eq. 4b / 6).
+pub(crate) fn hajek_normalize(edge_dst: &[u32], raw: &[f64], num_seeds: usize) -> Vec<f32> {
+    let mut sums = vec![0.0f64; num_seeds];
+    for (e, &dst) in edge_dst.iter().enumerate() {
+        sums[dst as usize] += raw[e];
+    }
+    edge_dst
+        .iter()
+        .enumerate()
+        .map(|(e, &dst)| (raw[e] / sums[dst as usize]) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::graph::gen::{dc_sbm, DcSbmConfig};
+    use crate::graph::CscGraph;
+
+    /// Small dense test graph (deterministic). Average in-degree ~60 so
+    /// that most vertices exceed the test fanouts — the regime where
+    /// LABOR's collective decisions matter (cf. paper §4.1: flickr with
+    /// avg degree ≈ fanout shows almost no gain).
+    pub fn test_graph() -> CscGraph {
+        dc_sbm(&DcSbmConfig {
+            num_vertices: 500,
+            num_arcs: 30_000,
+            num_communities: 4,
+            homophily: 0.7,
+            degree_exponent: 0.4,
+            seed: 42,
+        })
+        .graph
+    }
+
+    /// A graph with wildly skewed degrees (star + chain + clique mixture).
+    pub fn skewed_graph() -> CscGraph {
+        use crate::graph::builder::CscBuilder;
+        let n = 200u32;
+        let mut b = CscBuilder::new(n as usize);
+        for t in 1..n {
+            b.edge(t, 0); // star into 0 (degree 199)
+            b.edge(0, t); // 0 into everyone
+        }
+        for t in 1..n - 1 {
+            b.edge(t, t + 1); // chain
+        }
+        for u in 10..20u32 {
+            for v in 10..20u32 {
+                if u != v {
+                    b.edge(u, v); // small clique
+                }
+            }
+        }
+        b.build().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sampler_names() {
+        assert_eq!(SamplerKind::parse("ns"), Some(SamplerKind::Neighbor));
+        assert_eq!(
+            SamplerKind::parse("labor-0"),
+            Some(SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false })
+        );
+        assert_eq!(
+            SamplerKind::parse("labor-*"),
+            Some(SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false })
+        );
+        assert!(SamplerKind::parse("labor-x").is_none());
+        assert!(SamplerKind::parse("bogus").is_none());
+        assert_eq!(SamplerKind::parse("ladies").unwrap().label(), "LADIES");
+    }
+
+    #[test]
+    fn finalize_inputs_seeds_first_and_dedup() {
+        let seeds = vec![10, 20];
+        let mut src = vec![30u32, 10, 30, 40];
+        let inputs = finalize_inputs(50, &seeds, &mut src);
+        assert_eq!(inputs, vec![10, 20, 30, 40]);
+        assert_eq!(src, vec![2, 0, 2, 3]);
+    }
+
+    #[test]
+    fn hajek_weights_sum_to_one_per_seed() {
+        let dst = vec![0u32, 0, 1, 1, 1];
+        let raw = vec![2.0f64, 6.0, 1.0, 1.0, 2.0];
+        let w = hajek_normalize(&dst, &raw, 2);
+        assert!((w[0] - 0.25).abs() < 1e-6);
+        assert!((w[1] - 0.75).abs() < 1e-6);
+        let s1: f32 = w[2..].iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-6);
+    }
+}

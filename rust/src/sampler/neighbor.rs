@@ -1,0 +1,148 @@
+//! Neighbor Sampling (NS) — Hamilton et al. 2017, the paper's §2 baseline.
+//!
+//! For each seed `s`, pick `min(k, d_s)` in-neighbors uniformly **without
+//! replacement**, independently per seed. The per-seed estimator is the
+//! Hajek estimator with uniform inclusion probabilities, i.e. each sampled
+//! edge gets weight `1/d̃_s` (Eq. 6).
+
+use super::{finalize_inputs, LayerSampler, SampleCtx, SampledLayer};
+use crate::graph::CscGraph;
+use crate::rng::{mix2, StreamRng};
+
+/// Uniform per-seed fanout sampler.
+pub struct NeighborSampler {
+    /// fanout per layer (`fanouts[l]` used when sampling layer `l`)
+    pub fanouts: Vec<usize>,
+}
+
+impl LayerSampler for NeighborSampler {
+    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+        let k = self.fanouts[ctx.layer];
+        let mut edge_src: Vec<u32> = Vec::with_capacity(seeds.len() * k);
+        let mut edge_dst: Vec<u32> = Vec::with_capacity(seeds.len() * k);
+        let mut edge_weight: Vec<f32> = Vec::with_capacity(seeds.len() * k);
+        let mut picks: Vec<u64> = Vec::with_capacity(k);
+
+        for (si, &s) in seeds.iter().enumerate() {
+            let nbrs = g.in_neighbors(s);
+            let d = nbrs.len();
+            if d == 0 {
+                continue;
+            }
+            let dt = d.min(k);
+            let w = 1.0 / dt as f32;
+            if d <= k {
+                for &t in nbrs {
+                    edge_src.push(t);
+                    edge_dst.push(si as u32);
+                    edge_weight.push(w);
+                }
+            } else {
+                // without replacement, independently per (batch, layer, seed)
+                let mut rng =
+                    StreamRng::new(mix2(ctx.batch_seed, mix2(ctx.layer as u64, s as u64)));
+                rng.sample_distinct(d as u64, k, &mut picks);
+                for &j in &picks {
+                    edge_src.push(nbrs[j as usize]);
+                    edge_dst.push(si as u32);
+                    edge_weight.push(w);
+                }
+            }
+        }
+
+        let inputs = finalize_inputs(g.num_vertices(), seeds, &mut edge_src);
+        SampledLayer { seeds: seeds.to_vec(), inputs, edge_src, edge_dst, edge_weight }
+    }
+
+    fn name(&self) -> String {
+        "NS".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testutil::{skewed_graph, test_graph};
+
+    fn ctx(b: u64) -> SampleCtx {
+        SampleCtx { batch_seed: b, layer: 0 }
+    }
+
+    #[test]
+    fn fanout_respected_exactly() {
+        let g = test_graph();
+        let s = NeighborSampler { fanouts: vec![5] };
+        let seeds: Vec<u32> = (0..100).collect();
+        let sl = s.sample_layer(&g, &seeds, ctx(1));
+        sl.validate(&g).unwrap();
+        for (si, &d) in sl.sampled_degrees().iter().enumerate() {
+            let deg = g.in_degree(seeds[si]);
+            assert_eq!(d, deg.min(5), "seed {si} deg {deg}");
+        }
+    }
+
+    #[test]
+    fn small_degrees_take_full_neighborhood() {
+        let g = skewed_graph();
+        let s = NeighborSampler { fanouts: vec![10] };
+        let sl = s.sample_layer(&g, &[5, 150], ctx(3));
+        sl.validate(&g).unwrap();
+        // vertex 5: neighbors = {0, 4} (star + chain) => both taken
+        let d5 = sl.sampled_degrees()[0];
+        assert_eq!(d5, g.in_degree(5).min(10));
+    }
+
+    #[test]
+    fn high_degree_vertex_capped() {
+        let g = skewed_graph();
+        let s = NeighborSampler { fanouts: vec![10] };
+        let sl = s.sample_layer(&g, &[0], ctx(7));
+        assert_eq!(sl.num_edges(), 10); // vertex 0 has degree 199
+        sl.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_ctx_but_varies_across_batches() {
+        let g = test_graph();
+        let s = NeighborSampler { fanouts: vec![5] };
+        let seeds: Vec<u32> = (0..50).collect();
+        let a = s.sample_layer(&g, &seeds, ctx(1));
+        let b = s.sample_layer(&g, &seeds, ctx(1));
+        assert_eq!(a.edge_src, b.edge_src);
+        let c = s.sample_layer(&g, &seeds, ctx(2));
+        assert_ne!(a.edge_src, c.edge_src);
+    }
+
+    #[test]
+    fn per_seed_draws_are_independent_of_seed_order() {
+        // NS keys its RNG by vertex id, so permuting the seed list permutes
+        // but does not change each seed's picks
+        let g = test_graph();
+        let s = NeighborSampler { fanouts: vec![3] };
+        let a = s.sample_layer(&g, &[10, 20], ctx(9));
+        let b = s.sample_layer(&g, &[20, 10], ctx(9));
+        let edges = |sl: &SampledLayer, seed_pos: usize| -> Vec<u32> {
+            let mut v: Vec<u32> = sl
+                .edge_dst
+                .iter()
+                .enumerate()
+                .filter(|(_, &d)| d as usize == seed_pos)
+                .map(|(e, _)| sl.inputs[sl.edge_src[e] as usize])
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(edges(&a, 0), edges(&b, 1)); // seed 10's picks
+        assert_eq!(edges(&a, 1), edges(&b, 0)); // seed 20's picks
+    }
+
+    #[test]
+    fn no_duplicate_neighbors_per_seed() {
+        let g = test_graph();
+        let s = NeighborSampler { fanouts: vec![8] };
+        let seeds: Vec<u32> = (0..200).collect();
+        let sl = s.sample_layer(&g, &seeds, ctx(11));
+        // validate() already checks (src,dst) uniqueness
+        sl.validate(&g).unwrap();
+    }
+}

@@ -1,0 +1,161 @@
+//! PLADIES — Poisson LADIES (paper §3.1), the paper's first contribution.
+//!
+//! Same importance distribution as LADIES, but instead of drawing `n`
+//! samples with replacement, each candidate `t` is included independently
+//! with probability `π_t = min(1, α·p_t)`, where `α` solves
+//! `Σ_t min(1, α·p_t) = n` — so `E[|T|] = n`, the estimator is unbiased by
+//! construction (no with-replacement debiasing needed, cf. Chen et al.
+//! 2022), and the variance carries the `-1/d_s` improvement of Eq. (8).
+
+use super::ladies::{connect_chosen, LayerCandidates};
+use super::poisson::solve_saturated_scale;
+use super::{LayerSampler, SampleCtx, SampledLayer};
+use crate::graph::CscGraph;
+use crate::rng::{mix2, HashRng};
+
+/// The PLADIES layer sampler. `budgets[l]` = expected number of sampled
+/// vertices at layer `l`.
+pub struct PladiesSampler {
+    pub budgets: Vec<usize>,
+}
+
+impl LayerSampler for PladiesSampler {
+    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+        let n = self.budgets[ctx.layer];
+        let cand = LayerCandidates::build(g, seeds);
+        if cand.candidates.is_empty() {
+            return SampledLayer {
+                seeds: seeds.to_vec(),
+                inputs: seeds.to_vec(),
+                ..Default::default()
+            };
+        }
+        let alpha = solve_saturated_scale(&cand.mass, n as f64);
+        // shared per-candidate variates: PLADIES inherits layer sampling's
+        // collective decision-making (§3.1)
+        let rng = HashRng::new(mix2(ctx.batch_seed, 0x91AD1E5 ^ ctx.layer as u64));
+        let chosen: Vec<Option<f64>> = cand
+            .candidates
+            .iter()
+            .enumerate()
+            .map(|(ti, &t)| {
+                let p = (alpha * cand.mass[ti]).min(1.0);
+                if rng.uniform(t as u64) <= p {
+                    Some(1.0 / p)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        connect_chosen(g, seeds, &cand, &chosen)
+    }
+
+    fn name(&self) -> String {
+        "PLADIES".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testutil::test_graph;
+
+    fn sample_vertices(sl: &SampledLayer) -> usize {
+        let mut srcs: Vec<u32> = sl.edge_src.iter().map(|&i| sl.inputs[i as usize]).collect();
+        srcs.sort_unstable();
+        srcs.dedup();
+        srcs.len()
+    }
+
+    #[test]
+    fn expected_sample_size_matches_budget() {
+        let g = test_graph();
+        let seeds: Vec<u32> = (0..100).collect();
+        let s = PladiesSampler { budgets: vec![60] };
+        let reps = 400;
+        let mut total = 0usize;
+        for b in 0..reps {
+            let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            sl.validate(&g).unwrap();
+            total += sample_vertices(&sl);
+        }
+        let avg = total as f64 / reps as f64;
+        assert!((avg - 60.0).abs() < 2.0, "E[|T|]={avg}, want 60");
+    }
+
+    #[test]
+    fn poisson_inclusion_is_independent_of_budget_scale_direction() {
+        // sanity: a bigger budget must include at least as many vertices in
+        // expectation
+        let g = test_graph();
+        let seeds: Vec<u32> = (0..100).collect();
+        let small = PladiesSampler { budgets: vec![30] };
+        let large = PladiesSampler { budgets: vec![90] };
+        let mut sm = 0usize;
+        let mut lg = 0usize;
+        for b in 0..100 {
+            sm += sample_vertices(
+                &small.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
+            );
+            lg += sample_vertices(
+                &large.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
+            );
+        }
+        assert!(lg > sm);
+    }
+
+    #[test]
+    fn hajek_estimator_unbiased_for_mean_aggregation() {
+        // same statistical check as LABOR's: PLADIES must estimate the mean
+        // aggregation without bias (§3.1 "unbiased by construction")
+        let g = test_graph();
+        let seeds: Vec<u32> = (20..40).collect();
+        let signal = |t: u32| (t as f64 * 0.61).cos();
+        let exact: Vec<f64> = seeds
+            .iter()
+            .map(|&s| {
+                let nb = g.in_neighbors(s);
+                nb.iter().map(|&t| signal(t)).sum::<f64>() / nb.len() as f64
+            })
+            .collect();
+        let s = PladiesSampler { budgets: vec![80] };
+        let reps = 4000;
+        let mut est = vec![0.0f64; seeds.len()];
+        let mut cnt = vec![0usize; seeds.len()];
+        for b in 0..reps {
+            let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let mut got: Vec<f64> = vec![0.0; seeds.len()];
+            let mut has: Vec<bool> = vec![false; seeds.len()];
+            for e in 0..sl.num_edges() {
+                let t = sl.inputs[sl.edge_src[e] as usize];
+                got[sl.edge_dst[e] as usize] += sl.edge_weight[e] as f64 * signal(t);
+                has[sl.edge_dst[e] as usize] = true;
+            }
+            for si in 0..seeds.len() {
+                if has[si] {
+                    est[si] += got[si];
+                    cnt[si] += 1;
+                }
+            }
+        }
+        for (si, &ex) in exact.iter().enumerate() {
+            let got = est[si] / cnt[si] as f64;
+            // Hajek is consistent (small finite-sample bias allowed)
+            assert!(
+                (got - ex).abs() < 0.08,
+                "seed {si}: estimator {got:.4} vs exact {ex:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_batch_seed() {
+        let g = test_graph();
+        let seeds: Vec<u32> = (0..50).collect();
+        let s = PladiesSampler { budgets: vec![40] };
+        let a = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
+        let b = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
+        assert_eq!(a.edge_src, b.edge_src);
+        assert_eq!(a.edge_weight, b.edge_weight);
+    }
+}

@@ -1,0 +1,155 @@
+//! Poisson-sampling utilities shared by PLADIES and LABOR.
+//!
+//! * [`solve_saturated_scale`] — given non-negative weights `w_t`, find the
+//!   scale `α` such that `Σ_t min(1, α·w_t) = target`. This is how PLADIES
+//!   turns LADIES' importance distribution into capped per-vertex inclusion
+//!   probabilities with `E[|T|] = n` (§3.1), and how generic "expected
+//!   sample size" calibrations are done throughout.
+//! * [`sequential_poisson_pick`] — Ohlsson (1998) sequential Poisson
+//!   sampling (Appendix A.3): select exactly `k` items, the `k` smallest
+//!   by the key `r_t / p_t`, in expected linear time.
+
+/// Solve `Σ_t min(1, α·w[t]) = target` for `α ≥ 0`.
+///
+/// Requires `0 < target` and at least one positive weight. If
+/// `target >= #positive weights`, every inclusion saturates and
+/// `f64::INFINITY` is returned (all probabilities 1).
+///
+/// O(n log n): sort weights descending; if the `m` largest saturate,
+/// `α = (target - m) / Σ_{j>m} w_j`, and the correct `m` is the unique one
+/// consistent with `α·w_{m-1} ≥ 1 > α·w_m`.
+pub fn solve_saturated_scale(w: &[f64], target: f64) -> f64 {
+    assert!(target > 0.0);
+    let mut ws: Vec<f64> = w.iter().copied().filter(|x| *x > 0.0).collect();
+    let n = ws.len();
+    assert!(n > 0, "no positive weights");
+    if target >= n as f64 {
+        return f64::INFINITY;
+    }
+    ws.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    // suffix[m] = sum of ws[m..]
+    let mut suffix = vec![0.0f64; n + 1];
+    for m in (0..n).rev() {
+        suffix[m] = suffix[m + 1] + ws[m];
+    }
+    for m in 0..n {
+        let denom = target - m as f64;
+        if denom <= 0.0 {
+            break;
+        }
+        let alpha = denom / suffix[m];
+        let upper_ok = m == 0 || alpha * ws[m - 1] >= 1.0 - 1e-12;
+        let lower_ok = alpha * ws[m] < 1.0 + 1e-12;
+        if upper_ok && lower_ok {
+            return alpha;
+        }
+    }
+    // numerically possible fallback: saturate everything but the tail
+    (target - (n - 1) as f64) / suffix[n - 1]
+}
+
+/// Expected sample size under probabilities `min(1, α·w_t)`.
+pub fn expected_size(w: &[f64], alpha: f64) -> f64 {
+    w.iter().map(|&x| (alpha * x).min(1.0)).sum()
+}
+
+/// Sequential Poisson sampling (Appendix A.3): return the indices of the
+/// `k` smallest values of `key[t] = r[t] / p[t]` (ties broken arbitrarily).
+/// `r` and `p` must have equal length; `p[t] > 0`. Runs in expected O(n)
+/// via quickselect (`select_nth_unstable`, Hoare's algorithm).
+pub fn sequential_poisson_pick(r: &[f64], p: &[f64], k: usize) -> Vec<usize> {
+    assert_eq!(r.len(), p.len());
+    let n = r.len();
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut keyed: Vec<(f64, usize)> =
+        (0..n).map(|t| (r[t] / p[t], t)).collect();
+    keyed.select_nth_unstable_by(k, |a, b| a.0.partial_cmp(&b.0).unwrap());
+    keyed[..k].iter().map(|&(_, t)| t).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StreamRng;
+    use crate::util::prop::{for_cases, vec_in};
+
+    #[test]
+    fn scale_hits_target_exactly_uniform() {
+        let w = vec![1.0; 100];
+        let a = solve_saturated_scale(&w, 25.0);
+        assert!((expected_size(&w, a) - 25.0).abs() < 1e-9);
+        assert!((a - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_handles_saturation() {
+        // one huge weight saturates; the rest share the remaining mass
+        let w = vec![100.0, 1.0, 1.0, 1.0];
+        let a = solve_saturated_scale(&w, 2.0);
+        assert!((expected_size(&w, a) - 2.0).abs() < 1e-9);
+        assert!(a * 100.0 >= 1.0);
+        assert!(a * 1.0 < 1.0);
+    }
+
+    #[test]
+    fn target_at_or_above_n_means_probability_one() {
+        let w = vec![0.5, 2.0, 1.0];
+        assert_eq!(solve_saturated_scale(&w, 3.0), f64::INFINITY);
+        assert_eq!(solve_saturated_scale(&w, 5.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn prop_solver_meets_target_for_random_weights() {
+        for_cases(0x50A, 60, |rng: &mut StreamRng| {
+            let n = 1 + rng.below(300) as usize;
+            // heavy-tailed weights: exponentiate normals
+            let w: Vec<f64> =
+                vec_in(rng, n, 0.0, 1.0).iter().map(|x| (4.0 * x).exp()).collect();
+            let target = 0.5 + rng.next_f64() * (n as f64 - 0.5);
+            let a = solve_saturated_scale(&w, target.min(n as f64 - 1e-6));
+            let got = expected_size(&w, a);
+            assert!(
+                (got - target.min(n as f64 - 1e-6)).abs() < 1e-6 * n as f64,
+                "n={n} target={target} got={got}"
+            );
+        });
+    }
+
+    #[test]
+    fn sequential_pick_selects_k_smallest_keys() {
+        let r = vec![0.9, 0.1, 0.5, 0.7, 0.04];
+        let p = vec![1.0, 1.0, 1.0, 1.0, 0.1]; // keys: .9 .1 .5 .7 .4
+        let mut got = sequential_poisson_pick(&r, &p, 2);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 4]);
+    }
+
+    #[test]
+    fn sequential_pick_k_geq_n_returns_all() {
+        let r = vec![0.5, 0.2];
+        let p = vec![1.0, 1.0];
+        assert_eq!(sequential_poisson_pick(&r, &p, 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_sequential_pick_is_exact_topk() {
+        for_cases(0x5E9, 40, |rng: &mut StreamRng| {
+            let n = 1 + rng.below(200) as usize;
+            let r = vec_in(rng, n, 0.0, 1.0);
+            let p = vec_in(rng, n, 0.01, 1.0);
+            let k = rng.below(n as u64 + 1) as usize;
+            let picked = sequential_poisson_pick(&r, &p, k);
+            assert_eq!(picked.len(), k.min(n));
+            let mut keys: Vec<f64> = (0..n).map(|t| r[t] / p[t]).collect();
+            keys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if k > 0 && k < n {
+                let kth = keys[k - 1];
+                for &t in &picked {
+                    assert!(r[t] / p[t] <= kth + 1e-12);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! F1-score computation from model logits.
+//!
+//! The paper reports micro-F1: for single-label multiclass prediction
+//! micro-F1 equals accuracy; for multilabel (yelp) it is computed over all
+//! (example, class) decisions with a 0.5 sigmoid threshold (logit > 0).
+
+/// Micro-F1 for single-label multiclass: fraction of correct argmaxes.
+pub fn micro_f1_single(logits: &[f32], labels: &[i32], num_classes: usize, n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap();
+        if pred == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Micro-F1 for multilabel prediction (logit > 0 ⇔ sigmoid > 0.5).
+pub fn micro_f1_multilabel(logits: &[f32], labels: &[f32], num_classes: usize, n: usize) -> f64 {
+    let (mut tp, mut fp, mut fnn) = (0u64, 0u64, 0u64);
+    for i in 0..n {
+        for c in 0..num_classes {
+            let pred = logits[i * num_classes + c] > 0.0;
+            let truth = labels[i * num_classes + c] > 0.5;
+            match (pred, truth) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fnn += 1,
+                _ => {}
+            }
+        }
+    }
+    if tp == 0 {
+        return 0.0;
+    }
+    2.0 * tp as f64 / (2.0 * tp as f64 + fp as f64 + fnn as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_label_accuracy() {
+        // 3 examples, 2 classes
+        let logits = [1.0, 0.0, 0.0, 1.0, 2.0, -1.0];
+        let labels = [0, 1, 1];
+        assert!((micro_f1_single(&logits, &labels, 2, 3) - 2.0 / 3.0).abs() < 1e-12);
+        // padded rows ignored
+        assert!((micro_f1_single(&logits, &labels, 2, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multilabel_f1_exact() {
+        // 2 examples, 3 classes; preds: [1,0,1],[0,0,1]; truth: [1,1,0],[0,0,1]
+        let logits = [1.0, -1.0, 1.0, -2.0, -0.5, 3.0];
+        let labels = [1.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        // tp=2 (e0c0, e1c2), fp=1 (e0c2), fn=1 (e0c1)
+        let f1 = micro_f1_multilabel(&logits, &labels, 3, 2);
+        assert!((f1 - 2.0 * 2.0 / (2.0 * 2.0 + 1.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(micro_f1_single(&[], &[], 2, 0), 0.0);
+        assert_eq!(micro_f1_multilabel(&[-1.0, -1.0], &[0.0, 0.0], 2, 1), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Training driver: parameter state, the step loop, and evaluation.
+//!
+//! Everything numeric runs inside the AOT-compiled HLO (L2+L1); this module
+//! owns parameter literals, feeds packed batches, and computes F1 scores
+//! from returned logits.
+
+pub mod eval;
+pub mod state;
+pub mod trainer;
+
+pub use state::TrainState;
+pub use trainer::{TrainRecord, Trainer};

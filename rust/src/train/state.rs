@@ -1,0 +1,125 @@
+//! Parameter + Adam state as PJRT literals, following the artifact's flat
+//! calling convention.
+
+use crate::rng::StreamRng;
+use crate::runtime::manifest::ArtifactConfig;
+use crate::runtime::tensor::{f32_scalar, f32_tensor, glorot_init};
+use anyhow::Result;
+use xla::Literal;
+
+/// Flat parameter/optimizer state: `params[i]` has shape
+/// `cfg.param_shapes[i]` under name `cfg.param_names[i]`.
+pub struct TrainState {
+    pub params: Vec<Literal>,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    pub t: Literal,
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Initialize like `python/compile/model.py`: Glorot-uniform for rank-2
+    /// weights, zeros for rank-1 biases; Adam moments zeroed.
+    pub fn init(cfg: &ArtifactConfig, seed: u64) -> Result<Self> {
+        let mut rng = StreamRng::new(seed ^ 0x1417);
+        let mut params = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for dims in &cfg.param_shapes {
+            let n: usize = dims.iter().product();
+            let data = if dims.len() >= 2 {
+                glorot_init(&mut rng, dims)
+            } else {
+                vec![0.0f32; n]
+            };
+            params.push(f32_tensor(&data, dims)?);
+            m.push(f32_tensor(&vec![0.0f32; n], dims)?);
+            v.push(f32_tensor(&vec![0.0f32; n], dims)?);
+        }
+        Ok(Self { params, m, v, t: f32_scalar(0.0), step: 0 })
+    }
+
+    /// Collect the state prefix of the train_step argument list
+    /// (`params.., m.., v.., t`).
+    pub fn arg_refs(&self) -> Vec<&Literal> {
+        let mut out: Vec<&Literal> = Vec::with_capacity(3 * self.params.len() + 1);
+        out.extend(self.params.iter());
+        out.extend(self.m.iter());
+        out.extend(self.v.iter());
+        out.push(&self.t);
+        out
+    }
+
+    /// Absorb train_step outputs (`params.., m.., v.., t, loss`); returns
+    /// the loss.
+    pub fn absorb(&mut self, mut outputs: Vec<Literal>) -> Result<f32> {
+        let n = self.params.len();
+        anyhow::ensure!(outputs.len() == 3 * n + 2, "unexpected output arity");
+        let loss = outputs.pop().unwrap().to_vec::<f32>()?[0];
+        self.t = outputs.pop().unwrap();
+        self.v = outputs.split_off(2 * n);
+        self.m = outputs.split_off(n);
+        self.params = outputs;
+        self.step += 1;
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ArtifactConfig {
+        ArtifactConfig {
+            name: "x".into(),
+            arch: "gcn".into(),
+            batch_size: 4,
+            k_max: 2,
+            v_caps: vec![8, 8, 8],
+            num_features: 3,
+            hidden: 5,
+            num_classes: 2,
+            multilabel: false,
+            lr: 1e-3,
+            param_names: vec!["b1".into(), "w1".into()],
+            param_shapes: vec![vec![5], vec![3, 5]],
+            train_artifact: String::new(),
+            fwd_artifact: String::new(),
+            train_num_inputs: 0,
+            train_num_outputs: 0,
+            fwd_num_inputs: 0,
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_arg_order() {
+        let st = TrainState::init(&cfg(), 1).unwrap();
+        assert_eq!(st.params.len(), 2);
+        assert_eq!(st.params[0].element_count(), 5);
+        assert_eq!(st.params[1].element_count(), 15);
+        // biases zero, weights nonzero
+        assert!(st.params[0].to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+        assert!(st.params[1].to_vec::<f32>().unwrap().iter().any(|&x| x != 0.0));
+        assert_eq!(st.arg_refs().len(), 7); // 2 + 2 + 2 + t
+    }
+
+    #[test]
+    fn absorb_roundtrip() {
+        let mut st = TrainState::init(&cfg(), 1).unwrap();
+        let outs = vec![
+            f32_tensor(&[1.0; 5], &[5]).unwrap(),
+            f32_tensor(&[2.0; 15], &[3, 5]).unwrap(),
+            f32_tensor(&[0.0; 5], &[5]).unwrap(),
+            f32_tensor(&[0.0; 15], &[3, 5]).unwrap(),
+            f32_tensor(&[0.0; 5], &[5]).unwrap(),
+            f32_tensor(&[0.0; 15], &[3, 5]).unwrap(),
+            f32_scalar(1.0),
+            f32_scalar(0.25),
+        ];
+        let loss = st.absorb(outs).unwrap();
+        assert_eq!(loss, 0.25);
+        assert_eq!(st.step, 1);
+        assert!(st.params[0].to_vec::<f32>().unwrap().iter().all(|&x| x == 1.0));
+        assert!(st.params[1].to_vec::<f32>().unwrap().iter().all(|&x| x == 2.0));
+    }
+}

@@ -1,0 +1,110 @@
+//! The training loop: sample → pack → execute compiled train_step → track
+//! metrics; plus sampled evaluation over a split.
+
+use super::eval::{micro_f1_multilabel, micro_f1_single};
+use super::state::TrainState;
+use crate::data::Dataset;
+use crate::runtime::engine::CompiledModel;
+use crate::runtime::packer::Packer;
+use crate::sampler::{Mfg, MultiLayerSampler};
+use anyhow::Result;
+use xla::Literal;
+
+/// Per-step record for convergence curves (Figures 1–3).
+#[derive(Clone, Debug)]
+pub struct TrainRecord {
+    pub step: u64,
+    pub loss: f32,
+    /// per-layer vertex counts |V^1..V^L| of this step's MFG
+    pub vertices: Vec<usize>,
+    /// per-layer edge counts |E^0..E^{L-1}|
+    pub edges: Vec<usize>,
+    /// cumulative distinct-vertex samples so far (paper Fig. 1 x-axis)
+    pub cum_vertices: u64,
+    pub cum_edges: u64,
+    pub wall_ms: f64,
+}
+
+/// Drives training of one compiled model on one dataset.
+pub struct Trainer {
+    pub model: CompiledModel,
+    pub packer: Packer,
+    pub state: TrainState,
+    /// learning rate, fed as a runtime scalar each step (tunable, A.8)
+    pub lr: f32,
+    pub cum_vertices: u64,
+    pub cum_edges: u64,
+    pub overflow_edges: u64,
+}
+
+impl Trainer {
+    pub fn new(model: CompiledModel, seed: u64) -> Result<Self> {
+        let state = TrainState::init(&model.cfg, seed)?;
+        let packer = Packer::new(model.cfg.clone());
+        let lr = model.cfg.lr as f32;
+        Ok(Self { model, packer, state, lr, cum_vertices: 0, cum_edges: 0, overflow_edges: 0 })
+    }
+
+    /// One optimization step on a pre-sampled MFG. Returns the record.
+    pub fn step(&mut self, ds: &Dataset, mfg: &Mfg) -> Result<TrainRecord> {
+        let t0 = std::time::Instant::now();
+        let packed = self.packer.pack(ds, mfg)?;
+        self.overflow_edges += packed.overflow_edges as u64;
+        let batch = packed.batch_args();
+        let lr = crate::runtime::tensor::f32_scalar(self.lr);
+        let mut args: Vec<&Literal> = self.state.arg_refs();
+        args.extend(batch.iter());
+        args.push(&lr);
+        let outputs = self.model.train_step_refs(&args)?;
+        let loss = self.state.absorb(outputs)?;
+        let vertices = mfg.vertex_counts();
+        let edges = mfg.edge_counts();
+        self.cum_vertices += vertices.iter().sum::<usize>() as u64;
+        self.cum_edges += edges.iter().sum::<usize>() as u64;
+        Ok(TrainRecord {
+            step: self.state.step,
+            loss,
+            vertices,
+            edges,
+            cum_vertices: self.cum_vertices,
+            cum_edges: self.cum_edges,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Sampled evaluation over `split` seeds: micro-F1 with the given
+    /// evaluation sampler (typically NS at the training fanout).
+    pub fn evaluate(
+        &self,
+        ds: &Dataset,
+        sampler: &MultiLayerSampler,
+        split: &[u32],
+        eval_seed: u64,
+    ) -> Result<f64> {
+        let b = self.model.cfg.batch_size;
+        let c = self.model.cfg.num_classes;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (bi, chunk) in split.chunks(b).enumerate() {
+            let mfg = sampler.sample(&ds.graph, chunk, eval_seed ^ (bi as u64) << 17);
+            let packed = self.packer.pack(ds, &mfg)?;
+            let mut args: Vec<&Literal> = self.state.params.iter().collect();
+            args.push(&packed.feats);
+            for (idx, w) in &packed.layers {
+                args.push(idx);
+                args.push(w);
+            }
+            let logits = self.model.forward_refs(&args)?.to_vec::<f32>()?;
+            let f1 = if self.model.cfg.multilabel {
+                let y = packed.labels.to_vec::<f32>()?;
+                micro_f1_multilabel(&logits, &y, c, chunk.len())
+            } else {
+                let y = packed.labels.to_vec::<i32>()?;
+                micro_f1_single(&logits, &y, c, chunk.len())
+            };
+            num += f1 * chunk.len() as f64;
+            den += chunk.len() as f64;
+        }
+        Ok(if den > 0.0 { num / den } else { 0.0 })
+    }
+}

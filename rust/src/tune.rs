@@ -1,0 +1,249 @@
+//! Budget solving and hyperparameter tuning.
+//!
+//! * [`solve_batch_size`] — paper §4.2 / Table 3: find the batch size whose
+//!   expected deepest-layer vertex count matches a sampling budget.
+//! * [`ladies_budgets_matching`] — paper §4.1: pick LADIES/PLADIES
+//!   per-layer budgets that match LABOR-\*'s sampled vertex counts.
+//! * [`RandomSearchTuner`] — Appendix A.8 (Figure 4): a budgeted random
+//!   search with per-trial timeout substituting for HEBO (DESIGN.md §4:
+//!   Figure 4 plots *sorted runtimes of tried configurations*, which any
+//!   budgeted black-box tuner reproduces in shape).
+
+use crate::data::Dataset;
+use crate::rng::StreamRng;
+use crate::sampler::{MultiLayerSampler, SamplerKind};
+use crate::util::binary_search_max;
+
+/// Mean deepest-layer vertex count at a given batch size (sampled over
+/// `repeats` batches of the train split).
+pub fn mean_deepest_vertices(
+    ds: &Dataset,
+    kind: &SamplerKind,
+    fanouts: &[usize],
+    batch_size: usize,
+    repeats: usize,
+) -> f64 {
+    let sampler = MultiLayerSampler::new(kind.clone(), fanouts);
+    let train = &ds.splits.train;
+    let mut total = 0.0;
+    for r in 0..repeats {
+        let start = (r * batch_size * 7919) % train.len();
+        let seeds: Vec<u32> = (0..batch_size.min(train.len()))
+            .map(|i| train[(start + i) % train.len()])
+            .collect();
+        let mfg = sampler.sample(&ds.graph, &seeds, 0xB0D6E7 ^ r as u64);
+        total += *mfg.vertex_counts().last().unwrap() as f64;
+    }
+    total / repeats as f64
+}
+
+/// Solve for the largest batch size whose expected |V^L| stays within
+/// `budget` (paper Table 3). Monotone ⇒ binary search; each probe samples
+/// `repeats` batches.
+pub fn solve_batch_size(
+    ds: &Dataset,
+    kind: &SamplerKind,
+    fanouts: &[usize],
+    budget: usize,
+    repeats: usize,
+) -> usize {
+    let max_bs = ds.splits.train.len().max(2);
+    if mean_deepest_vertices(ds, kind, fanouts, max_bs, repeats) <= budget as f64 {
+        return max_bs;
+    }
+    binary_search_max(1, max_bs as u64, |bs| {
+        mean_deepest_vertices(ds, kind, fanouts, bs as usize, repeats) <= budget as f64
+    }) as usize
+}
+
+/// Per-layer LADIES/PLADIES budgets matched to a reference sampler's mean
+/// *newly sampled* vertex counts (`V^l − V^{l-1}`, with `V^0` = batch).
+pub fn ladies_budgets_matching(
+    ds: &Dataset,
+    reference: &SamplerKind,
+    fanouts: &[usize],
+    batch_size: usize,
+    repeats: usize,
+) -> Vec<usize> {
+    let sampler = MultiLayerSampler::new(reference.clone(), fanouts);
+    let train = &ds.splits.train;
+    let mut sums = vec![0.0f64; fanouts.len()];
+    for r in 0..repeats {
+        let start = (r * batch_size * 104729) % train.len();
+        let seeds: Vec<u32> = (0..batch_size.min(train.len()))
+            .map(|i| train[(start + i) % train.len()])
+            .collect();
+        let mfg = sampler.sample(&ds.graph, &seeds, 0x1AD ^ r as u64);
+        let mut prev = seeds.len();
+        for (d, v) in mfg.vertex_counts().iter().enumerate() {
+            sums[d] += (*v - prev) as f64;
+            prev = *v;
+        }
+    }
+    sums.iter().map(|s| (s / repeats as f64).round().max(1.0) as usize).collect()
+}
+
+/// One tuning trial's hyperparameters (Appendix A.8 search space).
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    pub lr: f64,
+    pub batch_size: usize,
+    pub fanouts: Vec<usize>,
+    /// `None` = Neighbor Sampling; `Some(i)` = LABOR-i
+    pub labor_iterations: Option<usize>,
+    pub layer_dependent: bool,
+}
+
+/// Result of one trial.
+#[derive(Clone, Debug)]
+pub struct TuneTrial {
+    pub config: TuneConfig,
+    /// seconds to reach the accuracy target; `None` = timed out
+    pub runtime_s: Option<f64>,
+}
+
+/// Budgeted random-search tuner over the Appendix A.8 space.
+pub struct RandomSearchTuner {
+    rng: StreamRng,
+    pub lr_range: (f64, f64),
+    pub batch_range: (usize, usize),
+    pub fanout_range: (usize, usize),
+    pub num_layers: usize,
+    /// tune LABOR knobs (iterations + layer dependency); false = NS
+    pub labor: bool,
+}
+
+impl RandomSearchTuner {
+    pub fn new(seed: u64, labor: bool) -> Self {
+        Self {
+            rng: StreamRng::new(seed),
+            lr_range: (1e-4, 1e-1),
+            batch_range: (1 << 8, 1 << 13),
+            fanout_range: (5, 25),
+            num_layers: 3,
+            labor,
+        }
+    }
+
+    /// Draw the next configuration (log-uniform lr and batch size, as HEBO
+    /// would explore them).
+    pub fn propose(&mut self) -> TuneConfig {
+        let (llo, lhi) = (self.lr_range.0.ln(), self.lr_range.1.ln());
+        let lr = (llo + (lhi - llo) * self.rng.next_f64()).exp();
+        let (blo, bhi) = ((self.batch_range.0 as f64).ln(), (self.batch_range.1 as f64).ln());
+        let batch_size = (blo + (bhi - blo) * self.rng.next_f64()).exp() as usize;
+        let fanouts: Vec<usize> = (0..self.num_layers)
+            .map(|_| {
+                self.fanout_range.0
+                    + self.rng.below((self.fanout_range.1 - self.fanout_range.0 + 1) as u64)
+                        as usize
+            })
+            .collect();
+        TuneConfig {
+            lr,
+            batch_size,
+            fanouts,
+            labor_iterations: if self.labor { Some(self.rng.below(4) as usize) } else { None },
+            layer_dependent: self.labor && self.rng.below(2) == 1,
+        }
+    }
+
+    /// Run `trials` proposals through `eval` (which returns seconds-to-
+    /// target or `None` on timeout); returns trials sorted by runtime —
+    /// exactly the curve of paper Figure 4.
+    pub fn run<F: FnMut(&TuneConfig) -> Option<f64>>(
+        &mut self,
+        trials: usize,
+        mut eval: F,
+    ) -> Vec<TuneTrial> {
+        let mut out = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let config = self.propose();
+            let runtime_s = eval(&config);
+            out.push(TuneTrial { config, runtime_s });
+        }
+        out.sort_by(|a, b| {
+            let ka = a.runtime_s.unwrap_or(f64::INFINITY);
+            let kb = b.runtime_s.unwrap_or(f64::INFINITY);
+            ka.partial_cmp(&kb).unwrap()
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec;
+    use crate::sampler::IterSpec;
+
+    fn tiny() -> Dataset {
+        Dataset::generate(spec("tiny").unwrap(), 0.5)
+    }
+
+    #[test]
+    fn batch_size_solver_is_monotone_and_meets_budget() {
+        let ds = tiny();
+        let kind = SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false };
+        let bs = solve_batch_size(&ds, &kind, &[5, 5], 600, 3);
+        assert!(bs >= 1);
+        let got = mean_deepest_vertices(&ds, &kind, &[5, 5], bs, 5);
+        assert!(got <= 660.0, "bs {bs} gives E|V|={got} > budget 600 (+10%)");
+    }
+
+    #[test]
+    fn labor_budget_exceeds_ns_at_same_cap() {
+        // LABOR samples fewer vertices per seed => bigger batch under the
+        // same budget (the Table 3 effect)
+        let ds = tiny();
+        let ns = solve_batch_size(&ds, &SamplerKind::Neighbor, &[10, 10], 800, 3);
+        let labor = solve_batch_size(
+            &ds,
+            &SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[10, 10],
+            800,
+            3,
+        );
+        assert!(labor >= ns, "labor bs {labor} < ns bs {ns}");
+    }
+
+    #[test]
+    fn ladies_budget_matching_shapes() {
+        let ds = tiny();
+        let b = ladies_budgets_matching(
+            &ds,
+            &SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false },
+            &[5, 5, 5],
+            64,
+            3,
+        );
+        assert_eq!(b.len(), 3);
+        assert!(b.iter().all(|&x| x >= 1));
+        // deeper layers sample at least as many new vertices
+        assert!(b[2] >= b[0]);
+    }
+
+    #[test]
+    fn tuner_proposals_in_bounds_and_sorted_results() {
+        let mut t = RandomSearchTuner::new(5, true);
+        let trials = t.run(20, |cfg| {
+            assert!(cfg.lr >= 1e-4 && cfg.lr <= 1e-1);
+            assert!(cfg.batch_size >= 256 && cfg.batch_size <= 8192);
+            assert!(cfg.fanouts.iter().all(|&k| (5..=25).contains(&k)));
+            assert!(cfg.labor_iterations.unwrap() <= 3);
+            // synthetic eval: smaller lr distance to 0.01 = faster
+            let d = (cfg.lr.ln() - 0.01f64.ln()).abs();
+            if d < 1.5 {
+                Some(d)
+            } else {
+                None
+            }
+        });
+        assert_eq!(trials.len(), 20);
+        let times: Vec<f64> = trials.iter().filter_map(|t| t.runtime_s).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        // NS mode leaves labor knobs off
+        let mut t2 = RandomSearchTuner::new(6, false);
+        assert!(t2.propose().labor_iterations.is_none());
+    }
+}

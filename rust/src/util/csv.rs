@@ -1,0 +1,59 @@
+//! Tiny CSV writer for experiment series (Figures 1–4 data files).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Format helper: shortens f64 to 6 significant digits for CSV output.
+pub fn f(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("labor_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[f(1.0), f(2.5)]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,2.500000\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,40 @@
+//! Small shared utilities: JSON emit/parse (stdlib-only), timing helpers,
+//! CSV writers, and a micro property-testing harness used across the test
+//! suite (the crates.io `proptest` crate is unavailable offline).
+
+pub mod alias;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod timer;
+
+/// Binary search for the largest `x` in `[lo, hi]` such that `f(x)` is true
+/// (monotone predicate; `f(lo)` must hold). Used e.g. to solve batch sizes
+/// for vertex-budget experiments (Table 3).
+pub fn binary_search_max<F: FnMut(u64) -> bool>(lo: u64, hi: u64, mut f: F) -> u64 {
+    debug_assert!(f(lo));
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if f(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_search_max_finds_threshold() {
+        for t in 1..=50u64 {
+            assert_eq!(binary_search_max(1, 50, |x| x <= t), t);
+        }
+        assert_eq!(binary_search_max(1, 50, |_| true), 50);
+    }
+}

@@ -1,0 +1,53 @@
+//! A micro property-testing harness (the `proptest` crate is unavailable in
+//! the offline build). `for_cases` runs a property over `n` seeded random
+//! cases and reports the failing seed, so failures are reproducible.
+
+use crate::rng::StreamRng;
+
+/// Run `prop` over `n` random cases derived from `seed`. On panic, the
+/// failing case seed is printed so the case can be replayed in isolation.
+pub fn for_cases<F: Fn(&mut StreamRng)>(seed: u64, n: usize, prop: F) {
+    for i in 0..n {
+        let case_seed = seed.wrapping_mul(1000).wrapping_add(i as u64);
+        let mut rng = StreamRng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {i} (replay seed: {case_seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector of f64 in (lo, hi].
+pub fn vec_in(rng: &mut StreamRng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| lo + (hi - lo) * (1.0 - rng.next_f64())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_cases_runs_all() {
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        for_cases(1, 25, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn for_cases_propagates_failure() {
+        for_cases(2, 10, |rng| {
+            assert!(rng.next_f64() < 0.5, "will fail on some case");
+        });
+    }
+
+    #[test]
+    fn vec_in_bounds() {
+        let mut rng = StreamRng::new(3);
+        let v = vec_in(&mut rng, 1000, 0.1, 2.0);
+        assert!(v.iter().all(|&x| x > 0.1 - 1e-12 && x <= 2.0));
+    }
+}

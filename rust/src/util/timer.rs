@@ -1,0 +1,76 @@
+//! Timing helpers for the benchmark harness.
+
+use std::time::{Duration, Instant};
+
+/// Measure wall-clock time of `f` over `iters` iterations after `warmup`
+/// warmup iterations; returns (mean, p50, p95) per-iteration durations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    BenchResult::from_samples(samples)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        samples.sort_unstable();
+        Self { samples }
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((self.samples.len() - 1) as f64 * p).round() as usize;
+        self.samples[idx]
+    }
+
+    /// iterations per second at the mean
+    pub fn throughput(&self) -> f64 {
+        let m = self.mean().as_secs_f64();
+        if m > 0.0 {
+            1.0 / m
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn report(&self, name: &str) {
+        println!(
+            "{name:40} mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  ({:.1}/s)",
+            self.mean(),
+            self.percentile(0.5),
+            self.percentile(0.95),
+            self.throughput()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench(1, 10, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(r.mean() >= Duration::from_micros(100));
+        assert!(r.percentile(0.5) <= r.percentile(0.95));
+        assert_eq!(r.samples.len(), 10);
+    }
+}

@@ -1,0 +1,67 @@
+//! End-to-end pipeline test: streaming sampling workers + compiled model
+//! training, verifying the full L3 -> L2/L1 composition under concurrency.
+
+use labor_gnn::coordinator::feature_store::{FeatureStore, TierModel};
+use labor_gnn::coordinator::pipeline::{PipelineConfig, SamplingPipeline};
+use labor_gnn::data::Dataset;
+use labor_gnn::runtime::{Engine, Manifest};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::train::Trainer;
+use std::sync::Arc;
+
+#[test]
+fn pipeline_feeds_trainer_end_to_end() {
+    let Ok(man) = Manifest::load("artifacts") else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load_model(&man, "gcn_tiny").unwrap();
+    let ds = Arc::new(Dataset::load_or_generate("tiny", 1.0).unwrap());
+    let bs = model.cfg.batch_size;
+    let sampler = Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[8, 8, 8],
+    ));
+    let mut trainer = Trainer::new(model, 1).unwrap();
+    let mut pipeline = SamplingPipeline::spawn(
+        Arc::new(ds.graph.clone()),
+        sampler,
+        Arc::new(ds.splits.train.clone()),
+        PipelineConfig { num_workers: 3, queue_depth: 2, batch_size: bs, num_batches: 12, seed: 4 },
+    );
+    let mut losses = Vec::new();
+    while let Some(b) = pipeline.next() {
+        let rec = trainer.step(&ds, &b.mfg).unwrap();
+        losses.push(rec.loss);
+    }
+    pipeline.join();
+    assert_eq!(losses.len(), 12);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn feature_store_traffic_tracks_sampler_efficiency() {
+    // LABOR-* fetches fewer feature rows than NS through the pipeline
+    let ds = Arc::new(Dataset::load_or_generate("tiny", 1.0).unwrap());
+    let run = |kind: SamplerKind| -> u64 {
+        let sampler = Arc::new(MultiLayerSampler::new(kind, &[10, 10, 10]));
+        let mut p = SamplingPipeline::spawn(
+            Arc::new(ds.graph.clone()),
+            sampler,
+            Arc::new(ds.splits.train.clone()),
+            PipelineConfig { num_workers: 2, queue_depth: 4, batch_size: 512, num_batches: 10, seed: 5 },
+        );
+        let mut store = FeatureStore::new(&ds.features, ds.spec.num_features, TierModel::pcie());
+        let mut rows = Vec::new();
+        while let Some(b) = p.next() {
+            store.gather(b.mfg.feature_vertices(), &mut rows);
+        }
+        p.join();
+        store.bytes_fetched
+    };
+    let ns = run(SamplerKind::Neighbor);
+    let labor = run(SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false });
+    assert!(labor < ns, "labor bytes {labor} !< ns bytes {ns}");
+}

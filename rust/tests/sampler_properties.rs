@@ -1,0 +1,193 @@
+//! Cross-cutting sampler properties, run against randomized graphs: these
+//! are the invariants that make the Table/Figure experiments trustworthy.
+
+use labor_gnn::graph::gen::{dc_sbm, rmat, DcSbmConfig, RmatConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+
+fn random_graph(seed: u64) -> CscGraph {
+    let mut rng = StreamRng::new(seed);
+    if rng.below(2) == 0 {
+        dc_sbm(&DcSbmConfig {
+            num_vertices: 300 + rng.below(700) as usize,
+            num_arcs: 5_000 + rng.below(20_000),
+            num_communities: 2 + rng.below(6) as usize,
+            homophily: 0.4 + 0.5 * rng.next_f64(),
+            degree_exponent: rng.next_f64(),
+            seed,
+        })
+        .graph
+    } else {
+        rmat(&RmatConfig {
+            scale: 9 + rng.below(2) as u32,
+            num_arcs: 4_000 + rng.below(20_000),
+            seed,
+            ..Default::default()
+        })
+    }
+}
+
+fn all_kinds() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: true },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        SamplerKind::Ladies { budgets: vec![200, 400, 800] },
+        SamplerKind::Pladies { budgets: vec![200, 400, 800] },
+    ]
+}
+
+/// Every sampler, on every random graph: the MFG is structurally valid at
+/// every layer, and consecutive layers chain (inputs of layer l are the
+/// seeds of layer l+1).
+#[test]
+fn mfg_layers_are_valid_and_chained_for_all_samplers() {
+    for case in 0..6u64 {
+        let g = random_graph(0xBEEF ^ case);
+        let nv = g.num_vertices() as u32;
+        let seeds: Vec<u32> = (0..100.min(nv)).map(|i| i * (nv / 100.min(nv)).max(1) % nv).collect();
+        let mut seeds = seeds;
+        seeds.sort_unstable();
+        seeds.dedup();
+        for kind in all_kinds() {
+            let label = kind.label();
+            let s = MultiLayerSampler::new(kind, &[7, 7, 7]);
+            let mfg = s.sample(&g, &seeds, case);
+            assert_eq!(mfg.layers.len(), 3, "{label}");
+            assert_eq!(mfg.layers[0].seeds, seeds, "{label}");
+            for (l, layer) in mfg.layers.iter().enumerate() {
+                layer.validate(&g).unwrap_or_else(|e| panic!("{label} layer {l} case {case}: {e}"));
+            }
+            for l in 0..2 {
+                assert_eq!(
+                    mfg.layers[l].inputs,
+                    mfg.layers[l + 1].seeds,
+                    "{label}: layer {l} inputs != layer {} seeds",
+                    l + 1
+                );
+            }
+            // vertex counts are monotone (inputs ⊇ seeds per layer)
+            let v = mfg.vertex_counts();
+            assert!(v[0] >= seeds.len() && v[1] >= v[0].min(v[1]), "{label}: {v:?}");
+        }
+    }
+}
+
+/// Determinism: identical (kind, seeds, batch_seed) inputs produce
+/// identical MFGs, for every sampler kind.
+#[test]
+fn sampling_is_deterministic_for_all_kinds() {
+    let g = random_graph(77);
+    let seeds: Vec<u32> = (0..80).collect();
+    for kind in all_kinds() {
+        let label = kind.label();
+        let a = MultiLayerSampler::new(kind.clone(), &[5, 5]).sample(&g, &seeds, 9);
+        let b = MultiLayerSampler::new(kind, &[5, 5]).sample(&g, &seeds, 9);
+        for l in 0..2 {
+            assert_eq!(a.layers[l].edge_src, b.layers[l].edge_src, "{label} layer {l}");
+            assert_eq!(a.layers[l].edge_weight, b.layers[l].edge_weight, "{label} layer {l}");
+        }
+    }
+}
+
+/// The headline vertex-efficiency ordering must hold on a dense graph:
+/// E[|V^3|]: LABOR-* <= LABOR-1 <= LABOR-0 <= NS (with tolerance).
+#[test]
+fn vertex_efficiency_ordering_on_dense_graph() {
+    let g = dc_sbm(&DcSbmConfig {
+        num_vertices: 3000,
+        num_arcs: 200_000, // avg degree ~67 >> fanout
+        num_communities: 6,
+        homophily: 0.8,
+        degree_exponent: 0.5,
+        seed: 5,
+    })
+    .graph;
+    let seeds: Vec<u32> = (0..400).collect();
+    let v3 = |kind: SamplerKind| -> f64 {
+        let s = MultiLayerSampler::new(kind, &[10, 10, 10]);
+        let mut total = 0usize;
+        for b in 0..5 {
+            total += *s.sample(&g, &seeds, b).vertex_counts().last().unwrap();
+        }
+        total as f64 / 5.0
+    };
+    let star = v3(SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false });
+    let one = v3(SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false });
+    let zero = v3(SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false });
+    let ns = v3(SamplerKind::Neighbor);
+    assert!(star <= one * 1.02, "star {star} vs one {one}");
+    assert!(one <= zero * 1.02, "one {one} vs zero {zero}");
+    assert!(zero < ns * 0.95, "zero {zero} vs ns {ns}");
+}
+
+/// Layer dependency (A.8) must increase the overlap of sampled vertices
+/// between consecutive layers.
+#[test]
+fn layer_dependency_increases_interlayer_overlap() {
+    let g = random_graph(0xDE9);
+    let seeds: Vec<u32> = (0..150.min(g.num_vertices() as u32)).collect();
+    let overlap = |dep: bool| -> f64 {
+        let s = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: dep },
+            &[5, 5],
+        );
+        let mut frac = 0.0;
+        for b in 0..10u64 {
+            let mfg = s.sample(&g, &seeds, b);
+            let a: std::collections::HashSet<u32> =
+                mfg.layers[0].inputs.iter().copied().collect();
+            let hits = mfg.layers[1]
+                .inputs
+                .iter()
+                .filter(|v| a.contains(v))
+                .count();
+            frac += hits as f64 / mfg.layers[1].inputs.len() as f64;
+        }
+        frac / 10.0
+    };
+    let dep = overlap(true);
+    let indep = overlap(false);
+    assert!(dep > indep, "dependent overlap {dep} <= independent {indep}");
+}
+
+/// Fanout 1..=max smoke: no panics, sane degrees, for degenerate fanouts.
+#[test]
+fn degenerate_fanouts_are_safe() {
+    let g = random_graph(0xFA);
+    let seeds: Vec<u32> = (0..40).collect();
+    for k in [1usize, 2, 1000] {
+        for kind in [
+            SamplerKind::Neighbor,
+            SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        ] {
+            let s = MultiLayerSampler::new(kind.clone(), &[k]);
+            let mfg = s.sample(&g, &seeds, 3);
+            mfg.layers[0].validate(&g).unwrap();
+            if k >= 1000 {
+                // fanout >= degree: exact neighborhood for every seed
+                for (si, d) in mfg.layers[0].sampled_degrees().iter().enumerate() {
+                    assert_eq!(*d, g.in_degree(seeds[si]), "{:?}", kind.label());
+                }
+            }
+        }
+    }
+}
+
+/// Empty-ish seed sets and isolated vertices must not break any sampler.
+#[test]
+fn isolated_seeds_are_handled() {
+    use labor_gnn::graph::builder::CscBuilder;
+    let mut b = CscBuilder::new(10);
+    b.edge(0, 1); // only vertex 1 has an in-edge
+    let g = b.build().unwrap();
+    for kind in all_kinds() {
+        let s = MultiLayerSampler::new(kind.clone(), &[4, 4]);
+        let mfg = s.sample(&g, &[1, 5, 9], 0);
+        mfg.layers[0].validate(&g).unwrap();
+        assert!(mfg.layers[0].num_edges() <= 1, "{}", kind.label());
+    }
+}
