@@ -1,0 +1,21 @@
+# Entry points for the LABOR reproduction. See README.md.
+
+.PHONY: artifacts build test ci clean
+
+# AOT-lower the JAX/Pallas model (L2+L1) to HLO text + manifest.json for
+# the Rust runtime. Needs a Python environment with JAX installed.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+ci:
+	./ci.sh
+
+clean:
+	cargo clean
+	rm -rf artifacts results

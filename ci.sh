@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate for the labor-gnn workspace. Run from the repository root.
+#
+#   ./ci.sh          # full gate: format, lints, build, tests, docs
+#   ./ci.sh fast     # same gate minus the release build
+set -euo pipefail
+cd "$(dirname "$0")"
+
+MODE="${1:-full}"
+
+echo "== cargo fmt --check"
+cargo fmt --all --check
+
+echo "== cargo clippy (workspace, all targets, -D warnings)"
+cargo clippy --workspace --all-targets -- -D warnings
+
+if [ "$MODE" != "fast" ]; then
+  echo "== cargo build --release (tier-1, step 1/2)"
+  cargo build --release
+fi
+
+echo "== cargo test -q (tier-1, step 2/2)"
+cargo test -q
+
+echo "== cargo doc --no-deps (rustdoc must be warning-free)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace --quiet
+
+echo "CI gate passed."

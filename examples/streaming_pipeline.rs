@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         let mut rows = Vec::new();
         let mut v3 = 0usize;
         let t0 = std::time::Instant::now();
-        while let Some(b) = pipeline.next() {
+        for b in &mut pipeline {
             // the consumer fetches features for the deepest layer inputs —
             // this is the traffic LABOR minimizes
             store.gather(b.mfg.feature_vertices(), &mut rows);
@@ -69,6 +69,8 @@ fn main() -> anyhow::Result<()> {
             v3 as f64 / batches as f64
         );
     }
-    println!("\nFewer sampled vertices => less feature traffic => higher pipeline throughput on slow tiers.");
+    println!(
+        "\nFewer sampled vertices => less feature traffic => higher pipeline throughput on slow tiers."
+    );
     Ok(())
 }

@@ -34,7 +34,10 @@ fn main() -> anyhow::Result<()> {
     let eval_sampler = MultiLayerSampler::new(sampler.kind.clone(), &[10, 10, 10]);
     let mut trainer = Trainer::new(model, 42)?;
 
-    println!("training gcn_{dataset} with {} for {steps} steps (batch {batch_size})", sampler.name());
+    println!(
+        "training gcn_{dataset} with {} for {steps} steps (batch {batch_size})",
+        sampler.name()
+    );
 
     // streaming pipeline: 4 sampler workers, depth-4 backpressure queue
     let mut pipeline = SamplingPipeline::spawn(
@@ -51,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    while let Some(batch) = pipeline.next() {
+    for batch in &mut pipeline {
         let rec = trainer.step(&ds, &batch.mfg)?;
         if rec.step % 20 == 0 || rec.step == 1 || rec.step == steps {
             let val = &ds.splits.val[..2048.min(ds.splits.val.len())];

@@ -33,7 +33,7 @@ fn main() {
             },
         );
         let mut n = 0;
-        while let Some(b) = p.next() {
+        for b in &mut p {
             std::hint::black_box(b.mfg.vertex_counts());
             n += 1;
         }

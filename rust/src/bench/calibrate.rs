@@ -6,7 +6,13 @@ use crate::data::Dataset;
 use crate::sampler::{MultiLayerSampler, SamplerKind};
 use anyhow::Result;
 
-pub fn run(dataset: &str, scale: f64, batch_size: usize, fanout: usize, repeats: usize) -> Result<()> {
+pub fn run(
+    dataset: &str,
+    scale: f64,
+    batch_size: usize,
+    fanout: usize,
+    repeats: usize,
+) -> Result<()> {
     let ds = Dataset::load_or_generate(dataset, scale)?;
     let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[fanout; 3]);
     let mut maxima = vec![0usize; 3];
@@ -23,7 +29,12 @@ pub fn run(dataset: &str, scale: f64, batch_size: usize, fanout: usize, repeats:
     let nv = ds.graph.num_vertices();
     let caps: Vec<usize> = maxima
         .iter()
-        .map(|&m| (((m as f64) * 1.15) as usize).min(nv).max(batch_size + 1))
+        .map(|&m| {
+            // p99-ish maximum plus margin, clipped to |V|; the lower bound
+            // wins over the clip so the artifact always fits the seed rows
+            let padded = (((m as f64) * 1.15) as usize).min(nv);
+            padded.max(batch_size + 1)
+        })
         .collect();
     println!(
         "{dataset}: NS max per-layer vertices over {repeats} batches = {maxima:?} (|V|={nv})"

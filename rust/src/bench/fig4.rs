@@ -87,7 +87,7 @@ pub fn run(o: &Fig4Opts) -> Result<()> {
             trial(&engine, &man, &ds, o, cfg).unwrap_or(None)
         });
         for (rank, t) in trials.iter().enumerate() {
-            let rt = t.runtime_s.map(|x| format!("{x:.2}")).unwrap_or("timeout".into());
+            let rt = t.runtime_s.map(|x| format!("{x:.2}")).unwrap_or_else(|| "timeout".into());
             println!(
                 "  #{rank:<3} {rt:>9}s  lr={:<9.5} bs={:<5} fanouts={:?} i={:?} dep={}",
                 t.config.lr,

@@ -158,7 +158,11 @@ pub fn fig1(o: &RunOpts, repeats_for_budgets: usize, only: Option<&str>) -> Resu
         );
         out.push(s);
     }
-    println!("(wrote {}/fig1_{}_*.csv — x-axis cum_vertices/cum_edges = Fig 1, x-axis step = Fig 3)", dir.display(), o.dataset);
+    println!(
+        "(wrote {}/fig1_{}_*.csv — x-axis cum_vertices/cum_edges = Fig 1, x-axis step = Fig 3)",
+        dir.display(),
+        o.dataset
+    );
     Ok(out)
 }
 

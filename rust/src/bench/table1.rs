@@ -10,7 +10,20 @@ pub fn run(scale: f64, datasets: &[String]) -> Result<()> {
     let dir = super::results_dir();
     let mut csv = CsvWriter::create(
         dir.join("table1.csv"),
-        &["dataset", "V", "E", "avg_deg", "feats", "budget_v3", "train_pct", "val_pct", "test_pct", "max_deg", "p99_deg", "top1pct_edge_share"],
+        &[
+            "dataset",
+            "V",
+            "E",
+            "avg_deg",
+            "feats",
+            "budget_v3",
+            "train_pct",
+            "val_pct",
+            "test_pct",
+            "max_deg",
+            "p99_deg",
+            "top1pct_edge_share",
+        ],
     )?;
     println!(
         "{:<14} {:>9} {:>12} {:>9} {:>7} {:>10} {:>17}",

@@ -9,7 +9,12 @@ use anyhow::Result;
 
 /// Table 3: solve the batch size so each method's E[|V^3|] matches the
 /// dataset's Table 1 budget.
-pub fn table3(dataset: &str, scale: f64, fanout: usize, repeats: usize) -> Result<Vec<(String, usize)>> {
+pub fn table3(
+    dataset: &str,
+    scale: f64,
+    fanout: usize,
+    repeats: usize,
+) -> Result<Vec<(String, usize)>> {
     let ds = Dataset::load_or_generate(dataset, scale)?;
     let budget = ds.budget_v3();
     let fanouts = vec![fanout; 3];

@@ -41,7 +41,8 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Handle to a running pipeline; iterate with [`SamplingPipeline::next`].
+/// Handle to a running pipeline; consume it through its [`Iterator`]
+/// implementation (`while let Some(batch) = pipeline.next() { .. }`).
 pub struct SamplingPipeline {
     rx: mpsc::Receiver<SampledBatch>,
     reorder: BTreeMap<u64, SampledBatch>,
@@ -97,9 +98,21 @@ impl SamplingPipeline {
         Self { rx, reorder: BTreeMap::new(), next_id: 0, num_batches: cfg.num_batches, workers }
     }
 
+    /// Join all workers (for clean shutdown accounting in tests).
+    pub fn join(self) {
+        drop(self.rx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Iterator for SamplingPipeline {
+    type Item = SampledBatch;
+
     /// Next batch in order; `None` when the configured batch count is
     /// exhausted.
-    pub fn next(&mut self) -> Option<SampledBatch> {
+    fn next(&mut self) -> Option<SampledBatch> {
         if self.next_id >= self.num_batches {
             return None;
         }
@@ -114,14 +127,6 @@ impl SamplingPipeline {
                 }
                 Err(_) => return None, // workers gone and buffer exhausted
             }
-        }
-    }
-
-    /// Join all workers (for clean shutdown accounting in tests).
-    pub fn join(self) {
-        drop(self.rx);
-        for w in self.workers {
-            let _ = w.join();
         }
     }
 }
@@ -156,7 +161,7 @@ mod tests {
     fn delivers_exactly_n_batches_in_order() {
         let mut p = setup(23, 4, 4);
         let mut ids = Vec::new();
-        while let Some(b) = p.next() {
+        for b in &mut p {
             ids.push(b.batch_id);
             assert_eq!(b.seeds.len(), 64);
             assert_eq!(b.mfg.layers.len(), 2);
@@ -171,7 +176,7 @@ mod tests {
         let collect = |workers: usize| -> Vec<Vec<usize>> {
             let mut p = setup(12, workers, 3);
             let mut out = Vec::new();
-            while let Some(b) = p.next() {
+            for b in &mut p {
                 out.push(b.mfg.vertex_counts());
             }
             p.join();
@@ -186,13 +191,13 @@ mod tests {
         // batches: workers block. We observe this indirectly: all batches
         // still arrive exactly once, in order, with depth 1.
         let mut p = setup(10, 6, 1);
-        let mut got = 0;
-        while let Some(b) = p.next() {
+        let mut delivered = 0u64;
+        for (i, b) in (&mut p).enumerate() {
             std::thread::sleep(std::time::Duration::from_millis(2));
-            assert_eq!(b.batch_id, got);
-            got += 1;
+            assert_eq!(b.batch_id, i as u64);
+            delivered += 1;
         }
-        assert_eq!(got, 10);
+        assert_eq!(delivered, 10);
         p.join();
     }
 

@@ -14,7 +14,7 @@ use crate::graph::gen::{dc_sbm, DcSbmConfig};
 use crate::graph::{io, CscGraph};
 use crate::rng::StreamRng;
 use std::io::{Read, Write};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Static description of a synthetic dataset (pre-scaling).
 #[derive(Clone, Debug)]
@@ -298,7 +298,7 @@ impl Dataset {
         Ok(ds)
     }
 
-    fn save(&self, path: &PathBuf) -> std::io::Result<()> {
+    fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -320,7 +320,7 @@ impl Dataset {
         w.flush()
     }
 
-    fn load(spec: &DatasetSpec, scale: f64, path: &PathBuf) -> std::io::Result<Dataset> {
+    fn load(spec: &DatasetSpec, scale: f64, path: &Path) -> std::io::Result<Dataset> {
         let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
         let graph = io::read_graph(&mut r)?;
         let features = io::read_f32_slice(&mut r)?;

@@ -5,6 +5,15 @@ use super::csc::CscGraph;
 /// Builds a [`CscGraph`] from an edge list. Duplicate edges are merged
 /// (weights summed when present); self-loops are kept (callers that don't
 /// want them filter first).
+///
+/// ```
+/// use labor_gnn::graph::builder::CscBuilder;
+///
+/// let g = CscBuilder::new(3).edges(&[(0, 1), (2, 1), (0, 1)]).build().unwrap();
+/// assert_eq!(g.num_edges(), 2); // duplicate (0, 1) merged
+/// assert_eq!(g.in_neighbors(1), &[0, 2]);
+/// assert_eq!(g.in_degree(0), 0);
+/// ```
 pub struct CscBuilder {
     num_vertices: usize,
     /// (dst, src, weight)

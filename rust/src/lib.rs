@@ -19,6 +19,19 @@
 //! artifacts through PJRT (the `xla` crate) and [`train`] drives training
 //! end-to-end from Rust.
 //!
+//! Module tour: [`graph`] (CSC storage + generators) and [`data`]
+//! (Table-1-calibrated datasets) feed [`sampler`] (LABOR, PLADIES, NS,
+//! LADIES over one [`LayerSampler`](sampler::LayerSampler) interface);
+//! [`coordinator`] streams sampled batches through a bounded parallel
+//! pipeline; [`runtime`] + [`train`] execute the compiled model; [`bench`]
+//! and [`tune`] regenerate the paper's tables and figures (see
+//! `docs/BENCHMARKS.md`); [`rng`] and [`util`] are the substrate.
+//!
+//! Offline builds: the `anyhow` and `xla` dependencies resolve to vendored
+//! stand-ins under `vendor/` — literals are fully functional, HLO
+//! *execution* needs the real `xla` bindings plus `artifacts/` (paths that
+//! need them skip loudly when absent). See README.md §Dependencies.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

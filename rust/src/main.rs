@@ -95,7 +95,9 @@ fn run_opts(a: &Args, dataset: &str) -> Result<bench::figs::RunOpts> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
-        eprintln!("usage: repro <table1|table2|table3|table4|table5|fig1|fig2|fig3|fig4|calibrate-caps|train> [--flags]");
+        eprintln!(
+            "usage: repro <table1|table2|table3|table4|table5|fig1|fig2|fig3|fig4|calibrate-caps|train> [--flags]"
+        );
         eprintln!("see `repro help` / README.md");
         std::process::exit(2);
     };

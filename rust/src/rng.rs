@@ -44,6 +44,19 @@ pub fn u64_to_unit_f32(h: u64) -> f32 {
 /// `uniform(id)` is a pure function of `(seed, id)`; two `HashRng`s with the
 /// same seed agree everywhere. This is what lets LABOR share `r_t` across
 /// seed vertices (and across layers, when layer dependency is on).
+///
+/// ```
+/// use labor_gnn::rng::HashRng;
+///
+/// let a = HashRng::new(42);
+/// let b = HashRng::new(42);
+/// assert_eq!(a.uniform(7).to_bits(), b.uniform(7).to_bits()); // keyed, not stateful
+/// assert!((0.0..1.0).contains(&a.uniform(7)));
+/// assert_ne!(
+///     a.derive(0).uniform(7).to_bits(),
+///     a.derive(1).uniform(7).to_bits(), // independent streams
+/// );
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct HashRng {
     seed: u64,

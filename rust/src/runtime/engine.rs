@@ -25,7 +25,10 @@ impl Engine {
     }
 
     /// Load + compile an HLO-text artifact (cached per path).
-    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+    pub fn load_hlo_text(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
         let key = path.to_string_lossy().to_string();
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());

@@ -5,6 +5,30 @@
 //! model once to HLO **text** (the id-safe interchange format for
 //! xla_extension 0.5.1 — see DESIGN.md), and this module compiles it on the
 //! PJRT CPU client and executes it with batches packed by [`packer`].
+//!
+//! ## Module map
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` into [`Manifest`] /
+//!   [`ArtifactConfig`]: static shapes (batch size, `K_MAX`, per-layer
+//!   vertex caps) and the flat parameter calling convention.
+//! * [`engine`] — [`Engine`] wraps one PJRT CPU client plus a per-path
+//!   compile cache; [`CompiledModel`] is a loaded `(train_step, forward)`
+//!   executable pair.
+//! * [`packer`] — [`Packer`] turns a sampled
+//!   [`Mfg`](crate::sampler::Mfg) into the padded
+//!   `feats, (idx, w)×L, labels, mask` literal layout the artifacts expect.
+//! * [`tensor`] — shape-checked `xla::Literal` constructors
+//!   (`f32_tensor`, `i32_tensor`, `f32_scalar`) and Glorot initialization.
+//!
+//! ## Offline builds
+//!
+//! This workspace vendors a stand-in `xla` crate (`vendor/xla`): literals
+//! and packing are fully functional, while `execute` returns a descriptive
+//! error. Every test and binary that needs execution first checks
+//! `Manifest::load("artifacts")` and skips (loudly) when artifacts are
+//! absent, so `cargo test` passes in a sampler-only checkout. With the real
+//! `xla` bindings in Cargo.toml and `make artifacts` run, the same code
+//! trains end-to-end.
 
 pub mod engine;
 pub mod manifest;

@@ -38,6 +38,17 @@ pub struct LaborSampler {
 /// saturated (`c·π ≥ 1`), the remaining terms contribute `(1/c)·Σ 1/π_j`,
 /// so `c(m) = Σ_{j≥m} (1/π_j) / (d²/k − m)`; the correct `m` is the unique
 /// one consistent with its own saturation boundary.
+///
+/// ```
+/// use labor_gnn::sampler::labor::solve_cs_sorted;
+///
+/// // uniform π over d = 20 neighbors at fanout k = 5: the inclusion
+/// // probability c·π must equal k/d, i.e. LABOR-0 degenerates to
+/// // per-edge Poisson Neighbor Sampling (paper §3.2)
+/// let pi = vec![1.0; 20];
+/// let c = solve_cs_sorted(&pi, 5);
+/// assert!((c - 0.25).abs() < 1e-9);
+/// ```
 pub fn solve_cs_sorted(pi: &[f64], k: usize) -> f64 {
     let d = pi.len();
     debug_assert!(k < d && k > 0);
@@ -383,7 +394,7 @@ mod tests {
     #[test]
     fn uniform_pi_gives_ns_matching_probability() {
         // with uniform π, c·π must equal k/d — LABOR-0 reduces to Poisson NS
-        let pi = vec![1.0; 20];
+        let pi = [1.0; 20];
         let c = solve_cs_sorted(&pi, 5);
         assert!((c - 5.0 / 20.0).abs() < 1e-9, "c={c}");
     }

@@ -106,8 +106,7 @@ impl LayerSampler for LadiesSampler {
         let mut chosen: Vec<Option<f64>> = vec![None; cand.candidates.len()];
         if n >= cand.candidates.len() {
             // budget covers everything: exact neighborhood
-            for (ti, c) in chosen.iter_mut().enumerate() {
-                let _ = ti;
+            for c in chosen.iter_mut() {
                 *c = Some(1.0);
             }
         } else {

@@ -209,6 +209,25 @@ impl Mfg {
 }
 
 /// Applies a [`LayerSampler`] recursively over `L` layers.
+///
+/// ```
+/// use labor_gnn::graph::builder::CscBuilder;
+/// use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+///
+/// // a tiny diamond graph: 0 -> 2, 1 -> 2, 0 -> 3, 2 -> 3
+/// let g = CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap();
+/// let sampler = MultiLayerSampler::new(
+///     SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+///     &[2, 2],
+/// );
+/// let mfg = sampler.sample(&g, &[2, 3], 0);
+/// assert_eq!(mfg.layers.len(), 2);
+/// // every layer is structurally valid and consecutive layers chain
+/// for layer in &mfg.layers {
+///     layer.validate(&g).unwrap();
+/// }
+/// assert_eq!(mfg.layers[0].inputs, mfg.layers[1].seeds);
+/// ```
 pub struct MultiLayerSampler {
     pub kind: SamplerKind,
     /// fanout per layer, `fanouts[0]` next to the seeds; ignored by
@@ -383,7 +402,7 @@ mod tests {
 
     #[test]
     fn finalize_inputs_seeds_first_and_dedup() {
-        let seeds = vec![10, 20];
+        let seeds = [10, 20];
         let mut src = vec![30u32, 10, 30, 40];
         let inputs = finalize_inputs(50, &seeds, &mut src);
         assert_eq!(inputs, vec![10, 20, 30, 40]);
@@ -392,8 +411,8 @@ mod tests {
 
     #[test]
     fn hajek_weights_sum_to_one_per_seed() {
-        let dst = vec![0u32, 0, 1, 1, 1];
-        let raw = vec![2.0f64, 6.0, 1.0, 1.0, 2.0];
+        let dst = [0u32, 0, 1, 1, 1];
+        let raw = [2.0f64, 6.0, 1.0, 1.0, 2.0];
         let w = hajek_normalize(&dst, &raw, 2);
         assert!((w[0] - 0.25).abs() < 1e-6);
         assert!((w[1] - 0.75).abs() < 1e-6);

@@ -77,7 +77,7 @@ mod tests {
 
     #[test]
     fn scale_hits_target_exactly_uniform() {
-        let w = vec![1.0; 100];
+        let w = [1.0; 100];
         let a = solve_saturated_scale(&w, 25.0);
         assert!((expected_size(&w, a) - 25.0).abs() < 1e-9);
         assert!((a - 0.25).abs() < 1e-12);
@@ -86,7 +86,7 @@ mod tests {
     #[test]
     fn scale_handles_saturation() {
         // one huge weight saturates; the rest share the remaining mass
-        let w = vec![100.0, 1.0, 1.0, 1.0];
+        let w = [100.0, 1.0, 1.0, 1.0];
         let a = solve_saturated_scale(&w, 2.0);
         assert!((expected_size(&w, a) - 2.0).abs() < 1e-9);
         assert!(a * 100.0 >= 1.0);
@@ -95,7 +95,7 @@ mod tests {
 
     #[test]
     fn target_at_or_above_n_means_probability_one() {
-        let w = vec![0.5, 2.0, 1.0];
+        let w = [0.5, 2.0, 1.0];
         assert_eq!(solve_saturated_scale(&w, 3.0), f64::INFINITY);
         assert_eq!(solve_saturated_scale(&w, 5.0), f64::INFINITY);
     }
@@ -119,8 +119,8 @@ mod tests {
 
     #[test]
     fn sequential_pick_selects_k_smallest_keys() {
-        let r = vec![0.9, 0.1, 0.5, 0.7, 0.04];
-        let p = vec![1.0, 1.0, 1.0, 1.0, 0.1]; // keys: .9 .1 .5 .7 .4
+        let r = [0.9, 0.1, 0.5, 0.7, 0.04];
+        let p = [1.0, 1.0, 1.0, 1.0, 0.1]; // keys: .9 .1 .5 .7 .4
         let mut got = sequential_poisson_pick(&r, &p, 2);
         got.sort_unstable();
         assert_eq!(got, vec![1, 4]);
@@ -128,8 +128,8 @@ mod tests {
 
     #[test]
     fn sequential_pick_k_geq_n_returns_all() {
-        let r = vec![0.5, 0.2];
-        let p = vec![1.0, 1.0];
+        let r = [0.5, 0.2];
+        let p = [1.0, 1.0];
         assert_eq!(sequential_poisson_pick(&r, &p, 5), vec![0, 1]);
     }
 

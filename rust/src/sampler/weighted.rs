@@ -237,8 +237,8 @@ mod tests {
     #[test]
     fn uniform_weights_reduce_to_unweighted_solver() {
         // A_ts = 1: Eq. (23) becomes Eq. (14) divided by d²
-        let pi = vec![0.3, 1.2, 0.8, 2.0, 0.5];
-        let a = vec![1.0; 5];
+        let pi = [0.3, 1.2, 0.8, 2.0, 0.5];
+        let a = [1.0; 5];
         let k = 2;
         let v = 1.0 / k as f64 - 1.0 / 5.0;
         let cw = solve_cs_weighted(&pi, &a, v);
@@ -248,8 +248,8 @@ mod tests {
 
     #[test]
     fn v_zero_takes_whole_neighborhood() {
-        let pi = vec![0.5, 0.25];
-        let a = vec![1.0, 2.0];
+        let pi = [0.5, 0.25];
+        let a = [1.0, 2.0];
         let c = solve_cs_weighted(&pi, &a, 0.0);
         assert!((c - 4.0).abs() < 1e-12); // max 1/π
     }
@@ -353,8 +353,8 @@ mod tests {
         // the expected sampled degree drops below k — *without* violating
         // the variance target of Eq. (23) (verified by the solver test)
         let k = 2;
-        let pi = vec![10.0, 0.1, 0.1];
-        let a = pi.clone(); // π^(0) = A
+        let pi = [10.0, 0.1, 0.1];
+        let a = pi; // π^(0) = A
         let v = 1.0 / k as f64 - 1.0 / 3.0;
         let c = solve_cs_weighted(&pi, &a, v);
         let e_deg: f64 = pi.iter().map(|&p| (c * p).min(1.0)).sum();

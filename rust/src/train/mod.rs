@@ -3,6 +3,21 @@
 //! Everything numeric runs inside the AOT-compiled HLO (L2+L1); this module
 //! owns parameter literals, feeds packed batches, and computes F1 scores
 //! from returned logits.
+//!
+//! ## Module map
+//!
+//! * [`state`] — [`TrainState`]: flat parameter + Adam moment literals in
+//!   the artifact's deterministic `params.., m.., v.., t` order;
+//!   `arg_refs()` builds the train_step argument prefix, `absorb()` takes
+//!   the outputs back (functional update — PJRT owns no state).
+//! * [`trainer`] — [`Trainer`]: one `step()` = pack the sampled
+//!   [`Mfg`](crate::sampler::Mfg) → execute the compiled train_step →
+//!   absorb new state, returning a [`TrainRecord`] with the loss and the
+//!   per-layer/cumulative vertex and edge counts that are the x-axes of the
+//!   paper's Figures 1–3. `evaluate()` runs the forward artifact over a
+//!   split and scores micro-F1.
+//! * [`eval`] — micro-F1 for single-label (argmax accuracy) and multilabel
+//!   (0.5-sigmoid threshold) prediction, matching the paper's metric.
 
 pub mod eval;
 pub mod state;

@@ -86,7 +86,7 @@ impl Trainer {
         let mut num = 0.0f64;
         let mut den = 0.0f64;
         for (bi, chunk) in split.chunks(b).enumerate() {
-            let mfg = sampler.sample(&ds.graph, chunk, eval_seed ^ (bi as u64) << 17);
+            let mfg = sampler.sample(&ds.graph, chunk, eval_seed ^ ((bi as u64) << 17));
             let packed = self.packer.pack(ds, &mfg)?;
             let mut args: Vec<&Literal> = self.state.params.iter().collect();
             args.push(&packed.feats);

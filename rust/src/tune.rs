@@ -227,8 +227,8 @@ mod tests {
     fn tuner_proposals_in_bounds_and_sorted_results() {
         let mut t = RandomSearchTuner::new(5, true);
         let trials = t.run(20, |cfg| {
-            assert!(cfg.lr >= 1e-4 && cfg.lr <= 1e-1);
-            assert!(cfg.batch_size >= 256 && cfg.batch_size <= 8192);
+            assert!((1e-4..=1e-1).contains(&cfg.lr));
+            assert!((256..=8192).contains(&cfg.batch_size));
             assert!(cfg.fanouts.iter().all(|&k| (5..=25).contains(&k)));
             assert!(cfg.labor_iterations.unwrap() <= 3);
             // synthetic eval: smaller lr distance to 0.01 = faster

@@ -61,13 +61,6 @@ impl Json {
         }
     }
 
-    /// Serialize to a compact JSON string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -131,6 +124,16 @@ impl Json {
             return Err(format!("trailing garbage at byte {}", p.pos));
         }
         Ok(v)
+    }
+}
+
+/// Compact (no-whitespace) JSON serialization; `to_string()` comes for free
+/// via the blanket `ToString` impl.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

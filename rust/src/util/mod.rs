@@ -1,6 +1,20 @@
 //! Small shared utilities: JSON emit/parse (stdlib-only), timing helpers,
 //! CSV writers, and a micro property-testing harness used across the test
 //! suite (the crates.io `proptest` crate is unavailable offline).
+//!
+//! ## Module map
+//!
+//! * [`alias`] — Walker alias tables for O(1) weighted sampling with
+//!   replacement (graph generators, LADIES).
+//! * [`csv`] — buffered CSV writer with a fixed header, backing the
+//!   `results/` series behind every table and figure.
+//! * [`json`] — a dependency-free JSON value type with emitter and parser;
+//!   used for the AOT artifact manifest and experiment outputs.
+//! * [`prop`] — `for_cases`: seeded random property cases with replayable
+//!   failure seeds (a micro `proptest` substitute).
+//! * [`stats`] — Welford online mean/variance, exact means, quantiles.
+//! * [`timer`] — warmup + repeat wall-clock benchmarking with mean/p50/p95
+//!   reporting, used by the `benches/` targets.
 
 pub mod alias;
 pub mod csv;

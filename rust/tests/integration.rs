@@ -6,7 +6,7 @@
 //! a loud message) when artifacts are missing so that `cargo test` still
 //! passes in a sampler-only checkout.
 
-use labor_gnn::data::{spec, Dataset};
+use labor_gnn::data::Dataset;
 use labor_gnn::runtime::{Engine, Manifest};
 use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
 use labor_gnn::train::Trainer;

@@ -31,7 +31,7 @@ fn pipeline_feeds_trainer_end_to_end() {
         PipelineConfig { num_workers: 3, queue_depth: 2, batch_size: bs, num_batches: 12, seed: 4 },
     );
     let mut losses = Vec::new();
-    while let Some(b) = pipeline.next() {
+    for b in &mut pipeline {
         let rec = trainer.step(&ds, &b.mfg).unwrap();
         losses.push(rec.loss);
     }
@@ -51,11 +51,17 @@ fn feature_store_traffic_tracks_sampler_efficiency() {
             Arc::new(ds.graph.clone()),
             sampler,
             Arc::new(ds.splits.train.clone()),
-            PipelineConfig { num_workers: 2, queue_depth: 4, batch_size: 512, num_batches: 10, seed: 5 },
+            PipelineConfig {
+                num_workers: 2,
+                queue_depth: 4,
+                batch_size: 512,
+                num_batches: 10,
+                seed: 5,
+            },
         );
         let mut store = FeatureStore::new(&ds.features, ds.spec.num_features, TierModel::pcie());
         let mut rows = Vec::new();
-        while let Some(b) = p.next() {
+        for b in &mut p {
             store.gather(b.mfg.feature_vertices(), &mut rows);
         }
         p.join();

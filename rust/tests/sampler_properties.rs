@@ -48,7 +48,8 @@ fn mfg_layers_are_valid_and_chained_for_all_samplers() {
     for case in 0..6u64 {
         let g = random_graph(0xBEEF ^ case);
         let nv = g.num_vertices() as u32;
-        let seeds: Vec<u32> = (0..100.min(nv)).map(|i| i * (nv / 100.min(nv)).max(1) % nv).collect();
+        let seeds: Vec<u32> =
+            (0..100.min(nv)).map(|i| i * (nv / 100.min(nv)).max(1) % nv).collect();
         let mut seeds = seeds;
         seeds.sort_unstable();
         seeds.dedup();

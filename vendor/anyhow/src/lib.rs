@@ -1,0 +1,236 @@
+//! Offline stand-in for the crates.io `anyhow` crate.
+//!
+//! The build environment for this reproduction has no network access, so
+//! this crate re-implements exactly the subset of `anyhow`'s API that
+//! `labor-gnn` uses — [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and the [`Context`] extension trait. The semantics
+//! match the real crate for that subset (context wraps and becomes the
+//! `Display` message; the original error is kept as the source chain, shown
+//! by `Debug`), so swapping the real `anyhow` back in is a Cargo.toml-only
+//! change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with an optional source chain.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement [`std::error::Error`] — that is what allows the blanket
+/// `impl From<E: std::error::Error>` below to coexist with the standard
+/// library's reflexive `impl From<T> for T`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message. The wrapped error
+    /// stays a real `source()` link, so `Debug` prints each chain level
+    /// separately (matching the real `anyhow`'s "Caused by" output shape).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: context.to_string(),
+            source: Some(Box::new(ChainLink { msg: self.msg, source: self.source })),
+        }
+    }
+
+    /// The source chain root, as a plain `std::error::Error` trait object
+    /// (the annotated closure return type drops the `Send + Sync` bounds).
+    fn source_dyn(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| -> &(dyn StdError + 'static) { e })
+    }
+}
+
+/// Internal adapter: a demoted [`Error`] level that participates in a real
+/// `std::error::Error` source chain (so context nesting keeps every level).
+struct ChainLink {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl fmt::Display for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl StdError for ChainLink {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| -> &(dyn StdError + 'static) { e })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source_dyn();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: context.to_string(), source: Some(Box::new(e)) })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: f().to_string(), source: Some(Box::new(e)) })
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures supported).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_becomes_display_and_debug_keeps_chain() {
+        let e: Result<()> = fails_io().context("reading manifest");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn nested_context_keeps_every_level() {
+        let e = fails_io()
+            .context("parsing HLO")
+            .unwrap_err()
+            .context("loading model");
+        assert_eq!(e.to_string(), "loading model");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("parsing HLO"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let v = ok.with_context(unreachable_message).unwrap();
+        assert_eq!(v, 7);
+
+        fn unreachable_message() -> String {
+            panic!("must not be evaluated on the Ok path")
+        }
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("unknown dataset '{name}'");
+        assert_eq!(e.to_string(), "unknown dataset 'x'");
+
+        fn guarded(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            Ok(1)
+        }
+        assert!(guarded(true).is_ok());
+        assert_eq!(guarded(false).unwrap_err().to_string(), "flag was false");
+
+        fn bails() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope");
+    }
+}

@@ -1,0 +1,393 @@
+//! Offline stand-in for the `xla` crate (Rust bindings to xla_extension /
+//! PJRT, as used by the real runtime — see `rust/src/runtime/mod.rs`).
+//!
+//! The build environment has no network access and no xla_extension
+//! shared library, so this crate provides:
+//!
+//! * **Fully functional host-side [`Literal`]s** — shape-carrying typed
+//!   buffers with `create_from_shape` / `copy_raw_from` / `to_vec` /
+//!   `scalar` / tuple accessors. Everything in `runtime::tensor`,
+//!   `runtime::packer` and `train::state` works for real against these.
+//! * **Structural PJRT types** ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`HloModuleProto`], [`XlaComputation`]) whose *execution* entry points
+//!   return a clear [`Error`] instead of running HLO. All integration tests
+//!   and binaries gate execution behind `Manifest::load("artifacts")`, so
+//!   in a checkout without AOT artifacts nothing ever reaches `execute`.
+//!
+//! Swapping the real bindings back in is a Cargo.toml-only change: the
+//! signatures below mirror the real crate for the subset labor-gnn uses.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type for all fallible operations in this crate.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias with this crate's [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA primitive element types (subset used by the runtime).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    /// 32-bit IEEE float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+impl PrimitiveType {
+    /// Size of one element in bytes.
+    pub fn byte_size(self) -> usize {
+        match self {
+            PrimitiveType::F32 | PrimitiveType::S32 => 4,
+        }
+    }
+}
+
+/// Host-side element types, convertible to [`PrimitiveType`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+impl ElementType {
+    /// The on-device primitive type for this element type.
+    pub fn primitive_type(self) -> PrimitiveType {
+        match self {
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::S32 => PrimitiveType::S32,
+        }
+    }
+}
+
+/// Rust native types that map onto an XLA [`PrimitiveType`].
+pub trait NativeType: Copy {
+    /// The corresponding XLA primitive type.
+    const PRIMITIVE_TYPE: PrimitiveType;
+
+    /// Serialize one value into little-endian bytes.
+    fn write_le(self, out: &mut Vec<u8>);
+
+    /// Deserialize one value from little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const PRIMITIVE_TYPE: PrimitiveType = PrimitiveType::F32;
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().expect("4-byte f32"))
+    }
+}
+
+impl NativeType for i32 {
+    const PRIMITIVE_TYPE: PrimitiveType = PrimitiveType::S32;
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes(bytes.try_into().expect("4-byte i32"))
+    }
+}
+
+/// A host literal: a typed, shaped buffer, or a tuple of literals.
+///
+/// This is the one part of the stand-in that is fully functional — the
+/// packer and parameter-state layers build and read literals for real.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    /// A dense array with row-major little-endian storage.
+    Array {
+        /// element type
+        ty: PrimitiveType,
+        /// dimensions (row-major)
+        dims: Vec<usize>,
+        /// raw little-endian bytes, `dims.product() * ty.byte_size()` long
+        data: Vec<u8>,
+    },
+    /// A tuple of literals (the result convention of compiled functions).
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Zero-initialized literal of the given type and shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        Literal::Array { ty, dims: dims.to_vec(), data: vec![0u8; n * ty.byte_size()] }
+    }
+
+    /// Rank-0 literal holding one value.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        let mut data = Vec::with_capacity(T::PRIMITIVE_TYPE.byte_size());
+        x.write_le(&mut data);
+        Literal::Array { ty: T::PRIMITIVE_TYPE, dims: Vec::new(), data }
+    }
+
+    /// Number of elements (1 for scalars; sum over components for tuples).
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { ty, data, .. } => data.len() / ty.byte_size(),
+            Literal::Tuple(xs) => xs.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// The dimensions of an array literal.
+    pub fn dims(&self) -> Result<&[usize]> {
+        match self {
+            Literal::Array { dims, .. } => Ok(dims),
+            Literal::Tuple(_) => Err(Error::new("dims() called on a tuple literal")),
+        }
+    }
+
+    /// Fill the buffer from a host slice; the element type and count must
+    /// match the literal's shape.
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::PRIMITIVE_TYPE {
+                    return Err(Error::new(format!(
+                        "copy_raw_from: element type mismatch ({:?} literal, {:?} source)",
+                        ty,
+                        T::PRIMITIVE_TYPE
+                    )));
+                }
+                if src.len() * ty.byte_size() != data.len() {
+                    return Err(Error::new(format!(
+                        "copy_raw_from: {} elements into a literal of {}",
+                        src.len(),
+                        data.len() / ty.byte_size()
+                    )));
+                }
+                data.clear();
+                for &x in src {
+                    x.write_le(data);
+                }
+                Ok(())
+            }
+            Literal::Tuple(_) => Err(Error::new("copy_raw_from on a tuple literal")),
+        }
+    }
+
+    /// Read the buffer back as a flat host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::PRIMITIVE_TYPE {
+                    return Err(Error::new(format!(
+                        "to_vec: element type mismatch ({:?} literal, {:?} requested)",
+                        ty,
+                        T::PRIMITIVE_TYPE
+                    )));
+                }
+                Ok(data.chunks_exact(ty.byte_size()).map(T::read_le).collect())
+            }
+            Literal::Tuple(_) => Err(Error::new("to_vec on a tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal into its components.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(xs) => Ok(xs),
+            lit @ Literal::Array { .. } => Ok(vec![lit]),
+        }
+    }
+
+    /// Decompose a 1-tuple (or pass an array literal through).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut xs = self.to_tuple()?;
+        if xs.len() != 1 {
+            return Err(Error::new(format!("to_tuple1 on a {}-tuple", xs.len())));
+        }
+        Ok(xs.pop().expect("len checked"))
+    }
+}
+
+/// A parsed HLO module (here: the raw text, kept for diagnostics).
+pub struct HloModuleProto {
+    text: String,
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO **text** artifact from disk. Parsing succeeds whenever
+    /// the file is readable and non-empty; semantic validation happens in
+    /// the real bindings only.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {}: {e}", path.display())))?;
+        if text.trim().is_empty() {
+            return Err(Error::new(format!("HLO text {} is empty", path.display())));
+        }
+        Ok(Self { text, path: path.display().to_string() })
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    source_path: String,
+    source_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { source_path: proto.path.clone(), source_len: proto.text.len() }
+    }
+}
+
+/// A PJRT client. The stand-in reports a distinctive platform name so logs
+/// cannot be mistaken for real PJRT output.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// Create the CPU client (always succeeds in the stand-in).
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { platform: "cpu-stub (vendored xla stand-in; no HLO execution)" })
+    }
+
+    /// Platform name of this client.
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// "Compile" a computation. The stand-in accepts any computation
+    /// structurally; actual codegen is deferred to [`PjRtLoadedExecutable::execute`],
+    /// which reports that execution needs the real bindings.
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            source_path: computation.source_path.clone(),
+            source_len: computation.source_len,
+        })
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    source_path: String,
+    #[allow(dead_code)]
+    source_len: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute the program. The stand-in cannot run HLO; it returns a
+    /// descriptive error so callers fail loudly instead of silently
+    /// producing wrong numbers.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "cannot execute {}: this build uses the vendored xla stand-in; \
+             install the real xla_extension bindings to run compiled artifacts \
+             (see README.md §Runtime)",
+            self.source_path
+        )))
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mut lit = Literal::create_from_shape(ElementType::F32.primitive_type(), &[2, 3]);
+        assert_eq!(lit.element_count(), 6);
+        lit.copy_raw_from(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.dims().unwrap(), &[2, 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_type_checks() {
+        let mut lit = Literal::create_from_shape(ElementType::S32.primitive_type(), &[3]);
+        lit.copy_raw_from(&[7i32, -1, 0]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -1, 0]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.copy_raw_from(&[1.0f32, 2.0, 3.0]).is_err());
+        assert!(lit.copy_raw_from(&[1i32]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuples() {
+        let s = Literal::scalar(0.25f32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.25]);
+
+        let t = Literal::Tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        assert_eq!(t.element_count(), 2);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+
+        let one = Literal::Tuple(vec![Literal::scalar(5.0f32)]);
+        assert_eq!(one.to_tuple1().unwrap().to_vec::<f32>().unwrap(), vec![5.0]);
+        let two = Literal::Tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        assert!(two.to_tuple1().is_err());
+    }
+
+    #[test]
+    fn execution_is_a_loud_error() {
+        let dir = std::env::temp_dir().join(format!("xla_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, "HloModule m\n").unwrap();
+        let proto = HloModuleProto::from_text_file(&path).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let exe = client.compile(&comp).unwrap();
+        let args: Vec<&Literal> = Vec::new();
+        let err = exe.execute::<&Literal>(&args).unwrap_err();
+        assert!(err.to_string().contains("stand-in"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_or_empty_hlo_rejected() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+        let dir = std::env::temp_dir().join(format!("xla_stub_e_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.hlo.txt");
+        std::fs::write(&path, "  \n").unwrap();
+        assert!(HloModuleProto::from_text_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
