@@ -22,6 +22,14 @@ fi
 echo "== cargo test -q (tier-1, step 2/2)"
 cargo test -q
 
+if [ "$MODE" != "fast" ]; then
+  echo "== bench-smoke: build all bench targets, run the pipeline bench tiny"
+  cargo build --release --benches
+  # --smoke: tiny iteration counts; proves the throughput sections and the
+  # allocation probe run end-to-end (see docs/BENCHMARKS.md)
+  cargo bench --bench pipeline -- --smoke
+fi
+
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace --quiet
 

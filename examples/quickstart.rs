@@ -7,7 +7,7 @@
 //! ```
 
 use labor_gnn::data::Dataset;
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 
 fn main() -> anyhow::Result<()> {
     // Table-1-calibrated synthetic stand-in for flickr (|V|≈8.9k, deg≈10)
@@ -23,13 +23,16 @@ fn main() -> anyhow::Result<()> {
     let seeds: Vec<u32> = ds.splits.train[..1000.min(ds.splits.train.len())].to_vec();
     let fanouts = [10, 10, 10];
 
+    // one reusable scratch arena: repeated sampling performs no per-batch
+    // O(|V|) allocation (one-off callers can use `sample_fresh` instead)
+    let mut scratch = SamplerScratch::new();
     for (label, kind) in [
         ("NS      ", SamplerKind::Neighbor),
         ("LABOR-0 ", SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }),
         ("LABOR-* ", SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false }),
     ] {
         let sampler = MultiLayerSampler::new(kind, &fanouts);
-        let mfg = sampler.sample(&ds.graph, &seeds, 0);
+        let mfg = sampler.sample(&ds.graph, &seeds, 0, &mut scratch);
         println!(
             "{label} |V^1..3| = {:?}  |E^0..2| = {:?}",
             mfg.vertex_counts(),

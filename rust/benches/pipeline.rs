@@ -1,17 +1,75 @@
-//! Coordinator pipeline throughput: sampling workers + bounded queue, as a
-//! function of worker count (the L3 §Perf scaling check).
+//! Coordinator pipeline throughput and allocation behavior.
+//!
+//! Three sections:
+//! 1. batches/s as a function of worker count (the L3 §Perf scaling
+//!    check) — each worker holds a long-lived `SamplerScratch`;
+//! 2. single-thread steady-state batches/s, warm scratch vs a fresh
+//!    scratch per call (the arena win in isolation);
+//! 3. an allocation probe: a counting global allocator reports
+//!    allocations and bytes per batch for warm vs fresh scratch, making
+//!    "no per-batch O(|V|) allocation" measurable.
+//!
+//! `cargo bench --bench pipeline` — full run.
+//! `cargo bench --bench pipeline -- --smoke` — tiny iteration counts
+//! (CI gate: proves the bench targets build and run; see ci.sh).
 
 use labor_gnn::coordinator::pipeline::{PipelineConfig, SamplingPipeline};
 use labor_gnn::data::Dataset;
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Counting wrapper around the system allocator: cumulative *allocated*
+/// bytes (frees are not subtracted; `realloc` counts only its growth
+/// delta, so a Vec grown through doubling is not double-counted).
+/// Counters are global, so the probe section runs single-threaded with no
+/// pipeline active. Note the two relaxed atomic RMWs per allocation are
+/// paid by every section of this binary — a uniform, tiny tax on the
+/// throughput numbers.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size.saturating_sub(layout.size()) as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn counters() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let ds = Arc::new(Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset"));
     let graph = Arc::new(ds.graph.clone());
     let ids = Arc::new(ds.splits.train.clone());
-    let batches = 60u64;
+    let batches: u64 = if smoke { 6 } else { 60 };
 
     println!("== pipeline throughput, labor-1, batch 1024, {batches} batches");
     for workers in [1usize, 2, 4, 8] {
@@ -44,4 +102,60 @@ fn main() {
             n as f64 / dt
         );
     }
+
+    // -- warm scratch vs fresh scratch, single thread -----------------
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        &[10, 10, 10],
+    );
+    let seeds: Vec<u32> = ids[..1024.min(ids.len())].to_vec();
+    let reps: u64 = if smoke { 4 } else { 40 };
+
+    println!("\n== steady-state sampling, single thread, labor-1, {reps} batches");
+    let mut scratch = SamplerScratch::for_vertices(graph.num_vertices());
+    // warm up: size the arena to steady state before timing
+    for b in 0..3u64 {
+        std::hint::black_box(sampler.sample(&graph, &seeds, b, &mut scratch));
+    }
+    let t0 = Instant::now();
+    for b in 0..reps {
+        std::hint::black_box(sampler.sample(&graph, &seeds, b, &mut scratch));
+    }
+    let warm = t0.elapsed().as_secs_f64();
+    println!("warm scratch : {:.1} batches/s", reps as f64 / warm);
+    let t0 = Instant::now();
+    for b in 0..reps {
+        std::hint::black_box(sampler.sample_fresh(&graph, &seeds, b));
+    }
+    let fresh = t0.elapsed().as_secs_f64();
+    println!("fresh scratch: {:.1} batches/s ({:.2}x)", reps as f64 / fresh, fresh / warm);
+
+    // -- allocation probe ---------------------------------------------
+    let probe = |label: &str, f: &mut dyn FnMut(u64)| {
+        let n: u64 = if smoke { 3 } else { 10 };
+        let (a0, b0) = counters();
+        for b in 0..n {
+            f(b);
+        }
+        let (a1, b1) = counters();
+        println!(
+            "{label}: {:.0} allocations / {:.1} KiB allocated per batch",
+            (a1 - a0) as f64 / n as f64,
+            (b1 - b0) as f64 / n as f64 / 1024.0
+        );
+    };
+    println!(
+        "\n== allocation probe, labor-1 3-layer, batch 1024, |V|={}",
+        graph.num_vertices()
+    );
+    probe("warm scratch ", &mut |b| {
+        std::hint::black_box(sampler.sample(&graph, &seeds, b, &mut scratch));
+    });
+    probe("fresh scratch", &mut |b| {
+        std::hint::black_box(sampler.sample_fresh(&graph, &seeds, b));
+    });
+    println!(
+        "(warm-scratch allocations are the MFG output vectors only — the \
+         O(|V|) maps and every work buffer live in the arena)"
+    );
 }

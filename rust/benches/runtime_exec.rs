@@ -4,7 +4,7 @@
 
 use labor_gnn::data::Dataset;
 use labor_gnn::runtime::{Engine, Manifest};
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 use labor_gnn::train::Trainer;
 use labor_gnn::util::timer::bench;
 
@@ -29,7 +29,8 @@ fn main() {
         let b = model.cfg.batch_size.min(ds.splits.train.len());
         let mut trainer = Trainer::new(model, 1).expect("trainer");
         let seeds: Vec<u32> = ds.splits.train[..b].to_vec();
-        let mfg = sampler.sample(&ds.graph, &seeds, 0);
+        let mut scratch = SamplerScratch::new();
+        let mfg = sampler.sample(&ds.graph, &seeds, 0, &mut scratch);
 
         // pack-only cost
         let r = bench(2, 10, || {
@@ -40,7 +41,7 @@ fn main() {
         // full step (pack + PJRT execute + state absorb)
         let mut s = 0u64;
         let r = bench(2, 10, || {
-            let mfg = sampler.sample(&ds.graph, &seeds, s);
+            let mfg = sampler.sample(&ds.graph, &seeds, s, &mut scratch);
             std::hint::black_box(trainer.step(&ds, &mfg).unwrap());
             s += 1;
         });

@@ -5,7 +5,7 @@
 //! reports mean/p50/p95 and throughput per case).
 
 use labor_gnn::data::Dataset;
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 use labor_gnn::util::timer::bench;
 
 fn main() {
@@ -29,13 +29,37 @@ fn main() {
     ];
     for (name, kind) in cases {
         let sampler = MultiLayerSampler::new(kind, &fanouts);
+        // steady-state: one warm scratch arena per case (as the pipeline
+        // workers hold); compare with `samplers_fresh` below
+        let mut scratch = SamplerScratch::new();
         let mut b = 0u64;
         let r = bench(2, 10, || {
-            let mfg = sampler.sample(&ds.graph, &seeds, b);
+            let mfg = sampler.sample(&ds.graph, &seeds, b, &mut scratch);
             std::hint::black_box(mfg.vertex_counts());
             b += 1;
         });
         r.report(&format!("sample_mfg/{name}"));
+    }
+
+    println!("\n== scratch reuse vs per-call allocation (labor-0, 3 layers)");
+    {
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &fanouts,
+        );
+        let mut scratch = SamplerScratch::new();
+        let mut b = 0u64;
+        let r = bench(2, 10, || {
+            std::hint::black_box(sampler.sample(&ds.graph, &seeds, b, &mut scratch).edge_counts());
+            b += 1;
+        });
+        r.report("labor0_3layer/warm_scratch");
+        let mut b = 0u64;
+        let r = bench(2, 10, || {
+            std::hint::black_box(sampler.sample_fresh(&ds.graph, &seeds, b).edge_counts());
+            b += 1;
+        });
+        r.report("labor0_3layer/fresh_scratch");
     }
 
     println!("\n== single-layer scaling with batch size (labor-0)");
@@ -45,9 +69,10 @@ fn main() {
             SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
             &[10],
         );
+        let mut scratch = SamplerScratch::new();
         let mut b = 0u64;
         let r = bench(2, 20, || {
-            std::hint::black_box(sampler.sample(&ds.graph, &seeds, b).edge_counts());
+            std::hint::black_box(sampler.sample(&ds.graph, &seeds, b, &mut scratch).edge_counts());
             b += 1;
         });
         r.report(&format!("labor0_1layer/batch{bs}"));

@@ -3,8 +3,10 @@
 //! RNG. These are the L3 hot path (§Perf).
 
 use labor_gnn::rng::{HashRng, StreamRng};
-use labor_gnn::sampler::labor::{solve_cs_iterative, solve_cs_sorted, LaborLayerState};
-use labor_gnn::sampler::IterSpec;
+use labor_gnn::sampler::labor::{
+    solve_cs_iterative, solve_cs_sorted, solve_cs_sorted_with, LaborLayerState,
+};
+use labor_gnn::sampler::{IterSpec, SamplerScratch};
 use labor_gnn::util::timer::bench;
 
 fn main() {
@@ -16,6 +18,17 @@ fn main() {
             std::hint::black_box(solve_cs_sorted(&pi, 10.min(d - 1)));
         });
         r.report(&format!("solve_cs_sorted/d{d}"));
+        let mut sort_buf = Vec::new();
+        let mut recip_buf = Vec::new();
+        let r = bench(10, 200, || {
+            std::hint::black_box(solve_cs_sorted_with(
+                &pi,
+                10.min(d - 1),
+                &mut sort_buf,
+                &mut recip_buf,
+            ));
+        });
+        r.report(&format!("solve_cs_sorted_scratch/d{d}"));
         let r = bench(10, 200, || {
             std::hint::black_box(solve_cs_iterative(&pi, 10.min(d - 1)));
         });
@@ -37,6 +50,14 @@ fn main() {
         std::hint::black_box(LaborLayerState::new(&g, &seeds, 10));
     });
     r.report("labor_state_build/b1024");
+    // arena reuse: the same build with all buffers recycled between calls
+    let mut scratch = SamplerScratch::for_vertices(g.num_vertices());
+    let r = bench(2, 20, || {
+        let st = LaborLayerState::new_in(&g, &seeds, 10, &mut scratch);
+        std::hint::black_box(st.candidates.len());
+        st.recycle(&mut scratch);
+    });
+    r.report("labor_state_build/b1024_warm_scratch");
     for iters in [0usize, 1, 3] {
         let r = bench(2, 10, || {
             let mut st = LaborLayerState::new(&g, &seeds, 10);

@@ -3,7 +3,7 @@
 //! the *largest* sampler (NS) plus margin, at the experiment settings.
 
 use crate::data::Dataset;
-use crate::sampler::{MultiLayerSampler, SamplerKind};
+use crate::sampler::{MultiLayerSampler, SamplerKind, SamplerScratch};
 use anyhow::Result;
 
 pub fn run(
@@ -16,12 +16,13 @@ pub fn run(
     let ds = Dataset::load_or_generate(dataset, scale)?;
     let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[fanout; 3]);
     let mut maxima = vec![0usize; 3];
+    let mut scratch = SamplerScratch::new();
     for r in 0..repeats {
         let start = (r * batch_size) % ds.splits.train.len();
         let seeds: Vec<u32> = (0..batch_size.min(ds.splits.train.len()))
             .map(|i| ds.splits.train[(start + i) % ds.splits.train.len()])
             .collect();
-        let mfg = sampler.sample(&ds.graph, &seeds, 0xCA11B ^ r as u64);
+        let mfg = sampler.sample(&ds.graph, &seeds, 0xCA11B ^ r as u64, &mut scratch);
         for (d, v) in mfg.vertex_counts().iter().enumerate() {
             maxima[d] = maxima[d].max(*v);
         }

@@ -8,7 +8,7 @@
 use crate::coordinator::batcher::EpochBatcher;
 use crate::data::Dataset;
 use crate::runtime::{Engine, Manifest};
-use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 use crate::train::Trainer;
 use crate::tune::{RandomSearchTuner, TuneConfig};
 use crate::util::csv::{f, CsvWriter};
@@ -50,9 +50,10 @@ fn trial(
     let mut batcher = EpochBatcher::new(&ds.splits.train, bs, o.seed);
     let t0 = std::time::Instant::now();
     let mut step = 0u64;
+    let mut scratch = SamplerScratch::new();
     loop {
         let seeds = batcher.next_batch();
-        let mfg = sampler.sample(&ds.graph, &seeds, o.seed ^ (step << 18));
+        let mfg = sampler.sample(&ds.graph, &seeds, o.seed ^ (step << 18), &mut scratch);
         trainer.step(ds, &mfg)?;
         step += 1;
         if step % o.eval_every == 0 {

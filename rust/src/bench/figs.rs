@@ -11,7 +11,7 @@
 use crate::coordinator::batcher::EpochBatcher;
 use crate::data::Dataset;
 use crate::runtime::{Engine, Manifest};
-use crate::sampler::{MultiLayerSampler, SamplerKind};
+use crate::sampler::{MultiLayerSampler, SamplerKind, SamplerScratch};
 use crate::train::Trainer;
 use crate::util::csv::{f, CsvWriter};
 use anyhow::Result;
@@ -77,10 +77,11 @@ pub fn run_training(
     let mut points = Vec::new();
     let t0 = std::time::Instant::now();
     let mut train_time = 0.0f64;
+    let mut scratch = SamplerScratch::new();
     for step in 0..o.steps {
         let seeds = batcher.next_batch();
         let ts = std::time::Instant::now();
-        let mfg = sampler.sample(&ds.graph, &seeds, o.seed ^ (step << 20));
+        let mfg = sampler.sample(&ds.graph, &seeds, o.seed ^ (step << 20), &mut scratch);
         let rec = trainer.step(ds, &mfg)?;
         train_time += ts.elapsed().as_secs_f64();
         let val_f1 = if (step + 1) % o.eval_every == 0 || step + 1 == o.steps {

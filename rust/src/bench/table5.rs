@@ -6,7 +6,7 @@
 
 use crate::data::Dataset;
 use crate::runtime::{Engine, Manifest};
-use crate::sampler::MultiLayerSampler;
+use crate::sampler::{MultiLayerSampler, SamplerScratch};
 use crate::train::Trainer;
 use crate::util::csv::{f, CsvWriter};
 use anyhow::Result;
@@ -42,8 +42,9 @@ pub fn run(o: &Table5Opts) -> Result<()> {
         let seeds: Vec<u32> = ds.splits.train[..b].to_vec();
         let mut total_ms = 0.0;
         let mut edges = 0usize;
+        let mut scratch = SamplerScratch::new();
         for it in 0..o.iters {
-            let mfg = sampler.sample(&ds.graph, &seeds, 0x7AB5 ^ it as u64);
+            let mfg = sampler.sample(&ds.graph, &seeds, 0x7AB5 ^ it as u64, &mut scratch);
             edges = mfg.edge_counts().iter().sum();
             let rec = trainer.step(&ds, &mfg)?;
             if it > 0 {

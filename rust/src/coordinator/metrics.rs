@@ -81,9 +81,10 @@ mod tests {
             &[5, 5],
         );
         let mut stats = SamplerStats::new("LABOR-0", 2);
+        let mut scratch = crate::sampler::SamplerScratch::new();
         for b in 0..10 {
             let t0 = std::time::Instant::now();
-            let mfg = sampler.sample(&g, &(0..64).collect::<Vec<_>>(), b);
+            let mfg = sampler.sample(&g, &(0..64).collect::<Vec<_>>(), b, &mut scratch);
             stats.push(&mfg, t0.elapsed());
         }
         assert_eq!(stats.batches, 10);

@@ -10,7 +10,7 @@
 
 use super::batcher::EpochBatcher;
 use crate::graph::CscGraph;
-use crate::sampler::{Mfg, MultiLayerSampler};
+use crate::sampler::{Mfg, MultiLayerSampler, SamplerScratch};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -81,13 +81,21 @@ impl SamplingPipeline {
             let num_batches = cfg.num_batches;
             let seed = cfg.seed;
             workers.push(std::thread::spawn(move || {
+                // Each worker owns one long-lived scratch arena: after the
+                // first few batches size it to steady state, sampling
+                // performs no per-batch O(|V|) allocation (the MFG output
+                // vectors are the only allocations left). Scratch reuse is
+                // invisible in the output — MFGs are bit-identical to
+                // fresh-scratch sampling, so delivered batches stay
+                // independent of worker count and scheduling.
+                let mut scratch = SamplerScratch::for_vertices(graph.num_vertices());
                 loop {
                     let id = cursor.fetch_add(1, Ordering::Relaxed);
                     if id >= num_batches {
                         return;
                     }
                     let seeds = batches[id as usize].clone();
-                    let mfg = sampler.sample(&graph, &seeds, seed ^ id);
+                    let mfg = sampler.sample(&graph, &seeds, seed ^ id, &mut scratch);
                     if tx.send(SampledBatch { batch_id: id, seeds, mfg }).is_err() {
                         return; // consumer dropped
                     }
@@ -172,17 +180,32 @@ mod tests {
 
     #[test]
     fn parallel_matches_single_threaded_sampling() {
-        // determinism: worker count must not change delivered MFGs
-        let collect = |workers: usize| -> Vec<Vec<usize>> {
+        // determinism: worker count must not change delivered MFGs — not
+        // just their sizes but the exact vertices, edges, and weights
+        // (each worker reuses its own scratch arena, which must be
+        // invisible in the output)
+        let collect = |workers: usize| -> Vec<Mfg> {
             let mut p = setup(12, workers, 3);
             let mut out = Vec::new();
             for b in &mut p {
-                out.push(b.mfg.vertex_counts());
+                out.push(b.mfg);
             }
             p.join();
             out
         };
-        assert_eq!(collect(1), collect(7));
+        let single = collect(1);
+        let multi = collect(7);
+        assert_eq!(single.len(), multi.len());
+        for (bi, (a, b)) in single.iter().zip(&multi).enumerate() {
+            assert_eq!(a.layers.len(), b.layers.len(), "batch {bi}");
+            for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+                assert_eq!(la.seeds, lb.seeds, "batch {bi} layer {l}");
+                assert_eq!(la.inputs, lb.inputs, "batch {bi} layer {l}");
+                assert_eq!(la.edge_src, lb.edge_src, "batch {bi} layer {l}");
+                assert_eq!(la.edge_dst, lb.edge_dst, "batch {bi} layer {l}");
+                assert_eq!(la.edge_weight, lb.edge_weight, "batch {bi} layer {l}");
+            }
+        }
     }
 
     #[test]

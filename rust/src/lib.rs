@@ -36,7 +36,7 @@
 //!
 //! ```no_run
 //! use labor_gnn::data::Dataset;
-//! use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+//! use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 //!
 //! let ds = Dataset::load_or_generate("flickr-sim", 1.0).unwrap();
 //! let sampler = MultiLayerSampler::new(
@@ -44,7 +44,10 @@
 //!     &[10, 10, 10],
 //! );
 //! let seeds: Vec<u32> = ds.splits.train[..1000].to_vec();
-//! let mfg = sampler.sample(&ds.graph, &seeds, 0);
+//! // one scratch arena per sampling thread: steady-state batches then
+//! // perform no O(|V|) allocation (use `sample_fresh` for one-offs)
+//! let mut scratch = SamplerScratch::new();
+//! let mfg = sampler.sample(&ds.graph, &seeds, 0, &mut scratch);
 //! for (l, layer) in mfg.layers.iter().enumerate() {
 //!     println!("layer {l}: |V|={} |E|={}", layer.num_inputs(), layer.num_edges());
 //! }

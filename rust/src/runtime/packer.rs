@@ -199,7 +199,7 @@ mod tests {
             &[4, 4, 4],
         );
         let seeds: Vec<u32> = ds.splits.train[..50].to_vec();
-        let mfg = sampler.sample(&ds.graph, &seeds, 7);
+        let mfg = sampler.sample_fresh(&ds.graph, &seeds, 7);
         let packer = Packer::new(tiny_cfg());
         let pb = packer.pack(&ds, &mfg).unwrap();
         assert_eq!(pb.num_seeds, 50);
@@ -222,7 +222,7 @@ mod tests {
         let ds = Dataset::generate(spec("tiny").unwrap(), 0.3);
         let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[8, 8, 8]);
         let seeds: Vec<u32> = ds.splits.train[..60].to_vec();
-        let mfg = sampler.sample(&ds.graph, &seeds, 3);
+        let mfg = sampler.sample_fresh(&ds.graph, &seeds, 3);
         let mut cfg = tiny_cfg();
         cfg.v_caps = vec![4, 4, 4]; // absurdly small
         let packer = Packer::new(cfg);
@@ -235,7 +235,7 @@ mod tests {
         // NS fanout 12 > k_max 8 forces overflow
         let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[12, 4, 4]);
         let seeds: Vec<u32> = ds.splits.train[..40].to_vec();
-        let mfg = sampler.sample(&ds.graph, &seeds, 3);
+        let mfg = sampler.sample_fresh(&ds.graph, &seeds, 3);
         let packer = Packer::new(tiny_cfg());
         let pb = packer.pack(&ds, &mfg).unwrap();
         // the layer adjacent to the seeds is the LAST compute layer

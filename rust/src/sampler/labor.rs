@@ -11,8 +11,11 @@
 //! sampled vertices `E[|T|]` (Eq. 11–12): LABOR-i applies `i` iterations,
 //! LABOR-\* iterates to convergence.
 
-use super::poisson::sequential_poisson_pick;
-use super::{finalize_inputs, hajek_normalize, IterSpec, LayerSampler, SampleCtx, SampledLayer};
+use super::poisson::sequential_poisson_pick_into;
+use super::{
+    finalize_inputs_in, hajek_normalize_in, IterSpec, LayerSampler, SampleCtx, SampledLayer,
+    SamplerScratch,
+};
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
 
@@ -50,13 +53,28 @@ pub struct LaborSampler {
 /// assert!((c - 0.25).abs() < 1e-9);
 /// ```
 pub fn solve_cs_sorted(pi: &[f64], k: usize) -> f64 {
+    solve_cs_sorted_with(pi, k, &mut Vec::new(), &mut Vec::new())
+}
+
+/// [`solve_cs_sorted`] writing its sort and suffix-sum work into
+/// caller-provided buffers, so repeated solves (e.g. per seed in a batch
+/// loop) perform no allocation once the buffers are warm. Identical
+/// result to [`solve_cs_sorted`] for any buffer state.
+pub fn solve_cs_sorted_with(
+    pi: &[f64],
+    k: usize,
+    sorted: &mut Vec<f64>,
+    recip: &mut Vec<f64>,
+) -> f64 {
     let d = pi.len();
     debug_assert!(k < d && k > 0);
     let target = (d as f64) * (d as f64) / (k as f64);
-    let mut sorted: Vec<f64> = pi.to_vec();
+    sorted.clear();
+    sorted.extend_from_slice(pi);
     sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
     // suffix sums of reciprocals: recip[m] = Σ_{j≥m} 1/π_j
-    let mut recip = vec![0.0f64; d + 1];
+    recip.clear();
+    recip.resize(d + 1, 0.0);
     for m in (0..d).rev() {
         recip[m] = recip[m + 1] + 1.0 / sorted[m];
     }
@@ -106,14 +124,17 @@ pub fn solve_cs_iterative(pi: &[f64], k: usize) -> f64 {
 /// seed set; exposes the fixed-point internals so that Table 4 and the
 /// convergence tests can interrogate intermediate states.
 ///
-/// §Perf: the candidate index is a stamp array over `|V|` (no hashing) and
-/// every per-seed neighbor list is pre-translated to candidate-local ids in
-/// one flat CSR-like buffer, so the solver/fixed-point/sampling loops are
-/// pure array walks. `c_s` uses the paper's iterative solver (Eq. 15–17) —
-/// it needs no sort and measured 5–13× faster than the sorted exact solve
-/// at the same 1e-9 agreement (see EXPERIMENTS.md §Perf).
+/// §Perf: the candidate index is an epoch-stamped array over `|V|` (no
+/// hashing, no per-call O(|V|) allocation when built from a warm
+/// [`SamplerScratch`] via [`new_in`](Self::new_in)) and every per-seed
+/// neighbor list is pre-translated to candidate-local ids in one flat
+/// CSR-like buffer, so the solver/fixed-point/sampling loops are pure
+/// array walks. All working vectors are borrowed from the scratch arena
+/// and returned by [`recycle`](Self::recycle). `c_s` uses the paper's
+/// iterative solver (Eq. 15–17) — it needs no sort and measured 5–13×
+/// faster than the sorted exact solve at the same 1e-9 agreement (see
+/// EXPERIMENTS.md §Perf).
 pub struct LaborLayerState<'a> {
-    #[allow(dead_code)]
     g: &'a CscGraph,
     seeds: &'a [u32],
     k: usize,
@@ -127,32 +148,63 @@ pub struct LaborLayerState<'a> {
     pub pi: Vec<f64>,
     /// per-seed scalars `c_s`
     pub c: Vec<f64>,
+    /// `max_{t→s} c_s` per candidate, refreshed by the fixed-point loop
+    maxc: Vec<f64>,
+    /// per-seed π slice buffer for the `c_s` solver
+    buf: Vec<f64>,
     /// true while π is still the uniform initialization (enables the
     /// closed-form `c_s` fast path of LABOR-0)
     pi_uniform: bool,
 }
 
 impl<'a> LaborLayerState<'a> {
+    /// Build with freshly allocated buffers (one-off callers, tests).
     pub fn new(g: &'a CscGraph, seeds: &'a [u32], k: usize) -> Self {
-        // stamp-array candidate index: local_of[v] = candidate id or MAX
-        let mut local_of: Vec<u32> = vec![u32::MAX; g.num_vertices()];
-        let mut candidates = Vec::new();
-        let mut nbr_local = Vec::new();
-        let mut nbr_off = Vec::with_capacity(seeds.len() + 1);
+        Self::new_in(g, seeds, k, &mut SamplerScratch::new())
+    }
+
+    /// Build the layer state from the scratch arena: the candidate index
+    /// uses the arena's epoch-stamped vertex map and every working vector
+    /// is taken from the arena's pool (its capacity is reused; call
+    /// [`recycle`](Self::recycle) to give the buffers back when done).
+    pub fn new_in(
+        g: &'a CscGraph,
+        seeds: &'a [u32],
+        k: usize,
+        scratch: &mut SamplerScratch,
+    ) -> Self {
+        let mut candidates = std::mem::take(&mut scratch.candidates);
+        let mut nbr_local = std::mem::take(&mut scratch.nbr_local);
+        let mut nbr_off = std::mem::take(&mut scratch.nbr_off);
+        let mut pi = std::mem::take(&mut scratch.pi);
+        let mut c = std::mem::take(&mut scratch.c);
+        let maxc = std::mem::take(&mut scratch.maxc);
+        let buf = std::mem::take(&mut scratch.solver_pi);
+        candidates.clear();
+        nbr_local.clear();
+        nbr_off.clear();
+        let map = &mut scratch.map;
+        map.begin(g.num_vertices());
         nbr_off.push(0);
         for &s in seeds {
             for &t in g.in_neighbors(s) {
-                let mut id = local_of[t as usize];
-                if id == u32::MAX {
-                    id = candidates.len() as u32;
-                    local_of[t as usize] = id;
-                    candidates.push(t);
-                }
+                let id = match map.get(t) {
+                    Some(id) => id,
+                    None => {
+                        let id = candidates.len() as u32;
+                        map.insert(t, id);
+                        candidates.push(t);
+                        id
+                    }
+                };
                 nbr_local.push(id);
             }
             nbr_off.push(nbr_local.len());
         }
-        let n = candidates.len();
+        pi.clear();
+        pi.resize(candidates.len(), 1.0);
+        c.clear();
+        c.resize(seeds.len(), 0.0);
         let mut st = Self {
             g,
             seeds,
@@ -160,12 +212,28 @@ impl<'a> LaborLayerState<'a> {
             candidates,
             nbr_local,
             nbr_off,
-            pi: vec![1.0; n],
-            c: vec![0.0; seeds.len()],
+            pi,
+            c,
+            maxc,
+            buf,
             pi_uniform: true,
         };
         st.recompute_c();
         st
+    }
+
+    /// Return the borrowed buffers to the arena (capacity preserved), so
+    /// the next layer built via [`new_in`](Self::new_in) allocates
+    /// nothing.
+    pub fn recycle(self, scratch: &mut SamplerScratch) {
+        let Self { candidates, nbr_local, nbr_off, pi, c, maxc, buf, .. } = self;
+        scratch.candidates = candidates;
+        scratch.nbr_local = nbr_local;
+        scratch.nbr_off = nbr_off;
+        scratch.pi = pi;
+        scratch.c = c;
+        scratch.maxc = maxc;
+        scratch.solver_pi = buf;
     }
 
     #[inline]
@@ -175,9 +243,9 @@ impl<'a> LaborLayerState<'a> {
 
     /// Recompute every `c_s` for the current `π` (Eq. 13–14).
     pub fn recompute_c(&mut self) {
-        let mut buf: Vec<f64> = Vec::new();
+        let mut buf = std::mem::take(&mut self.buf);
         for si in 0..self.seeds.len() {
-            let nbrs = self.seed_nbrs(si);
+            let nbrs = &self.nbr_local[self.nbr_off[si]..self.nbr_off[si + 1]];
             let d = nbrs.len();
             if d == 0 {
                 self.c[si] = 0.0;
@@ -197,37 +265,61 @@ impl<'a> LaborLayerState<'a> {
                 solve_cs_iterative(&buf, self.k)
             };
         }
+        self.buf = buf;
     }
 
-    /// `max_{t→s} c_s` per candidate — shared by the π update and (12).
-    fn max_c_per_candidate(&self) -> Vec<f64> {
-        let mut maxc = vec![0.0f64; self.candidates.len()];
+    /// Compute `max_{t→s} c_s` per candidate into `maxc` — the one
+    /// implementation behind both the fixed-point hot loop (reusable
+    /// buffer) and the allocating [`objective`](Self::objective) path.
+    fn fill_maxc(&self, maxc: &mut Vec<f64>) {
+        maxc.clear();
+        maxc.resize(self.candidates.len(), 0.0);
         for si in 0..self.seeds.len() {
             let cs = self.c[si];
-            for &ti in self.seed_nbrs(si) {
+            for &ti in &self.nbr_local[self.nbr_off[si]..self.nbr_off[si + 1]] {
                 if cs > maxc[ti as usize] {
                     maxc[ti as usize] = cs;
                 }
             }
         }
-        maxc
+    }
+
+    /// Refresh the `max_{t→s} c_s` per candidate into the reusable `maxc`
+    /// buffer — shared by the π update and (12).
+    fn refresh_maxc(&mut self) {
+        let mut maxc = std::mem::take(&mut self.maxc);
+        self.fill_maxc(&mut maxc);
+        self.maxc = maxc;
+    }
+
+    /// Objective (12) read from the freshly refreshed `maxc` buffer.
+    fn objective_from_maxc(&self) -> f64 {
+        self.pi
+            .iter()
+            .zip(&self.maxc)
+            .map(|(&p, &m)| (p * m).min(1.0))
+            .sum()
     }
 
     /// One fixed-point π update (Eq. 18): `π_t ← π_t · max_{t→s} c_s`,
     /// followed by recomputing `c`. Returns the new objective value.
     pub fn fixed_point_step(&mut self) -> f64 {
-        let maxc = self.max_c_per_candidate();
+        self.refresh_maxc();
         for (t, p) in self.pi.iter_mut().enumerate() {
-            *p *= maxc[t].max(f64::MIN_POSITIVE);
+            *p *= self.maxc[t].max(f64::MIN_POSITIVE);
         }
         self.pi_uniform = false;
         self.recompute_c();
-        self.objective()
+        self.refresh_maxc();
+        self.objective_from_maxc()
     }
 
     /// Objective (12): `E[|T|] = Σ_t min(1, π_t · max_{t→s} c_s)`.
+    /// (Allocates its own `max c` vector — introspection path, not the
+    /// fixed-point hot loop, which uses the reusable buffer.)
     pub fn objective(&self) -> f64 {
-        let maxc = self.max_c_per_candidate();
+        let mut maxc = Vec::new();
+        self.fill_maxc(&mut maxc);
         self.pi
             .iter()
             .zip(&maxc)
@@ -247,7 +339,8 @@ impl<'a> LaborLayerState<'a> {
                 n
             }
             IterSpec::Converge => {
-                let mut prev = self.objective();
+                self.refresh_maxc();
+                let mut prev = self.objective_from_maxc();
                 for i in 1..=50 {
                     let cur = self.fixed_point_step();
                     if (prev - cur).abs() <= 1e-4 * prev.max(1.0) {
@@ -261,17 +354,37 @@ impl<'a> LaborLayerState<'a> {
     }
 
     /// Poisson-sample the layer with the current `(π, c)` using shared
+    /// per-candidate variates from `rng` (LABOR proper), with freshly
+    /// allocated transient buffers. See [`sample_in`](Self::sample_in).
+    pub fn sample(&self, rng: &HashRng, sequential: bool) -> SampledLayer {
+        self.sample_in(rng, sequential, &mut SamplerScratch::new())
+    }
+
+    /// Poisson-sample the layer with the current `(π, c)` using shared
     /// per-candidate variates from `rng` (LABOR proper). If
     /// `sequential` is set, round each seed to exactly `min(k, d_s)`
-    /// neighbors via sequential Poisson sampling (Appendix A.3).
-    pub fn sample(&self, rng: &HashRng, sequential: bool) -> SampledLayer {
-        let r: Vec<f64> = self.candidates.iter().map(|&t| rng.uniform(t as u64)).collect();
-        let mut edge_src: Vec<u32> = Vec::new();
-        let mut edge_dst: Vec<u32> = Vec::new();
-        let mut raw: Vec<f64> = Vec::new();
-        let mut probs: Vec<f64> = Vec::new();
-        let mut rs: Vec<f64> = Vec::new();
-        let mut locals: Vec<usize> = Vec::new();
+    /// neighbors via sequential Poisson sampling (Appendix A.3). All
+    /// transient state (variates, edge accumulators, Hajek sums, the
+    /// input-finalization map) lives in `scratch`; a warm scratch makes
+    /// the only allocations the returned [`SampledLayer`]'s own vectors.
+    pub fn sample_in(
+        &self,
+        rng: &HashRng,
+        sequential: bool,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
+        let mut r = std::mem::take(&mut scratch.r);
+        r.clear();
+        r.extend(self.candidates.iter().map(|&t| rng.uniform(t as u64)));
+        let mut edge_src = std::mem::take(&mut scratch.edge_src);
+        let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+        let mut raw = std::mem::take(&mut scratch.raw);
+        edge_src.clear();
+        edge_dst.clear();
+        raw.clear();
+        let mut probs = std::mem::take(&mut scratch.sp_probs);
+        let mut rs = std::mem::take(&mut scratch.sp_r);
+        let mut locals = std::mem::take(&mut scratch.sp_local);
         for si in 0..self.seeds.len() {
             let nbrs = self.seed_nbrs(si);
             if nbrs.is_empty() {
@@ -289,7 +402,14 @@ impl<'a> LaborLayerState<'a> {
                     locals.push(ti);
                 }
                 let dt = self.k.min(nbrs.len());
-                for &j in &sequential_poisson_pick(&rs, &probs, dt) {
+                sequential_poisson_pick_into(
+                    &rs,
+                    &probs,
+                    dt,
+                    &mut scratch.sp_keys,
+                    &mut scratch.sp_picked,
+                );
+                for &j in scratch.sp_picked.iter() {
                     edge_src.push(self.candidates[locals[j]]);
                     edge_dst.push(si as u32);
                     raw.push(1.0 / probs[j]);
@@ -306,15 +426,24 @@ impl<'a> LaborLayerState<'a> {
                 }
             }
         }
-        let edge_weight = hajek_normalize(&edge_dst, &raw, self.seeds.len());
-        let inputs = finalize_inputs(self.g.num_vertices(), self.seeds, &mut edge_src);
-        SampledLayer {
+        let edge_weight = hajek_normalize_in(&mut scratch.sums, &edge_dst, &raw, self.seeds.len());
+        let inputs =
+            finalize_inputs_in(&mut scratch.map, self.g.num_vertices(), self.seeds, &mut edge_src);
+        let out = SampledLayer {
             seeds: self.seeds.to_vec(),
             inputs,
-            edge_src,
-            edge_dst,
+            edge_src: edge_src.clone(),
+            edge_dst: edge_dst.clone(),
             edge_weight,
-        }
+        };
+        scratch.r = r;
+        scratch.edge_src = edge_src;
+        scratch.edge_dst = edge_dst;
+        scratch.raw = raw;
+        scratch.sp_probs = probs;
+        scratch.sp_r = rs;
+        scratch.sp_local = locals;
+        out
     }
 
     /// Expected number of distinct sampled vertices (Eq. 11) — used by the
@@ -337,14 +466,22 @@ impl<'a> LaborLayerState<'a> {
 }
 
 impl LayerSampler for LaborSampler {
-    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+    fn sample_layer(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
         let k = self.fanouts[ctx.layer];
-        let mut st = LaborLayerState::new(g, seeds, k);
+        let mut st = LaborLayerState::new_in(g, seeds, k, scratch);
         st.optimize(self.iterations);
         // layer-dependent mode shares r_t across layers of a batch
         let stream = if self.layer_dependent { u64::MAX } else { ctx.layer as u64 };
         let rng = HashRng::new(mix2(ctx.batch_seed, stream));
-        st.sample(&rng, self.sequential)
+        let out = st.sample_in(&rng, self.sequential, scratch);
+        st.recycle(scratch);
+        out
     }
 
     fn name(&self) -> String {
@@ -373,6 +510,11 @@ mod tests {
 
     #[test]
     fn cs_solvers_agree_and_satisfy_eq14() {
+        // the exact sorted solve, the scratch-buffered sorted solve, and
+        // the paper's iterative algorithm (Eq. 15–17) must agree on random
+        // heavy-tailed π vectors across the whole (d, k) regime
+        let mut sort_buf: Vec<f64> = Vec::new();
+        let mut recip_buf: Vec<f64> = Vec::new();
         for_cases(0xCE5, 50, |rng: &mut StreamRng| {
             let d = 2 + rng.below(100) as usize;
             let k = 1 + rng.below(d as u64 - 1) as usize; // k < d
@@ -389,6 +531,47 @@ mod tests {
             let target = (d * d) as f64 / k as f64;
             assert!((lhs - target).abs() < 1e-6 * target, "lhs {lhs} target {target}");
         });
+        // the scratch-buffered variant is bit-identical to the allocating
+        // one regardless of buffer reuse across heterogeneous solves
+        // (plain loop: the reused buffers make this closure FnMut)
+        let mut rng = StreamRng::new(0xCE6);
+        for _ in 0..30 {
+            let d = 2 + rng.below(80) as usize;
+            let k = 1 + rng.below(d as u64 - 1) as usize;
+            let pi: Vec<f64> =
+                vec_in(&mut rng, d, 0.0, 1.0).iter().map(|x| (4.0 * x).exp()).collect();
+            let c_fresh = solve_cs_sorted(&pi, k);
+            let c_reused = solve_cs_sorted_with(&pi, k, &mut sort_buf, &mut recip_buf);
+            assert_eq!(c_fresh.to_bits(), c_reused.to_bits(), "d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn iterative_solver_agrees_in_edge_regimes() {
+        // regimes the random sweep rarely hits: k = d-1 (barely sampling),
+        // k = 1 (minimum fanout), tiny d, and near-uniform π
+        let cases: Vec<(Vec<f64>, usize)> = vec![
+            (vec![1.0, 2.0], 1),
+            (vec![0.5, 0.5, 0.5], 2),
+            (vec![1.0 + 1e-9, 1.0, 1.0 - 1e-9, 1.0], 3),
+            ((0..40).map(|i| 1.0 + 1e-6 * i as f64).collect(), 39),
+            ((0..40).map(|i| (0.2 * i as f64).exp()).collect(), 1),
+        ];
+        for (pi, k) in cases {
+            let c1 = solve_cs_sorted(&pi, k);
+            let c2 = solve_cs_iterative(&pi, k);
+            assert!(
+                (c1 - c2).abs() <= 1e-6 * c1.max(1.0),
+                "sorted {c1} vs iterative {c2} (d={}, k={k})",
+                pi.len()
+            );
+            let lhs: f64 = pi.iter().map(|&p| 1.0 / (c2 * p).min(1.0)).sum();
+            let target = (pi.len() * pi.len()) as f64 / k as f64;
+            assert!(
+                (lhs - target).abs() < 1e-6 * target,
+                "iterative solve violates Eq. 14: lhs {lhs} target {target}"
+            );
+        }
     }
 
     #[test]
@@ -524,8 +707,8 @@ mod tests {
         let mut labor_v = 0usize;
         let mut ns_v = 0usize;
         for b in 0..20u64 {
-            labor_v += labor.sample_layer(&g, &seeds, ctx(b)).num_inputs();
-            ns_v += ns.sample_layer(&g, &seeds, ctx(b)).num_inputs();
+            labor_v += labor.sample_layer_fresh(&g, &seeds, ctx(b)).num_inputs();
+            ns_v += ns.sample_layer_fresh(&g, &seeds, ctx(b)).num_inputs();
         }
         assert!(
             (labor_v as f64) < 0.9 * ns_v as f64,
@@ -557,7 +740,7 @@ mod tests {
             sequential: true,
         };
         let seeds: Vec<u32> = (0..60).collect();
-        let sl = s.sample_layer(&g, &seeds, ctx(5));
+        let sl = s.sample_layer_fresh(&g, &seeds, ctx(5));
         sl.validate(&g).unwrap();
         for (si, d) in sl.sampled_degrees().iter().enumerate() {
             assert_eq!(*d, g.in_degree(seeds[si]).min(7), "seed {si}");
@@ -575,7 +758,7 @@ mod tests {
                 sequential: false,
             };
             let seeds: Vec<u32> = (0..100).collect();
-            let sl = s.sample_layer(&g, &seeds, ctx(2));
+            let sl = s.sample_layer_fresh(&g, &seeds, ctx(2));
             sl.validate(&g).unwrap();
         }
     }
@@ -589,8 +772,8 @@ mod tests {
             layer_dependent: true,
             sequential: false,
         };
-        let a = s.sample_layer(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 0 });
-        let b = s.sample_layer(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 1 });
+        let a = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 0 });
+        let b = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 1 });
         // same seeds, same r_t stream => identical picks
         assert_eq!(a.edge_src, b.edge_src);
         // the independent mode must differ across layers
@@ -600,8 +783,8 @@ mod tests {
             layer_dependent: false,
             sequential: false,
         };
-        let c = s2.sample_layer(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 0 });
-        let d = s2.sample_layer(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 1 });
+        let c = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 0 });
+        let d = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 1 });
         assert_ne!(c.edge_src, d.edge_src);
     }
 

@@ -8,7 +8,10 @@
 //! `t → s` with `t ∈ T`. As in the LADIES implementation, the sampled
 //! adjacency is row-normalized — the Hajek estimator (Eq. 4b).
 
-use super::{finalize_inputs, hajek_normalize, LayerSampler, SampleCtx, SampledLayer};
+use super::scratch::EpochMap;
+use super::{
+    finalize_inputs_in, hajek_normalize_in, LayerSampler, SampleCtx, SampledLayer, SamplerScratch,
+};
 use crate::graph::CscGraph;
 use crate::rng::{mix2, StreamRng};
 use crate::util::alias::AliasTable;
@@ -22,20 +25,48 @@ pub struct LadiesSampler {
 /// Candidate set and LADIES importance distribution for one layer; shared
 /// with PLADIES (which reuses `p` but samples without replacement via
 /// Poisson trials).
+///
+/// §Perf: the candidate index is an epoch-stamped map over |V| (no hashing
+/// on the sampling hot path). When built via [`build_in`](Self::build_in)
+/// the index and the candidate/mass vectors are borrowed from the scratch
+/// arena — it uses the arena's *second* vertex map (`cand_map`) because
+/// the index must stay alive across `finalize_inputs`, which uses the
+/// first. Call [`recycle`](Self::recycle) to return the buffers.
 pub(crate) struct LayerCandidates {
     pub candidates: Vec<u32>,
-    /// stamp-array candidate index over |V| (§Perf: no hashing on the
-    /// sampling hot path); `u32::MAX` = not a candidate
-    index_of: Vec<u32>,
+    /// candidate index over |V|: absent = not a candidate
+    index: EpochMap,
     /// unnormalized importance mass `Σ_{s: t→s} 1/d_s²`
     pub mass: Vec<f64>,
 }
 
 impl LayerCandidates {
+    /// Build with freshly allocated buffers (one-off callers, tests).
     pub fn build(g: &CscGraph, seeds: &[u32]) -> Self {
-        let mut candidates: Vec<u32> = Vec::new();
-        let mut index_of: Vec<u32> = vec![u32::MAX; g.num_vertices()];
-        let mut mass: Vec<f64> = Vec::new();
+        Self::build_parts(g, seeds, EpochMap::default(), Vec::new(), Vec::new())
+    }
+
+    /// Build from the scratch arena; no allocation once the arena is warm.
+    pub fn build_in(g: &CscGraph, seeds: &[u32], scratch: &mut SamplerScratch) -> Self {
+        Self::build_parts(
+            g,
+            seeds,
+            std::mem::take(&mut scratch.cand_map),
+            std::mem::take(&mut scratch.candidates),
+            std::mem::take(&mut scratch.mass),
+        )
+    }
+
+    fn build_parts(
+        g: &CscGraph,
+        seeds: &[u32],
+        mut index: EpochMap,
+        mut candidates: Vec<u32>,
+        mut mass: Vec<f64>,
+    ) -> Self {
+        candidates.clear();
+        mass.clear();
+        index.begin(g.num_vertices());
         for &s in seeds {
             let d = g.in_degree(s);
             if d == 0 {
@@ -43,39 +74,55 @@ impl LayerCandidates {
             }
             let w = 1.0 / (d as f64 * d as f64);
             for &t in g.in_neighbors(s) {
-                let mut ti = index_of[t as usize];
-                if ti == u32::MAX {
-                    ti = candidates.len() as u32;
-                    index_of[t as usize] = ti;
-                    candidates.push(t);
-                    mass.push(0.0);
-                }
+                let ti = match index.get(t) {
+                    Some(ti) => ti,
+                    None => {
+                        let ti = candidates.len() as u32;
+                        index.insert(t, ti);
+                        candidates.push(t);
+                        mass.push(0.0);
+                        ti
+                    }
+                };
                 mass[ti as usize] += w;
             }
         }
-        Self { candidates, index_of, mass }
+        Self { candidates, index, mass }
+    }
+
+    /// Give the borrowed buffers back to the arena (capacity preserved).
+    pub fn recycle(self, scratch: &mut SamplerScratch) {
+        scratch.cand_map = self.index;
+        scratch.candidates = self.candidates;
+        scratch.mass = self.mass;
     }
 
     /// candidate-local id of vertex `t` (must be a candidate)
     #[inline]
     pub fn local(&self, t: u32) -> usize {
-        debug_assert_ne!(self.index_of[t as usize], u32::MAX);
-        self.index_of[t as usize] as usize
+        debug_assert!(self.index.get(t).is_some(), "vertex {t} is not a candidate");
+        self.index.get(t).unwrap_or(u32::MAX) as usize
     }
 }
 
 /// Materialize the bipartite block between a chosen vertex set `T`
 /// (bitmask over candidates with per-candidate HT weight `1/π_t`) and the
-/// seeds; shared by LADIES and PLADIES.
+/// seeds; shared by LADIES and PLADIES. Transient edge/weight buffers come
+/// from `scratch` (note: `cand` itself holds the arena's `cand_map`, so
+/// this only touches the arena's *other* buffers).
 pub(crate) fn connect_chosen(
     g: &CscGraph,
     seeds: &[u32],
     cand: &LayerCandidates,
     chosen_ht: &[Option<f64>], // per-candidate 1/π_t if chosen
+    scratch: &mut SamplerScratch,
 ) -> SampledLayer {
-    let mut edge_src: Vec<u32> = Vec::new();
-    let mut edge_dst: Vec<u32> = Vec::new();
-    let mut raw: Vec<f64> = Vec::new();
+    let mut edge_src = std::mem::take(&mut scratch.edge_src);
+    let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+    let mut raw = std::mem::take(&mut scratch.raw);
+    edge_src.clear();
+    edge_dst.clear();
+    raw.clear();
     for (si, &s) in seeds.iter().enumerate() {
         for &t in g.in_neighbors(s) {
             let ti = cand.local(t);
@@ -86,16 +133,33 @@ pub(crate) fn connect_chosen(
             }
         }
     }
-    let edge_weight = hajek_normalize(&edge_dst, &raw, seeds.len());
-    let inputs = finalize_inputs(g.num_vertices(), seeds, &mut edge_src);
-    SampledLayer { seeds: seeds.to_vec(), inputs, edge_src, edge_dst, edge_weight }
+    let edge_weight = hajek_normalize_in(&mut scratch.sums, &edge_dst, &raw, seeds.len());
+    let inputs = finalize_inputs_in(&mut scratch.map, g.num_vertices(), seeds, &mut edge_src);
+    let out = SampledLayer {
+        seeds: seeds.to_vec(),
+        inputs,
+        edge_src: edge_src.clone(),
+        edge_dst: edge_dst.clone(),
+        edge_weight,
+    };
+    scratch.edge_src = edge_src;
+    scratch.edge_dst = edge_dst;
+    scratch.raw = raw;
+    out
 }
 
 impl LayerSampler for LadiesSampler {
-    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+    fn sample_layer(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
         let n = self.budgets[ctx.layer];
-        let cand = LayerCandidates::build(g, seeds);
+        let cand = LayerCandidates::build_in(g, seeds, scratch);
         if cand.candidates.is_empty() {
+            cand.recycle(scratch);
             return SampledLayer {
                 seeds: seeds.to_vec(),
                 inputs: seeds.to_vec(),
@@ -103,7 +167,9 @@ impl LayerSampler for LadiesSampler {
             };
         }
         let total_mass: f64 = cand.mass.iter().sum();
-        let mut chosen: Vec<Option<f64>> = vec![None; cand.candidates.len()];
+        let mut chosen = std::mem::take(&mut scratch.chosen);
+        chosen.clear();
+        chosen.resize(cand.candidates.len(), None);
         if n >= cand.candidates.len() {
             // budget covers everything: exact neighborhood
             for c in chosen.iter_mut() {
@@ -119,7 +185,10 @@ impl LayerSampler for LadiesSampler {
                 chosen[ti] = Some(total_mass / cand.mass[ti]);
             }
         }
-        connect_chosen(g, seeds, &cand, &chosen)
+        let out = connect_chosen(g, seeds, &cand, &chosen, scratch);
+        scratch.chosen = chosen;
+        cand.recycle(scratch);
+        out
     }
 
     fn name(&self) -> String {
@@ -141,7 +210,7 @@ mod tests {
         let g = test_graph();
         let s = LadiesSampler { budgets: vec![50] };
         let seeds: Vec<u32> = (0..100).collect();
-        let sl = s.sample_layer(&g, &seeds, ctx(1));
+        let sl = s.sample_layer_fresh(&g, &seeds, ctx(1));
         sl.validate(&g).unwrap();
         // distinct sampled sources ≤ n (with replacement dedups)
         let mut srcs: Vec<u32> = sl.edge_src.iter().map(|&i| sl.inputs[i as usize]).collect();
@@ -156,7 +225,7 @@ mod tests {
         let g = test_graph();
         let s = LadiesSampler { budgets: vec![30] };
         let seeds: Vec<u32> = (0..60).collect();
-        let sl = s.sample_layer(&g, &seeds, ctx(2));
+        let sl = s.sample_layer_fresh(&g, &seeds, ctx(2));
         let chosen: std::collections::HashSet<u32> =
             sl.edge_src.iter().map(|&i| sl.inputs[i as usize]).collect();
         for (si, &sv) in seeds.iter().enumerate() {
@@ -177,7 +246,7 @@ mod tests {
         let g = skewed_graph();
         let s = LadiesSampler { budgets: vec![10_000] };
         let seeds = vec![0u32, 1, 2];
-        let sl = s.sample_layer(&g, &seeds, ctx(3));
+        let sl = s.sample_layer_fresh(&g, &seeds, ctx(3));
         let total_deg: usize = seeds.iter().map(|&v| g.in_degree(v)).sum();
         assert_eq!(sl.num_edges(), total_deg);
     }
@@ -205,7 +274,7 @@ mod tests {
         use crate::graph::builder::CscBuilder;
         let g = CscBuilder::new(4).edges(&[(0, 1)]).build().unwrap();
         let s = LadiesSampler { budgets: vec![5] };
-        let sl = s.sample_layer(&g, &[2, 3], ctx(1));
+        let sl = s.sample_layer_fresh(&g, &[2, 3], ctx(1));
         assert_eq!(sl.num_edges(), 0);
         assert_eq!(sl.inputs, vec![2, 3]);
     }

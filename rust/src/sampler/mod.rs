@@ -14,7 +14,10 @@ pub mod ladies;
 pub mod neighbor;
 pub mod pladies;
 pub mod poisson;
+pub mod scratch;
 pub mod weighted;
+
+pub use scratch::{EpochMap, SamplerScratch};
 
 use crate::graph::CscGraph;
 
@@ -115,9 +118,28 @@ pub struct SampleCtx {
 }
 
 /// A single-layer sampler.
+///
+/// `sample_layer` writes all transient state into the caller-provided
+/// [`SamplerScratch`], so a warm scratch makes steady-state sampling free
+/// of per-batch O(|V|) allocation. Output is bit-identical regardless of
+/// the scratch's history.
 pub trait LayerSampler: Send + Sync {
-    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer;
+    fn sample_layer(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer;
+
     fn name(&self) -> String;
+
+    /// Convenience for one-off calls (tests, examples): sample with a
+    /// throwaway scratch. Hot loops should hold a [`SamplerScratch`] and
+    /// call [`sample_layer`](Self::sample_layer) instead.
+    fn sample_layer_fresh(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+        self.sample_layer(g, seeds, ctx, &mut SamplerScratch::new())
+    }
 }
 
 /// Which algorithm to use (paper §2–3).
@@ -148,20 +170,30 @@ pub enum IterSpec {
 
 impl SamplerKind {
     /// Parse names like `ns`, `labor-0`, `labor-1`, `labor-*`, `ladies`,
-    /// `pladies` (harness CLI). LADIES budgets must be set separately.
+    /// `pladies`, and the sequential Poisson variants `labor-0-seq` /
+    /// `labor-*-seq` (harness CLI). Lowercased [`label`](Self::label)s
+    /// round-trip. LADIES budgets must be set separately.
     pub fn parse(name: &str) -> Option<SamplerKind> {
         match name {
             "ns" | "neighbor" => Some(SamplerKind::Neighbor),
             "ladies" => Some(SamplerKind::Ladies { budgets: vec![] }),
             "pladies" => Some(SamplerKind::Pladies { budgets: vec![] }),
             _ => {
-                let rest = name.strip_prefix("labor-")?;
-                let it = if rest == "*" {
+                let (core, sequential) = match name.strip_suffix("-seq") {
+                    Some(core) => (core, true),
+                    None => (name, false),
+                };
+                let rest = core.strip_prefix("labor-")?;
+                let iterations = if rest == "*" {
                     IterSpec::Converge
                 } else {
                     IterSpec::Fixed(rest.parse().ok()?)
                 };
-                Some(SamplerKind::Labor { iterations: it, layer_dependent: false })
+                Some(if sequential {
+                    SamplerKind::LaborSequential { iterations, layer_dependent: false }
+                } else {
+                    SamplerKind::Labor { iterations, layer_dependent: false }
+                })
             }
         }
     }
@@ -212,7 +244,7 @@ impl Mfg {
 ///
 /// ```
 /// use labor_gnn::graph::builder::CscBuilder;
-/// use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+/// use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 ///
 /// // a tiny diamond graph: 0 -> 2, 1 -> 2, 0 -> 3, 2 -> 3
 /// let g = CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap();
@@ -220,13 +252,19 @@ impl Mfg {
 ///     SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
 ///     &[2, 2],
 /// );
-/// let mfg = sampler.sample(&g, &[2, 3], 0);
+/// // hot loops hold one scratch arena and reuse it across batches
+/// let mut scratch = SamplerScratch::new();
+/// let mfg = sampler.sample(&g, &[2, 3], 0, &mut scratch);
 /// assert_eq!(mfg.layers.len(), 2);
 /// // every layer is structurally valid and consecutive layers chain
 /// for layer in &mfg.layers {
 ///     layer.validate(&g).unwrap();
 /// }
 /// assert_eq!(mfg.layers[0].inputs, mfg.layers[1].seeds);
+/// // one-off callers can let the sampler own a throwaway scratch —
+/// // the output is bit-identical either way
+/// let fresh = sampler.sample_fresh(&g, &[2, 3], 0);
+/// assert_eq!(fresh.layers[0].edge_src, mfg.layers[0].edge_src);
 /// ```
 pub struct MultiLayerSampler {
     pub kind: SamplerKind,
@@ -276,16 +314,33 @@ impl MultiLayerSampler {
         }
     }
 
-    /// Sample the full message-flow graph for one batch of seeds.
-    pub fn sample(&self, g: &CscGraph, seeds: &[u32], batch_seed: u64) -> Mfg {
+    /// Sample the full message-flow graph for one batch of seeds, using
+    /// the caller's [`SamplerScratch`] for all transient memory. With a
+    /// warm scratch this performs no per-batch O(|V|) allocation; output
+    /// is bit-identical to [`sample_fresh`](Self::sample_fresh).
+    pub fn sample(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        batch_seed: u64,
+        scratch: &mut SamplerScratch,
+    ) -> Mfg {
         let mut layers = Vec::with_capacity(self.num_layers());
         let mut cur: Vec<u32> = seeds.to_vec();
         for layer in 0..self.num_layers() {
-            let sl = self.sampler.sample_layer(g, &cur, SampleCtx { batch_seed, layer });
-            cur = sl.inputs.clone();
+            let sl = self.sampler.sample_layer(g, &cur, SampleCtx { batch_seed, layer }, scratch);
+            cur.clear();
+            cur.extend_from_slice(&sl.inputs);
             layers.push(sl);
         }
         Mfg { layers }
+    }
+
+    /// Convenience wrapper for callers that don't reuse sampling state: a
+    /// throwaway [`SamplerScratch`] is owned internally. Equivalent to
+    /// [`sample`](Self::sample) but pays the per-call allocations.
+    pub fn sample_fresh(&self, g: &CscGraph, seeds: &[u32], batch_seed: u64) -> Mfg {
+        self.sample(g, seeds, batch_seed, &mut SamplerScratch::new())
     }
 
     pub fn name(&self) -> String {
@@ -297,35 +352,65 @@ impl MultiLayerSampler {
 /// the `inputs` vector (seeds first), remapping global ids to local ones.
 ///
 /// `edge_src_global` is rewritten in place into local input indices.
-/// §Perf: a stamp array over `|V|` replaces hashing (sampling is the L3
-/// hot path; see EXPERIMENTS.md §Perf).
+/// §Perf: the epoch-stamped `map` over `|V|` replaces both hashing and the
+/// per-call `vec![u32::MAX; |V|]` allocation (sampling is the L3 hot
+/// path; see EXPERIMENTS.md §Perf).
+pub(crate) fn finalize_inputs_in(
+    map: &mut EpochMap,
+    num_vertices: usize,
+    seeds: &[u32],
+    edge_src_global: &mut [u32],
+) -> Vec<u32> {
+    map.begin(num_vertices);
+    // reserve the no-dedup upper bound so the fill never reallocates, then
+    // shrink: the returned vector lives on in the MFG (and sits in the
+    // pipeline queue), so it must not retain worst-case slack — LABOR's
+    // whole point is that unique inputs ≪ edges
+    let mut inputs: Vec<u32> = Vec::with_capacity(seeds.len() + edge_src_global.len());
+    inputs.extend_from_slice(seeds);
+    for (i, &s) in seeds.iter().enumerate() {
+        map.insert(s, i as u32);
+    }
+    for src in edge_src_global.iter_mut() {
+        let id = match map.get(*src) {
+            Some(id) => id,
+            None => {
+                let id = inputs.len() as u32;
+                map.insert(*src, id);
+                inputs.push(*src);
+                id
+            }
+        };
+        *src = id;
+    }
+    inputs.shrink_to_fit();
+    inputs
+}
+
+/// [`finalize_inputs_in`] with a throwaway map (unit tests only — every
+/// production caller threads a scratch map).
+#[cfg(test)]
 pub(crate) fn finalize_inputs(
     num_vertices: usize,
     seeds: &[u32],
     edge_src_global: &mut [u32],
 ) -> Vec<u32> {
-    let mut inputs: Vec<u32> = seeds.to_vec();
-    let mut local: Vec<u32> = vec![u32::MAX; num_vertices];
-    for (i, &s) in seeds.iter().enumerate() {
-        local[s as usize] = i as u32;
-    }
-    for src in edge_src_global.iter_mut() {
-        let mut id = local[*src as usize];
-        if id == u32::MAX {
-            id = inputs.len() as u32;
-            local[*src as usize] = id;
-            inputs.push(*src);
-        }
-        *src = id;
-    }
-    inputs
+    finalize_inputs_in(&mut EpochMap::default(), num_vertices, seeds, edge_src_global)
 }
 
 /// Shared helper: Hajek row-normalization. `raw[e]` holds the
 /// Horvitz–Thompson weight `1/π_e` of edge `e`; normalize per seed so each
-/// seed's incident weights sum to 1 (paper Eq. 4b / 6).
-pub(crate) fn hajek_normalize(edge_dst: &[u32], raw: &[f64], num_seeds: usize) -> Vec<f32> {
-    let mut sums = vec![0.0f64; num_seeds];
+/// seed's incident weights sum to 1 (paper Eq. 4b / 6). `sums` is reusable
+/// scratch for the per-seed totals; the returned vector is the exact-sized
+/// `edge_weight` output.
+pub(crate) fn hajek_normalize_in(
+    sums: &mut Vec<f64>,
+    edge_dst: &[u32],
+    raw: &[f64],
+    num_seeds: usize,
+) -> Vec<f32> {
+    sums.clear();
+    sums.resize(num_seeds, 0.0);
     for (e, &dst) in edge_dst.iter().enumerate() {
         sums[dst as usize] += raw[e];
     }
@@ -334,6 +419,12 @@ pub(crate) fn hajek_normalize(edge_dst: &[u32], raw: &[f64], num_seeds: usize) -
         .enumerate()
         .map(|(e, &dst)| (raw[e] / sums[dst as usize]) as f32)
         .collect()
+}
+
+/// [`hajek_normalize_in`] with throwaway scratch (unit tests only).
+#[cfg(test)]
+pub(crate) fn hajek_normalize(edge_dst: &[u32], raw: &[f64], num_seeds: usize) -> Vec<f32> {
+    hajek_normalize_in(&mut Vec::new(), edge_dst, raw, num_seeds)
 }
 
 #[cfg(test)]
@@ -398,6 +489,65 @@ mod tests {
         assert!(SamplerKind::parse("labor-x").is_none());
         assert!(SamplerKind::parse("bogus").is_none());
         assert_eq!(SamplerKind::parse("ladies").unwrap().label(), "LADIES");
+    }
+
+    #[test]
+    fn parse_sequential_variants() {
+        assert_eq!(
+            SamplerKind::parse("labor-0-seq"),
+            Some(SamplerKind::LaborSequential {
+                iterations: IterSpec::Fixed(0),
+                layer_dependent: false
+            })
+        );
+        assert_eq!(
+            SamplerKind::parse("labor-3-seq"),
+            Some(SamplerKind::LaborSequential {
+                iterations: IterSpec::Fixed(3),
+                layer_dependent: false
+            })
+        );
+        assert_eq!(
+            SamplerKind::parse("labor-*-seq"),
+            Some(SamplerKind::LaborSequential {
+                iterations: IterSpec::Converge,
+                layer_dependent: false
+            })
+        );
+        // malformed sequential names must not parse
+        assert!(SamplerKind::parse("labor--seq").is_none());
+        assert!(SamplerKind::parse("labor-x-seq").is_none());
+        assert!(SamplerKind::parse("ns-seq").is_none());
+        assert!(SamplerKind::parse("-seq").is_none());
+    }
+
+    #[test]
+    fn parse_label_round_trip() {
+        let kinds = [
+            SamplerKind::Neighbor,
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+            SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false },
+            SamplerKind::LaborSequential {
+                iterations: IterSpec::Fixed(0),
+                layer_dependent: false,
+            },
+            SamplerKind::LaborSequential {
+                iterations: IterSpec::Fixed(1),
+                layer_dependent: false,
+            },
+            SamplerKind::LaborSequential {
+                iterations: IterSpec::Converge,
+                layer_dependent: false,
+            },
+            SamplerKind::Ladies { budgets: vec![] },
+            SamplerKind::Pladies { budgets: vec![] },
+        ];
+        for kind in kinds {
+            let label = kind.label();
+            let parsed = SamplerKind::parse(&label.to_lowercase());
+            assert_eq!(parsed, Some(kind), "label {label} must round-trip through parse");
+        }
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! Hajek estimator with uniform inclusion probabilities, i.e. each sampled
 //! edge gets weight `1/d̃_s` (Eq. 6).
 
-use super::{finalize_inputs, LayerSampler, SampleCtx, SampledLayer};
+use super::scratch::EpochMap;
+use super::{finalize_inputs_in, LayerSampler, SampleCtx, SampledLayer, SamplerScratch};
 use crate::graph::CscGraph;
 use crate::rng::{mix2, StreamRng};
 
@@ -15,13 +16,49 @@ pub struct NeighborSampler {
     pub fanouts: Vec<usize>,
 }
 
+/// `StreamRng::sample_distinct` with the sparse Fisher–Yates swap table
+/// kept in an epoch-stamped map instead of a per-seed `HashMap`: same
+/// random draws, same output, no allocation. Falls back to the hashed
+/// variant for (absurd) degrees beyond `u32` range.
+fn sample_distinct_stamped(
+    rng: &mut StreamRng,
+    n: u64,
+    k: usize,
+    out: &mut Vec<u64>,
+    map: &mut EpochMap,
+) {
+    if n > u32::MAX as u64 {
+        rng.sample_distinct(n, k, out);
+        return;
+    }
+    out.clear();
+    debug_assert!(k as u64 <= n);
+    map.begin(n as usize);
+    for i in 0..k as u64 {
+        let j = i + rng.below(n - i);
+        let vi = map.get(i as u32).map(u64::from).unwrap_or(i);
+        let vj = map.get(j as u32).map(u64::from).unwrap_or(j);
+        out.push(vj);
+        map.insert(j as u32, vi as u32);
+    }
+}
+
 impl LayerSampler for NeighborSampler {
-    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+    fn sample_layer(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
         let k = self.fanouts[ctx.layer];
-        let mut edge_src: Vec<u32> = Vec::with_capacity(seeds.len() * k);
-        let mut edge_dst: Vec<u32> = Vec::with_capacity(seeds.len() * k);
-        let mut edge_weight: Vec<f32> = Vec::with_capacity(seeds.len() * k);
-        let mut picks: Vec<u64> = Vec::with_capacity(k);
+        let mut edge_src = std::mem::take(&mut scratch.edge_src);
+        let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+        let mut edge_weight = std::mem::take(&mut scratch.wbuf);
+        let mut picks = std::mem::take(&mut scratch.picks);
+        edge_src.clear();
+        edge_dst.clear();
+        edge_weight.clear();
 
         for (si, &s) in seeds.iter().enumerate() {
             let nbrs = g.in_neighbors(s);
@@ -41,7 +78,7 @@ impl LayerSampler for NeighborSampler {
                 // without replacement, independently per (batch, layer, seed)
                 let mut rng =
                     StreamRng::new(mix2(ctx.batch_seed, mix2(ctx.layer as u64, s as u64)));
-                rng.sample_distinct(d as u64, k, &mut picks);
+                sample_distinct_stamped(&mut rng, d as u64, k, &mut picks, &mut scratch.map);
                 for &j in &picks {
                     edge_src.push(nbrs[j as usize]);
                     edge_dst.push(si as u32);
@@ -50,8 +87,19 @@ impl LayerSampler for NeighborSampler {
             }
         }
 
-        let inputs = finalize_inputs(g.num_vertices(), seeds, &mut edge_src);
-        SampledLayer { seeds: seeds.to_vec(), inputs, edge_src, edge_dst, edge_weight }
+        let inputs = finalize_inputs_in(&mut scratch.map, g.num_vertices(), seeds, &mut edge_src);
+        let out = SampledLayer {
+            seeds: seeds.to_vec(),
+            inputs,
+            edge_src: edge_src.clone(),
+            edge_dst: edge_dst.clone(),
+            edge_weight: edge_weight.clone(),
+        };
+        scratch.edge_src = edge_src;
+        scratch.edge_dst = edge_dst;
+        scratch.wbuf = edge_weight;
+        scratch.picks = picks;
+        out
     }
 
     fn name(&self) -> String {
@@ -73,7 +121,7 @@ mod tests {
         let g = test_graph();
         let s = NeighborSampler { fanouts: vec![5] };
         let seeds: Vec<u32> = (0..100).collect();
-        let sl = s.sample_layer(&g, &seeds, ctx(1));
+        let sl = s.sample_layer_fresh(&g, &seeds, ctx(1));
         sl.validate(&g).unwrap();
         for (si, &d) in sl.sampled_degrees().iter().enumerate() {
             let deg = g.in_degree(seeds[si]);
@@ -85,7 +133,7 @@ mod tests {
     fn small_degrees_take_full_neighborhood() {
         let g = skewed_graph();
         let s = NeighborSampler { fanouts: vec![10] };
-        let sl = s.sample_layer(&g, &[5, 150], ctx(3));
+        let sl = s.sample_layer_fresh(&g, &[5, 150], ctx(3));
         sl.validate(&g).unwrap();
         // vertex 5: neighbors = {0, 4} (star + chain) => both taken
         let d5 = sl.sampled_degrees()[0];
@@ -96,7 +144,7 @@ mod tests {
     fn high_degree_vertex_capped() {
         let g = skewed_graph();
         let s = NeighborSampler { fanouts: vec![10] };
-        let sl = s.sample_layer(&g, &[0], ctx(7));
+        let sl = s.sample_layer_fresh(&g, &[0], ctx(7));
         assert_eq!(sl.num_edges(), 10); // vertex 0 has degree 199
         sl.validate(&g).unwrap();
     }
@@ -106,10 +154,10 @@ mod tests {
         let g = test_graph();
         let s = NeighborSampler { fanouts: vec![5] };
         let seeds: Vec<u32> = (0..50).collect();
-        let a = s.sample_layer(&g, &seeds, ctx(1));
-        let b = s.sample_layer(&g, &seeds, ctx(1));
+        let a = s.sample_layer_fresh(&g, &seeds, ctx(1));
+        let b = s.sample_layer_fresh(&g, &seeds, ctx(1));
         assert_eq!(a.edge_src, b.edge_src);
-        let c = s.sample_layer(&g, &seeds, ctx(2));
+        let c = s.sample_layer_fresh(&g, &seeds, ctx(2));
         assert_ne!(a.edge_src, c.edge_src);
     }
 
@@ -119,8 +167,8 @@ mod tests {
         // but does not change each seed's picks
         let g = test_graph();
         let s = NeighborSampler { fanouts: vec![3] };
-        let a = s.sample_layer(&g, &[10, 20], ctx(9));
-        let b = s.sample_layer(&g, &[20, 10], ctx(9));
+        let a = s.sample_layer_fresh(&g, &[10, 20], ctx(9));
+        let b = s.sample_layer_fresh(&g, &[20, 10], ctx(9));
         let edges = |sl: &SampledLayer, seed_pos: usize| -> Vec<u32> {
             let mut v: Vec<u32> = sl
                 .edge_dst
@@ -137,11 +185,29 @@ mod tests {
     }
 
     #[test]
+    fn stamped_distinct_sampling_matches_hashmap_variant() {
+        // the epoch-stamped swap table must replay the exact HashMap-based
+        // partial Fisher–Yates: same rng draws, same picks, same order
+        let mut map = EpochMap::default();
+        let mut hashed: Vec<u64> = Vec::new();
+        let mut stamped: Vec<u64> = Vec::new();
+        for case in 0..60u64 {
+            let n = 1 + (case * 13) % 200;
+            let k = ((case as usize) * 7) % (n as usize + 1);
+            let mut r1 = StreamRng::new(0x99 ^ case);
+            let mut r2 = StreamRng::new(0x99 ^ case);
+            r1.sample_distinct(n, k, &mut hashed);
+            sample_distinct_stamped(&mut r2, n, k, &mut stamped, &mut map);
+            assert_eq!(hashed, stamped, "case {case}: n={n} k={k}");
+        }
+    }
+
+    #[test]
     fn no_duplicate_neighbors_per_seed() {
         let g = test_graph();
         let s = NeighborSampler { fanouts: vec![8] };
         let seeds: Vec<u32> = (0..200).collect();
-        let sl = s.sample_layer(&g, &seeds, ctx(11));
+        let sl = s.sample_layer_fresh(&g, &seeds, ctx(11));
         // validate() already checks (src,dst) uniqueness
         sl.validate(&g).unwrap();
     }

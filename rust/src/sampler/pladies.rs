@@ -9,7 +9,7 @@
 
 use super::ladies::{connect_chosen, LayerCandidates};
 use super::poisson::solve_saturated_scale;
-use super::{LayerSampler, SampleCtx, SampledLayer};
+use super::{LayerSampler, SampleCtx, SampledLayer, SamplerScratch};
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
 
@@ -20,10 +20,17 @@ pub struct PladiesSampler {
 }
 
 impl LayerSampler for PladiesSampler {
-    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+    fn sample_layer(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
         let n = self.budgets[ctx.layer];
-        let cand = LayerCandidates::build(g, seeds);
+        let cand = LayerCandidates::build_in(g, seeds, scratch);
         if cand.candidates.is_empty() {
+            cand.recycle(scratch);
             return SampledLayer {
                 seeds: seeds.to_vec(),
                 inputs: seeds.to_vec(),
@@ -34,20 +41,20 @@ impl LayerSampler for PladiesSampler {
         // shared per-candidate variates: PLADIES inherits layer sampling's
         // collective decision-making (§3.1)
         let rng = HashRng::new(mix2(ctx.batch_seed, 0x91AD1E5 ^ ctx.layer as u64));
-        let chosen: Vec<Option<f64>> = cand
-            .candidates
-            .iter()
-            .enumerate()
-            .map(|(ti, &t)| {
-                let p = (alpha * cand.mass[ti]).min(1.0);
-                if rng.uniform(t as u64) <= p {
-                    Some(1.0 / p)
-                } else {
-                    None
-                }
-            })
-            .collect();
-        connect_chosen(g, seeds, &cand, &chosen)
+        let mut chosen = std::mem::take(&mut scratch.chosen);
+        chosen.clear();
+        chosen.extend(cand.candidates.iter().enumerate().map(|(ti, &t)| {
+            let p = (alpha * cand.mass[ti]).min(1.0);
+            if rng.uniform(t as u64) <= p {
+                Some(1.0 / p)
+            } else {
+                None
+            }
+        }));
+        let out = connect_chosen(g, seeds, &cand, &chosen, scratch);
+        scratch.chosen = chosen;
+        cand.recycle(scratch);
+        out
     }
 
     fn name(&self) -> String {
@@ -75,7 +82,7 @@ mod tests {
         let reps = 400;
         let mut total = 0usize;
         for b in 0..reps {
-            let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
             sl.validate(&g).unwrap();
             total += sample_vertices(&sl);
         }
@@ -95,10 +102,10 @@ mod tests {
         let mut lg = 0usize;
         for b in 0..100 {
             sm += sample_vertices(
-                &small.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
+                &small.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
             );
             lg += sample_vertices(
-                &large.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
+                &large.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
             );
         }
         assert!(lg > sm);
@@ -123,7 +130,7 @@ mod tests {
         let mut est = vec![0.0f64; seeds.len()];
         let mut cnt = vec![0usize; seeds.len()];
         for b in 0..reps {
-            let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
             let mut got: Vec<f64> = vec![0.0; seeds.len()];
             let mut has: Vec<bool> = vec![false; seeds.len()];
             for e in 0..sl.num_edges() {
@@ -153,8 +160,8 @@ mod tests {
         let g = test_graph();
         let seeds: Vec<u32> = (0..50).collect();
         let s = PladiesSampler { budgets: vec![40] };
-        let a = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
-        let b = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
+        let a = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
+        let b = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
         assert_eq!(a.edge_src, b.edge_src);
         assert_eq!(a.edge_weight, b.edge_weight);
     }

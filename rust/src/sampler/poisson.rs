@@ -58,15 +58,36 @@ pub fn expected_size(w: &[f64], alpha: f64) -> f64 {
 /// `r` and `p` must have equal length; `p[t] > 0`. Runs in expected O(n)
 /// via quickselect (`select_nth_unstable`, Hoare's algorithm).
 pub fn sequential_poisson_pick(r: &[f64], p: &[f64], k: usize) -> Vec<usize> {
+    let mut keyed = Vec::new();
+    let mut out = Vec::new();
+    sequential_poisson_pick_into(r, p, k, &mut keyed, &mut out);
+    out
+}
+
+/// [`sequential_poisson_pick`] writing into caller-provided buffers:
+/// `keyed` is the quickselect work array, `out` receives the picked
+/// indices. With warm buffers (e.g. from a
+/// [`SamplerScratch`](super::SamplerScratch)) the per-seed rounding of
+/// LABOR-seq performs no allocation. Results are identical to the
+/// allocating variant for any buffer state.
+pub fn sequential_poisson_pick_into(
+    r: &[f64],
+    p: &[f64],
+    k: usize,
+    keyed: &mut Vec<(f64, usize)>,
+    out: &mut Vec<usize>,
+) {
     assert_eq!(r.len(), p.len());
     let n = r.len();
+    out.clear();
     if k >= n {
-        return (0..n).collect();
+        out.extend(0..n);
+        return;
     }
-    let mut keyed: Vec<(f64, usize)> =
-        (0..n).map(|t| (r[t] / p[t], t)).collect();
+    keyed.clear();
+    keyed.extend((0..n).map(|t| (r[t] / p[t], t)));
     keyed.select_nth_unstable_by(k, |a, b| a.0.partial_cmp(&b.0).unwrap());
-    keyed[..k].iter().map(|&(_, t)| t).collect()
+    out.extend(keyed[..k].iter().map(|&(_, t)| t));
 }
 
 #[cfg(test)]
@@ -131,6 +152,22 @@ mod tests {
         let r = [0.5, 0.2];
         let p = [1.0, 1.0];
         assert_eq!(sequential_poisson_pick(&r, &p, 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn pick_into_matches_allocating_variant_with_reused_buffers() {
+        let mut rng = StreamRng::new(0x5EA);
+        let mut keyed: Vec<(f64, usize)> = Vec::new();
+        let mut out: Vec<usize> = Vec::new();
+        for _ in 0..30 {
+            let n = 1 + rng.below(150) as usize;
+            let r = vec_in(&mut rng, n, 0.0, 1.0);
+            let p = vec_in(&mut rng, n, 0.01, 1.0);
+            let k = rng.below(n as u64 + 2) as usize;
+            let fresh = sequential_poisson_pick(&r, &p, k);
+            sequential_poisson_pick_into(&r, &p, k, &mut keyed, &mut out);
+            assert_eq!(fresh, out, "n={n} k={k}");
+        }
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Reusable scratch memory for the sampling hot path.
+//!
+//! Every sampled layer needs two kinds of transient memory: an O(|V|)
+//! vertex → local-id mapping (candidate indexing, `finalize_inputs`) and a
+//! family of O(batch)/O(edges) work buffers (edge accumulators, π vectors,
+//! Hajek row sums, sequential-Poisson keys, …). Allocating and memsetting
+//! these per call dominates the L3 hot path on large graphs with small
+//! batches — the same bottleneck GraphSAINT/BGL-style pipelines attack
+//! with preallocated per-worker buffers.
+//!
+//! [`SamplerScratch`] is an arena holding all of them. The O(|V|) maps are
+//! [`EpochMap`]s: epoch-stamped arrays that are invalidated in O(1) by
+//! bumping a generation counter instead of being refilled, so a warm
+//! scratch performs **no per-batch O(|V|) work or allocation**. The work
+//! buffers are `Vec`s whose capacity survives across calls (samplers
+//! `mem::take` them, `clear()` — which keeps capacity — and return them),
+//! so steady-state sampling touches the allocator only for the returned
+//! [`SampledLayer`](super::SampledLayer) vectors themselves.
+//!
+//! Reuse is an optimization only: output is **bit-identical** whether a
+//! scratch is fresh or has been reused for thousands of batches (enforced
+//! by `tests/scratch_reuse.rs`), because no sampler reads scratch state
+//! that survives `begin()`/`clear()`.
+//!
+//! Threading model: a scratch is not `Sync` state — give each sampling
+//! thread its own long-lived instance, as
+//! [`SamplingPipeline`](crate::coordinator::pipeline::SamplingPipeline)
+//! does for its workers.
+//!
+//! ```
+//! use labor_gnn::graph::builder::CscBuilder;
+//! use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
+//!
+//! let g = CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap();
+//! let sampler = MultiLayerSampler::new(
+//!     SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+//!     &[2, 2],
+//! );
+//! let mut scratch = SamplerScratch::new();
+//! let a = sampler.sample(&g, &[2, 3], 0, &mut scratch); // cold: sizes the arena
+//! let b = sampler.sample(&g, &[2, 3], 0, &mut scratch); // warm: reuses it
+//! assert_eq!(a.layers[0].edge_src, b.layers[0].edge_src);
+//! ```
+
+/// An epoch-stamped `u32 → u32` map over a dense key domain (vertex ids or
+/// per-seed neighbor positions).
+///
+/// `begin(domain)` starts a new generation in O(1) (amortized): entries
+/// written under earlier generations simply stop matching the current
+/// epoch, so nothing is cleared. The backing arrays grow lazily to the
+/// largest domain seen and are reused for every subsequent batch — this is
+/// what turns the per-layer `vec![u32::MAX; |V|]` allocation into a no-op.
+#[derive(Clone, Debug, Default)]
+pub struct EpochMap {
+    stamp: Vec<u32>,
+    slot: Vec<u32>,
+    epoch: u32,
+}
+
+impl EpochMap {
+    /// Start a new generation covering keys `0..domain`. All previous
+    /// entries become absent. O(1) except when the domain grows (first
+    /// batch, or a larger graph) or the 32-bit epoch wraps (every 2³²
+    /// generations, when the stamps are rewritten once).
+    pub fn begin(&mut self, domain: usize) {
+        if self.stamp.len() < domain {
+            self.stamp.resize(domain, 0);
+            self.slot.resize(domain, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+    }
+
+    /// Value of `key` in the current generation, if set.
+    #[inline(always)]
+    pub fn get(&self, key: u32) -> Option<u32> {
+        if self.stamp[key as usize] == self.epoch {
+            Some(self.slot[key as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Set `key` in the current generation.
+    #[inline(always)]
+    pub fn insert(&mut self, key: u32, value: u32) {
+        self.stamp[key as usize] = self.epoch;
+        self.slot[key as usize] = value;
+    }
+
+    /// Largest domain this map has been sized for.
+    pub fn domain(&self) -> usize {
+        self.stamp.len()
+    }
+}
+
+/// Arena of reusable sampler buffers; see the [module docs](self).
+///
+/// Create one per sampling thread and pass it to every
+/// [`sample`](super::MultiLayerSampler::sample) /
+/// [`sample_layer`](super::LayerSampler::sample_layer) call. Callers that
+/// sample once and don't care use
+/// [`sample_fresh`](super::MultiLayerSampler::sample_fresh), which owns a
+/// throwaway scratch internally.
+#[derive(Debug, Default)]
+pub struct SamplerScratch {
+    /// General vertex map: candidate indexing (LABOR/NS/weighted) and
+    /// `finalize_inputs`. Safe to share between the two because candidate
+    /// indexing always completes before input finalization begins.
+    pub(crate) map: EpochMap,
+    /// Second vertex map, lent to `LayerCandidates` (LADIES/PLADIES) whose
+    /// candidate index must stay alive *across* `finalize_inputs`.
+    pub(crate) cand_map: EpochMap,
+
+    // --- LABOR layer-state pool (lent to `LaborLayerState::new_in`) ---
+    pub(crate) candidates: Vec<u32>,
+    pub(crate) nbr_local: Vec<u32>,
+    pub(crate) nbr_off: Vec<usize>,
+    pub(crate) pi: Vec<f64>,
+    pub(crate) c: Vec<f64>,
+    pub(crate) maxc: Vec<f64>,
+    pub(crate) solver_pi: Vec<f64>,
+
+    // --- per-layer sampling buffers (all samplers) ---
+    pub(crate) r: Vec<f64>,
+    pub(crate) edge_src: Vec<u32>,
+    pub(crate) edge_dst: Vec<u32>,
+    pub(crate) raw: Vec<f64>,
+    pub(crate) wbuf: Vec<f32>,
+    pub(crate) sums: Vec<f64>,
+
+    // --- sequential Poisson rounding (LABOR-seq) ---
+    pub(crate) sp_probs: Vec<f64>,
+    pub(crate) sp_r: Vec<f64>,
+    pub(crate) sp_local: Vec<usize>,
+    pub(crate) sp_keys: Vec<(f64, usize)>,
+    pub(crate) sp_picked: Vec<usize>,
+
+    // --- Neighbor Sampling ---
+    pub(crate) picks: Vec<u64>,
+
+    // --- LADIES / PLADIES pool (lent to `LayerCandidates::build_in`) ---
+    pub(crate) mass: Vec<f64>,
+    pub(crate) chosen: Vec<Option<f64>>,
+
+    // --- weighted LABOR (per-edge flat buffers) ---
+    pub(crate) w_pi: Vec<f64>,
+    pub(crate) w_a: Vec<f64>,
+}
+
+impl SamplerScratch {
+    /// An empty arena; buffers grow to steady-state size over the first
+    /// few batches and are reused from then on.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena with both vertex maps pre-sized for a graph with
+    /// `num_vertices` vertices, so even the first batch skips the O(|V|)
+    /// allocation.
+    pub fn for_vertices(num_vertices: usize) -> Self {
+        let mut s = Self::default();
+        s.map.begin(num_vertices);
+        s.cand_map.begin(num_vertices);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_map_basic_insert_get() {
+        let mut m = EpochMap::default();
+        m.begin(10);
+        assert_eq!(m.get(3), None);
+        m.insert(3, 7);
+        assert_eq!(m.get(3), Some(7));
+        assert_eq!(m.get(4), None);
+    }
+
+    #[test]
+    fn begin_invalidates_previous_generation() {
+        let mut m = EpochMap::default();
+        m.begin(5);
+        m.insert(0, 1);
+        m.insert(4, 2);
+        m.begin(5);
+        assert_eq!(m.get(0), None);
+        assert_eq!(m.get(4), None);
+        m.insert(0, 9);
+        assert_eq!(m.get(0), Some(9));
+    }
+
+    #[test]
+    fn domain_grows_lazily_and_new_keys_start_absent() {
+        let mut m = EpochMap::default();
+        m.begin(4);
+        m.insert(3, 3);
+        m.begin(8); // grow mid-life: new keys must not alias old stamps
+        assert_eq!(m.domain(), 8);
+        for k in 0..8 {
+            assert_eq!(m.get(k), None, "key {k}");
+        }
+    }
+
+    #[test]
+    fn epoch_wrap_clears_stale_stamps() {
+        let mut m = EpochMap::default();
+        m.begin(3);
+        m.insert(1, 42);
+        // force a wrap: set the internal epoch to the max and begin again
+        m.epoch = u32::MAX;
+        m.begin(3);
+        assert_eq!(m.get(1), None, "stamp from a pre-wrap generation must not match");
+        m.insert(1, 5);
+        assert_eq!(m.get(1), Some(5));
+    }
+
+    #[test]
+    fn scratch_constructors() {
+        let s = SamplerScratch::new();
+        assert_eq!(s.map.domain(), 0);
+        let s = SamplerScratch::for_vertices(100);
+        assert_eq!(s.map.domain(), 100);
+        assert_eq!(s.cand_map.domain(), 100);
+    }
+}

@@ -7,10 +7,12 @@
 //! `A_ts·M_t` with HT weights `1/min(1, c_s π_ts)` and Hajek
 //! row-normalization against `A_{*s}`.
 
-use super::{finalize_inputs, IterSpec, LayerSampler, SampleCtx, SampledLayer};
+use super::{
+    finalize_inputs_in, hajek_normalize_in, IterSpec, LayerSampler, SampleCtx, SampledLayer,
+    SamplerScratch,
+};
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
-use std::collections::HashMap;
 
 /// Weighted LABOR layer sampler (graphs must carry edge weights).
 pub struct WeightedLaborSampler {
@@ -60,103 +62,102 @@ pub fn solve_cs_weighted(pi: &[f64], a: &[f64], v: f64) -> f64 {
 }
 
 impl LayerSampler for WeightedLaborSampler {
-    fn sample_layer(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
+    fn sample_layer(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
         let k = self.fanouts[ctx.layer];
         assert!(g.weights.is_some(), "WeightedLaborSampler requires an edge-weighted graph");
 
-        // candidate set
-        let mut candidates: Vec<u32> = Vec::new();
-        let mut index: HashMap<u32, u32> = HashMap::new();
-        for &s in seeds {
-            for &t in g.in_neighbors(s) {
-                index.entry(t).or_insert_with(|| {
-                    candidates.push(t);
-                    candidates.len() as u32 - 1
-                });
-            }
-        }
-
-        // π^(0) = A (per-edge, Eq. 25): represent as per-candidate value by
-        // taking the max incident weight as the starting point, then run
-        // the weighted fixed point; with 0 iterations we use per-edge A_ts
-        // directly (exactly the paper's π^(0)).
-        let mut pi_edge: HashMap<(u32, u32), f64> = HashMap::new();
+        // Flat CSR-like layout over the seed neighborhoods (§Perf: the old
+        // implementation kept π as a HashMap keyed by (t, s); the arena
+        // version pre-translates every edge to a candidate-local id once,
+        // so the fixed point and the sampling pass are pure array walks).
+        // `nbr_cand[e]` = candidate id of edge e (seed-major order),
+        // `pi_edge[e]` = π_ts, `a_edge[e]` = A_ts, offsets in `nbr_off`.
+        let mut candidates = std::mem::take(&mut scratch.candidates);
+        let mut nbr_cand = std::mem::take(&mut scratch.nbr_local);
+        let mut nbr_off = std::mem::take(&mut scratch.nbr_off);
+        let mut pi_edge = std::mem::take(&mut scratch.w_pi);
+        let mut a_edge = std::mem::take(&mut scratch.w_a);
+        candidates.clear();
+        nbr_cand.clear();
+        nbr_off.clear();
+        pi_edge.clear();
+        a_edge.clear();
+        scratch.map.begin(g.num_vertices());
+        nbr_off.push(0);
+        // π^(0) = A per edge (Eq. 25): with 0 iterations we use A_ts
+        // directly, exactly the paper's π^(0)
         for &s in seeds {
             let ws = g.in_weights(s).unwrap();
             for (&t, &w) in g.in_neighbors(s).iter().zip(ws) {
-                pi_edge.insert((t, s), w as f64);
+                let ti = match scratch.map.get(t) {
+                    Some(ti) => ti,
+                    None => {
+                        let ti = candidates.len() as u32;
+                        scratch.map.insert(t, ti);
+                        candidates.push(t);
+                        ti
+                    }
+                };
+                nbr_cand.push(ti);
+                pi_edge.push(w as f64);
+                a_edge.push(w as f64);
             }
+            nbr_off.push(nbr_cand.len());
         }
 
         let iters = match self.iterations {
             IterSpec::Fixed(n) => n,
             IterSpec::Converge => 50,
         };
-        let mut c = vec![0.0f64; seeds.len()];
-        let mut pis: Vec<f64> = Vec::new();
-        let mut aas: Vec<f64> = Vec::new();
-        let mut last_obj = f64::INFINITY;
-        for it in 0..=iters {
-            // compute c_s for current π
-            for (si, &s) in seeds.iter().enumerate() {
-                let nbrs = g.in_neighbors(s);
-                let d = nbrs.len();
+        let mut c = std::mem::take(&mut scratch.c);
+        c.clear();
+        c.resize(seeds.len(), 0.0);
+        let mut maxv = std::mem::take(&mut scratch.maxc);
+        let recompute_c = |c: &mut [f64], pi_edge: &[f64], a_edge: &[f64]| {
+            for si in 0..seeds.len() {
+                let (lo, hi) = (nbr_off[si], nbr_off[si + 1]);
+                let d = hi - lo;
                 if d == 0 {
                     c[si] = 0.0;
                     continue;
                 }
-                let ws = g.in_weights(s).unwrap();
-                pis.clear();
-                aas.clear();
-                for (&t, &a) in nbrs.iter().zip(ws) {
-                    pis.push(pi_edge[&(t, s)]);
-                    aas.push(a as f64);
-                }
                 let v = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
-                c[si] = solve_cs_weighted(&pis, &aas, v);
+                c[si] = solve_cs_weighted(&pi_edge[lo..hi], &a_edge[lo..hi], v);
             }
+        };
+        let mut last_obj = f64::INFINITY;
+        for it in 0..=iters {
+            recompute_c(&mut c, &pi_edge, &a_edge);
             if it == iters {
                 break;
             }
             // π update (Eq. 25): per-candidate max over incident edges
-            let mut maxv = vec![0.0f64; candidates.len()];
-            for (si, &s) in seeds.iter().enumerate() {
-                for &t in g.in_neighbors(s) {
-                    let ti = index[&t] as usize;
-                    let val = c[si] * pi_edge[&(t, s)];
+            maxv.clear();
+            maxv.resize(candidates.len(), 0.0);
+            for si in 0..seeds.len() {
+                for e in nbr_off[si]..nbr_off[si + 1] {
+                    let val = c[si] * pi_edge[e];
+                    let ti = nbr_cand[e] as usize;
                     if val > maxv[ti] {
                         maxv[ti] = val;
                     }
                 }
             }
-            for &s in seeds {
-                for &t in g.in_neighbors(s) {
-                    pi_edge.insert((t, s), maxv[index[&t] as usize].max(f64::MIN_POSITIVE));
-                }
+            for (e, p) in pi_edge.iter_mut().enumerate() {
+                *p = maxv[nbr_cand[e] as usize].max(f64::MIN_POSITIVE);
             }
             // convergence check on objective (24)
             if matches!(self.iterations, IterSpec::Converge) {
                 let obj: f64 = maxv.iter().map(|&m| m.min(1.0)).sum();
                 if (last_obj - obj).abs() <= 1e-4 * last_obj.max(1.0) {
-                    // one final c recompute happens on the next loop head
-                    let _ = obj;
-                    // finish: recompute c and break
-                    for (si, &s) in seeds.iter().enumerate() {
-                        let nbrs = g.in_neighbors(s);
-                        let d = nbrs.len();
-                        if d == 0 {
-                            continue;
-                        }
-                        let ws = g.in_weights(s).unwrap();
-                        pis.clear();
-                        aas.clear();
-                        for (&t, &a) in nbrs.iter().zip(ws) {
-                            pis.push(pi_edge[&(t, s)]);
-                            aas.push(a as f64);
-                        }
-                        let v = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
-                        c[si] = solve_cs_weighted(&pis, &aas, v);
-                    }
+                    // finish: recompute c for the final π and break
+                    recompute_c(&mut c, &pi_edge, &a_edge);
                     break;
                 }
                 last_obj = obj;
@@ -165,13 +166,16 @@ impl LayerSampler for WeightedLaborSampler {
 
         // sample with shared r_t
         let rng = HashRng::new(mix2(ctx.batch_seed, 0xAE1 ^ ctx.layer as u64));
-        let mut edge_src: Vec<u32> = Vec::new();
-        let mut edge_dst: Vec<u32> = Vec::new();
-        let mut raw: Vec<f64> = Vec::new();
+        let mut edge_src = std::mem::take(&mut scratch.edge_src);
+        let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+        let mut raw = std::mem::take(&mut scratch.raw);
+        edge_src.clear();
+        edge_dst.clear();
+        raw.clear();
         for (si, &s) in seeds.iter().enumerate() {
             let ws = g.in_weights(s).unwrap();
-            for (&t, &a) in g.in_neighbors(s).iter().zip(ws) {
-                let p = (c[si] * pi_edge[&(t, s)]).min(1.0);
+            for (ei, (&t, &a)) in g.in_neighbors(s).iter().zip(ws).enumerate() {
+                let p = (c[si] * pi_edge[nbr_off[si] + ei]).min(1.0);
                 if p > 0.0 && rng.uniform(t as u64) <= p {
                     edge_src.push(t);
                     edge_dst.push(si as u32);
@@ -180,9 +184,26 @@ impl LayerSampler for WeightedLaborSampler {
                 }
             }
         }
-        let edge_weight = super::hajek_normalize(&edge_dst, &raw, seeds.len());
-        let inputs = finalize_inputs(g.num_vertices(), seeds, &mut edge_src);
-        SampledLayer { seeds: seeds.to_vec(), inputs, edge_src, edge_dst, edge_weight }
+        let edge_weight = hajek_normalize_in(&mut scratch.sums, &edge_dst, &raw, seeds.len());
+        let inputs = finalize_inputs_in(&mut scratch.map, g.num_vertices(), seeds, &mut edge_src);
+        let out = SampledLayer {
+            seeds: seeds.to_vec(),
+            inputs,
+            edge_src: edge_src.clone(),
+            edge_dst: edge_dst.clone(),
+            edge_weight,
+        };
+        scratch.candidates = candidates;
+        scratch.nbr_local = nbr_cand;
+        scratch.nbr_off = nbr_off;
+        scratch.w_pi = pi_edge;
+        scratch.w_a = a_edge;
+        scratch.c = c;
+        scratch.maxc = maxv;
+        scratch.edge_src = edge_src;
+        scratch.edge_dst = edge_dst;
+        scratch.raw = raw;
+        out
     }
 
     fn name(&self) -> String {
@@ -259,7 +280,7 @@ mod tests {
         let g = weighted_graph(3);
         let seeds: Vec<u32> = (0..40).collect();
         let s = WeightedLaborSampler { fanouts: vec![5], iterations: IterSpec::Fixed(1) };
-        let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: 1, layer: 0 });
+        let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: 1, layer: 0 });
         sl.validate(&g).unwrap();
 
         // statistical: estimator of weighted mean aggregation ≈ exact
@@ -279,7 +300,7 @@ mod tests {
         let mut est = vec![0.0f64; seeds.len()];
         let mut cnt = vec![0usize; seeds.len()];
         for b in 0..reps {
-            let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
             let mut got = vec![0.0f64; seeds.len()];
             let mut has = vec![false; seeds.len()];
             for e in 0..sl.num_edges() {
@@ -331,7 +352,7 @@ mod tests {
         let reps = 1500;
         let mut deg = vec![0.0f64; seeds.len()];
         for b in 0..reps {
-            let sl = s.sample_layer(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
             for (si, d) in sl.sampled_degrees().iter().enumerate() {
                 deg[si] += *d as f64;
             }

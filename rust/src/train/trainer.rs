@@ -6,7 +6,7 @@ use super::state::TrainState;
 use crate::data::Dataset;
 use crate::runtime::engine::CompiledModel;
 use crate::runtime::packer::Packer;
-use crate::sampler::{Mfg, MultiLayerSampler};
+use crate::sampler::{Mfg, MultiLayerSampler, SamplerScratch};
 use anyhow::Result;
 use xla::Literal;
 
@@ -85,8 +85,11 @@ impl Trainer {
         let c = self.model.cfg.num_classes;
         let mut num = 0.0f64;
         let mut den = 0.0f64;
+        // one scratch arena reused across all evaluation chunks
+        let mut scratch = SamplerScratch::new();
         for (bi, chunk) in split.chunks(b).enumerate() {
-            let mfg = sampler.sample(&ds.graph, chunk, eval_seed ^ ((bi as u64) << 17));
+            let mfg =
+                sampler.sample(&ds.graph, chunk, eval_seed ^ ((bi as u64) << 17), &mut scratch);
             let packed = self.packer.pack(ds, &mfg)?;
             let mut args: Vec<&Literal> = self.state.params.iter().collect();
             args.push(&packed.feats);

@@ -11,7 +11,7 @@
 
 use crate::data::Dataset;
 use crate::rng::StreamRng;
-use crate::sampler::{MultiLayerSampler, SamplerKind};
+use crate::sampler::{MultiLayerSampler, SamplerKind, SamplerScratch};
 use crate::util::binary_search_max;
 
 /// Mean deepest-layer vertex count at a given batch size (sampled over
@@ -26,12 +26,13 @@ pub fn mean_deepest_vertices(
     let sampler = MultiLayerSampler::new(kind.clone(), fanouts);
     let train = &ds.splits.train;
     let mut total = 0.0;
+    let mut scratch = SamplerScratch::new();
     for r in 0..repeats {
         let start = (r * batch_size * 7919) % train.len();
         let seeds: Vec<u32> = (0..batch_size.min(train.len()))
             .map(|i| train[(start + i) % train.len()])
             .collect();
-        let mfg = sampler.sample(&ds.graph, &seeds, 0xB0D6E7 ^ r as u64);
+        let mfg = sampler.sample(&ds.graph, &seeds, 0xB0D6E7 ^ r as u64, &mut scratch);
         total += *mfg.vertex_counts().last().unwrap() as f64;
     }
     total / repeats as f64
@@ -68,12 +69,13 @@ pub fn ladies_budgets_matching(
     let sampler = MultiLayerSampler::new(reference.clone(), fanouts);
     let train = &ds.splits.train;
     let mut sums = vec![0.0f64; fanouts.len()];
+    let mut scratch = SamplerScratch::new();
     for r in 0..repeats {
         let start = (r * batch_size * 104729) % train.len();
         let seeds: Vec<u32> = (0..batch_size.min(train.len()))
             .map(|i| train[(start + i) % train.len()])
             .collect();
-        let mfg = sampler.sample(&ds.graph, &seeds, 0x1AD ^ r as u64);
+        let mfg = sampler.sample(&ds.graph, &seeds, 0x1AD ^ r as u64, &mut scratch);
         let mut prev = seeds.len();
         for (d, v) in mfg.vertex_counts().iter().enumerate() {
             sums[d] += (*v - prev) as f64;

@@ -38,7 +38,7 @@ fn artifact_loads_and_executes_train_step() {
     let mut trainer = Trainer::new(model, 7).unwrap();
     let b = trainer.model.cfg.batch_size.min(ds.splits.train.len());
     let seeds: Vec<u32> = ds.splits.train[..b].to_vec();
-    let mfg = sampler.sample(&ds.graph, &seeds, 0);
+    let mfg = sampler.sample_fresh(&ds.graph, &seeds, 0);
     let rec = trainer.step(&ds, &mfg).unwrap();
     assert!(rec.loss.is_finite(), "loss must be finite, got {}", rec.loss);
     assert!(rec.loss > 0.0);
@@ -60,13 +60,14 @@ fn training_reduces_loss_and_learns() {
     let b = trainer.model.cfg.batch_size;
     let mut first = None;
     let mut last = 0.0f32;
+    let mut scratch = labor_gnn::sampler::SamplerScratch::new();
     for step in 0..40u64 {
         let start = (step as usize * b) % ds.splits.train.len();
         let mut seeds: Vec<u32> = Vec::with_capacity(b);
         for i in 0..b.min(ds.splits.train.len()) {
             seeds.push(ds.splits.train[(start + i) % ds.splits.train.len()]);
         }
-        let mfg = sampler.sample(&ds.graph, &seeds, step);
+        let mfg = sampler.sample(&ds.graph, &seeds, step, &mut scratch);
         let rec = trainer.step(&ds, &mfg).unwrap();
         if first.is_none() {
             first = Some(rec.loss);
@@ -104,7 +105,7 @@ fn all_samplers_drive_the_same_compiled_model() {
         let sampler = MultiLayerSampler::new(kind, &[8, 8, 8]);
         let mut trainer = Trainer::new(model, 11).unwrap();
         let seeds: Vec<u32> = ds.splits.train[..trainer.model.cfg.batch_size].to_vec();
-        let mfg = sampler.sample(&ds.graph, &seeds, 1);
+        let mfg = sampler.sample_fresh(&ds.graph, &seeds, 1);
         let rec = trainer.step(&ds, &mfg).unwrap();
         assert!(rec.loss.is_finite(), "{label}: loss {}", rec.loss);
     }

@@ -4,7 +4,7 @@
 use labor_gnn::graph::gen::{dc_sbm, rmat, DcSbmConfig, RmatConfig};
 use labor_gnn::graph::CscGraph;
 use labor_gnn::rng::StreamRng;
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
 
 fn random_graph(seed: u64) -> CscGraph {
     let mut rng = StreamRng::new(seed);
@@ -45,6 +45,9 @@ fn all_kinds() -> Vec<SamplerKind> {
 /// seeds of layer l+1).
 #[test]
 fn mfg_layers_are_valid_and_chained_for_all_samplers() {
+    // one scratch shared across graphs, seed sets, and sampler kinds:
+    // validity must be unaffected by arbitrary prior reuse
+    let mut scratch = SamplerScratch::new();
     for case in 0..6u64 {
         let g = random_graph(0xBEEF ^ case);
         let nv = g.num_vertices() as u32;
@@ -56,7 +59,7 @@ fn mfg_layers_are_valid_and_chained_for_all_samplers() {
         for kind in all_kinds() {
             let label = kind.label();
             let s = MultiLayerSampler::new(kind, &[7, 7, 7]);
-            let mfg = s.sample(&g, &seeds, case);
+            let mfg = s.sample(&g, &seeds, case, &mut scratch);
             assert_eq!(mfg.layers.len(), 3, "{label}");
             assert_eq!(mfg.layers[0].seeds, seeds, "{label}");
             for (l, layer) in mfg.layers.iter().enumerate() {
@@ -83,10 +86,12 @@ fn mfg_layers_are_valid_and_chained_for_all_samplers() {
 fn sampling_is_deterministic_for_all_kinds() {
     let g = random_graph(77);
     let seeds: Vec<u32> = (0..80).collect();
+    let mut scratch = SamplerScratch::new();
     for kind in all_kinds() {
         let label = kind.label();
-        let a = MultiLayerSampler::new(kind.clone(), &[5, 5]).sample(&g, &seeds, 9);
-        let b = MultiLayerSampler::new(kind, &[5, 5]).sample(&g, &seeds, 9);
+        // warm-scratch and fresh-scratch runs must agree exactly
+        let a = MultiLayerSampler::new(kind.clone(), &[5, 5]).sample(&g, &seeds, 9, &mut scratch);
+        let b = MultiLayerSampler::new(kind, &[5, 5]).sample_fresh(&g, &seeds, 9);
         for l in 0..2 {
             assert_eq!(a.layers[l].edge_src, b.layers[l].edge_src, "{label} layer {l}");
             assert_eq!(a.layers[l].edge_weight, b.layers[l].edge_weight, "{label} layer {l}");
@@ -110,9 +115,10 @@ fn vertex_efficiency_ordering_on_dense_graph() {
     let seeds: Vec<u32> = (0..400).collect();
     let v3 = |kind: SamplerKind| -> f64 {
         let s = MultiLayerSampler::new(kind, &[10, 10, 10]);
+        let mut scratch = SamplerScratch::new();
         let mut total = 0usize;
         for b in 0..5 {
-            total += *s.sample(&g, &seeds, b).vertex_counts().last().unwrap();
+            total += *s.sample(&g, &seeds, b, &mut scratch).vertex_counts().last().unwrap();
         }
         total as f64 / 5.0
     };
@@ -136,9 +142,10 @@ fn layer_dependency_increases_interlayer_overlap() {
             SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: dep },
             &[5, 5],
         );
+        let mut scratch = SamplerScratch::new();
         let mut frac = 0.0;
         for b in 0..10u64 {
-            let mfg = s.sample(&g, &seeds, b);
+            let mfg = s.sample(&g, &seeds, b, &mut scratch);
             let a: std::collections::HashSet<u32> =
                 mfg.layers[0].inputs.iter().copied().collect();
             let hits = mfg.layers[1]
@@ -166,7 +173,7 @@ fn degenerate_fanouts_are_safe() {
             SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
         ] {
             let s = MultiLayerSampler::new(kind.clone(), &[k]);
-            let mfg = s.sample(&g, &seeds, 3);
+            let mfg = s.sample_fresh(&g, &seeds, 3);
             mfg.layers[0].validate(&g).unwrap();
             if k >= 1000 {
                 // fanout >= degree: exact neighborhood for every seed
@@ -187,7 +194,7 @@ fn isolated_seeds_are_handled() {
     let g = b.build().unwrap();
     for kind in all_kinds() {
         let s = MultiLayerSampler::new(kind.clone(), &[4, 4]);
-        let mfg = s.sample(&g, &[1, 5, 9], 0);
+        let mfg = s.sample_fresh(&g, &[1, 5, 9], 0);
         mfg.layers[0].validate(&g).unwrap();
         assert!(mfg.layers[0].num_edges() <= 1, "{}", kind.label());
     }

@@ -1,0 +1,152 @@
+//! Scratch-arena equivalence regression: reusing one [`SamplerScratch`]
+//! across many batches must be **bit-identical** to a fresh scratch per
+//! call — for every sampler kind, every layer, and every output field.
+//! This is the safety net under the zero-allocation hot-path refactor:
+//! any sampler that accidentally reads state surviving a `begin()`/
+//! `clear()` shows up here as a diff, not as a silent statistics shift.
+
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::weighted::WeightedLaborSampler;
+use labor_gnn::sampler::{
+    IterSpec, LayerSampler, Mfg, MultiLayerSampler, SampleCtx, SamplerKind, SamplerScratch,
+};
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+/// Every `SamplerKind` variant, with budgets for the layer samplers.
+fn all_kinds() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: true },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::LaborSequential { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Ladies { budgets: vec![120, 200] },
+        SamplerKind::Pladies { budgets: vec![120, 200] },
+    ]
+}
+
+fn assert_mfg_eq(a: &Mfg, b: &Mfg, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.seeds, lb.seeds, "{what} layer {l}: seeds");
+        assert_eq!(la.inputs, lb.inputs, "{what} layer {l}: inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l}: edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l}: edge_dst");
+        // bit-exact weights: compare the raw f32 bits, not approximate
+        let wa: Vec<u32> = la.edge_weight.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = lb.edge_weight.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "{what} layer {l}: edge_weight bits");
+    }
+}
+
+/// One scratch reused over many batches with *varying* seed sets (so every
+/// internal buffer shrinks and grows) against a fresh scratch per batch.
+#[test]
+fn warm_scratch_mfgs_are_bit_identical_to_fresh_for_every_kind() {
+    let g = dense_graph();
+    let nv = g.num_vertices() as u32;
+    let mut rng = StreamRng::new(0x5C4A7C8);
+    for kind in all_kinds() {
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[5, 7]);
+        let mut scratch = SamplerScratch::new();
+        for batch in 0..30u64 {
+            // varying batch size and seed window per batch
+            let bs = 16 + rng.below(120) as u32;
+            let start = rng.below(nv as u64) as u32;
+            let mut seeds: Vec<u32> = (0..bs).map(|i| (start + i * 3) % nv).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            let warm = sampler.sample(&g, &seeds, batch, &mut scratch);
+            let fresh = sampler.sample_fresh(&g, &seeds, batch);
+            assert_mfg_eq(&warm, &fresh, &format!("{label} batch {batch}"));
+            for (l, layer) in warm.layers.iter().enumerate() {
+                layer
+                    .validate(&g)
+                    .unwrap_or_else(|e| panic!("{label} batch {batch} layer {l}: {e}"));
+            }
+        }
+    }
+}
+
+/// Same guarantee for the weighted sampler (Appendix A.7), which is not a
+/// `SamplerKind` but shares the scratch arena.
+#[test]
+fn warm_scratch_is_bit_identical_for_weighted_labor() {
+    let mut rng = StreamRng::new(0xA7);
+    let n = 150u32;
+    let mut b = CscBuilder::new(n as usize);
+    for s in 0..n {
+        let deg = 3 + rng.below(25) as usize;
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..deg {
+            let t = rng.below(n as u64) as u32;
+            if t != s && used.insert(t) {
+                b.weighted_edge(t, s, 0.1 + rng.next_f32() * 2.0);
+            }
+        }
+    }
+    let g = b.build().unwrap();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(2), IterSpec::Converge] {
+        let s = WeightedLaborSampler { fanouts: vec![5], iterations };
+        let mut scratch = SamplerScratch::new();
+        for batch in 0..20u64 {
+            let seeds: Vec<u32> = (0..(20 + (batch as u32 * 7) % 60)).collect();
+            let ctx = SampleCtx { batch_seed: batch, layer: 0 };
+            let warm = s.sample_layer(&g, &seeds, ctx, &mut scratch);
+            let fresh = s.sample_layer_fresh(&g, &seeds, ctx);
+            assert_eq!(warm.inputs, fresh.inputs, "iter {iterations:?} batch {batch}");
+            assert_eq!(warm.edge_src, fresh.edge_src, "iter {iterations:?} batch {batch}");
+            assert_eq!(warm.edge_dst, fresh.edge_dst, "iter {iterations:?} batch {batch}");
+            let wa: Vec<u32> = warm.edge_weight.iter().map(|w| w.to_bits()).collect();
+            let wb: Vec<u32> = fresh.edge_weight.iter().map(|w| w.to_bits()).collect();
+            assert_eq!(wa, wb, "iter {iterations:?} batch {batch}: weight bits");
+            warm.validate(&g).unwrap();
+        }
+    }
+}
+
+/// A scratch carried across *different* sampler kinds and graphs must not
+/// leak state between them (the pipeline swaps samplers between epochs in
+/// tuning runs).
+#[test]
+fn scratch_survives_interleaved_kinds_and_graphs() {
+    let g1 = dense_graph();
+    let g2 = dc_sbm(&DcSbmConfig {
+        num_vertices: 1200, // larger |V|: forces the vertex maps to regrow
+        num_arcs: 20_000,
+        num_communities: 3,
+        homophily: 0.6,
+        degree_exponent: 0.6,
+        seed: 7,
+    })
+    .graph;
+    let seeds: Vec<u32> = (0..90).collect();
+    let mut scratch = SamplerScratch::new();
+    for batch in 0..8u64 {
+        for kind in all_kinds() {
+            for g in [&g1, &g2] {
+                let label = kind.label();
+                let sampler = MultiLayerSampler::new(kind.clone(), &[6, 6]);
+                let warm = sampler.sample(g, &seeds, batch, &mut scratch);
+                let fresh = sampler.sample_fresh(g, &seeds, batch);
+                assert_mfg_eq(&warm, &fresh, &format!("{label} interleaved batch {batch}"));
+            }
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Statistical property tests for the paper's §3.2 guarantees, run as
+//! Monte-Carlo experiments over hundreds of independently seeded batches
+//! on a dense synthetic graph (avg in-degree ≈ 60 ≫ fanout — the regime
+//! where LABOR's collective decisions matter, cf. §4.1):
+//!
+//! * **Degree floor** (Eq. 9/13–14): `E[d̃_s] ≥ min(k, d_s)` per seed —
+//!   LABOR matches Neighbor Sampling's estimator variance, so it may not
+//!   under-sample any seed in expectation.
+//! * **Vertex savings** (Eq. 11–12, Table 2): LABOR-0 samples strictly
+//!   fewer unique input vertices than NS at the same fanout.
+//! * **Unbiasedness** (Eq. 2 vs 4b/6): the Hajek-weighted mean
+//!   aggregation over repeated LABOR / PLADIES samples converges to the
+//!   exact full-neighborhood mean.
+//!
+//! All trials run through one reused [`SamplerScratch`] — doubling as a
+//! long-haul soak of the arena (hundreds of epoch-map generations).
+
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
+
+/// Same construction as the crate-internal `testutil::test_graph()`:
+/// dense, deterministic, 500 vertices, avg in-degree ≈ 60.
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+/// Paper §3.2: per-seed mean sampled degree over ≥200 independent batches
+/// must satisfy `E[d̃_s] ≥ min(k, d_s) − tol`, for LABOR-0 (where it holds
+/// with equality), LABOR-1, LABOR-2, and LABOR-*.
+#[test]
+fn labor_mean_sampled_degree_meets_the_fanout_floor() {
+    let g = dense_graph();
+    let seeds: Vec<u32> = (0..40).collect();
+    let k = 5usize;
+    let trials = 250u64;
+    // sd of the per-seed trial mean ≈ sqrt(k)/sqrt(trials) ≈ 0.14; the
+    // tolerance is > 3σ, so a violation is a real bias, not noise
+    let tol = 0.45;
+    let mut scratch = SamplerScratch::new();
+    for iterations in
+        [IterSpec::Fixed(0), IterSpec::Fixed(1), IterSpec::Fixed(2), IterSpec::Converge]
+    {
+        let kind = SamplerKind::Labor { iterations, layer_dependent: false };
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[k]);
+        let mut mean_deg = vec![0.0f64; seeds.len()];
+        for trial in 0..trials {
+            let mfg = sampler.sample(&g, &seeds, 0xDE6 ^ trial, &mut scratch);
+            for (si, d) in mfg.layers[0].sampled_degrees().iter().enumerate() {
+                mean_deg[si] += *d as f64;
+            }
+        }
+        for (si, &s) in seeds.iter().enumerate() {
+            let floor = g.in_degree(s).min(k) as f64;
+            let got = mean_deg[si] / trials as f64;
+            assert!(
+                got >= floor - tol,
+                "{label}: seed {s} E[d̃]={got:.3} < min(k, d)={floor} - {tol}"
+            );
+        }
+    }
+}
+
+/// The vertex-savings claim (qualitative Table 2 / Fig. 5): at the same
+/// fanout on a dense graph, LABOR-0's unique-input count is strictly
+/// below NS's — in aggregate over ≥200 trials and in almost every
+/// individual batch.
+#[test]
+fn labor0_samples_strictly_fewer_unique_inputs_than_ns() {
+    let g = dense_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let k = 10usize;
+    let trials = 250u64;
+    let labor = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[k],
+    );
+    let ns = MultiLayerSampler::new(SamplerKind::Neighbor, &[k]);
+    let mut scratch = SamplerScratch::new();
+    let mut labor_total = 0usize;
+    let mut ns_total = 0usize;
+    let mut labor_wins = 0usize;
+    for trial in 0..trials {
+        let lv = labor.sample(&g, &seeds, trial, &mut scratch).layers[0].num_inputs();
+        let nv = ns.sample(&g, &seeds, trial, &mut scratch).layers[0].num_inputs();
+        labor_total += lv;
+        ns_total += nv;
+        if lv < nv {
+            labor_wins += 1;
+        }
+    }
+    assert!(
+        labor_total < ns_total,
+        "LABOR-0 sampled {labor_total} unique inputs vs NS {ns_total} over {trials} trials"
+    );
+    assert!(
+        labor_wins as f64 >= 0.95 * trials as f64,
+        "LABOR-0 beat NS in only {labor_wins}/{trials} batches"
+    );
+}
+
+/// Shared estimator check: Monte-Carlo mean of the Hajek-weighted
+/// aggregation of `signal` against the exact full-neighborhood mean
+/// (Eq. 2), conditioning on seeds that received at least one edge (Hajek
+/// is a ratio estimator — consistent, with vanishing small-sample bias).
+fn estimator_gap(
+    g: &CscGraph,
+    sampler: &MultiLayerSampler,
+    seeds: &[u32],
+    signal: impl Fn(u32) -> f64,
+    reps: u64,
+) -> Vec<f64> {
+    let exact: Vec<f64> = seeds
+        .iter()
+        .map(|&s| {
+            let nb = g.in_neighbors(s);
+            nb.iter().map(|&t| signal(t)).sum::<f64>() / nb.len() as f64
+        })
+        .collect();
+    let mut scratch = SamplerScratch::new();
+    let mut est = vec![0.0f64; seeds.len()];
+    let mut cnt = vec![0u64; seeds.len()];
+    let mut got = vec![0.0f64; seeds.len()];
+    let mut has = vec![false; seeds.len()];
+    for rep in 0..reps {
+        let mfg = sampler.sample(g, seeds, 0xE5717 ^ rep, &mut scratch);
+        let layer = &mfg.layers[0];
+        got.fill(0.0);
+        has.fill(false);
+        for e in 0..layer.num_edges() {
+            let t = layer.inputs[layer.edge_src[e] as usize];
+            got[layer.edge_dst[e] as usize] += layer.edge_weight[e] as f64 * signal(t);
+            has[layer.edge_dst[e] as usize] = true;
+        }
+        for si in 0..seeds.len() {
+            if has[si] {
+                est[si] += got[si];
+                cnt[si] += 1;
+            }
+        }
+    }
+    (0..seeds.len())
+        .map(|si| (est[si] / cnt[si].max(1) as f64 - exact[si]).abs())
+        .collect()
+}
+
+/// Eq. 4b/6 vs Eq. 2 for LABOR: the Hajek estimator of the mean
+/// aggregation is (nearly) unbiased — the Monte-Carlo mean converges to
+/// the exact value for every seed.
+#[test]
+fn labor_hajek_mean_aggregation_is_unbiased() {
+    let g = dense_graph();
+    let seeds: Vec<u32> = (10..30).collect();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(1)] {
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations, layer_dependent: false },
+            &[5],
+        );
+        let gaps = estimator_gap(&g, &sampler, &seeds, |t| (t as f64 * 0.37).sin(), 2500);
+        for (si, gap) in gaps.iter().enumerate() {
+            assert!(
+                *gap < 0.05,
+                "LABOR {iterations:?}: seed #{si} estimator is off by {gap:.4}"
+            );
+        }
+    }
+}
+
+/// Same for PLADIES (§3.1, "unbiased by construction" — the point of
+/// replacing LADIES' with-replacement draws by Poisson sampling).
+#[test]
+fn pladies_hajek_mean_aggregation_is_unbiased() {
+    let g = dense_graph();
+    let seeds: Vec<u32> = (20..40).collect();
+    let sampler = MultiLayerSampler::new(SamplerKind::Pladies { budgets: vec![80] }, &[5]);
+    let gaps = estimator_gap(&g, &sampler, &seeds, |t| (t as f64 * 0.61).cos(), 3000);
+    for (si, gap) in gaps.iter().enumerate() {
+        assert!(*gap < 0.08, "PLADIES: seed #{si} estimator is off by {gap:.4}");
+    }
+}
