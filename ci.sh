@@ -26,8 +26,15 @@ if [ "$MODE" != "fast" ]; then
   echo "== bench-smoke: build all bench targets, run the pipeline bench tiny"
   cargo build --release --benches
   # --smoke: tiny iteration counts; proves the throughput sections and the
-  # allocation probe run end-to-end (see docs/BENCHMARKS.md)
+  # allocation probe run end-to-end (see docs/BENCHMARKS.md); remove any
+  # stale perf record first so the existence check below can't pass on it
+  rm -f BENCH_pipeline.json
   cargo bench --bench pipeline -- --smoke
+  # the smoke run must leave the machine-readable perf trajectory behind
+  # (sequential vs sharded batches/s per thread count)
+  test -f BENCH_pipeline.json || { echo "BENCH_pipeline.json missing"; exit 1; }
+  echo "== BENCH_pipeline.json:"
+  cat BENCH_pipeline.json
 fi
 
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                 batch_size: 1024,
                 num_batches: batches,
                 seed: 9,
+                intra_batch_threads: 1,
             },
         );
         let mut store = FeatureStore::new(&ds.features, ds.spec.num_features, tier);

@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             batch_size,
             num_batches: steps,
             seed: 42,
+            intra_batch_threads: 1,
         },
     );
 

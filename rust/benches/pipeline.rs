@@ -1,13 +1,22 @@
 //! Coordinator pipeline throughput and allocation behavior.
 //!
-//! Three sections:
-//! 1. batches/s as a function of worker count (the L3 §Perf scaling
-//!    check) — each worker holds a long-lived `SamplerScratch`;
-//! 2. single-thread steady-state batches/s, warm scratch vs a fresh
+//! Four sections:
+//! 1. batches/s as a function of worker count (batch-parallel scaling) —
+//!    each worker holds a long-lived `SamplerScratch`;
+//! 2. batches/s as a function of `intra_batch_threads` with a single
+//!    worker and one huge batch (shard-parallel scaling — the paper's
+//!    large-batch regime, where batch-parallelism stops helping because
+//!    one batch dominates the epoch);
+//! 3. single-thread steady-state batches/s, warm scratch vs a fresh
 //!    scratch per call (the arena win in isolation);
-//! 3. an allocation probe: a counting global allocator reports
+//! 4. an allocation probe: a counting global allocator reports
 //!    allocations and bytes per batch for warm vs fresh scratch, making
 //!    "no per-batch O(|V|) allocation" measurable.
+//!
+//! Sections 1 and 2 are also written to `BENCH_pipeline.json` (sequential
+//! vs sharded throughput per thread count, machine-readable) so CI can
+//! track the perf trajectory across PRs — see ci.sh and
+//! docs/BENCHMARKS.md.
 //!
 //! `cargo bench --bench pipeline` — full run.
 //! `cargo bench --bench pipeline -- --smoke` — tiny iteration counts
@@ -15,7 +24,9 @@
 
 use labor_gnn::coordinator::pipeline::{PipelineConfig, SamplingPipeline};
 use labor_gnn::data::Dataset;
+use labor_gnn::graph::CscGraph;
 use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
+use labor_gnn::util::json::Json;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -64,6 +75,25 @@ fn counters() -> (u64, u64) {
     (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
 }
 
+/// Run one pipeline to completion, return batches/s.
+fn run_pipeline(graph: &Arc<CscGraph>, ids: &Arc<Vec<u32>>, cfg: PipelineConfig) -> f64 {
+    let sampler = Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        &[10, 10, 10],
+    ));
+    let n_cfg = cfg.num_batches;
+    let t0 = Instant::now();
+    let mut p = SamplingPipeline::spawn(graph.clone(), sampler, ids.clone(), cfg);
+    let mut n = 0u64;
+    for b in &mut p {
+        std::hint::black_box(b.mfg.vertex_counts());
+        n += 1;
+    }
+    p.join();
+    assert_eq!(n, n_cfg);
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let ds = Arc::new(Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset"));
@@ -71,37 +101,84 @@ fn main() {
     let ids = Arc::new(ds.splits.train.clone());
     let batches: u64 = if smoke { 6 } else { 60 };
 
-    println!("== pipeline throughput, labor-1, batch 1024, {batches} batches");
+    println!("== pipeline throughput (batch-parallel), labor-1, batch 1024, {batches} batches");
+    let mut batch_parallel = Vec::new();
     for workers in [1usize, 2, 4, 8] {
-        let sampler = Arc::new(MultiLayerSampler::new(
-            SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
-            &[10, 10, 10],
-        ));
-        let t0 = Instant::now();
-        let mut p = SamplingPipeline::spawn(
-            graph.clone(),
-            sampler,
-            ids.clone(),
+        let rate = run_pipeline(
+            &graph,
+            &ids,
             PipelineConfig {
                 num_workers: workers,
                 queue_depth: 8,
                 batch_size: 1024,
                 num_batches: batches,
                 seed: 3,
+                intra_batch_threads: 1,
             },
         );
-        let mut n = 0;
-        for b in &mut p {
-            std::hint::black_box(b.mfg.vertex_counts());
-            n += 1;
-        }
-        p.join();
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "workers={workers}: {n} batches in {dt:.2}s = {:.1} batches/s",
-            n as f64 / dt
-        );
+        println!("workers={workers}: {rate:.1} batches/s");
+        batch_parallel.push(Json::obj(vec![
+            ("workers", Json::Num(workers as f64)),
+            ("batches_per_s", Json::Num(rate)),
+        ]));
     }
+
+    // -- shard-parallel scaling: the large-batch regime ----------------
+    // one worker, one huge batch at a time: all speedup must come from
+    // intra-batch seed sharding; threads=1 is the sequential baseline
+    let big_batch = 4096.min(ids.len());
+    let big_batches: u64 = if smoke { 3 } else { 20 };
+    println!(
+        "\n== pipeline throughput (shard-parallel), labor-1, batch {big_batch}, \
+         {big_batches} batches, 1 worker"
+    );
+    let mut shard_parallel = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let rate = run_pipeline(
+            &graph,
+            &ids,
+            PipelineConfig {
+                num_workers: 1,
+                queue_depth: 4,
+                batch_size: big_batch,
+                num_batches: big_batches,
+                seed: 3,
+                intra_batch_threads: threads,
+            },
+        );
+        println!("intra_batch_threads={threads}: {rate:.2} batches/s");
+        shard_parallel.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("batches_per_s", Json::Num(rate)),
+        ]));
+    }
+
+    // machine-readable trajectory for CI (ci.sh asserts this file exists)
+    let report = Json::obj(vec![
+        ("bench", Json::Str("pipeline".into())),
+        ("dataset", Json::Str("flickr-sim".into())),
+        ("scale", Json::Num(0.1)),
+        ("smoke", Json::Bool(smoke)),
+        ("sampler", Json::Str("labor-1".into())),
+        (
+            "batch_parallel",
+            Json::obj(vec![
+                ("batch_size", Json::Num(1024.0)),
+                ("num_batches", Json::Num(batches as f64)),
+                ("series", Json::Arr(batch_parallel)),
+            ]),
+        ),
+        (
+            "shard_parallel",
+            Json::obj(vec![
+                ("batch_size", Json::Num(big_batch as f64)),
+                ("num_batches", Json::Num(big_batches as f64)),
+                ("series", Json::Arr(shard_parallel)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_pipeline.json", format!("{report}\n")).expect("write BENCH_pipeline.json");
+    println!("\nwrote BENCH_pipeline.json");
 
     // -- warm scratch vs fresh scratch, single thread -----------------
     let sampler = MultiLayerSampler::new(

@@ -5,7 +5,7 @@
 //! reports mean/p50/p95 and throughput per case).
 
 use labor_gnn::data::Dataset;
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch, ScratchPool};
 use labor_gnn::util::timer::bench;
 
 fn main() {
@@ -76,5 +76,28 @@ fn main() {
             b += 1;
         });
         r.report(&format!("labor0_1layer/batch{bs}"));
+    }
+
+    // intra-batch shard scaling: the large-batch regime, where one batch
+    // dominates the epoch and only seed sharding can use more cores;
+    // output is bit-identical across shard counts (tests/parallel_identity)
+    println!("\n== sharded full-MFG sampling, large batch (shards=1 is sequential)");
+    let big: Vec<u32> = ds.splits.train[..4096.min(ds.splits.train.len())].to_vec();
+    for (name, kind) in [
+        ("labor-0", SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }),
+        ("labor-1", SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false }),
+        ("ns", SamplerKind::Neighbor),
+    ] {
+        let sampler = MultiLayerSampler::new(kind, &fanouts);
+        for shards in [1usize, 2, 4, 8] {
+            let mut pool = ScratchPool::for_vertices(ds.graph.num_vertices(), shards);
+            let mut b = 0u64;
+            let r = bench(2, 8, || {
+                let mfg = sampler.sample_sharded(&ds.graph, &big, b, shards, &mut pool);
+                std::hint::black_box(mfg.vertex_counts());
+                b += 1;
+            });
+            r.report(&format!("sharded_mfg/{name}/shards{shards}"));
+        }
     }
 }

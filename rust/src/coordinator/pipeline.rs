@@ -7,24 +7,38 @@
 //! `(batch_id, mfg)` into a bounded channel; the consumer reorders them so
 //! training sees batches in the deterministic `EpochBatcher` order
 //! regardless of worker scheduling.
+//!
+//! Parallelism is two-level: `num_workers` batches in flight
+//! (batch-parallel), and within each worker `intra_batch_threads` seed
+//! shards per layer (shard-parallel, see [`crate::sampler::par`]). Many
+//! small batches want the former; the paper's large-batch regime — few
+//! huge batches, where one batch dominates the epoch — wants the latter.
+//! Both are deterministic: delivered MFGs are bit-identical for every
+//! `(num_workers, intra_batch_threads)` combination.
+//!
+//! Failure semantics: a panicking worker is never silently truncated into
+//! a short epoch — the panic is re-raised on the consuming thread by
+//! [`SamplingPipeline::next`] (or [`SamplingPipeline::join`]).
 
 use super::batcher::EpochBatcher;
 use crate::graph::CscGraph;
-use crate::sampler::{Mfg, MultiLayerSampler, SamplerScratch};
+use crate::sampler::{Mfg, MultiLayerSampler, ScratchPool};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
-/// One unit of work delivered to the trainer.
+/// One unit of work delivered to the trainer. `seeds` shares the
+/// pre-materialized batch (no per-batch deep copy on the worker side).
 pub struct SampledBatch {
     pub batch_id: u64,
-    pub seeds: Vec<u32>,
+    pub seeds: Arc<Vec<u32>>,
     pub mfg: Mfg,
 }
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// batch-level parallelism: how many batches are sampled concurrently
     pub num_workers: usize,
     /// bounded queue depth per pipeline (backpressure: workers block when
     /// the trainer falls behind by this many batches)
@@ -33,11 +47,23 @@ pub struct PipelineConfig {
     /// total batches to produce
     pub num_batches: u64,
     pub seed: u64,
+    /// intra-batch shard parallelism per worker (1 = sequential batch
+    /// sampling). Shard-parallel output is bit-identical to sequential —
+    /// use it when batches are large and few (the paper's large-batch
+    /// regime), where batch-level parallelism alone leaves cores idle.
+    pub intra_batch_threads: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { num_workers: 4, queue_depth: 8, batch_size: 1024, num_batches: 100, seed: 0 }
+        Self {
+            num_workers: 4,
+            queue_depth: 8,
+            batch_size: 1024,
+            num_batches: 100,
+            seed: 0,
+            intra_batch_threads: 1,
+        }
     }
 }
 
@@ -65,11 +91,14 @@ impl SamplingPipeline {
 
         // Pre-materialize the seed batches so that workers can claim
         // arbitrary batch ids without a shared mutable batcher. This is
-        // cheap: ids only, no sampling.
+        // cheap: ids only, no sampling. Each batch is behind its own Arc,
+        // so claiming one is a refcount bump, not a deep copy of the seed
+        // vector.
         let mut batcher = EpochBatcher::new(&train_ids, cfg.batch_size, cfg.seed);
         batcher.drop_last = true;
-        let batches: Arc<Vec<Vec<u32>>> =
-            Arc::new((0..cfg.num_batches).map(|_| batcher.next_batch()).collect());
+        let batches = Arc::new(
+            (0..cfg.num_batches).map(|_| Arc::new(batcher.next_batch())).collect::<Vec<_>>(),
+        );
 
         let mut workers = Vec::new();
         for _ in 0..cfg.num_workers.max(1) {
@@ -80,22 +109,29 @@ impl SamplingPipeline {
             let tx = tx.clone();
             let num_batches = cfg.num_batches;
             let seed = cfg.seed;
+            let shards = cfg.intra_batch_threads.max(1);
             workers.push(std::thread::spawn(move || {
-                // Each worker owns one long-lived scratch arena: after the
-                // first few batches size it to steady state, sampling
-                // performs no per-batch O(|V|) allocation (the MFG output
-                // vectors are the only allocations left). Scratch reuse is
-                // invisible in the output — MFGs are bit-identical to
-                // fresh-scratch sampling, so delivered batches stay
-                // independent of worker count and scheduling.
-                let mut scratch = SamplerScratch::for_vertices(graph.num_vertices());
+                // Each worker owns one long-lived scratch pool (the merge
+                // arena plus one arena per shard): after the first few
+                // batches size it to steady state, sampling performs no
+                // per-batch O(|V|) allocation (the MFG output vectors are
+                // the only allocations left). Scratch reuse and shard
+                // count are invisible in the output — MFGs are
+                // bit-identical to fresh-scratch sequential sampling, so
+                // delivered batches stay independent of worker count,
+                // shard count, and scheduling.
+                let mut pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
                 loop {
                     let id = cursor.fetch_add(1, Ordering::Relaxed);
                     if id >= num_batches {
                         return;
                     }
                     let seeds = batches[id as usize].clone();
-                    let mfg = sampler.sample(&graph, &seeds, seed ^ id, &mut scratch);
+                    let mfg = if shards > 1 {
+                        sampler.sample_sharded(&graph, &seeds, seed ^ id, shards, &mut pool)
+                    } else {
+                        sampler.sample(&graph, &seeds, seed ^ id, pool.main_mut())
+                    };
                     if tx.send(SampledBatch { batch_id: id, seeds, mfg }).is_err() {
                         return; // consumer dropped
                     }
@@ -106,11 +142,27 @@ impl SamplingPipeline {
         Self { rx, reorder: BTreeMap::new(), next_id: 0, num_batches: cfg.num_batches, workers }
     }
 
-    /// Join all workers (for clean shutdown accounting in tests).
+    /// Join all workers; re-raises the first worker panic, if any.
     pub fn join(self) {
-        drop(self.rx);
-        for w in self.workers {
-            let _ = w.join();
+        let Self { rx, workers, .. } = self;
+        // close the channel first so blocked senders unblock and exit
+        drop(rx);
+        for w in workers {
+            if let Err(payload) = w.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+
+    /// Join every finished worker and re-raise the first panic payload.
+    /// Called when the channel closed (all workers exited) or on
+    /// [`join`](Self::join) — never blocks on a still-running worker
+    /// except behind a closed channel.
+    fn propagate_worker_panics(&mut self) {
+        for w in std::mem::take(&mut self.workers) {
+            if let Err(payload) = w.join() {
+                std::panic::resume_unwind(payload);
+            }
         }
     }
 }
@@ -119,7 +171,8 @@ impl Iterator for SamplingPipeline {
     type Item = SampledBatch;
 
     /// Next batch in order; `None` when the configured batch count is
-    /// exhausted.
+    /// exhausted. If a worker panicked mid-epoch, the panic is re-raised
+    /// here instead of quietly delivering a short epoch.
     fn next(&mut self) -> Option<SampledBatch> {
         if self.next_id >= self.num_batches {
             return None;
@@ -133,7 +186,13 @@ impl Iterator for SamplingPipeline {
                 Ok(b) => {
                     self.reorder.insert(b.batch_id, b);
                 }
-                Err(_) => return None, // workers gone and buffer exhausted
+                Err(_) => {
+                    // All senders are gone. A clean run delivers every
+                    // claimed id, so an undelivered `next_id` means a
+                    // worker died abnormally — surface it.
+                    self.propagate_worker_panics();
+                    return None;
+                }
             }
         }
     }
@@ -144,25 +203,25 @@ mod tests {
     use super::*;
     use crate::sampler::{IterSpec, SamplerKind};
 
-    fn setup(num_batches: u64, workers: usize, depth: usize) -> SamplingPipeline {
+    fn setup_cfg(cfg: PipelineConfig) -> SamplingPipeline {
         let g = Arc::new(crate::sampler::testutil::test_graph());
         let sampler = Arc::new(MultiLayerSampler::new(
             SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
             &[5, 5],
         ));
         let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
-        SamplingPipeline::spawn(
-            g,
-            sampler,
-            ids,
-            PipelineConfig {
-                num_workers: workers,
-                queue_depth: depth,
-                batch_size: 64,
-                num_batches,
-                seed: 11,
-            },
-        )
+        SamplingPipeline::spawn(g, sampler, ids, cfg)
+    }
+
+    fn setup(num_batches: u64, workers: usize, depth: usize) -> SamplingPipeline {
+        setup_cfg(PipelineConfig {
+            num_workers: workers,
+            queue_depth: depth,
+            batch_size: 64,
+            num_batches,
+            seed: 11,
+            intra_batch_threads: 1,
+        })
     }
 
     #[test]
@@ -180,12 +239,19 @@ mod tests {
 
     #[test]
     fn parallel_matches_single_threaded_sampling() {
-        // determinism: worker count must not change delivered MFGs — not
-        // just their sizes but the exact vertices, edges, and weights
-        // (each worker reuses its own scratch arena, which must be
-        // invisible in the output)
-        let collect = |workers: usize| -> Vec<Mfg> {
-            let mut p = setup(12, workers, 3);
+        // determinism: neither worker count nor shard count may change
+        // delivered MFGs — not just their sizes but the exact vertices,
+        // edges, and weights (each worker reuses its own scratch pool,
+        // which must be invisible in the output)
+        let collect = |workers: usize, shards: usize| -> Vec<Mfg> {
+            let mut p = setup_cfg(PipelineConfig {
+                num_workers: workers,
+                queue_depth: 3,
+                batch_size: 64,
+                num_batches: 12,
+                seed: 11,
+                intra_batch_threads: shards,
+            });
             let mut out = Vec::new();
             for b in &mut p {
                 out.push(b.mfg);
@@ -193,17 +259,20 @@ mod tests {
             p.join();
             out
         };
-        let single = collect(1);
-        let multi = collect(7);
-        assert_eq!(single.len(), multi.len());
-        for (bi, (a, b)) in single.iter().zip(&multi).enumerate() {
-            assert_eq!(a.layers.len(), b.layers.len(), "batch {bi}");
-            for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
-                assert_eq!(la.seeds, lb.seeds, "batch {bi} layer {l}");
-                assert_eq!(la.inputs, lb.inputs, "batch {bi} layer {l}");
-                assert_eq!(la.edge_src, lb.edge_src, "batch {bi} layer {l}");
-                assert_eq!(la.edge_dst, lb.edge_dst, "batch {bi} layer {l}");
-                assert_eq!(la.edge_weight, lb.edge_weight, "batch {bi} layer {l}");
+        let single = collect(1, 1);
+        for (workers, shards) in [(7, 1), (1, 3), (3, 4)] {
+            let multi = collect(workers, shards);
+            assert_eq!(single.len(), multi.len());
+            for (bi, (a, b)) in single.iter().zip(&multi).enumerate() {
+                let what = format!("workers={workers} shards={shards} batch {bi}");
+                assert_eq!(a.layers.len(), b.layers.len(), "{what}");
+                for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+                    assert_eq!(la.seeds, lb.seeds, "{what} layer {l}");
+                    assert_eq!(la.inputs, lb.inputs, "{what} layer {l}");
+                    assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l}");
+                    assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l}");
+                    assert_eq!(la.edge_weight, lb.edge_weight, "{what} layer {l}");
+                }
             }
         }
     }
@@ -229,5 +298,57 @@ mod tests {
         let mut p = setup(1000, 4, 2);
         let _ = p.next();
         p.join(); // must not hang
+    }
+
+    #[test]
+    #[should_panic(expected = "index out of bounds")]
+    fn worker_panic_propagates_instead_of_truncating() {
+        // seeds outside the graph's vertex range make the sampler panic
+        // inside a worker thread; the consumer must see that panic, not a
+        // clean-looking short epoch
+        let g = Arc::new(crate::sampler::testutil::test_graph()); // |V| = 500
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[5, 5],
+        ));
+        let ids: Arc<Vec<u32>> = Arc::new(vec![10_000; 256]); // out of range
+        let mut p = SamplingPipeline::spawn(
+            g,
+            sampler,
+            ids,
+            PipelineConfig {
+                num_workers: 2,
+                queue_depth: 2,
+                batch_size: 64,
+                num_batches: 4,
+                seed: 1,
+                intra_batch_threads: 1,
+            },
+        );
+        while p.next().is_some() {}
+    }
+
+    #[test]
+    fn join_reraises_worker_panics() {
+        // same failure surfaced through join() for consumers that drop
+        // the iterator early
+        let g = Arc::new(crate::sampler::testutil::test_graph());
+        let sampler = Arc::new(MultiLayerSampler::new(SamplerKind::Neighbor, &[4]));
+        let ids: Arc<Vec<u32>> = Arc::new(vec![9_999; 128]);
+        let p = SamplingPipeline::spawn(
+            g,
+            sampler,
+            ids,
+            PipelineConfig {
+                num_workers: 1,
+                queue_depth: 1,
+                batch_size: 32,
+                num_batches: 2,
+                seed: 0,
+                intra_batch_threads: 1,
+            },
+        );
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.join()));
+        assert!(err.is_err(), "join must re-raise the worker panic");
     }
 }

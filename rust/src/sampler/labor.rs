@@ -11,10 +11,14 @@
 //! sampled vertices `E[|T|]` (Eq. 11–12): LABOR-i applies `i` iterations,
 //! LABOR-\* iterates to convergence.
 
+use super::par::{
+    concat_and_finalize, discover_shard, merge_candidates, merge_max, run_shards, PoolParts,
+    ScratchPool,
+};
 use super::poisson::sequential_poisson_pick_into;
 use super::{
-    finalize_inputs_in, hajek_normalize_in, IterSpec, LayerSampler, SampleCtx, SampledLayer,
-    SamplerScratch,
+    finalize_inputs_in, hajek_normalize_in, hajek_normalize_into, IterSpec, LayerSampler,
+    SampleCtx, SampledLayer, SamplerScratch,
 };
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
@@ -427,8 +431,13 @@ impl<'a> LaborLayerState<'a> {
             }
         }
         let edge_weight = hajek_normalize_in(&mut scratch.sums, &edge_dst, &raw, self.seeds.len());
-        let inputs =
-            finalize_inputs_in(&mut scratch.map, self.g.num_vertices(), self.seeds, &mut edge_src);
+        let inputs = finalize_inputs_in(
+            &mut scratch.map,
+            &mut scratch.inputs_fill,
+            self.g.num_vertices(),
+            self.seeds,
+            &mut edge_src,
+        );
         let out = SampledLayer {
             seeds: self.seeds.to_vec(),
             inputs,
@@ -465,6 +474,204 @@ impl<'a> LaborLayerState<'a> {
     }
 }
 
+// ---------------------------------------------------------------------
+// Sharded LABOR (see `sampler::par`): the fixed point is a global
+// computation — `π_t ← π_t · max_{t→s∈S} c_s` couples every seed incident
+// on a candidate — so the sharded path keeps ONE global `(candidates, π,
+// max-c)` state in the pool's merge arena and shards only the elementwise
+// pieces: per-seed `c_s` solves, per-candidate local maxima (merged by
+// max, which is exact), and the Poisson sampling pass. The objective
+// reduction runs sequentially in global candidate order. Every f64
+// operation therefore happens with the same operands in the same order as
+// `LaborLayerState`, which is what makes the output bit-identical.
+// ---------------------------------------------------------------------
+
+/// Per-shard `c_s` recompute: `LaborLayerState::recompute_c` verbatim,
+/// reading the global π through the shard's local→global candidate
+/// translation.
+fn recompute_c_shard(
+    k: usize,
+    scratch: &mut SamplerScratch,
+    xlat: &[u32],
+    pi: &[f64],
+    pi_uniform: bool,
+) {
+    let nseeds = scratch.nbr_off.len() - 1;
+    let mut c = std::mem::take(&mut scratch.c);
+    let mut buf = std::mem::take(&mut scratch.solver_pi);
+    c.clear();
+    c.resize(nseeds, 0.0);
+    for si in 0..nseeds {
+        let nbrs = &scratch.nbr_local[scratch.nbr_off[si]..scratch.nbr_off[si + 1]];
+        let d = nbrs.len();
+        if d == 0 {
+            c[si] = 0.0;
+            continue;
+        }
+        if pi_uniform {
+            // uniform π = 1: closed form, c·π = min(1, k/d)
+            c[si] = if k >= d { 1.0 } else { k as f64 / d as f64 };
+            continue;
+        }
+        buf.clear();
+        buf.extend(nbrs.iter().map(|&ti| pi[xlat[ti as usize] as usize]));
+        c[si] = if k >= d {
+            buf.iter().fold(0.0f64, |m, &p| m.max(1.0 / p))
+        } else {
+            solve_cs_iterative(&buf, k)
+        };
+    }
+    scratch.c = c;
+    scratch.solver_pi = buf;
+}
+
+/// Per-shard `max_{t→s} c_s` over the shard's local candidates
+/// (`LaborLayerState::fill_maxc` restricted to the shard's seeds); the
+/// global maximum is assembled by [`merge_max`].
+fn fill_maxc_shard(scratch: &mut SamplerScratch) {
+    let mut maxc = std::mem::take(&mut scratch.maxc);
+    maxc.clear();
+    maxc.resize(scratch.candidates.len(), 0.0);
+    let nseeds = scratch.nbr_off.len() - 1;
+    for si in 0..nseeds {
+        let cs = scratch.c[si];
+        for &ti in &scratch.nbr_local[scratch.nbr_off[si]..scratch.nbr_off[si + 1]] {
+            if cs > maxc[ti as usize] {
+                maxc[ti as usize] = cs;
+            }
+        }
+    }
+    scratch.maxc = maxc;
+}
+
+/// Sharded `refresh_maxc`: local maxima in parallel, exact max-merge into
+/// the global buffer (`main.maxc`).
+fn refresh_maxc_shards(
+    main: &mut SamplerScratch,
+    workers: &mut [SamplerScratch],
+    xlat: &[Vec<u32>],
+) {
+    run_shards(&mut *workers, |_, s| fill_maxc_shard(s));
+    merge_max(&mut main.maxc, main.candidates.len(), &*workers, xlat);
+}
+
+/// Sharded `recompute_c` over all shards.
+fn recompute_c_shards(
+    k: usize,
+    workers: &mut [SamplerScratch],
+    xlat: &[Vec<u32>],
+    pi: &[f64],
+    pi_uniform: bool,
+) {
+    run_shards(workers, |i, s| recompute_c_shard(k, s, &xlat[i], pi, pi_uniform));
+}
+
+/// Objective (12) over the global candidate order — the same summation
+/// order as `LaborLayerState::objective_from_maxc`.
+fn objective_from(pi: &[f64], maxc: &[f64]) -> f64 {
+    pi.iter().zip(maxc).map(|(&p, &m)| (p * m).min(1.0)).sum()
+}
+
+/// Sharded `fixed_point_step` (Eq. 18): refresh max-c, update π
+/// (sequentially — it is O(candidates)), recompute c and max-c, return
+/// the objective. Mirrors `LaborLayerState::fixed_point_step` exactly.
+fn fixed_point_step_shards(
+    k: usize,
+    main: &mut SamplerScratch,
+    workers: &mut [SamplerScratch],
+    xlat: &[Vec<u32>],
+    pi_uniform: &mut bool,
+) -> f64 {
+    refresh_maxc_shards(main, workers, xlat);
+    for (t, p) in main.pi.iter_mut().enumerate() {
+        *p *= main.maxc[t].max(f64::MIN_POSITIVE);
+    }
+    *pi_uniform = false;
+    recompute_c_shards(k, workers, xlat, &main.pi, *pi_uniform);
+    refresh_maxc_shards(main, workers, xlat);
+    objective_from(&main.pi, &main.maxc)
+}
+
+/// Per-shard Poisson sampling pass: `LaborLayerState::sample_in` verbatim
+/// over the shard's seeds, with the shared `r_t` recomputed locally (the
+/// hash RNG is keyed by global vertex id, so every shard sees the same
+/// variate for the same candidate) and shard-local seed indices in
+/// `edge_dst` (rebased during the merge). Hajek row sums are per-seed,
+/// hence exact within the shard.
+fn sample_labor_shard(
+    scratch: &mut SamplerScratch,
+    xlat: &[u32],
+    pi: &[f64],
+    k: usize,
+    sequential: bool,
+    rng: &HashRng,
+) {
+    let mut r = std::mem::take(&mut scratch.r);
+    r.clear();
+    r.extend(scratch.candidates.iter().map(|&t| rng.uniform(t as u64)));
+    let mut edge_src = std::mem::take(&mut scratch.edge_src);
+    let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+    let mut raw = std::mem::take(&mut scratch.raw);
+    edge_src.clear();
+    edge_dst.clear();
+    raw.clear();
+    let mut probs = std::mem::take(&mut scratch.sp_probs);
+    let mut rs = std::mem::take(&mut scratch.sp_r);
+    let mut locals = std::mem::take(&mut scratch.sp_local);
+    let nseeds = scratch.nbr_off.len() - 1;
+    for si in 0..nseeds {
+        let nbrs = &scratch.nbr_local[scratch.nbr_off[si]..scratch.nbr_off[si + 1]];
+        if nbrs.is_empty() {
+            continue;
+        }
+        let cs = scratch.c[si];
+        if sequential {
+            probs.clear();
+            rs.clear();
+            locals.clear();
+            for &ti in nbrs {
+                let ti = ti as usize;
+                probs.push((cs * pi[xlat[ti] as usize]).min(1.0));
+                rs.push(r[ti]);
+                locals.push(ti);
+            }
+            let dt = k.min(nbrs.len());
+            sequential_poisson_pick_into(
+                &rs,
+                &probs,
+                dt,
+                &mut scratch.sp_keys,
+                &mut scratch.sp_picked,
+            );
+            for &j in scratch.sp_picked.iter() {
+                edge_src.push(scratch.candidates[locals[j]]);
+                edge_dst.push(si as u32);
+                raw.push(1.0 / probs[j]);
+            }
+        } else {
+            for &ti in nbrs {
+                let ti = ti as usize;
+                let p = (cs * pi[xlat[ti] as usize]).min(1.0);
+                if r[ti] <= p {
+                    edge_src.push(scratch.candidates[ti]);
+                    edge_dst.push(si as u32);
+                    raw.push(1.0 / p);
+                }
+            }
+        }
+    }
+    let mut wbuf = std::mem::take(&mut scratch.wbuf);
+    hajek_normalize_into(&mut scratch.sums, &edge_dst, &raw, nseeds, &mut wbuf);
+    scratch.wbuf = wbuf;
+    scratch.r = r;
+    scratch.edge_src = edge_src;
+    scratch.edge_dst = edge_dst;
+    scratch.raw = raw;
+    scratch.sp_probs = probs;
+    scratch.sp_r = rs;
+    scratch.sp_local = locals;
+}
+
 impl LayerSampler for LaborSampler {
     fn sample_layer(
         &self,
@@ -482,6 +689,64 @@ impl LayerSampler for LaborSampler {
         let out = st.sample_in(&rng, self.sequential, scratch);
         st.recycle(scratch);
         out
+    }
+
+    fn sample_layer_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> SampledLayer {
+        let shards = pool.plan(g, seeds, num_shards);
+        if shards <= 1 {
+            return self.sample_layer(g, seeds, ctx, pool.main_mut());
+        }
+        let k = self.fanouts[ctx.layer];
+        let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
+
+        // phase 1: candidate discovery (sharded) + order-preserving merge
+        run_shards(&mut *workers, |i, s| {
+            discover_shard(g, &seeds[ranges[i].clone()], s, false);
+        });
+        let ncand = merge_candidates(g.num_vertices(), main, &*workers, xlat);
+        let xlat: &[Vec<u32>] = xlat;
+
+        // phase 2: the fixed point over the global (π, c) state, exactly
+        // as LaborLayerState::new_in + optimize would run it
+        main.pi.clear();
+        main.pi.resize(ncand, 1.0);
+        let mut pi_uniform = true;
+        recompute_c_shards(k, workers, xlat, &main.pi, pi_uniform);
+        match self.iterations {
+            IterSpec::Fixed(n) => {
+                for _ in 0..n {
+                    fixed_point_step_shards(k, main, workers, xlat, &mut pi_uniform);
+                }
+            }
+            IterSpec::Converge => {
+                refresh_maxc_shards(main, workers, xlat);
+                let mut prev = objective_from(&main.pi, &main.maxc);
+                for _ in 1..=50 {
+                    let cur = fixed_point_step_shards(k, main, workers, xlat, &mut pi_uniform);
+                    if (prev - cur).abs() <= 1e-4 * prev.max(1.0) {
+                        break;
+                    }
+                    prev = cur;
+                }
+            }
+        }
+
+        // phase 3: Poisson sampling with the shared r_t (sharded) + merge
+        let stream = if self.layer_dependent { u64::MAX } else { ctx.layer as u64 };
+        let rng = HashRng::new(mix2(ctx.batch_seed, stream));
+        let sequential = self.sequential;
+        let pi = &main.pi;
+        run_shards(&mut *workers, |i, s| {
+            sample_labor_shard(s, &xlat[i], pi, k, sequential, &rng);
+        });
+        concat_and_finalize(g, seeds, ranges, main, &*workers)
     }
 
     fn name(&self) -> String {

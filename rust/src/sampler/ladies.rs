@@ -8,9 +8,14 @@
 //! `t → s` with `t ∈ T`. As in the LADIES implementation, the sampled
 //! adjacency is row-normalized — the Hajek estimator (Eq. 4b).
 
+use super::par::{
+    concat_and_finalize, discover_shard, merge_candidates, merge_mass, run_shards, PoolParts,
+    ScratchPool,
+};
 use super::scratch::EpochMap;
 use super::{
-    finalize_inputs_in, hajek_normalize_in, LayerSampler, SampleCtx, SampledLayer, SamplerScratch,
+    finalize_inputs_in, hajek_normalize_in, hajek_normalize_into, LayerSampler, SampleCtx,
+    SampledLayer, SamplerScratch,
 };
 use crate::graph::CscGraph;
 use crate::rng::{mix2, StreamRng};
@@ -134,7 +139,13 @@ pub(crate) fn connect_chosen(
         }
     }
     let edge_weight = hajek_normalize_in(&mut scratch.sums, &edge_dst, &raw, seeds.len());
-    let inputs = finalize_inputs_in(&mut scratch.map, g.num_vertices(), seeds, &mut edge_src);
+    let inputs = finalize_inputs_in(
+        &mut scratch.map,
+        &mut scratch.inputs_fill,
+        g.num_vertices(),
+        seeds,
+        &mut edge_src,
+    );
     let out = SampledLayer {
         seeds: seeds.to_vec(),
         inputs,
@@ -146,6 +157,40 @@ pub(crate) fn connect_chosen(
     scratch.edge_dst = edge_dst;
     scratch.raw = raw;
     out
+}
+
+/// One shard of the [`connect_chosen`] pass: walk the shard's saved
+/// neighbor lists (same neighbors in the same order as
+/// `g.in_neighbors(s)`), keep the edges whose source candidate was
+/// chosen, and Hajek-normalize per seed. Shared by the sharded LADIES and
+/// PLADIES paths; `chosen_ht` is indexed by **global** candidate id.
+pub(crate) fn connect_shard(
+    scratch: &mut SamplerScratch,
+    xlat: &[u32],
+    chosen_ht: &[Option<f64>],
+) {
+    let mut edge_src = std::mem::take(&mut scratch.edge_src);
+    let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+    let mut raw = std::mem::take(&mut scratch.raw);
+    edge_src.clear();
+    edge_dst.clear();
+    raw.clear();
+    let nseeds = scratch.nbr_off.len() - 1;
+    for si in 0..nseeds {
+        for &ti in &scratch.nbr_local[scratch.nbr_off[si]..scratch.nbr_off[si + 1]] {
+            if let Some(ht) = chosen_ht[xlat[ti as usize] as usize] {
+                edge_src.push(scratch.candidates[ti as usize]);
+                edge_dst.push(si as u32);
+                raw.push(ht);
+            }
+        }
+    }
+    let mut wbuf = std::mem::take(&mut scratch.wbuf);
+    hajek_normalize_into(&mut scratch.sums, &edge_dst, &raw, nseeds, &mut wbuf);
+    scratch.wbuf = wbuf;
+    scratch.edge_src = edge_src;
+    scratch.edge_dst = edge_dst;
+    scratch.raw = raw;
 }
 
 impl LayerSampler for LadiesSampler {
@@ -188,6 +233,65 @@ impl LayerSampler for LadiesSampler {
         let out = connect_chosen(g, seeds, &cand, &chosen, scratch);
         scratch.chosen = chosen;
         cand.recycle(scratch);
+        out
+    }
+
+    fn sample_layer_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> SampledLayer {
+        let shards = pool.plan(g, seeds, num_shards);
+        if shards <= 1 {
+            return self.sample_layer(g, seeds, ctx, pool.main_mut());
+        }
+        let n = self.budgets[ctx.layer];
+        let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
+
+        // sharded candidate discovery; the mass merge *replays* the
+        // per-edge adds in the sequential order (see par::merge_mass)
+        run_shards(&mut *workers, |i, s| {
+            discover_shard(g, &seeds[ranges[i].clone()], s, false);
+        });
+        let ncand = merge_candidates(g.num_vertices(), main, &*workers, xlat);
+        let xlat: &[Vec<u32>] = xlat;
+        if ncand == 0 {
+            return SampledLayer {
+                seeds: seeds.to_vec(),
+                inputs: seeds.to_vec(),
+                ..Default::default()
+            };
+        }
+        merge_mass(&mut main.mass, ncand, &*workers, xlat);
+
+        // the layer-wise pick is a stateful sequential RNG walk — keep it
+        // sequential over the merged global candidate order, exactly as
+        // the 1-shard path runs it
+        let total_mass: f64 = main.mass.iter().sum();
+        let mut chosen = std::mem::take(&mut main.chosen);
+        chosen.clear();
+        chosen.resize(ncand, None);
+        if n >= ncand {
+            for c in chosen.iter_mut() {
+                *c = Some(1.0);
+            }
+        } else {
+            let table = AliasTable::new(&main.mass);
+            let mut rng = StreamRng::new(mix2(ctx.batch_seed, 0x1AD1E5 ^ ctx.layer as u64));
+            for _ in 0..n {
+                let ti = table.sample(&mut rng) as usize;
+                chosen[ti] = Some(total_mass / main.mass[ti]);
+            }
+        }
+
+        // sharded connect + merge
+        let chosen_ref = &chosen;
+        run_shards(&mut *workers, |i, s| connect_shard(s, &xlat[i], chosen_ref));
+        let out = concat_and_finalize(g, seeds, ranges, main, &*workers);
+        main.chosen = chosen;
         out
     }
 

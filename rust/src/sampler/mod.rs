@@ -12,11 +12,13 @@
 pub mod labor;
 pub mod ladies;
 pub mod neighbor;
+pub mod par;
 pub mod pladies;
 pub mod poisson;
 pub mod scratch;
 pub mod weighted;
 
+pub use par::{partition_seeds, ScratchPool};
 pub use scratch::{EpochMap, SamplerScratch};
 
 use crate::graph::CscGraph;
@@ -139,6 +141,24 @@ pub trait LayerSampler: Send + Sync {
     /// call [`sample_layer`](Self::sample_layer) instead.
     fn sample_layer_fresh(&self, g: &CscGraph, seeds: &[u32], ctx: SampleCtx) -> SampledLayer {
         self.sample_layer(g, seeds, ctx, &mut SamplerScratch::new())
+    }
+
+    /// Sharded entry point: sample the layer with the seed set split into
+    /// `num_shards` degree-balanced contiguous shards processed by a
+    /// scoped thread pool (see [`par`]). The output is **bit-identical**
+    /// to [`sample_layer`](Self::sample_layer) for every shard count; the
+    /// sequential path is the 1-shard case. The default implementation
+    /// falls back to sequential sampling on the pool's merge arena.
+    fn sample_layer_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> SampledLayer {
+        let _ = num_shards;
+        self.sample_layer(g, seeds, ctx, pool.main_mut())
     }
 }
 
@@ -343,6 +363,33 @@ impl MultiLayerSampler {
         self.sample(g, seeds, batch_seed, &mut SamplerScratch::new())
     }
 
+    /// [`sample`](Self::sample) with intra-batch shard parallelism: every
+    /// layer's seed set is split into `num_shards` degree-balanced
+    /// contiguous shards sampled by a scoped thread pool (see [`par`]).
+    /// The resulting [`Mfg`] is **bit-identical** to sequential sampling
+    /// for any shard count — this is the large-batch path (the paper's
+    /// "112× larger batch sizes" regime), where one batch dominates the
+    /// epoch and batch-level pipelining stops helping.
+    pub fn sample_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        batch_seed: u64,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> Mfg {
+        let mut layers = Vec::with_capacity(self.num_layers());
+        let mut cur: Vec<u32> = seeds.to_vec();
+        for layer in 0..self.num_layers() {
+            let ctx = SampleCtx { batch_seed, layer };
+            let sl = self.sampler.sample_layer_sharded(g, &cur, ctx, num_shards, pool);
+            cur.clear();
+            cur.extend_from_slice(&sl.inputs);
+            layers.push(sl);
+        }
+        Mfg { layers }
+    }
+
     pub fn name(&self) -> String {
         self.kind.label()
     }
@@ -357,17 +404,19 @@ impl MultiLayerSampler {
 /// path; see EXPERIMENTS.md §Perf).
 pub(crate) fn finalize_inputs_in(
     map: &mut EpochMap,
+    fill: &mut Vec<u32>,
     num_vertices: usize,
     seeds: &[u32],
     edge_src_global: &mut [u32],
 ) -> Vec<u32> {
     map.begin(num_vertices);
-    // reserve the no-dedup upper bound so the fill never reallocates, then
-    // shrink: the returned vector lives on in the MFG (and sits in the
-    // pipeline queue), so it must not retain worst-case slack — LABOR's
-    // whole point is that unique inputs ≪ edges
-    let mut inputs: Vec<u32> = Vec::with_capacity(seeds.len() + edge_src_global.len());
-    inputs.extend_from_slice(seeds);
+    // the dedup pass appends into the reusable `fill` buffer (its capacity
+    // persists across batches, so steady state never reallocates), then
+    // one exact-sized vector is copied out: the returned `inputs` lives on
+    // in the MFG (and sits in the pipeline queue), so it must not retain
+    // worst-case slack — LABOR's whole point is that unique inputs ≪ edges
+    fill.clear();
+    fill.extend_from_slice(seeds);
     for (i, &s) in seeds.iter().enumerate() {
         map.insert(s, i as u32);
     }
@@ -375,27 +424,34 @@ pub(crate) fn finalize_inputs_in(
         let id = match map.get(*src) {
             Some(id) => id,
             None => {
-                let id = inputs.len() as u32;
+                let id = fill.len() as u32;
                 map.insert(*src, id);
-                inputs.push(*src);
+                fill.push(*src);
                 id
             }
         };
         *src = id;
     }
-    inputs.shrink_to_fit();
+    let mut inputs: Vec<u32> = Vec::with_capacity(fill.len());
+    inputs.extend_from_slice(fill);
     inputs
 }
 
-/// [`finalize_inputs_in`] with a throwaway map (unit tests only — every
-/// production caller threads a scratch map).
+/// [`finalize_inputs_in`] with throwaway scratch (unit tests only — every
+/// production caller threads a scratch map and fill buffer).
 #[cfg(test)]
 pub(crate) fn finalize_inputs(
     num_vertices: usize,
     seeds: &[u32],
     edge_src_global: &mut [u32],
 ) -> Vec<u32> {
-    finalize_inputs_in(&mut EpochMap::default(), num_vertices, seeds, edge_src_global)
+    finalize_inputs_in(
+        &mut EpochMap::default(),
+        &mut Vec::new(),
+        num_vertices,
+        seeds,
+        edge_src_global,
+    )
 }
 
 /// Shared helper: Hajek row-normalization. `raw[e]` holds the
@@ -409,16 +465,35 @@ pub(crate) fn hajek_normalize_in(
     raw: &[f64],
     num_seeds: usize,
 ) -> Vec<f32> {
+    let mut out = Vec::with_capacity(edge_dst.len());
+    hajek_normalize_into(sums, edge_dst, raw, num_seeds, &mut out);
+    out
+}
+
+/// [`hajek_normalize_in`] writing into a caller-provided (reusable) output
+/// buffer — the shard workers of [`par`] normalize into their arena's
+/// weight buffer so the parallel path allocates nothing per shard.
+/// Identical arithmetic (and therefore identical bits) to the allocating
+/// variant.
+pub(crate) fn hajek_normalize_into(
+    sums: &mut Vec<f64>,
+    edge_dst: &[u32],
+    raw: &[f64],
+    num_seeds: usize,
+    out: &mut Vec<f32>,
+) {
     sums.clear();
     sums.resize(num_seeds, 0.0);
     for (e, &dst) in edge_dst.iter().enumerate() {
         sums[dst as usize] += raw[e];
     }
-    edge_dst
-        .iter()
-        .enumerate()
-        .map(|(e, &dst)| (raw[e] / sums[dst as usize]) as f32)
-        .collect()
+    out.clear();
+    out.extend(
+        edge_dst
+            .iter()
+            .enumerate()
+            .map(|(e, &dst)| (raw[e] / sums[dst as usize]) as f32),
+    );
 }
 
 /// [`hajek_normalize_in`] with throwaway scratch (unit tests only).

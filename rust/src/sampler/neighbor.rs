@@ -5,6 +5,7 @@
 //! Hajek estimator with uniform inclusion probabilities, i.e. each sampled
 //! edge gets weight `1/d̃_s` (Eq. 6).
 
+use super::par::{concat_and_finalize, run_shards, PoolParts, ScratchPool};
 use super::scratch::EpochMap;
 use super::{finalize_inputs_in, LayerSampler, SampleCtx, SampledLayer, SamplerScratch};
 use crate::graph::CscGraph;
@@ -41,6 +42,55 @@ fn sample_distinct_stamped(
         out.push(vj);
         map.insert(j as u32, vi as u32);
     }
+}
+
+/// One shard of NS: the per-seed loop of [`NeighborSampler::sample_layer`]
+/// verbatim, but emitting shard-local seed indices into the worker's edge
+/// buffers (rebased during the merge). NS randomness is keyed by
+/// `(batch, layer, vertex)`, so every seed's picks are identical to the
+/// sequential path no matter which shard samples it.
+fn sample_ns_shard(
+    g: &CscGraph,
+    shard_seeds: &[u32],
+    k: usize,
+    ctx: SampleCtx,
+    scratch: &mut SamplerScratch,
+) {
+    let mut edge_src = std::mem::take(&mut scratch.edge_src);
+    let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+    let mut edge_weight = std::mem::take(&mut scratch.wbuf);
+    let mut picks = std::mem::take(&mut scratch.picks);
+    edge_src.clear();
+    edge_dst.clear();
+    edge_weight.clear();
+    for (si, &s) in shard_seeds.iter().enumerate() {
+        let nbrs = g.in_neighbors(s);
+        let d = nbrs.len();
+        if d == 0 {
+            continue;
+        }
+        let dt = d.min(k);
+        let w = 1.0 / dt as f32;
+        if d <= k {
+            for &t in nbrs {
+                edge_src.push(t);
+                edge_dst.push(si as u32);
+                edge_weight.push(w);
+            }
+        } else {
+            let mut rng = StreamRng::new(mix2(ctx.batch_seed, mix2(ctx.layer as u64, s as u64)));
+            sample_distinct_stamped(&mut rng, d as u64, k, &mut picks, &mut scratch.map);
+            for &j in &picks {
+                edge_src.push(nbrs[j as usize]);
+                edge_dst.push(si as u32);
+                edge_weight.push(w);
+            }
+        }
+    }
+    scratch.edge_src = edge_src;
+    scratch.edge_dst = edge_dst;
+    scratch.wbuf = edge_weight;
+    scratch.picks = picks;
 }
 
 impl LayerSampler for NeighborSampler {
@@ -87,7 +137,13 @@ impl LayerSampler for NeighborSampler {
             }
         }
 
-        let inputs = finalize_inputs_in(&mut scratch.map, g.num_vertices(), seeds, &mut edge_src);
+        let inputs = finalize_inputs_in(
+            &mut scratch.map,
+            &mut scratch.inputs_fill,
+            g.num_vertices(),
+            seeds,
+            &mut edge_src,
+        );
         let out = SampledLayer {
             seeds: seeds.to_vec(),
             inputs,
@@ -100,6 +156,26 @@ impl LayerSampler for NeighborSampler {
         scratch.wbuf = edge_weight;
         scratch.picks = picks;
         out
+    }
+
+    fn sample_layer_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> SampledLayer {
+        let shards = pool.plan(g, seeds, num_shards);
+        if shards <= 1 {
+            return self.sample_layer(g, seeds, ctx, pool.main_mut());
+        }
+        let k = self.fanouts[ctx.layer];
+        let PoolParts { main, workers, ranges, .. } = pool.parts(shards);
+        run_shards(&mut *workers, |i, scratch| {
+            sample_ns_shard(g, &seeds[ranges[i].clone()], k, ctx, scratch);
+        });
+        concat_and_finalize(g, seeds, ranges, main, &*workers)
     }
 
     fn name(&self) -> String {

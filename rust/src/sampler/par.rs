@@ -1,0 +1,518 @@
+//! Deterministic intra-batch parallel sampling: degree-aware seed
+//! sharding, a scoped-thread worker pool with per-worker scratch arenas,
+//! and order-preserving merges.
+//!
+//! The [`SamplingPipeline`](crate::coordinator::pipeline::SamplingPipeline)
+//! parallelizes *across* batches, which stops helping exactly where the
+//! paper's headline claim lives: the large-batch regime ("up to 112×
+//! larger batch sizes than NS"), where one batch dominates the epoch and
+//! a single core samples it while the rest idle. This module parallelizes
+//! *within* a batch: the seed set is split into contiguous shards balanced
+//! by **work** (prefix sum of in-degrees, [`partition_seeds`]) rather than
+//! by count — on skewed-degree graphs an equal-count split would serialize
+//! on the hub shard — and each shard is sampled by its own worker with its
+//! own [`SamplerScratch`] arena from a [`ScratchPool`].
+//!
+//! ## Determinism contract
+//!
+//! Sharded sampling is **bit-identical** to sequential sampling for every
+//! [`SamplerKind`](super::SamplerKind) and any shard count (enforced by
+//! `tests/parallel_identity.rs`). This works because no sampler keeps
+//! stateful randomness: all variates come from hash RNGs keyed by vertex
+//! id and [`SampleCtx`](super::SampleCtx), so every shard recomputes
+//! exactly the variates it needs (LABOR's shared `r_t` in particular is
+//! recomputed identically in every shard). The remaining cross-seed
+//! couplings are merged without changing any f64 operation order:
+//!
+//! * **candidate numbering** — each shard discovers its candidates in
+//!   local first-seen order; [`merge_candidates`] walks shards in order
+//!   and assigns global ids to first appearances, which reproduces the
+//!   sequential first-seen order exactly (a vertex first seen globally in
+//!   shard *j* is new to shards `0..j` by definition);
+//! * **per-candidate maxima** (LABOR's `max_{t→s} c_s`, weighted LABOR's
+//!   Eq. 25) — max over a fixed multiset is order-independent, so
+//!   shard-local maxima merged by max are exact;
+//! * **per-candidate sums** (LADIES' importance mass) — shard partial
+//!   sums would re-associate floating-point addition, so the merge
+//!   *replays* the per-edge adds in shard × seed × neighbor order, which
+//!   is precisely the sequential add order;
+//! * **global reductions and layer-wise picks** (fixed-point objective,
+//!   LADIES' total mass / alias draws, PLADIES' `α` solve) — computed
+//!   sequentially over the merged global candidate order, exactly as the
+//!   sequential path does;
+//! * **edge streams** — shards emit edges in seed-major order into
+//!   per-shard buffers; [`concat_and_finalize`] concatenates them in shard
+//!   order (= global seed-major order) and runs the same single
+//!   `finalize_inputs_in` pass as sequential sampling. Hajek row sums are
+//!   per-seed and therefore shard-local.
+//!
+//! The worker pool is a scoped `std::thread` fan-out ([`run_shards`]): no
+//! external dependencies (the workspace is offline), no `'static` bounds,
+//! and shard 0 always runs on the calling thread. Phases that must see
+//! each other's results (discovery → merge → fixed point → sampling) are
+//! separate fan-outs with sequential merge steps in between.
+
+use super::scratch::SamplerScratch;
+use super::{finalize_inputs_in, SampledLayer};
+use crate::graph::CscGraph;
+use std::ops::Range;
+
+/// Split `seeds` into `num_shards` contiguous ranges of approximately
+/// equal **work**, where a seed's work is `in_degree + 1` (the `+1` keeps
+/// zero-degree seeds from collapsing into one shard and models the
+/// per-seed constant cost). Boundaries are placed on the running prefix
+/// sum, so a hub vertex ends up alone in its shard instead of dragging
+/// its neighbors' work along — the skewed-degree case that equal-count
+/// sharding serializes on.
+///
+/// The returned ranges are contiguous, non-overlapping, cover
+/// `0..seeds.len()`, and may be empty (when one seed's work spans several
+/// boundaries, or `num_shards > seeds.len()`).
+pub fn partition_seeds(g: &CscGraph, seeds: &[u32], num_shards: usize) -> Vec<Range<usize>> {
+    let mut ranges = Vec::new();
+    partition_seeds_into(g, seeds, num_shards, &mut ranges);
+    ranges
+}
+
+/// [`partition_seeds`] writing into a reusable range buffer.
+pub(crate) fn partition_seeds_into(
+    g: &CscGraph,
+    seeds: &[u32],
+    num_shards: usize,
+    ranges: &mut Vec<Range<usize>>,
+) {
+    let shards = num_shards.max(1);
+    ranges.clear();
+    if seeds.is_empty() {
+        ranges.extend((0..shards).map(|_| 0..0));
+        return;
+    }
+    let work = |s: u32| g.in_degree(s) as u64 + 1;
+    let total: u64 = seeds.iter().map(|&s| work(s)).sum();
+    let mut cum = 0u64;
+    let mut idx = 0usize;
+    let mut start = 0usize;
+    for j in 1..=shards as u64 {
+        let target = total * j / shards as u64;
+        while idx < seeds.len() && cum < target {
+            cum += work(seeds[idx]);
+            idx += 1;
+        }
+        ranges.push(start..idx);
+        start = idx;
+    }
+}
+
+/// Mutable views into a [`ScratchPool`], split so that a parallel phase
+/// can hand each worker its own `&mut SamplerScratch` while the merge
+/// arena and the translation tables stay independently borrowable.
+pub(crate) struct PoolParts<'a> {
+    /// merge arena: global candidate list/index, global π / max-c / mass /
+    /// chosen buffers, and the final concat + `finalize_inputs` pass
+    pub main: &'a mut SamplerScratch,
+    /// one arena per shard (exactly `shards` entries)
+    pub workers: &'a mut [SamplerScratch],
+    /// per-shard local→global candidate id translation, filled by
+    /// [`merge_candidates`]
+    pub xlat: &'a mut [Vec<u32>],
+    /// shard seed ranges from the last [`ScratchPool::plan`] call
+    pub ranges: &'a [Range<usize>],
+}
+
+/// Arena pool for sharded sampling: one merge [`SamplerScratch`] plus one
+/// per shard worker, all reused across batches (see
+/// [`SamplerScratch`]'s reuse contract — a warm pool performs no
+/// per-batch O(|V|) allocation). Create one per *pipeline* thread; the
+/// shard workers it feeds are scoped threads that borrow its arenas.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    main: SamplerScratch,
+    workers: Vec<SamplerScratch>,
+    xlat: Vec<Vec<u32>>,
+    ranges: Vec<Range<usize>>,
+}
+
+impl ScratchPool {
+    /// An empty pool; arenas are created and sized on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A pool with the merge arena and `num_shards` worker arenas
+    /// pre-sized for a graph with `num_vertices` vertices, so even the
+    /// first batch skips the O(|V|) map allocations. With `num_shards`
+    /// of 1 no worker arenas are built at all — the sequential path uses
+    /// only the merge arena, and paying O(|V|) for an untouched worker
+    /// would waste real memory on large graphs.
+    pub fn for_vertices(num_vertices: usize, num_shards: usize) -> Self {
+        let n = if num_shards > 1 { num_shards } else { 0 };
+        Self {
+            main: SamplerScratch::for_vertices(num_vertices),
+            workers: (0..n).map(|_| SamplerScratch::for_vertices(num_vertices)).collect(),
+            xlat: vec![Vec::new(); n],
+            ranges: Vec::new(),
+        }
+    }
+
+    /// The merge arena — also the scratch used by the sequential
+    /// (1-shard) fallback path.
+    pub fn main_mut(&mut self) -> &mut SamplerScratch {
+        &mut self.main
+    }
+
+    /// Clamp the shard count to the seed count, compute the degree-aware
+    /// shard ranges, and make sure enough worker arenas exist. Returns
+    /// the effective shard count; `<= 1` means the caller should take the
+    /// sequential path on [`main_mut`](Self::main_mut).
+    pub(crate) fn plan(&mut self, g: &CscGraph, seeds: &[u32], num_shards: usize) -> usize {
+        let shards = num_shards.max(1).min(seeds.len().max(1));
+        if shards > 1 {
+            partition_seeds_into(g, seeds, shards, &mut self.ranges);
+            if self.workers.len() < shards {
+                // size new arenas for the graph up front so their first
+                // use doesn't pay the O(|V|) map allocation mid-phase
+                let nv = g.num_vertices();
+                self.workers.resize_with(shards, || SamplerScratch::for_vertices(nv));
+            }
+            if self.xlat.len() < shards {
+                self.xlat.resize_with(shards, Vec::new);
+            }
+        }
+        shards
+    }
+
+    /// Split borrows for one sharded layer call (after
+    /// [`plan`](Self::plan) returned `shards`).
+    pub(crate) fn parts(&mut self, shards: usize) -> PoolParts<'_> {
+        PoolParts {
+            main: &mut self.main,
+            workers: &mut self.workers[..shards],
+            xlat: &mut self.xlat[..shards],
+            ranges: &self.ranges[..shards],
+        }
+    }
+}
+
+/// Run `f(shard_index, worker_scratch)` for every shard on a scoped
+/// thread pool: shards `1..n` are spawned, shard 0 runs on the calling
+/// thread, and the scope joins everything before returning. With a single
+/// worker this degenerates to a plain call (no thread traffic at all).
+pub(crate) fn run_shards<F>(workers: &mut [SamplerScratch], f: F)
+where
+    F: Fn(usize, &mut SamplerScratch) + Sync,
+{
+    if workers.len() <= 1 {
+        if let Some(w) = workers.first_mut() {
+            f(0, w);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut iter = workers.iter_mut().enumerate();
+        let first = iter.next();
+        for (i, w) in iter {
+            scope.spawn(move || f(i, w));
+        }
+        if let Some((i, w)) = first {
+            f(i, w);
+        }
+    });
+}
+
+/// Shard-local candidate discovery (the parallel half of what
+/// `LaborLayerState::new_in` / `LayerCandidates::build_in` do): walk the
+/// shard's seeds in order, assign shard-local first-seen candidate ids via
+/// the worker's epoch map, and record every seed's neighbor list in local
+/// ids as a flat CSR (`nbr_local` / `nbr_off`, one offset per seed
+/// including empty ones). With `with_weights`, also record the per-edge
+/// adjacency weights into `w_pi`/`w_a` (weighted LABOR's `π⁰ = A`).
+pub(crate) fn discover_shard(
+    g: &CscGraph,
+    shard_seeds: &[u32],
+    scratch: &mut SamplerScratch,
+    with_weights: bool,
+) {
+    let mut candidates = std::mem::take(&mut scratch.candidates);
+    let mut nbr_local = std::mem::take(&mut scratch.nbr_local);
+    let mut nbr_off = std::mem::take(&mut scratch.nbr_off);
+    let mut pi_edge = std::mem::take(&mut scratch.w_pi);
+    let mut a_edge = std::mem::take(&mut scratch.w_a);
+    candidates.clear();
+    nbr_local.clear();
+    nbr_off.clear();
+    pi_edge.clear();
+    a_edge.clear();
+    let map = &mut scratch.map;
+    map.begin(g.num_vertices());
+    nbr_off.push(0);
+    for &s in shard_seeds {
+        for &t in g.in_neighbors(s) {
+            let id = match map.get(t) {
+                Some(id) => id,
+                None => {
+                    let id = candidates.len() as u32;
+                    map.insert(t, id);
+                    candidates.push(t);
+                    id
+                }
+            };
+            nbr_local.push(id);
+        }
+        if with_weights {
+            let ws = g.in_weights(s).expect("weighted discovery needs an edge-weighted graph");
+            for &w in ws {
+                pi_edge.push(w as f64);
+                a_edge.push(w as f64);
+            }
+        }
+        nbr_off.push(nbr_local.len());
+    }
+    scratch.candidates = candidates;
+    scratch.nbr_local = nbr_local;
+    scratch.nbr_off = nbr_off;
+    scratch.w_pi = pi_edge;
+    scratch.w_a = a_edge;
+}
+
+/// Merge the shards' local candidate lists into the global list
+/// (`main.candidates`, indexed by `main.cand_map`) and fill each shard's
+/// local→global translation table. Walking shards in order and appending
+/// first appearances reproduces the sequential first-seen candidate order
+/// bit-for-bit — see the module docs. Returns the global candidate count.
+pub(crate) fn merge_candidates(
+    num_vertices: usize,
+    main: &mut SamplerScratch,
+    workers: &[SamplerScratch],
+    xlat: &mut [Vec<u32>],
+) -> usize {
+    main.cand_map.begin(num_vertices);
+    main.candidates.clear();
+    for (i, w) in workers.iter().enumerate() {
+        let x = &mut xlat[i];
+        x.clear();
+        for &t in &w.candidates {
+            let id = match main.cand_map.get(t) {
+                Some(id) => id,
+                None => {
+                    let id = main.candidates.len() as u32;
+                    main.cand_map.insert(t, id);
+                    main.candidates.push(t);
+                    id
+                }
+            };
+            x.push(id);
+        }
+    }
+    main.candidates.len()
+}
+
+/// Merge shard-local per-candidate maxima (`workers[i].maxc`, indexed by
+/// local candidate id) into `out` over the global candidate ids. Max over
+/// a fixed multiset is order-independent, so this is exact regardless of
+/// shard count.
+pub(crate) fn merge_max(
+    out: &mut Vec<f64>,
+    num_candidates: usize,
+    workers: &[SamplerScratch],
+    xlat: &[Vec<u32>],
+) {
+    out.clear();
+    out.resize(num_candidates, 0.0);
+    for (i, w) in workers.iter().enumerate() {
+        for (li, &gi) in xlat[i].iter().enumerate() {
+            let v = w.maxc[li];
+            if v > out[gi as usize] {
+                out[gi as usize] = v;
+            }
+        }
+    }
+}
+
+/// Replay the LADIES importance-mass accumulation over the shards' saved
+/// neighbor lists: shard × seed × neighbor order is exactly the
+/// sequential per-edge add order, so the merged mass is bit-identical to
+/// `LayerCandidates::build_in` (shard *partial* sums would re-associate
+/// the floating-point additions).
+pub(crate) fn merge_mass(
+    out: &mut Vec<f64>,
+    num_candidates: usize,
+    workers: &[SamplerScratch],
+    xlat: &[Vec<u32>],
+) {
+    out.clear();
+    out.resize(num_candidates, 0.0);
+    for (i, w) in workers.iter().enumerate() {
+        let x = &xlat[i];
+        for si in 0..w.nbr_off.len().saturating_sub(1) {
+            let (lo, hi) = (w.nbr_off[si], w.nbr_off[si + 1]);
+            let d = hi - lo;
+            if d == 0 {
+                continue;
+            }
+            let wt = 1.0 / (d as f64 * d as f64);
+            for &ti in &w.nbr_local[lo..hi] {
+                out[x[ti as usize] as usize] += wt;
+            }
+        }
+    }
+}
+
+/// Concatenate the shards' edge buffers (`edge_src` global vertex ids,
+/// `edge_dst` shard-local seed indices, `wbuf` final Hajek weights) in
+/// shard order — which is the global seed-major order — rebase the seed
+/// indices, and run the same single `finalize_inputs_in` pass as the
+/// sequential path. The merge buffers live in `main` (capacity reused);
+/// the returned [`SampledLayer`] holds exact-sized copies.
+pub(crate) fn concat_and_finalize(
+    g: &CscGraph,
+    seeds: &[u32],
+    ranges: &[Range<usize>],
+    main: &mut SamplerScratch,
+    workers: &[SamplerScratch],
+) -> SampledLayer {
+    let mut edge_src = std::mem::take(&mut main.edge_src);
+    let mut edge_dst = std::mem::take(&mut main.edge_dst);
+    let mut weights = std::mem::take(&mut main.wbuf);
+    edge_src.clear();
+    edge_dst.clear();
+    weights.clear();
+    for (i, w) in workers.iter().enumerate() {
+        let base = ranges[i].start as u32;
+        edge_src.extend_from_slice(&w.edge_src);
+        edge_dst.extend(w.edge_dst.iter().map(|&d| base + d));
+        weights.extend_from_slice(&w.wbuf);
+    }
+    let inputs = finalize_inputs_in(
+        &mut main.map,
+        &mut main.inputs_fill,
+        g.num_vertices(),
+        seeds,
+        &mut edge_src,
+    );
+    let out = SampledLayer {
+        seeds: seeds.to_vec(),
+        inputs,
+        edge_src: edge_src.clone(),
+        edge_dst: edge_dst.clone(),
+        edge_weight: weights.clone(),
+    };
+    main.edge_src = edge_src;
+    main.edge_dst = edge_dst;
+    main.wbuf = weights;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testutil::{skewed_graph, test_graph};
+
+    fn shard_work(g: &CscGraph, seeds: &[u32], r: &Range<usize>) -> u64 {
+        seeds[r.clone()].iter().map(|&s| g.in_degree(s) as u64 + 1).sum()
+    }
+
+    #[test]
+    fn partition_covers_contiguously() {
+        let g = test_graph();
+        let seeds: Vec<u32> = (0..137).collect();
+        for shards in [1usize, 2, 3, 8, 200, 1000] {
+            let ranges = partition_seeds(&g, &seeds, shards);
+            assert_eq!(ranges.len(), shards.max(1));
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "shards={shards}");
+                assert!(r.end >= r.start);
+                next = r.end;
+            }
+            assert_eq!(next, seeds.len(), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn partition_balances_work_on_skewed_degrees() {
+        // the point of degree-aware sharding: vertex 0 has in-degree 199
+        // while most others have ~2 — equal-count shards would leave the
+        // hub shard with ~half the total work
+        let g = skewed_graph();
+        let seeds: Vec<u32> = (0..200).collect();
+        let total: u64 = seeds.iter().map(|&s| g.in_degree(s) as u64 + 1).sum();
+        let max_item: u64 = seeds.iter().map(|&s| g.in_degree(s) as u64 + 1).max().unwrap();
+        for shards in [2usize, 3, 4, 8] {
+            let ranges = partition_seeds(&g, &seeds, shards);
+            let worst =
+                ranges.iter().map(|r| shard_work(&g, &seeds, r)).max().unwrap();
+            // a boundary can overshoot by at most one seed's work
+            assert!(
+                worst <= total / shards as u64 + max_item,
+                "shards={shards}: worst {worst} vs ideal {} (+{max_item})",
+                total / shards as u64
+            );
+        }
+        // and the hub must not drag a large tail of seeds into its shard:
+        // with 4 shards the hub's shard holds far fewer than 200/4 seeds
+        let ranges = partition_seeds(&g, &seeds, 4);
+        let hub_shard = ranges.iter().find(|r| r.contains(&0)).unwrap();
+        assert!(
+            hub_shard.end - hub_shard.start < 50,
+            "hub shard spans {} seeds",
+            hub_shard.end - hub_shard.start
+        );
+    }
+
+    #[test]
+    fn partition_empty_and_tiny_inputs() {
+        let g = test_graph();
+        let ranges = partition_seeds(&g, &[], 4);
+        assert_eq!(ranges.len(), 4);
+        assert!(ranges.iter().all(|r| r.is_empty()));
+        // more shards than seeds: every seed still appears exactly once
+        let seeds = [3u32, 4];
+        let ranges = partition_seeds(&g, &seeds, 8);
+        let covered: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn run_shards_runs_every_worker_once() {
+        let mut workers: Vec<SamplerScratch> =
+            (0..5).map(|_| SamplerScratch::new()).collect();
+        run_shards(&mut workers, |i, w| {
+            w.picks.push(i as u64);
+        });
+        for (i, w) in workers.iter().enumerate() {
+            assert_eq!(w.picks, vec![i as u64], "worker {i}");
+        }
+    }
+
+    #[test]
+    fn merged_candidate_order_matches_single_shard_discovery() {
+        // discovery over 1 shard gives the sequential first-seen order;
+        // discovery over k shards + merge must reproduce it exactly
+        let g = test_graph();
+        let seeds: Vec<u32> = (0..90).collect();
+        let mut whole = SamplerScratch::new();
+        discover_shard(&g, &seeds, &mut whole, false);
+        let sequential = whole.candidates.clone();
+        for shards in [2usize, 3, 5] {
+            let ranges = partition_seeds(&g, &seeds, shards);
+            let mut workers: Vec<SamplerScratch> =
+                (0..shards).map(|_| SamplerScratch::new()).collect();
+            for (i, r) in ranges.iter().enumerate() {
+                discover_shard(&g, &seeds[r.clone()], &mut workers[i], false);
+            }
+            let mut main = SamplerScratch::new();
+            let mut xlat: Vec<Vec<u32>> = vec![Vec::new(); shards];
+            let n =
+                merge_candidates(g.num_vertices(), &mut main, &workers, &mut xlat);
+            assert_eq!(n, sequential.len(), "shards={shards}");
+            assert_eq!(main.candidates, sequential, "shards={shards}");
+            // translation tables are consistent with the global list
+            for (i, w) in workers.iter().enumerate() {
+                for (li, &t) in w.candidates.iter().enumerate() {
+                    assert_eq!(main.candidates[xlat[i][li] as usize], t);
+                }
+            }
+        }
+    }
+}

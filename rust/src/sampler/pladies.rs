@@ -7,7 +7,11 @@
 //! construction (no with-replacement debiasing needed, cf. Chen et al.
 //! 2022), and the variance carries the `-1/d_s` improvement of Eq. (8).
 
-use super::ladies::{connect_chosen, LayerCandidates};
+use super::ladies::{connect_chosen, connect_shard, LayerCandidates};
+use super::par::{
+    concat_and_finalize, discover_shard, merge_candidates, merge_mass, run_shards, PoolParts,
+    ScratchPool,
+};
 use super::poisson::solve_saturated_scale;
 use super::{LayerSampler, SampleCtx, SampledLayer, SamplerScratch};
 use crate::graph::CscGraph;
@@ -54,6 +58,60 @@ impl LayerSampler for PladiesSampler {
         let out = connect_chosen(g, seeds, &cand, &chosen, scratch);
         scratch.chosen = chosen;
         cand.recycle(scratch);
+        out
+    }
+
+    fn sample_layer_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> SampledLayer {
+        let shards = pool.plan(g, seeds, num_shards);
+        if shards <= 1 {
+            return self.sample_layer(g, seeds, ctx, pool.main_mut());
+        }
+        let n = self.budgets[ctx.layer];
+        let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
+
+        // sharded discovery + sequential-order mass replay (par::merge_mass)
+        run_shards(&mut *workers, |i, s| {
+            discover_shard(g, &seeds[ranges[i].clone()], s, false);
+        });
+        let ncand = merge_candidates(g.num_vertices(), main, &*workers, xlat);
+        let xlat: &[Vec<u32>] = xlat;
+        if ncand == 0 {
+            return SampledLayer {
+                seeds: seeds.to_vec(),
+                inputs: seeds.to_vec(),
+                ..Default::default()
+            };
+        }
+        merge_mass(&mut main.mass, ncand, &*workers, xlat);
+
+        // α solve and the per-candidate Poisson inclusions run over the
+        // merged global candidate order; the variates are keyed by vertex
+        // id, so this is the exact sequence of draws of the 1-shard path
+        let alpha = solve_saturated_scale(&main.mass, n as f64);
+        let rng = HashRng::new(mix2(ctx.batch_seed, 0x91AD1E5 ^ ctx.layer as u64));
+        let mut chosen = std::mem::take(&mut main.chosen);
+        chosen.clear();
+        chosen.extend(main.candidates.iter().enumerate().map(|(ti, &t)| {
+            let p = (alpha * main.mass[ti]).min(1.0);
+            if rng.uniform(t as u64) <= p {
+                Some(1.0 / p)
+            } else {
+                None
+            }
+        }));
+
+        // sharded connect + merge
+        let chosen_ref = &chosen;
+        run_shards(&mut *workers, |i, s| connect_shard(s, &xlat[i], chosen_ref));
+        let out = concat_and_finalize(g, seeds, ranges, main, &*workers);
+        main.chosen = chosen;
         out
     }
 

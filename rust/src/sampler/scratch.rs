@@ -131,6 +131,11 @@ pub struct SamplerScratch {
     pub(crate) raw: Vec<f64>,
     pub(crate) wbuf: Vec<f32>,
     pub(crate) sums: Vec<f64>,
+    /// Worst-case-capacity fill buffer for `finalize_inputs_in`: the dedup
+    /// pass appends here (capacity persists across batches), then one
+    /// exact-sized `inputs` vector is copied out — no per-call
+    /// `with_capacity` + `shrink_to_fit` realloc-and-copy.
+    pub(crate) inputs_fill: Vec<u32>,
 
     // --- sequential Poisson rounding (LABOR-seq) ---
     pub(crate) sp_probs: Vec<f64>,

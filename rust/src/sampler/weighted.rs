@@ -7,9 +7,13 @@
 //! `A_ts·M_t` with HT weights `1/min(1, c_s π_ts)` and Hajek
 //! row-normalization against `A_{*s}`.
 
+use super::par::{
+    concat_and_finalize, discover_shard, merge_candidates, merge_max, run_shards, PoolParts,
+    ScratchPool,
+};
 use super::{
-    finalize_inputs_in, hajek_normalize_in, IterSpec, LayerSampler, SampleCtx, SampledLayer,
-    SamplerScratch,
+    finalize_inputs_in, hajek_normalize_in, hajek_normalize_into, IterSpec, LayerSampler,
+    SampleCtx, SampledLayer, SamplerScratch,
 };
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
@@ -59,6 +63,91 @@ pub fn solve_cs_weighted(pi: &[f64], a: &[f64], v: f64) -> f64 {
         prefix_a2 += a2[order[m]];
     }
     suffix[0] / rhs
+}
+
+/// Per-shard weighted `c_s` recompute (Eq. 23): the per-seed solve reads
+/// only the seed's own edge slices, which live in the shard's arena.
+fn recompute_c_weighted_shard(k: usize, scratch: &mut SamplerScratch) {
+    let nseeds = scratch.nbr_off.len() - 1;
+    let mut c = std::mem::take(&mut scratch.c);
+    c.clear();
+    c.resize(nseeds, 0.0);
+    for si in 0..nseeds {
+        let (lo, hi) = (scratch.nbr_off[si], scratch.nbr_off[si + 1]);
+        let d = hi - lo;
+        if d == 0 {
+            c[si] = 0.0;
+            continue;
+        }
+        let v = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
+        c[si] = solve_cs_weighted(&scratch.w_pi[lo..hi], &scratch.w_a[lo..hi], v);
+    }
+    scratch.c = c;
+}
+
+/// Per-shard max of `c_s·π_ts` per local candidate (Eq. 25); the global
+/// per-candidate maximum is assembled by `par::merge_max` (exact).
+fn fill_maxv_weighted_shard(scratch: &mut SamplerScratch) {
+    let mut maxv = std::mem::take(&mut scratch.maxc);
+    maxv.clear();
+    maxv.resize(scratch.candidates.len(), 0.0);
+    let nseeds = scratch.nbr_off.len() - 1;
+    for si in 0..nseeds {
+        let cs = scratch.c[si];
+        for e in scratch.nbr_off[si]..scratch.nbr_off[si + 1] {
+            let val = cs * scratch.w_pi[e];
+            let ti = scratch.nbr_local[e] as usize;
+            if val > maxv[ti] {
+                maxv[ti] = val;
+            }
+        }
+    }
+    scratch.maxc = maxv;
+}
+
+/// Per-shard π update from the merged global maxima: elementwise over the
+/// shard's edges, identical arithmetic to the sequential update.
+fn update_pi_weighted_shard(scratch: &mut SamplerScratch, xlat: &[u32], maxv: &[f64]) {
+    let mut pi_edge = std::mem::take(&mut scratch.w_pi);
+    for (e, p) in pi_edge.iter_mut().enumerate() {
+        *p = maxv[xlat[scratch.nbr_local[e] as usize] as usize].max(f64::MIN_POSITIVE);
+    }
+    scratch.w_pi = pi_edge;
+}
+
+/// Per-shard weighted sampling pass: the sequential per-seed loop
+/// verbatim, with shard-local seed indices (rebased during the merge) and
+/// the shared `r_t` recomputed from the vertex-keyed hash RNG.
+fn sample_weighted_shard(
+    g: &CscGraph,
+    shard_seeds: &[u32],
+    scratch: &mut SamplerScratch,
+    rng: &HashRng,
+) {
+    let mut edge_src = std::mem::take(&mut scratch.edge_src);
+    let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+    let mut raw = std::mem::take(&mut scratch.raw);
+    edge_src.clear();
+    edge_dst.clear();
+    raw.clear();
+    for (si, &s) in shard_seeds.iter().enumerate() {
+        let ws = g.in_weights(s).unwrap();
+        let lo = scratch.nbr_off[si];
+        for (ei, (&t, &a)) in g.in_neighbors(s).iter().zip(ws).enumerate() {
+            let p = (scratch.c[si] * scratch.w_pi[lo + ei]).min(1.0);
+            if p > 0.0 && rng.uniform(t as u64) <= p {
+                edge_src.push(t);
+                edge_dst.push(si as u32);
+                raw.push(a as f64 / p);
+            }
+        }
+    }
+    let mut wbuf = std::mem::take(&mut scratch.wbuf);
+    hajek_normalize_into(&mut scratch.sums, &edge_dst, &raw, shard_seeds.len(), &mut wbuf);
+    scratch.wbuf = wbuf;
+    scratch.edge_src = edge_src;
+    scratch.edge_dst = edge_dst;
+    scratch.raw = raw;
 }
 
 impl LayerSampler for WeightedLaborSampler {
@@ -185,7 +274,13 @@ impl LayerSampler for WeightedLaborSampler {
             }
         }
         let edge_weight = hajek_normalize_in(&mut scratch.sums, &edge_dst, &raw, seeds.len());
-        let inputs = finalize_inputs_in(&mut scratch.map, g.num_vertices(), seeds, &mut edge_src);
+        let inputs = finalize_inputs_in(
+            &mut scratch.map,
+            &mut scratch.inputs_fill,
+            g.num_vertices(),
+            seeds,
+            &mut edge_src,
+        );
         let out = SampledLayer {
             seeds: seeds.to_vec(),
             inputs,
@@ -204,6 +299,65 @@ impl LayerSampler for WeightedLaborSampler {
         scratch.edge_dst = edge_dst;
         scratch.raw = raw;
         out
+    }
+
+    fn sample_layer_sharded(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        ctx: SampleCtx,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> SampledLayer {
+        let shards = pool.plan(g, seeds, num_shards);
+        if shards <= 1 {
+            return self.sample_layer(g, seeds, ctx, pool.main_mut());
+        }
+        let k = self.fanouts[ctx.layer];
+        assert!(g.weights.is_some(), "WeightedLaborSampler requires an edge-weighted graph");
+        let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
+
+        // sharded discovery (per-edge π⁰ = A collected alongside)
+        run_shards(&mut *workers, |i, s| {
+            discover_shard(g, &seeds[ranges[i].clone()], s, true);
+        });
+        let ncand = merge_candidates(g.num_vertices(), main, &*workers, xlat);
+        let xlat: &[Vec<u32>] = xlat;
+
+        // the fixed point mirrors the sequential control flow exactly:
+        // per-seed solves and per-edge π updates are sharded; the
+        // per-candidate max is merged exactly; the convergence objective
+        // is summed sequentially in global candidate order
+        let iters = match self.iterations {
+            IterSpec::Fixed(n) => n,
+            IterSpec::Converge => 50,
+        };
+        let mut last_obj = f64::INFINITY;
+        for it in 0..=iters {
+            run_shards(&mut *workers, |_, s| recompute_c_weighted_shard(k, s));
+            if it == iters {
+                break;
+            }
+            run_shards(&mut *workers, |_, s| fill_maxv_weighted_shard(s));
+            merge_max(&mut main.maxc, ncand, &*workers, xlat);
+            let maxv = &main.maxc;
+            run_shards(&mut *workers, |i, s| update_pi_weighted_shard(s, &xlat[i], maxv));
+            if matches!(self.iterations, IterSpec::Converge) {
+                let obj: f64 = maxv.iter().map(|&m| m.min(1.0)).sum();
+                if (last_obj - obj).abs() <= 1e-4 * last_obj.max(1.0) {
+                    run_shards(&mut *workers, |_, s| recompute_c_weighted_shard(k, s));
+                    break;
+                }
+                last_obj = obj;
+            }
+        }
+
+        // sharded sampling with shared r_t + merge
+        let rng = HashRng::new(mix2(ctx.batch_seed, 0xAE1 ^ ctx.layer as u64));
+        run_shards(&mut *workers, |i, s| {
+            sample_weighted_shard(g, &seeds[ranges[i].clone()], s, &rng);
+        });
+        concat_and_finalize(g, seeds, ranges, main, &*workers)
     }
 
     fn name(&self) -> String {

@@ -1,0 +1,227 @@
+//! Sharded-sampling equivalence regression: for **every** sampler kind,
+//! the intra-batch parallel path (`sample_sharded` / degree-aware seed
+//! shards + scoped worker pool, see `sampler::par`) must be
+//! **bit-identical** to sequential sampling — same vertices, same edges,
+//! same f32 weight bits — at every shard count, on dense and on
+//! skewed-degree graphs, with one warm `ScratchPool` reused across all of
+//! it. This is the safety net under the parallel engine: any cross-shard
+//! float reassociation, candidate-order drift, or RNG divergence shows up
+//! here as a diff, not as a silent statistics shift.
+
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::weighted::WeightedLaborSampler;
+use labor_gnn::sampler::{
+    partition_seeds, IterSpec, LayerSampler, Mfg, MultiLayerSampler, SampleCtx, SamplerKind,
+    SamplerScratch, ScratchPool,
+};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+/// Star + chain + clique mixture: wildly skewed in-degrees (the hub has
+/// degree 199), the case degree-aware sharding exists for.
+fn skewed_graph() -> CscGraph {
+    let n = 200u32;
+    let mut b = CscBuilder::new(n as usize);
+    for t in 1..n {
+        b.edge(t, 0);
+        b.edge(0, t);
+    }
+    for t in 1..n - 1 {
+        b.edge(t, t + 1);
+    }
+    for u in 10..20u32 {
+        for v in 10..20u32 {
+            if u != v {
+                b.edge(u, v);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn weighted_graph(seed: u64) -> CscGraph {
+    let mut rng = StreamRng::new(seed);
+    let n = 150u32;
+    let mut b = CscBuilder::new(n as usize);
+    for s in 0..n {
+        let deg = 3 + rng.below(25) as usize;
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..deg {
+            let t = rng.below(n as u64) as u32;
+            if t != s && used.insert(t) {
+                b.weighted_edge(t, s, 0.1 + rng.next_f32() * 2.0);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+/// Every `SamplerKind` variant, with budgets for the layer samplers.
+fn all_kinds() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: true },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::LaborSequential { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Ladies { budgets: vec![120, 200] },
+        SamplerKind::Pladies { budgets: vec![120, 200] },
+    ]
+}
+
+fn assert_mfg_eq(a: &Mfg, b: &Mfg, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.seeds, lb.seeds, "{what} layer {l}: seeds");
+        assert_eq!(la.inputs, lb.inputs, "{what} layer {l}: inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l}: edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l}: edge_dst");
+        // bit-exact weights: compare the raw f32 bits, not approximate
+        let wa: Vec<u32> = la.edge_weight.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = lb.edge_weight.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "{what} layer {l}: edge_weight bits");
+    }
+}
+
+fn seeds_for(rng: &mut StreamRng, nv: u32) -> Vec<u32> {
+    let bs = 16 + rng.below(120) as u32;
+    let start = rng.below(nv as u64) as u32;
+    let mut seeds: Vec<u32> = (0..bs).map(|i| (start + i * 3) % nv).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    seeds
+}
+
+/// The acceptance criterion: sharded ≡ sequential, bit for bit, for every
+/// kind × shard count × graph — with one warm pool carried across every
+/// combination (shard-state leakage between kinds would surface here).
+#[test]
+fn sharded_mfgs_are_bit_identical_to_sequential_for_every_kind() {
+    let graphs = [("dense", dense_graph()), ("skewed", skewed_graph())];
+    let mut pool = ScratchPool::new();
+    let mut rng = StreamRng::new(0x5AA_DED);
+    for (gname, g) in &graphs {
+        let nv = g.num_vertices() as u32;
+        for kind in all_kinds() {
+            let label = kind.label();
+            let sampler = MultiLayerSampler::new(kind, &[5, 7]);
+            for &shards in &SHARD_COUNTS {
+                for batch in 0..6u64 {
+                    let seeds = seeds_for(&mut rng, nv);
+                    let seq = sampler.sample_fresh(g, &seeds, batch);
+                    let par = sampler.sample_sharded(g, &seeds, batch, shards, &mut pool);
+                    assert_mfg_eq(
+                        &par,
+                        &seq,
+                        &format!("{gname}/{label} shards={shards} batch {batch}"),
+                    );
+                    for (l, layer) in par.layers.iter().enumerate() {
+                        layer.validate(g).unwrap_or_else(|e| {
+                            panic!("{gname}/{label} shards={shards} layer {l}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Same guarantee for the weighted sampler (Appendix A.7), which is not a
+/// `SamplerKind` but implements the sharded entry point.
+#[test]
+fn sharded_weighted_labor_is_bit_identical() {
+    let g = weighted_graph(0xA7);
+    let mut pool = ScratchPool::new();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(2), IterSpec::Converge] {
+        let s = WeightedLaborSampler { fanouts: vec![5], iterations };
+        for &shards in &SHARD_COUNTS {
+            for batch in 0..8u64 {
+                let seeds: Vec<u32> = (0..(20 + (batch as u32 * 13) % 90)).collect();
+                let ctx = SampleCtx { batch_seed: batch, layer: 0 };
+                let seq = s.sample_layer(&g, &seeds, ctx, &mut SamplerScratch::new());
+                let par = s.sample_layer_sharded(&g, &seeds, ctx, shards, &mut pool);
+                let what = format!("w-labor {iterations:?} shards={shards} batch {batch}");
+                assert_eq!(par.seeds, seq.seeds, "{what}: seeds");
+                assert_eq!(par.inputs, seq.inputs, "{what}: inputs");
+                assert_eq!(par.edge_src, seq.edge_src, "{what}: edge_src");
+                assert_eq!(par.edge_dst, seq.edge_dst, "{what}: edge_dst");
+                let wa: Vec<u32> = par.edge_weight.iter().map(|w| w.to_bits()).collect();
+                let wb: Vec<u32> = seq.edge_weight.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(wa, wb, "{what}: weight bits");
+                par.validate(&g).unwrap();
+            }
+        }
+    }
+}
+
+/// Degenerate shapes: more shards than seeds, single-seed batches, and
+/// seed sets whose work all sits on the hub — the sharded path must clamp
+/// and stay identical.
+#[test]
+fn sharded_handles_degenerate_seed_sets() {
+    let g = skewed_graph();
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        &[4, 4],
+    );
+    let mut pool = ScratchPool::new();
+    let cases: Vec<Vec<u32>> = vec![
+        vec![0],                 // the hub alone
+        vec![0, 1],              // hub + one chain vertex
+        vec![5, 6, 7],           // fewer seeds than the 8-shard request
+        (0..200).collect(),      // everything
+    ];
+    for (ci, seeds) in cases.iter().enumerate() {
+        for &shards in &[2usize, 8, 16] {
+            let seq = sampler.sample_fresh(&g, seeds, ci as u64);
+            let par = sampler.sample_sharded(&g, seeds, ci as u64, shards, &mut pool);
+            assert_mfg_eq(&par, &seq, &format!("case {ci} shards={shards}"));
+        }
+    }
+}
+
+/// The degree-aware partitioner balances *work*, not seed counts: on the
+/// skewed graph the hub shard must not absorb half the total work, and
+/// the ranges must contiguously cover the seed list.
+#[test]
+fn partitioner_balances_work_on_skewed_graph() {
+    let g = skewed_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let work = |s: u32| g.in_degree(s) as u64 + 1;
+    let total: u64 = seeds.iter().map(|&s| work(s)).sum();
+    let max_item: u64 = seeds.iter().map(|&s| work(s)).max().unwrap();
+    for shards in [2usize, 4, 8] {
+        let ranges = partition_seeds(&g, &seeds, shards);
+        assert_eq!(ranges.len(), shards);
+        let mut next = 0usize;
+        let mut worst = 0u64;
+        for r in &ranges {
+            assert_eq!(r.start, next);
+            next = r.end;
+            let w: u64 = seeds[r.clone()].iter().map(|&s| work(s)).sum();
+            worst = worst.max(w);
+        }
+        assert_eq!(next, seeds.len());
+        assert!(
+            worst <= total / shards as u64 + max_item,
+            "shards={shards}: worst shard work {worst}, ideal {}",
+            total / shards as u64
+        );
+    }
+}

@@ -28,7 +28,14 @@ fn pipeline_feeds_trainer_end_to_end() {
         Arc::new(ds.graph.clone()),
         sampler,
         Arc::new(ds.splits.train.clone()),
-        PipelineConfig { num_workers: 3, queue_depth: 2, batch_size: bs, num_batches: 12, seed: 4 },
+        PipelineConfig {
+            num_workers: 3,
+            queue_depth: 2,
+            batch_size: bs,
+            num_batches: 12,
+            seed: 4,
+            intra_batch_threads: 1,
+        },
     );
     let mut losses = Vec::new();
     for b in &mut pipeline {
@@ -57,6 +64,7 @@ fn feature_store_traffic_tracks_sampler_efficiency() {
                 batch_size: 512,
                 num_batches: 10,
                 seed: 5,
+                intra_batch_threads: 2,
             },
         );
         let mut store = FeatureStore::new(&ds.features, ds.spec.num_features, TierModel::pcie());
