@@ -25,16 +25,21 @@ cargo test -q
 if [ "$MODE" != "fast" ]; then
   echo "== bench-smoke: build all bench targets, run the pipeline bench tiny"
   cargo build --release --benches
-  # --smoke: tiny iteration counts; proves the throughput sections and the
-  # allocation probe run end-to-end (see docs/BENCHMARKS.md); remove any
-  # stale perf record first so the existence check below can't pass on it
-  rm -f BENCH_pipeline.json
+  # --smoke: tiny iteration counts; proves the throughput sections, the
+  # data-plane gather sweep, and the allocation probe run end-to-end (see
+  # docs/BENCHMARKS.md); remove any stale perf records first so the
+  # existence checks below can't pass on them
+  rm -f BENCH_pipeline.json BENCH_datapipe.json
   cargo bench --bench pipeline -- --smoke
-  # the smoke run must leave the machine-readable perf trajectory behind
-  # (sequential vs sharded batches/s per thread count)
+  # the smoke run must leave both machine-readable perf records behind:
+  # batches/s per thread count, and feature bytes moved per sampler ×
+  # tier × cache (the bench itself asserts LABOR-0 < NS bytes)
   test -f BENCH_pipeline.json || { echo "BENCH_pipeline.json missing"; exit 1; }
+  test -f BENCH_datapipe.json || { echo "BENCH_datapipe.json missing"; exit 1; }
   echo "== BENCH_pipeline.json:"
   cat BENCH_pipeline.json
+  echo "== BENCH_datapipe.json:"
+  cat BENCH_datapipe.json
 fi
 
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"

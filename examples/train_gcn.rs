@@ -1,9 +1,11 @@
 //! End-to-end driver: train the AOT-compiled 3-layer GCN on a synthetic
 //! dataset with LABOR sampling, streaming batches through the parallel
-//! sampling pipeline, and log the loss curve + validation F1.
+//! sampling pipeline — features and labels gathered in-pipeline by the
+//! data plane — and log the loss curve + validation F1.
 //!
-//! This is the whole stack in one binary: L3 Rust pipeline + samplers →
-//! packed batches → L2/L1 compiled JAX+Pallas train_step via PJRT.
+//! This is the whole stack in one binary: L3 Rust pipeline + samplers +
+//! feature data plane → pre-gathered packed batches → L2/L1 compiled
+//! JAX+Pallas train_step via PJRT.
 //!
 //! ```bash
 //! make artifacts
@@ -11,7 +13,9 @@
 //! # e.g. cargo run --release --example train_gcn -- flickr-sim 200 labor-1
 //! ```
 
-use labor_gnn::coordinator::pipeline::{PipelineConfig, SamplingPipeline};
+use labor_gnn::coordinator::cache::NullCache;
+use labor_gnn::coordinator::feature_store::TierModel;
+use labor_gnn::coordinator::pipeline::{DataPlaneConfig, PipelineConfig, SamplingPipeline};
 use labor_gnn::data::Dataset;
 use labor_gnn::runtime::{Engine, Manifest};
 use labor_gnn::sampler::{MultiLayerSampler, SamplerKind};
@@ -29,8 +33,16 @@ fn main() -> anyhow::Result<()> {
     let man = Manifest::load("artifacts")?;
     let model = engine.load_model(&man, &format!("gcn_{dataset}"))?;
     let batch_size = model.cfg.batch_size;
-    let kind = SamplerKind::parse(&method).expect("method: ns|labor-0|labor-1|labor-*");
+    let kind =
+        SamplerKind::parse(&method).expect("method: ns|labor-0|labor-1|labor-*|ladies-512,256");
     let sampler = Arc::new(MultiLayerSampler::new(kind, &[10, 10, 10]));
+    anyhow::ensure!(
+        sampler.num_layers() == model.cfg.num_layers(),
+        "method '{method}' samples {} layers but artifact gcn_{dataset} is {}-layer — \
+         pass one budget per layer (e.g. ladies-2000,1000,500)",
+        sampler.num_layers(),
+        model.cfg.num_layers()
+    );
     let eval_sampler = MultiLayerSampler::new(sampler.kind.clone(), &[10, 10, 10]);
     let mut trainer = Trainer::new(model, 42)?;
 
@@ -39,7 +51,10 @@ fn main() -> anyhow::Result<()> {
         sampler.name()
     );
 
-    // streaming pipeline: 4 sampler workers, depth-4 backpressure queue
+    // streaming pipeline: 4 sampler workers, depth-4 backpressure queue,
+    // and the data plane — workers gather features + labels while the
+    // consumer runs the previous train_step
+    let plane = DataPlaneConfig::for_dataset(&ds, TierModel::local(), Arc::new(NullCache));
     let mut pipeline = SamplingPipeline::spawn(
         Arc::new(ds.graph.clone()),
         sampler,
@@ -51,12 +66,15 @@ fn main() -> anyhow::Result<()> {
             num_batches: steps,
             seed: 42,
             intra_batch_threads: 1,
+            data_plane: Some(plane),
         },
     );
 
     let t0 = std::time::Instant::now();
     for batch in &mut pipeline {
-        let rec = trainer.step(&ds, &batch.mfg)?;
+        // the batch carries pre-gathered features/labels — the trainer
+        // never touches the dataset on this path
+        let rec = trainer.step_batch(&batch)?;
         if rec.step % 20 == 0 || rec.step == 1 || rec.step == steps {
             let val = &ds.splits.val[..2048.min(ds.splits.val.len())];
             let f1 = trainer.evaluate(&ds, &eval_sampler, val, 0xE7A1)?;
@@ -70,6 +88,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    let stages = pipeline.stage_metrics();
     pipeline.join();
 
     let test = &ds.splits.test[..4096.min(ds.splits.test.len())];
@@ -79,6 +98,12 @@ fn main() -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64(),
         f1,
         trainer.overflow_edges
+    );
+    println!(
+        "pipeline stages per batch: sample {:.2} ms, gather {:.2} ms, queue-wait {:.2} ms",
+        stages.mean_sample_ms(),
+        stages.mean_gather_ms(),
+        stages.mean_queue_wait_ms()
     );
     Ok(())
 }

@@ -71,6 +71,15 @@ pub fn run_training(
         );
     }
     let sampler = MultiLayerSampler::new(kind.clone(), &o.fanouts);
+    anyhow::ensure!(
+        sampler.num_layers() == model.cfg.num_layers(),
+        "method '{}' samples {} layers but artifact '{}' is {}-layer — \
+         budgeted layer samplers need one budget per model layer",
+        kind.label(),
+        sampler.num_layers(),
+        o.artifact,
+        model.cfg.num_layers()
+    );
     let mut trainer = Trainer::new(model, o.seed)?;
     trainer.lr = o.lr;
     let mut batcher = EpochBatcher::new(&ds.splits.train, bs, o.seed ^ 0xF16);

@@ -44,7 +44,8 @@ pub fn results_dir() -> std::path::PathBuf {
     dir
 }
 
-/// Slugify a method label for file names (`LABOR-*` → `labor-star`).
+/// Slugify a method label for file names (`LABOR-*` → `labor-star`,
+/// budget lists like `LADIES-512,256` → `ladies-512+256`).
 pub fn slug(label: &str) -> String {
-    label.to_lowercase().replace('*', "star").replace(' ', "-")
+    label.to_lowercase().replace('*', "star").replace(' ', "-").replace(',', "+")
 }

@@ -1,0 +1,156 @@
+//! Feature-cache policies for the data plane.
+//!
+//! LABOR's payoff is fewer *unique* sampled vertices per batch (paper
+//! Table 2), which matters because feature fetching dominates mini-batch
+//! cost. A feature cache compounds that saving: rows kept resident in the
+//! fast tier never pay the slow [`TierModel`](super::TierModel) at all.
+//! The standard GNN policy (PaGraph/GNNLab-style) is *static
+//! degree-ordered* residency — high-in-degree vertices are sampled most
+//! often under neighbor-based samplers, so pinning the top-k in-degree
+//! rows captures most of the traffic without any runtime eviction logic.
+//!
+//! A policy only decides *residency*; hit/miss/bytes-saved accounting
+//! lives in the owning [`FeatureStore`](super::FeatureStore), and gathered
+//! bytes are identical under every policy (the cache redirects cost, not
+//! data) — the property the gather-equivalence suite
+//! (`rust/tests/data_plane.rs`) pins down.
+
+use crate::graph::CscGraph;
+
+/// A residency policy: which feature rows live in the fast tier.
+///
+/// Implementations must be cheap (`is_resident` sits on the per-row gather
+/// path) and immutable after construction — shared behind an `Arc` across
+/// all pipeline workers.
+pub trait FeatureCache: Send + Sync {
+    /// Is `v`'s feature row resident in the fast tier?
+    fn is_resident(&self, v: u32) -> bool;
+
+    /// Number of rows this policy keeps resident.
+    fn resident_rows(&self) -> usize;
+
+    /// Human-readable policy name, e.g. `null` or `degree-892`.
+    fn policy(&self) -> String;
+}
+
+/// The pass-through policy: nothing is resident, every row pays the tier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullCache;
+
+impl FeatureCache for NullCache {
+    fn is_resident(&self, _v: u32) -> bool {
+        false
+    }
+
+    fn resident_rows(&self) -> usize {
+        0
+    }
+
+    fn policy(&self) -> String {
+        "null".into()
+    }
+}
+
+/// Static degree-ordered cache: the `capacity_rows` vertices with the
+/// highest in-degree are resident (ties broken by lower vertex id, so a
+/// larger cache is always a superset of a smaller one — hit counts are
+/// monotone in capacity on any fixed request stream).
+#[derive(Clone, Debug)]
+pub struct DegreeOrderedCache {
+    resident: Vec<bool>,
+    resident_rows: usize,
+}
+
+impl DegreeOrderedCache {
+    /// Pin the top-`capacity_rows` in-degree vertices of `g`.
+    pub fn new(g: &CscGraph, capacity_rows: usize) -> Self {
+        let nv = g.num_vertices();
+        let k = capacity_rows.min(nv);
+        let mut order: Vec<u32> = (0..nv as u32).collect();
+        // sort by (in-degree desc, id asc); sort_by_key is stable, so the
+        // ascending-id tie-break comes for free from the initial order
+        order.sort_by_key(|&v| std::cmp::Reverse(g.in_degree(v)));
+        let mut resident = vec![false; nv];
+        for &v in &order[..k] {
+            resident[v as usize] = true;
+        }
+        Self { resident, resident_rows: k }
+    }
+}
+
+impl FeatureCache for DegreeOrderedCache {
+    #[inline]
+    fn is_resident(&self, v: u32) -> bool {
+        self.resident.get(v as usize).copied().unwrap_or(false)
+    }
+
+    fn resident_rows(&self) -> usize {
+        self.resident_rows
+    }
+
+    fn policy(&self) -> String {
+        format!("degree-{}", self.resident_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed() -> CscGraph {
+        crate::sampler::testutil::skewed_graph()
+    }
+
+    #[test]
+    fn null_cache_is_pass_through() {
+        let c = NullCache;
+        assert!(!c.is_resident(0));
+        assert_eq!(c.resident_rows(), 0);
+        assert_eq!(c.policy(), "null");
+    }
+
+    #[test]
+    fn degree_cache_pins_highest_degree_rows() {
+        let g = skewed();
+        let c = DegreeOrderedCache::new(&g, 5);
+        assert_eq!(c.resident_rows(), 5);
+        assert_eq!(c.policy(), "degree-5");
+        // vertex 0 is the star center (in-degree 199): always resident
+        assert!(c.is_resident(0));
+        // every resident vertex out-degrees every non-resident one (up to
+        // the ascending-id tie-break within equal degrees)
+        let min_res = (0..g.num_vertices() as u32)
+            .filter(|&v| c.is_resident(v))
+            .map(|v| g.in_degree(v))
+            .min()
+            .unwrap();
+        let max_non = (0..g.num_vertices() as u32)
+            .filter(|&v| !c.is_resident(v))
+            .map(|v| g.in_degree(v))
+            .max()
+            .unwrap();
+        assert!(min_res >= max_non, "resident min degree {min_res} < evicted max {max_non}");
+        // out-of-domain ids are simply non-resident (no panic)
+        assert!(!c.is_resident(10_000));
+    }
+
+    #[test]
+    fn larger_caches_are_supersets() {
+        let g = skewed();
+        let small = DegreeOrderedCache::new(&g, 10);
+        let big = DegreeOrderedCache::new(&g, 60);
+        for v in 0..g.num_vertices() as u32 {
+            if small.is_resident(v) {
+                assert!(big.is_resident(v), "vertex {v} resident at k=10 but not k=60");
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_clamps_to_vertex_count() {
+        let g = skewed();
+        let c = DegreeOrderedCache::new(&g, 1_000_000);
+        assert_eq!(c.resident_rows(), g.num_vertices());
+        assert!((0..g.num_vertices() as u32).all(|v| c.is_resident(v)));
+    }
+}

@@ -1,4 +1,4 @@
-//! Feature store with a simulated slow tier.
+//! Shared-concurrent feature (and label) store with a simulated slow tier.
 //!
 //! Paper §4.1 ("Comparing LABOR variants"): the right LABOR-i depends on
 //! *feature access speed* — features on host memory fetched over PCI-e make
@@ -6,7 +6,21 @@
 //! LABOR-0. We model a storage tier with a per-request latency and a
 //! per-byte cost so that experiments can sweep that spectrum on CPU-only
 //! hardware (substitution documented in DESIGN.md §4).
+//!
+//! [`FeatureStore`] is the shared half of the coordinator's data plane: it
+//! owns its rows behind an `Arc`, all accounting is atomic, and
+//! [`gather`](FeatureStore::gather) takes `&self` — so N pipeline workers
+//! gather concurrently through one `Arc<FeatureStore>` (see
+//! [`DataPlaneConfig`](super::pipeline::DataPlaneConfig)). An optional
+//! [`FeatureCache`](super::cache::FeatureCache) policy marks rows as
+//! resident in the fast tier: resident rows cost nothing on the simulated
+//! tier and are counted as hits; only miss bytes pay the
+//! [`TierModel`] — the gathered *bytes* are identical either way.
 
+use super::cache::{FeatureCache, NullCache};
+use crate::data::Dataset;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Storage-tier latency model.
@@ -34,6 +48,16 @@ impl TierModel {
         Self { request_latency: Duration::from_micros(80), bandwidth_bps: 3.0e9 }
     }
 
+    /// Parse a tier name (`local` | `pcie` | `nvme`) — the CLI/bench knob.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "local" => Some(Self::local()),
+            "pcie" => Some(Self::pcie()),
+            "nvme" => Some(Self::nvme()),
+            _ => None,
+        }
+    }
+
     /// Simulated transfer time for `bytes`.
     pub fn transfer_time(&self, bytes: usize) -> Duration {
         if self.bandwidth_bps.is_infinite() {
@@ -43,53 +67,139 @@ impl TierModel {
     }
 }
 
-/// Gathers vertex feature rows, accounting (and optionally sleeping) for
-/// the simulated tier.
-pub struct FeatureStore<'a> {
-    features: &'a [f32],
+/// Gathers vertex feature rows concurrently, accounting (and optionally
+/// sleeping) for the simulated tier.
+///
+/// Thread-safety: storage is `Arc`-owned and immutable, every counter is a
+/// relaxed atomic, and the cache policy is a shared immutable
+/// [`FeatureCache`] — so one store behind an `Arc` serves any number of
+/// pipeline workers without a lock. Gathered bytes are a pure function of
+/// the requested ids (the cache only redirects *accounting*), which is
+/// what makes the pipeline's bit-identical-gather contract trivial to keep.
+pub struct FeatureStore {
+    features: Arc<Vec<f32>>,
     dim: usize,
     tier: TierModel,
+    cache: Arc<dyn FeatureCache>,
     /// when false, the tier cost is accounted but not slept — useful for
     /// deterministic unit tests and for analytic experiments
-    pub simulate_sleep: bool,
-    pub bytes_fetched: u64,
-    pub requests: u64,
-    pub simulated_time: Duration,
+    simulate_sleep: bool,
+    bytes_fetched: AtomicU64,
+    requests: AtomicU64,
+    miss_requests: AtomicU64,
+    simulated_ns: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
 }
 
-impl<'a> FeatureStore<'a> {
-    pub fn new(features: &'a [f32], dim: usize, tier: TierModel) -> Self {
-        assert_eq!(features.len() % dim, 0);
+impl std::fmt::Debug for FeatureStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FeatureStore")
+            .field("rows", &self.num_rows())
+            .field("dim", &self.dim)
+            .field("tier", &self.tier)
+            .field("cache", &self.cache.policy())
+            .finish()
+    }
+}
+
+impl FeatureStore {
+    /// Build a store over row-major `features` (`rows × dim`). Accepts an
+    /// owned `Vec<f32>` or an already-shared `Arc<Vec<f32>>`; no cache
+    /// (every row pays the tier).
+    pub fn new(features: impl Into<Arc<Vec<f32>>>, dim: usize, tier: TierModel) -> Self {
+        let features = features.into();
+        assert!(dim > 0, "feature dim must be positive");
+        assert_eq!(features.len() % dim, 0, "features length must be a multiple of dim");
         Self {
             features,
             dim,
             tier,
+            cache: Arc::new(NullCache),
             simulate_sleep: false,
-            bytes_fetched: 0,
-            requests: 0,
-            simulated_time: Duration::ZERO,
+            bytes_fetched: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            miss_requests: AtomicU64::new(0),
+            simulated_ns: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
         }
+    }
+
+    /// Attach a cache policy (builder style, before sharing the store).
+    pub fn with_cache(mut self, cache: Arc<dyn FeatureCache>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Enable sleeping out the simulated tier cost (builder style).
+    pub fn with_sleep(mut self, sleep: bool) -> Self {
+        self.simulate_sleep = sleep;
+        self
     }
 
     pub fn num_rows(&self) -> usize {
         self.features.len() / self.dim
     }
 
-    /// Gather rows `ids` into `out` (resized to `ids.len() * dim`).
-    /// Returns the (simulated) fetch duration for this request.
-    pub fn gather(&mut self, ids: &[u32], out: &mut Vec<f32>) -> Duration {
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Bytes of one feature row (`dim × 4`).
+    pub fn row_bytes(&self) -> u64 {
+        (self.dim * 4) as u64
+    }
+
+    pub fn tier(&self) -> TierModel {
+        self.tier
+    }
+
+    /// The attached cache policy (the null cache when none was attached).
+    pub fn cache(&self) -> &Arc<dyn FeatureCache> {
+        &self.cache
+    }
+
+    /// Gather rows `ids` into `out` (cleared and resized to
+    /// `ids.len() * dim`). Returns the (simulated) fetch duration for this
+    /// request. Rows resident in the cache are counted as hits and skip
+    /// the tier cost; the bytes written to `out` do not depend on the
+    /// cache policy.
+    ///
+    /// # Panics
+    /// On an out-of-range vertex id, with a message naming the store, the
+    /// offending id, and the row count (see
+    /// [`validate_ids`](Self::validate_ids)).
+    pub fn gather(&self, ids: &[u32], out: &mut Vec<f32>) -> Duration {
         let t0 = Instant::now();
         out.clear();
         out.reserve(ids.len() * self.dim);
+        let mut hits = 0u64;
+        let rows = self.num_rows();
         for &v in ids {
+            assert!(
+                (v as usize) < rows,
+                "FeatureStore::gather: vertex id {v} out of range (store has {rows} rows)"
+            );
+            if self.cache.is_resident(v) {
+                hits += 1;
+            }
             let base = v as usize * self.dim;
             out.extend_from_slice(&self.features[base..base + self.dim]);
         }
-        let bytes = ids.len() * self.dim * 4;
-        self.bytes_fetched += bytes as u64;
-        self.requests += 1;
-        let simulated = self.tier.transfer_time(bytes);
-        self.simulated_time += simulated;
+        let misses = ids.len() as u64 - hits;
+        let miss_bytes = misses * self.row_bytes();
+        self.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        self.cache_misses.fetch_add(misses, Ordering::Relaxed);
+        self.bytes_fetched.fetch_add(miss_bytes, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let simulated = if misses > 0 {
+            self.miss_requests.fetch_add(1, Ordering::Relaxed);
+            self.tier.transfer_time(miss_bytes as usize)
+        } else {
+            Duration::ZERO
+        };
+        self.simulated_ns.fetch_add(simulated.as_nanos() as u64, Ordering::Relaxed);
         let real = t0.elapsed();
         if self.simulate_sleep && simulated > real {
             std::thread::sleep(simulated - real);
@@ -97,21 +207,178 @@ impl<'a> FeatureStore<'a> {
         }
         real.max(simulated)
     }
+
+    /// Check every id against [`num_rows`](Self::num_rows), reporting the
+    /// first offender — the named-error twin of the `gather` assert, for
+    /// callers that prefer a `Result`.
+    pub fn validate_ids(&self, ids: &[u32]) -> anyhow::Result<()> {
+        let rows = self.num_rows();
+        for &v in ids {
+            anyhow::ensure!(
+                (v as usize) < rows,
+                "FeatureStore: vertex id {v} out of range (store has {rows} rows)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Bytes actually moved over the simulated slow tier (miss bytes).
+    pub fn bytes_fetched(&self) -> u64 {
+        self.bytes_fetched.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes handed to callers (hit + miss rows).
+    pub fn bytes_gathered(&self) -> u64 {
+        (self.cache_hits() + self.cache_misses()) * self.row_bytes()
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Requests that had at least one miss (and so touched the tier —
+    /// fully cache-resident requests pay nothing, not even the latency).
+    pub fn miss_requests(&self) -> u64 {
+        self.miss_requests.load(Ordering::Relaxed)
+    }
+
+    pub fn simulated_time(&self) -> Duration {
+        Duration::from_nanos(self.simulated_ns.load(Ordering::Relaxed))
+    }
+
+    /// Price this store's recorded traffic under a *different* tier,
+    /// analytically: `miss_requests × latency + miss_bytes / bandwidth`.
+    /// Exact for per-request accounting up to sub-nanosecond rounding —
+    /// gathered bytes are tier-independent, so a tier sweep needs one
+    /// measured run, not one per tier (see `benches/pipeline.rs`).
+    pub fn priced_time(&self, tier: TierModel) -> Duration {
+        let latency = tier.request_latency.mul_f64(self.miss_requests() as f64);
+        if tier.bandwidth_bps.is_infinite() {
+            return latency;
+        }
+        latency + Duration::from_secs_f64(self.bytes_fetched() as f64 / tier.bandwidth_bps)
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Slow-tier bytes avoided by the cache: `hits × row_bytes`.
+    pub fn bytes_saved(&self) -> u64 {
+        self.cache_hits() * self.row_bytes()
+    }
+
+    /// Cache hit rate over all gathered rows so far (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.cache_hits();
+        let total = h + self.cache_misses();
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+
+    /// Zero every counter (epoch-level reporting; storage is untouched).
+    pub fn reset_counters(&self) {
+        self.bytes_fetched.store(0, Ordering::Relaxed);
+        self.requests.store(0, Ordering::Relaxed);
+        self.miss_requests.store(0, Ordering::Relaxed);
+        self.simulated_ns.store(0, Ordering::Relaxed);
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.cache_misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Shared, read-only label storage for the data plane — the label twin of
+/// [`FeatureStore`] (labels are tiny next to features, so no tier model).
+#[derive(Clone, Debug)]
+pub enum LabelStore {
+    /// one class id per vertex
+    Single(Arc<Vec<u16>>),
+    /// row-major `|V| × num_classes` multi-hot rows
+    Multi { rows: Arc<Vec<u8>>, num_classes: usize },
+}
+
+impl LabelStore {
+    /// Share a dataset's targets (multi-hot when the dataset is
+    /// multilabel) — an `Arc` bump, not a copy, matching
+    /// `Dataset.features`.
+    pub fn from_dataset(ds: &Dataset) -> Self {
+        match &ds.multilabels {
+            Some(ml) => {
+                LabelStore::Multi { rows: ml.clone(), num_classes: ds.num_classes() }
+            }
+            None => LabelStore::Single(ds.labels.clone()),
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        match self {
+            LabelStore::Single(y) => y.len(),
+            LabelStore::Multi { rows, num_classes } => rows.len() / num_classes,
+        }
+    }
+
+    /// Gather per-seed label rows. Panics on an out-of-range id with a
+    /// message reporting the offender (same contract as
+    /// [`FeatureStore::gather`]).
+    pub fn gather(&self, ids: &[u32]) -> GatheredLabels {
+        let rows = self.num_rows();
+        for &v in ids {
+            assert!(
+                (v as usize) < rows,
+                "LabelStore::gather: vertex id {v} out of range (store has {rows} rows)"
+            );
+        }
+        match self {
+            LabelStore::Single(y) => {
+                GatheredLabels::Single(ids.iter().map(|&v| y[v as usize]).collect())
+            }
+            LabelStore::Multi { rows, num_classes } => {
+                let c = *num_classes;
+                let mut out = Vec::with_capacity(ids.len() * c);
+                for &v in ids {
+                    out.extend_from_slice(&rows[v as usize * c..(v as usize + 1) * c]);
+                }
+                GatheredLabels::Multi { rows: out, num_classes: c }
+            }
+        }
+    }
+}
+
+/// Pre-gathered per-seed labels riding with a
+/// [`SampledBatch`](super::pipeline::SampledBatch).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum GatheredLabels {
+    /// no label plane configured (sampling-only pipelines)
+    #[default]
+    None,
+    /// one class id per seed
+    Single(Vec<u16>),
+    /// row-major `num_seeds × num_classes` multi-hot rows
+    Multi { rows: Vec<u8>, num_classes: usize },
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::cache::DegreeOrderedCache;
 
     #[test]
     fn gather_copies_correct_rows() {
         let feats: Vec<f32> = (0..20).map(|x| x as f32).collect(); // 5 rows x 4
-        let mut fs = FeatureStore::new(&feats, 4, TierModel::local());
+        let fs = FeatureStore::new(feats, 4, TierModel::local());
         let mut out = Vec::new();
         fs.gather(&[1, 3], &mut out);
         assert_eq!(out, vec![4.0, 5.0, 6.0, 7.0, 12.0, 13.0, 14.0, 15.0]);
-        assert_eq!(fs.bytes_fetched, 2 * 4 * 4);
-        assert_eq!(fs.requests, 1);
+        assert_eq!(fs.bytes_fetched(), 2 * 4 * 4);
+        assert_eq!(fs.bytes_gathered(), 2 * 4 * 4);
+        assert_eq!(fs.requests(), 1);
     }
 
     #[test]
@@ -123,16 +390,116 @@ mod tests {
         // 16 MiB at 12 GB/s ≈ 1.4 ms
         assert!(t2 > Duration::from_micros(1000) && t2 < Duration::from_millis(3));
         assert_eq!(TierModel::local().transfer_time(1 << 30), Duration::ZERO);
+        assert_eq!(TierModel::parse("nvme"), Some(TierModel::nvme()));
+        assert_eq!(TierModel::parse("ssd"), None);
     }
 
     #[test]
     fn simulated_time_accumulates_without_sleeping() {
         let feats = vec![0.0f32; 400];
-        let mut fs = FeatureStore::new(&feats, 4, TierModel::nvme());
+        let fs = FeatureStore::new(feats, 4, TierModel::nvme());
         let mut out = Vec::new();
         fs.gather(&[0; 50], &mut out);
         fs.gather(&[1; 50], &mut out);
-        assert_eq!(fs.requests, 2);
-        assert!(fs.simulated_time >= Duration::from_micros(160)); // 2 requests
+        assert_eq!(fs.requests(), 2);
+        assert!(fs.simulated_time() >= Duration::from_micros(160)); // 2 requests
+    }
+
+    #[test]
+    fn concurrent_gathers_account_exactly() {
+        let store = Arc::new(FeatureStore::new(vec![0.0f32; 1000 * 8], 8, TierModel::pcie()));
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                let store = &store;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..25u32 {
+                        store.gather(&[t * 250 + i, 999], &mut out);
+                    }
+                });
+            }
+        });
+        assert_eq!(store.requests(), 100);
+        assert_eq!(store.bytes_fetched(), 100 * 2 * 8 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "vertex id 7 out of range (store has 5 rows)")]
+    fn out_of_range_id_is_a_named_error() {
+        let fs = FeatureStore::new(vec![0.0f32; 20], 4, TierModel::local());
+        fs.gather(&[1, 7], &mut Vec::new());
+    }
+
+    #[test]
+    fn validate_ids_reports_offender() {
+        let fs = FeatureStore::new(vec![0.0f32; 20], 4, TierModel::local());
+        assert!(fs.validate_ids(&[0, 4]).is_ok());
+        let err = fs.validate_ids(&[0, 5]).unwrap_err().to_string();
+        assert!(err.contains("vertex id 5"), "{err}");
+        assert!(err.contains("5 rows"), "{err}");
+    }
+
+    #[test]
+    fn cached_rows_skip_the_tier_but_not_the_output() {
+        // 4 rows x 2; rows {0,1} resident via a degree cache over a star
+        let g = crate::graph::builder::CscBuilder::new(4)
+            .edges(&[(1, 0), (2, 0), (3, 0), (2, 1)])
+            .build()
+            .unwrap();
+        let feats: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let cache = Arc::new(DegreeOrderedCache::new(&g, 2));
+        let cached = FeatureStore::new(feats.clone(), 2, TierModel::nvme()).with_cache(cache);
+        let plain = FeatureStore::new(feats, 2, TierModel::nvme());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        cached.gather(&[0, 1, 2, 3], &mut a);
+        plain.gather(&[0, 1, 2, 3], &mut b);
+        assert_eq!(a, b, "cache must not change gathered bytes");
+        assert_eq!(cached.cache_hits(), 2);
+        assert_eq!(cached.cache_misses(), 2);
+        assert_eq!(cached.bytes_fetched(), 2 * 2 * 4);
+        assert_eq!(cached.bytes_saved(), 2 * 2 * 4);
+        assert_eq!(cached.bytes_gathered(), plain.bytes_gathered());
+        assert!(cached.simulated_time() < plain.simulated_time());
+        assert!((cached.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priced_time_matches_measured_simulation() {
+        // a run measured on one tier re-prices exactly onto another: the
+        // analytic formula is the same per-request arithmetic summed
+        let feats = vec![0.0f32; 1000 * 8];
+        let measured = FeatureStore::new(feats.clone(), 8, TierModel::nvme());
+        let replayed = FeatureStore::new(feats, 8, TierModel::local());
+        let mut out = Vec::new();
+        for i in 0..7u32 {
+            measured.gather(&[i, i + 100, i + 200], &mut out);
+            replayed.gather(&[i, i + 100, i + 200], &mut out);
+        }
+        assert_eq!(replayed.miss_requests(), 7);
+        let priced = replayed.priced_time(TierModel::nvme());
+        let diff = priced.abs_diff(measured.simulated_time());
+        assert!(diff < Duration::from_nanos(10), "{priced:?} vs {:?}", measured.simulated_time());
+        assert_eq!(replayed.priced_time(TierModel::local()), Duration::ZERO);
+    }
+
+    #[test]
+    fn label_store_gathers_both_shapes() {
+        let single = LabelStore::Single(Arc::new(vec![3u16, 1, 4, 1, 5]));
+        assert_eq!(single.gather(&[2, 0]), GatheredLabels::Single(vec![4, 3]));
+        let multi = LabelStore::Multi {
+            rows: Arc::new(vec![1, 0, 0, 1, 1, 1, 0, 0]), // 4 rows x 2
+            num_classes: 2,
+        };
+        assert_eq!(multi.num_rows(), 4);
+        assert_eq!(
+            multi.gather(&[1, 3]),
+            GatheredLabels::Multi { rows: vec![0, 1, 0, 0], num_classes: 2 }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "vertex id 9 out of range")]
+    fn label_store_rejects_out_of_range_ids() {
+        LabelStore::Single(Arc::new(vec![0u16; 5])).gather(&[9]);
     }
 }

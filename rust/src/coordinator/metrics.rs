@@ -1,8 +1,10 @@
 //! Sampler metrics: per-layer |V|/|E| accumulators and throughput — the
-//! quantities of paper Table 2 and Table 4.
+//! quantities of paper Table 2 and Table 4 — plus the pipeline's
+//! per-stage timing counters ([`StageTimers`]).
 
 use crate::sampler::Mfg;
 use crate::util::stats::Welford;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Accumulates per-layer statistics over many sampled batches.
@@ -68,10 +70,104 @@ impl SamplerStats {
     }
 }
 
+/// Shared per-stage wall-time accounting for the sampling pipeline: how
+/// much worker time goes to *sampling* the MFG, to *gathering* features
+/// and labels, and to *queue-wait* — time spent inside the bounded
+/// channel send. A free slot costs microseconds, so this total is
+/// dominated by (and in practice reads as) backpressure: workers blocked
+/// because the consumer fell behind. All counters are relaxed atomics so
+/// every worker records into one instance; read it through
+/// [`snapshot`](Self::snapshot) (surfaced by
+/// [`SamplingPipeline::stage_metrics`](super::SamplingPipeline::stage_metrics)).
+#[derive(Debug, Default)]
+pub struct StageTimers {
+    sample_ns: AtomicU64,
+    gather_ns: AtomicU64,
+    queue_wait_ns: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl StageTimers {
+    pub fn record_sample(&self, d: Duration) {
+        self.sample_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_gather(&self, d: Duration) {
+        self.gather_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_queue_wait(&self, d: Duration) {
+        self.queue_wait_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            batches: self.batches.load(Ordering::Relaxed),
+            sample: Duration::from_nanos(self.sample_ns.load(Ordering::Relaxed)),
+            gather: Duration::from_nanos(self.gather_ns.load(Ordering::Relaxed)),
+            queue_wait: Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A point-in-time read of [`StageTimers`]: total worker wall time per
+/// stage, summed across workers, plus the batch count for per-batch means.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageSnapshot {
+    pub batches: u64,
+    pub sample: Duration,
+    pub gather: Duration,
+    pub queue_wait: Duration,
+}
+
+impl StageSnapshot {
+    fn per_batch_ms(&self, total: Duration) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            total.as_secs_f64() * 1e3 / self.batches as f64
+        }
+    }
+
+    pub fn mean_sample_ms(&self) -> f64 {
+        self.per_batch_ms(self.sample)
+    }
+
+    pub fn mean_gather_ms(&self) -> f64 {
+        self.per_batch_ms(self.gather)
+    }
+
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        self.per_batch_ms(self.queue_wait)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+
+    #[test]
+    fn stage_timers_accumulate_and_average() {
+        let t = StageTimers::default();
+        for _ in 0..4 {
+            t.record_sample(Duration::from_millis(6));
+            t.record_gather(Duration::from_millis(2));
+            t.record_queue_wait(Duration::from_millis(1));
+            t.record_batch();
+        }
+        let s = t.snapshot();
+        assert_eq!(s.batches, 4);
+        assert_eq!(s.sample, Duration::from_millis(24));
+        assert!((s.mean_sample_ms() - 6.0).abs() < 1e-9);
+        assert!((s.mean_gather_ms() - 2.0).abs() < 1e-9);
+        assert!((s.mean_queue_wait_ms() - 1.0).abs() < 1e-9);
+        assert_eq!(StageSnapshot::default().mean_sample_ms(), 0.0);
+    }
 
     #[test]
     fn accumulates_layer_counts() {

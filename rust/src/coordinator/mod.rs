@@ -1,13 +1,17 @@
 //! The L3 streaming coordinator: epoch batching, a parallel sampling
-//! pipeline with bounded-queue backpressure, a feature store with a
-//! simulated slow tier, and the metrics that back the paper's tables.
+//! pipeline with bounded-queue backpressure, and the feature data plane —
+//! a shared concurrent feature/label store with a simulated slow tier,
+//! pluggable feature-cache policies, in-pipeline gather, and the metrics
+//! that back the paper's tables.
 
 pub mod batcher;
+pub mod cache;
 pub mod feature_store;
 pub mod metrics;
 pub mod pipeline;
 
 pub use batcher::EpochBatcher;
-pub use feature_store::{FeatureStore, TierModel};
-pub use metrics::SamplerStats;
-pub use pipeline::{PipelineConfig, SampledBatch, SamplingPipeline};
+pub use cache::{DegreeOrderedCache, FeatureCache, NullCache};
+pub use feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
+pub use metrics::{SamplerStats, StageSnapshot, StageTimers};
+pub use pipeline::{DataPlaneConfig, PipelineConfig, SampledBatch, SamplingPipeline};

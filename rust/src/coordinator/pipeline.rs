@@ -16,16 +16,35 @@
 //! Both are deterministic: delivered MFGs are bit-identical for every
 //! `(num_workers, intra_batch_threads)` combination.
 //!
+//! **Data plane:** with the [`PipelineConfig`]'s `data_plane` set, the workers
+//! also *gather* — each delivered [`SampledBatch`] carries the deepest
+//! layer's feature rows and the seeds' labels, fetched through a shared
+//! concurrent [`FeatureStore`] (optionally cache-fronted) while the
+//! consumer trains on the previous batch. This is the fetch traffic LABOR
+//! minimizes (paper §4.1); moving it off the consumer thread is what makes
+//! the vertex savings visible as end-to-end throughput. Gathered bytes are
+//! **bit-identical** for every cache policy, worker count, and shard count
+//! (same contract as the MFGs — enforced by `rust/tests/data_plane.rs`).
+//! Per-stage wall time (sample / gather / queue-wait) is recorded in a
+//! shared [`StageTimers`] surfaced by [`SamplingPipeline::stage_metrics`].
+//!
 //! Failure semantics: a panicking worker is never silently truncated into
 //! a short epoch — the panic is re-raised on the consuming thread by
-//! [`SamplingPipeline::next`] (or [`SamplingPipeline::join`]).
+//! [`SamplingPipeline::next`] (or [`SamplingPipeline::join`]). An
+//! out-of-range vertex id in the gather path panics with a named error
+//! (see [`FeatureStore::gather`]) and surfaces the same way.
 
 use super::batcher::EpochBatcher;
+use super::cache::FeatureCache;
+use super::feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
+use super::metrics::{StageSnapshot, StageTimers};
+use crate::data::Dataset;
 use crate::graph::CscGraph;
 use crate::sampler::{Mfg, MultiLayerSampler, ScratchPool};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 /// One unit of work delivered to the trainer. `seeds` shares the
 /// pre-materialized batch (no per-batch deep copy on the worker side).
@@ -33,6 +52,44 @@ pub struct SampledBatch {
     pub batch_id: u64,
     pub seeds: Arc<Vec<u32>>,
     pub mfg: Mfg,
+    /// pre-gathered deepest-layer feature rows, row-major
+    /// `|V^L| × dim` — empty when the pipeline has no data plane
+    pub feats: Vec<f32>,
+    /// pre-gathered per-seed labels — `None` without a label store
+    pub labels: GatheredLabels,
+}
+
+/// The gather half of the pipeline: a shared feature store (and optional
+/// label store) the workers fetch through. Stores are `Arc`-shared — all
+/// workers account into the same counters, so cache hit-rate and
+/// bytes-moved totals are epoch-global.
+#[derive(Clone)]
+pub struct DataPlaneConfig {
+    pub store: Arc<FeatureStore>,
+    pub labels: Option<Arc<LabelStore>>,
+}
+
+impl std::fmt::Debug for DataPlaneConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DataPlaneConfig")
+            .field("store", &self.store)
+            .field("labels", &self.labels.as_ref().map(|l| l.num_rows()))
+            .finish()
+    }
+}
+
+impl DataPlaneConfig {
+    /// Data plane over a dataset's features and labels — both stores
+    /// share the dataset's `Arc`-owned rows (no copies), with the feature
+    /// store on `tier` fronted by `cache`.
+    pub fn for_dataset(ds: &Dataset, tier: TierModel, cache: Arc<dyn FeatureCache>) -> Self {
+        let store = FeatureStore::new(ds.features.clone(), ds.num_features(), tier)
+            .with_cache(cache);
+        Self {
+            store: Arc::new(store),
+            labels: Some(Arc::new(LabelStore::from_dataset(ds))),
+        }
+    }
 }
 
 /// Pipeline configuration.
@@ -52,6 +109,9 @@ pub struct PipelineConfig {
     /// use it when batches are large and few (the paper's large-batch
     /// regime), where batch-level parallelism alone leaves cores idle.
     pub intra_batch_threads: usize,
+    /// when set, workers gather features/labels in-pipeline and delivered
+    /// batches carry them pre-gathered (see [`DataPlaneConfig`])
+    pub data_plane: Option<DataPlaneConfig>,
 }
 
 impl Default for PipelineConfig {
@@ -63,6 +123,7 @@ impl Default for PipelineConfig {
             num_batches: 100,
             seed: 0,
             intra_batch_threads: 1,
+            data_plane: None,
         }
     }
 }
@@ -75,6 +136,8 @@ pub struct SamplingPipeline {
     next_id: u64,
     num_batches: u64,
     workers: Vec<std::thread::JoinHandle<()>>,
+    timers: Arc<StageTimers>,
+    data_plane: Option<DataPlaneConfig>,
 }
 
 impl SamplingPipeline {
@@ -88,6 +151,7 @@ impl SamplingPipeline {
     ) -> Self {
         let (tx, rx) = mpsc::sync_channel::<SampledBatch>(cfg.queue_depth.max(1));
         let cursor = Arc::new(AtomicU64::new(0));
+        let timers = Arc::new(StageTimers::default());
 
         // Pre-materialize the seed batches so that workers can claim
         // arbitrary batch ids without a shared mutable batcher. This is
@@ -107,6 +171,8 @@ impl SamplingPipeline {
             let batches = batches.clone();
             let cursor = cursor.clone();
             let tx = tx.clone();
+            let timers = timers.clone();
+            let plane = cfg.data_plane.clone();
             let num_batches = cfg.num_batches;
             let seed = cfg.seed;
             let shards = cfg.intra_batch_threads.max(1);
@@ -127,19 +193,76 @@ impl SamplingPipeline {
                         return;
                     }
                     let seeds = batches[id as usize].clone();
+                    let t_sample = Instant::now();
                     let mfg = if shards > 1 {
                         sampler.sample_sharded(&graph, &seeds, seed ^ id, shards, &mut pool)
                     } else {
                         sampler.sample(&graph, &seeds, seed ^ id, pool.main_mut())
                     };
-                    if tx.send(SampledBatch { batch_id: id, seeds, mfg }).is_err() {
+                    timers.record_sample(t_sample.elapsed());
+                    // In-pipeline gather: the feature rows of the deepest
+                    // layer (the traffic LABOR shrinks) plus the seeds'
+                    // labels, fetched here so the consumer never touches
+                    // the dataset. The bytes depend only on the MFG, never
+                    // on the cache policy or scheduling.
+                    let (feats, labels) = match &plane {
+                        Some(p) => {
+                            let t_gather = Instant::now();
+                            // gather straight into the delivered payload:
+                            // `gather` reserves the exact row count up
+                            // front, so this is one allocation + one copy
+                            // per batch — the payload is handed to the
+                            // consumer, so a reusable staging buffer would
+                            // only add a second full memcpy
+                            let mut feats = Vec::new();
+                            p.store.gather(mfg.feature_vertices(), &mut feats);
+                            let labels = match &p.labels {
+                                Some(ls) => ls.gather(&seeds),
+                                None => GatheredLabels::None,
+                            };
+                            timers.record_gather(t_gather.elapsed());
+                            (feats, labels)
+                        }
+                        None => (Vec::new(), GatheredLabels::None),
+                    };
+                    // count the batch before sending it: once the consumer
+                    // has received N batches, N sample/gather recordings
+                    // are guaranteed visible (the trailing queue-wait of
+                    // an in-flight batch may lag — it is only known after
+                    // the send unblocks)
+                    timers.record_batch();
+                    let t_queue = Instant::now();
+                    let sent =
+                        tx.send(SampledBatch { batch_id: id, seeds, mfg, feats, labels });
+                    if sent.is_err() {
                         return; // consumer dropped
                     }
+                    timers.record_queue_wait(t_queue.elapsed());
                 }
             }));
         }
         drop(tx);
-        Self { rx, reorder: BTreeMap::new(), next_id: 0, num_batches: cfg.num_batches, workers }
+        Self {
+            rx,
+            reorder: BTreeMap::new(),
+            next_id: 0,
+            num_batches: cfg.num_batches,
+            workers,
+            timers,
+            data_plane: cfg.data_plane,
+        }
+    }
+
+    /// Per-stage worker wall time so far (sample / gather / queue-wait),
+    /// summed across workers. Valid mid-stream and after exhaustion.
+    pub fn stage_metrics(&self) -> StageSnapshot {
+        self.timers.snapshot()
+    }
+
+    /// The data plane this pipeline gathers through, if configured — use
+    /// it to read cache hit-rate, bytes moved, and bytes saved.
+    pub fn data_plane(&self) -> Option<&DataPlaneConfig> {
+        self.data_plane.as_ref()
     }
 
     /// Join all workers; re-raises the first worker panic, if any.
@@ -201,6 +324,7 @@ impl Iterator for SamplingPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::cache::NullCache;
     use crate::sampler::{IterSpec, SamplerKind};
 
     fn setup_cfg(cfg: PipelineConfig) -> SamplingPipeline {
@@ -220,7 +344,7 @@ mod tests {
             batch_size: 64,
             num_batches,
             seed: 11,
-            intra_batch_threads: 1,
+            ..PipelineConfig::default()
         })
     }
 
@@ -232,8 +356,15 @@ mod tests {
             ids.push(b.batch_id);
             assert_eq!(b.seeds.len(), 64);
             assert_eq!(b.mfg.layers.len(), 2);
+            // no data plane: batches carry no gathered payload
+            assert!(b.feats.is_empty());
+            assert_eq!(b.labels, GatheredLabels::None);
         }
         assert_eq!(ids, (0..23).collect::<Vec<u64>>());
+        let stages = p.stage_metrics();
+        assert_eq!(stages.batches, 23);
+        assert!(stages.sample > std::time::Duration::ZERO);
+        assert_eq!(stages.gather, std::time::Duration::ZERO);
         p.join();
     }
 
@@ -251,6 +382,7 @@ mod tests {
                 num_batches: 12,
                 seed: 11,
                 intra_batch_threads: shards,
+                data_plane: None,
             });
             let mut out = Vec::new();
             for b in &mut p {
@@ -278,10 +410,76 @@ mod tests {
     }
 
     #[test]
+    fn data_plane_batches_carry_features_and_labels() {
+        let g = Arc::new(crate::sampler::testutil::test_graph());
+        let nv = g.num_vertices();
+        let dim = 3usize;
+        let feats: Vec<f32> = (0..nv * dim).map(|x| x as f32).collect();
+        let store = Arc::new(FeatureStore::new(feats.clone(), dim, TierModel::local()));
+        let labels: Vec<u16> = (0..nv as u16).collect();
+        let plane = DataPlaneConfig {
+            store: store.clone(),
+            labels: Some(Arc::new(LabelStore::Single(Arc::new(labels)))),
+        };
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[5, 5],
+        ));
+        let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
+        let mut p = SamplingPipeline::spawn(
+            g,
+            sampler,
+            ids,
+            PipelineConfig {
+                num_workers: 3,
+                queue_depth: 2,
+                batch_size: 64,
+                num_batches: 8,
+                seed: 7,
+                intra_batch_threads: 1,
+                data_plane: Some(plane),
+            },
+        );
+        let mut rows = 0u64;
+        for b in &mut p {
+            let deep = b.mfg.feature_vertices();
+            assert_eq!(b.feats.len(), deep.len() * dim);
+            // every delivered row is the store's row for that vertex
+            for (r, &v) in deep.iter().enumerate() {
+                assert_eq!(
+                    b.feats[r * dim..(r + 1) * dim],
+                    feats[v as usize * dim..(v as usize + 1) * dim]
+                );
+            }
+            match &b.labels {
+                GatheredLabels::Single(y) => {
+                    assert_eq!(y.len(), b.seeds.len());
+                    for (i, &s) in b.seeds.iter().enumerate() {
+                        assert_eq!(y[i], s as u16);
+                    }
+                }
+                other => panic!("expected single labels, got {other:?}"),
+            }
+            rows += deep.len() as u64;
+        }
+        let stages = p.stage_metrics();
+        assert_eq!(stages.batches, 8);
+        assert!(stages.gather > std::time::Duration::ZERO);
+        assert_eq!(store.bytes_gathered(), rows * (dim as u64) * 4);
+        assert_eq!(store.requests(), 8);
+        assert!(p.data_plane().is_some());
+        p.join();
+    }
+
+    #[test]
     fn bounded_queue_applies_backpressure() {
         // with a slow consumer, the queue can never hold more than depth
         // batches: workers block. We observe this indirectly: all batches
-        // still arrive exactly once, in order, with depth 1.
+        // still arrive exactly once, in order, with depth 1 — and the
+        // blocked sends show up as queue-wait in the stage metrics. The
+        // millisecond threshold separates real blocking from plain send
+        // overhead (µs for 10 sends): a 2 ms-per-batch consumer behind a
+        // depth-1 queue must strand workers for ms-scale waits.
         let mut p = setup(10, 6, 1);
         let mut delivered = 0u64;
         for (i, b) in (&mut p).enumerate() {
@@ -290,6 +488,11 @@ mod tests {
             delivered += 1;
         }
         assert_eq!(delivered, 10);
+        assert!(
+            p.stage_metrics().queue_wait > std::time::Duration::from_millis(1),
+            "blocked sends must register as queue-wait, got {:?}",
+            p.stage_metrics().queue_wait
+        );
         p.join();
     }
 
@@ -322,7 +525,33 @@ mod tests {
                 batch_size: 64,
                 num_batches: 4,
                 seed: 1,
+                ..PipelineConfig::default()
+            },
+        );
+        while p.next().is_some() {}
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn gather_panic_propagates_like_sampler_panics() {
+        // a store smaller than the graph makes the in-worker gather hit
+        // the named out-of-range error; it must surface on the consumer
+        let g = Arc::new(crate::sampler::testutil::test_graph()); // |V| = 500
+        let store = Arc::new(FeatureStore::new(vec![0.0f32; 10 * 4], 4, TierModel::local()));
+        let sampler = Arc::new(MultiLayerSampler::new(SamplerKind::Neighbor, &[4]));
+        let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
+        let mut p = SamplingPipeline::spawn(
+            g,
+            sampler,
+            ids,
+            PipelineConfig {
+                num_workers: 2,
+                queue_depth: 2,
+                batch_size: 64,
+                num_batches: 4,
+                seed: 1,
                 intra_batch_threads: 1,
+                data_plane: Some(DataPlaneConfig { store, labels: None }),
             },
         );
         while p.next().is_some() {}
@@ -345,10 +574,22 @@ mod tests {
                 batch_size: 32,
                 num_batches: 2,
                 seed: 0,
-                intra_batch_threads: 1,
+                ..PipelineConfig::default()
             },
         );
         let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.join()));
         assert!(err.is_err(), "join must re-raise the worker panic");
+    }
+
+    #[test]
+    fn data_plane_config_debug_and_for_dataset() {
+        let ds = crate::data::Dataset::generate(crate::data::spec("tiny").unwrap(), 0.2);
+        let plane =
+            DataPlaneConfig::for_dataset(&ds, TierModel::local(), Arc::new(NullCache));
+        assert_eq!(plane.store.num_rows(), ds.num_vertices());
+        assert_eq!(plane.store.dim(), ds.num_features());
+        assert_eq!(plane.labels.as_ref().unwrap().num_rows(), ds.num_vertices());
+        let dbg = format!("{plane:?}");
+        assert!(dbg.contains("DataPlaneConfig"), "{dbg}");
     }
 }

@@ -15,6 +15,7 @@ use crate::graph::{io, CscGraph};
 use crate::rng::StreamRng;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Static description of a synthetic dataset (pre-scaling).
 #[derive(Clone, Debug)]
@@ -130,13 +131,18 @@ pub struct Dataset {
     /// effective scale applied to |V|, |E| and the budget
     pub scale: f64,
     pub graph: CscGraph,
-    /// row-major `|V| x num_features`
-    pub features: Vec<f32>,
+    /// row-major `|V| x num_features`, `Arc`-shared so a
+    /// [`FeatureStore`](crate::coordinator::FeatureStore) (and the
+    /// pipeline data plane) can reference the rows without copying them
+    pub features: Arc<Vec<f32>>,
     /// single-label targets (class id per vertex); for multilabel datasets
-    /// this holds the primary community and `multilabels` holds the multi-hot
-    pub labels: Vec<u16>,
+    /// this holds the primary community and `multilabels` holds the
+    /// multi-hot. `Arc`-shared, like `features`, so a
+    /// [`LabelStore`](crate::coordinator::LabelStore) references the rows
+    /// without copying them.
+    pub labels: Arc<Vec<u16>>,
     /// `|V| x num_classes` multi-hot targets, only for multilabel datasets
-    pub multilabels: Option<Vec<u8>>,
+    pub multilabels: Option<Arc<Vec<u8>>>,
     pub splits: Splits,
 }
 
@@ -266,9 +272,9 @@ impl Dataset {
             spec: spec.clone(),
             scale,
             graph: g.graph,
-            features,
-            labels: g.communities,
-            multilabels,
+            features: Arc::new(features),
+            labels: Arc::new(g.communities),
+            multilabels: multilabels.map(Arc::new),
             splits,
         }
     }
@@ -338,7 +344,15 @@ impl Dataset {
             val: io::read_u32_slice(&mut r)?,
             test: io::read_u32_slice(&mut r)?,
         };
-        Ok(Dataset { spec: spec.clone(), scale, graph, features, labels, multilabels, splits })
+        Ok(Dataset {
+            spec: spec.clone(),
+            scale,
+            graph,
+            features: Arc::new(features),
+            labels: Arc::new(labels),
+            multilabels: multilabels.map(Arc::new),
+            splits,
+        })
     }
 }
 

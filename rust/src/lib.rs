@@ -8,8 +8,9 @@
 //!   LABOR-\* samplers, the PLADIES Poisson layer sampler, the Neighbor
 //!   Sampling and LADIES baselines, plus every substrate they need: CSC
 //!   graph storage, synthetic Table-1-calibrated datasets, a streaming
-//!   mini-batch pipeline with backpressure, a feature store with a
-//!   simulated slow tier, and the training driver.
+//!   mini-batch pipeline with backpressure and an in-pipeline feature
+//!   data plane (shared concurrent store with a simulated slow tier +
+//!   degree-ordered feature cache), and the training driver.
 //! * **Layer 2** — a 3-layer GCN (and GATv2) written in JAX
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
 //! * **Layer 1** — the aggregation hot-spot as a Pallas gather-SpMM kernel

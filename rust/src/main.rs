@@ -15,6 +15,11 @@
 //! repro calibrate-caps --dataset products-sim
 //! repro train   --dataset flickr-sim --method labor-1 [--steps 200 ...]
 //! ```
+//!
+//! `--method` takes any [`SamplerKind::parse`] name: `ns`, `labor-<i>`,
+//! `labor-*`, `labor-<i>-seq`, `ladies`, `pladies`, or budgeted layer
+//! samplers like `ladies-512,256` (bare `ladies`/`pladies` get budgets
+//! matched to LABOR-\* automatically).
 
 use anyhow::{anyhow, Result};
 use labor_gnn::bench;
@@ -187,8 +192,13 @@ fn main() -> Result<()> {
             let mut kind = SamplerKind::parse(&method)
                 .ok_or_else(|| anyhow!("unknown method '{method}'"))?;
             let ds = labor_gnn::data::Dataset::load_or_generate(&dataset, scale)?;
-            // LADIES/PLADIES need budgets: match them to LABOR-* (§4.1)
-            if matches!(kind, SamplerKind::Ladies { .. } | SamplerKind::Pladies { .. }) {
+            // bare `ladies`/`pladies` get budgets matched to LABOR-* (§4.1);
+            // explicit `ladies-512,256`-style budgets pass through untouched
+            if matches!(
+                kind,
+                SamplerKind::Ladies { ref budgets } | SamplerKind::Pladies { ref budgets }
+                    if budgets.is_empty()
+            ) {
                 let budgets = labor_gnn::tune::ladies_budgets_matching(
                     &ds,
                     &SamplerKind::Labor {

@@ -9,13 +9,55 @@
 //! Seeds beyond `K` sampled neighbors have the overflow dropped with the
 //! kept weights renormalized (documented approximation — DESIGN.md §2); the
 //! overflow count is reported so experiments can verify it stays marginal.
+//!
+//! Packing consumes **pre-gathered** feature rows and labels
+//! ([`Packer::pack_gathered`]) — the pipeline's data plane gathers them on
+//! the worker threads (see
+//! [`DataPlaneConfig`](crate::coordinator::pipeline::DataPlaneConfig)), so
+//! the consumer never re-walks the dataset. [`gather_from_dataset`] is the
+//! sequential gather-after-the-fact used by non-pipeline callers; both
+//! paths copy the same rows, so the packed bytes are bit-identical.
 
 use super::manifest::ArtifactConfig;
 use super::tensor::{f32_tensor, i32_tensor};
+use crate::coordinator::feature_store::GatheredLabels;
 use crate::data::Dataset;
 use crate::sampler::Mfg;
 use anyhow::Result;
 use xla::Literal;
+
+/// Sequential consumer-side gather: the deepest layer's feature rows plus
+/// the seeds' labels, copied straight from the dataset. Bit-identical to
+/// the pipeline's in-worker gather for the same [`Mfg`] (enforced by
+/// `rust/tests/data_plane.rs` — this is the equivalence reference;
+/// [`Packer::pack`] itself gathers straight into the padded buffer).
+pub fn gather_from_dataset(ds: &Dataset, mfg: &Mfg) -> (Vec<f32>, GatheredLabels) {
+    let f = ds.num_features();
+    let deep = mfg.feature_vertices();
+    let mut feats = Vec::with_capacity(deep.len() * f);
+    for &v in deep {
+        feats.extend_from_slice(ds.feature(v));
+    }
+    (feats, gather_labels_from_dataset(ds, &mfg.layers[0].seeds))
+}
+
+/// The label half of [`gather_from_dataset`] (also the direct path of
+/// [`Packer::pack`]): per-seed targets, multi-hot when the dataset is.
+pub fn gather_labels_from_dataset(ds: &Dataset, seeds: &[u32]) -> GatheredLabels {
+    match &ds.multilabels {
+        Some(_) => {
+            let c = ds.num_classes();
+            let mut rows = Vec::with_capacity(seeds.len() * c);
+            for &s in seeds {
+                rows.extend_from_slice(ds.multilabel_row(s).expect("multilabel dataset"));
+            }
+            GatheredLabels::Multi { rows, num_classes: c }
+        }
+        None => {
+            GatheredLabels::Single(seeds.iter().map(|&s| ds.labels[s as usize]).collect())
+        }
+    }
+}
 
 /// The packed tensors of one batch, in the artifact's flat batch order:
 /// `feats, idx1, w1, idx2, w2, idx3, w3, labels, mask`.
@@ -57,14 +99,14 @@ impl Packer {
         Self { cfg }
     }
 
-    /// Pack an MFG plus its seeds' labels into literals. `mfg` must have
-    /// `cfg.num_layers()` layers and fit within the manifest caps.
-    pub fn pack(&self, ds: &Dataset, mfg: &Mfg) -> Result<PackedBatch> {
+    /// Shape checks shared by both entry points: layer count, per-layer
+    /// vertex caps, and batch size — everything the padded layout needs
+    /// to hold. Runs before any buffer is touched, so violations are
+    /// named errors, never slice panics.
+    fn check_shape(&self, mfg: &Mfg) -> Result<()> {
         let cfg = &self.cfg;
         let l = cfg.num_layers();
         anyhow::ensure!(mfg.layers.len() == l, "mfg has {} layers, config {l}", mfg.layers.len());
-        let k = cfg.k_max;
-
         // cap check (deepest layer d: inputs |V^{d+1}| <= v_caps[d])
         for (d, layer) in mfg.layers.iter().enumerate() {
             let cap = cfg.v_caps[d];
@@ -76,18 +118,77 @@ impl Packer {
                 cap
             );
         }
-        let seeds = &mfg.layers[0].seeds;
-        anyhow::ensure!(seeds.len() <= cfg.batch_size, "batch larger than artifact B");
+        anyhow::ensure!(
+            mfg.layers[0].seeds.len() <= cfg.batch_size,
+            "batch larger than artifact B"
+        );
+        Ok(())
+    }
 
-        // features: deepest layer inputs, padded to v_caps.last()
+    /// Non-pipeline path (one-off MFGs, evaluation chunks, benches):
+    /// gather the dataset's rows **straight into the padded buffer** —
+    /// one copy, the same count as packing a pre-gathered batch — then
+    /// pack. The packed bytes are bit-identical to
+    /// [`pack_gathered`](Self::pack_gathered) over
+    /// [`gather_from_dataset`]'s output.
+    pub fn pack(&self, ds: &Dataset, mfg: &Mfg) -> Result<PackedBatch> {
+        self.check_shape(mfg)?;
+        let cfg = &self.cfg;
         let f = cfg.num_features;
-        let deep_inputs = mfg.feature_vertices();
         let vin_cap = *cfg.v_caps.last().unwrap();
-        let mut feats = vec![0.0f32; vin_cap * f];
-        for (row, &v) in deep_inputs.iter().enumerate() {
-            feats[row * f..(row + 1) * f].copy_from_slice(ds.feature(v));
+        let mut padded = vec![0.0f32; vin_cap * f];
+        for (row, &v) in mfg.feature_vertices().iter().enumerate() {
+            padded[row * f..(row + 1) * f].copy_from_slice(ds.feature(v));
         }
-        let feats = f32_tensor(&feats, &[vin_cap, f])?;
+        let labels = gather_labels_from_dataset(ds, &mfg.layers[0].seeds);
+        self.pack_padded(padded, &labels, mfg)
+    }
+
+    /// Pack an MFG from **pre-gathered** rows: `feats` holds the deepest
+    /// layer's feature rows (row-major `|V^L| × num_features`, the order
+    /// of [`Mfg::feature_vertices`]) and `labels` the per-seed targets —
+    /// exactly what a data-plane [`SampledBatch`](crate::coordinator::SampledBatch)
+    /// carries. `mfg` must have `cfg.num_layers()` layers and fit within
+    /// the manifest caps.
+    pub fn pack_gathered(
+        &self,
+        feats: &[f32],
+        labels: &GatheredLabels,
+        mfg: &Mfg,
+    ) -> Result<PackedBatch> {
+        self.check_shape(mfg)?;
+        let cfg = &self.cfg;
+        let f = cfg.num_features;
+        let deep_rows = mfg.feature_vertices().len();
+        anyhow::ensure!(
+            feats.len() == deep_rows * f,
+            "pre-gathered features hold {} floats, mfg needs {} rows × {} \
+             (was the pipeline's data plane configured with the right store?)",
+            feats.len(),
+            deep_rows,
+            f
+        );
+        let vin_cap = *cfg.v_caps.last().unwrap();
+        let mut padded = vec![0.0f32; vin_cap * f];
+        padded[..feats.len()].copy_from_slice(feats);
+        self.pack_padded(padded, labels, mfg)
+    }
+
+    /// Shared tail: `padded` is the already-padded `vin_cap × f` feature
+    /// buffer. Packs the per-layer (idx, w) tensors, labels, and mask.
+    fn pack_padded(
+        &self,
+        padded: Vec<f32>,
+        labels: &GatheredLabels,
+        mfg: &Mfg,
+    ) -> Result<PackedBatch> {
+        let cfg = &self.cfg;
+        let l = cfg.num_layers();
+        let k = cfg.k_max;
+        let f = cfg.num_features;
+        let seeds = &mfg.layers[0].seeds;
+        let vin_cap = *cfg.v_caps.last().unwrap();
+        let feats = f32_tensor(&padded, &[vin_cap, f])?;
 
         // layers in compute order: deepest (index l-1) first
         let mut layers = Vec::with_capacity(l);
@@ -127,28 +228,46 @@ impl Packer {
             layers.push((i32_tensor(&idx, &[*r_out, k])?, f32_tensor(&w, &[*r_out, k])?));
         }
 
-        // labels + mask over (padded) seeds
+        // labels + mask over (padded) seeds, from the pre-gathered rows
         let b = cfg.batch_size;
         let mut mask = vec![0.0f32; b];
         for m in mask.iter_mut().take(seeds.len()) {
             *m = 1.0;
         }
-        let labels = if cfg.multilabel {
-            let c = cfg.num_classes;
-            let mut y = vec![0.0f32; b * c];
-            for (i, &s) in seeds.iter().enumerate() {
-                let row = ds.multilabel_row(s).expect("multilabel dataset");
-                for (j, &v) in row.iter().enumerate() {
-                    y[i * c + j] = v as f32;
+        let labels = match labels {
+            GatheredLabels::Multi { rows, num_classes } => {
+                anyhow::ensure!(cfg.multilabel, "multi-hot labels for a single-label artifact");
+                let (c, nc) = (cfg.num_classes, *num_classes);
+                anyhow::ensure!(
+                    nc == c && rows.len() == seeds.len() * c,
+                    "gathered label rows are {}×{nc}, artifact expects {}×{c}",
+                    rows.len() / nc.max(1),
+                    seeds.len()
+                );
+                let mut y = vec![0.0f32; b * c];
+                for (i, &v) in rows.iter().enumerate() {
+                    y[i] = v as f32;
                 }
+                f32_tensor(&y, &[b, c])?
             }
-            f32_tensor(&y, &[b, c])?
-        } else {
-            let mut y = vec![0i32; b];
-            for (i, &s) in seeds.iter().enumerate() {
-                y[i] = ds.labels[s as usize] as i32;
+            GatheredLabels::Single(ids) => {
+                anyhow::ensure!(!cfg.multilabel, "single labels for a multilabel artifact");
+                anyhow::ensure!(
+                    ids.len() == seeds.len(),
+                    "gathered {} labels for {} seeds",
+                    ids.len(),
+                    seeds.len()
+                );
+                let mut y = vec![0i32; b];
+                for (i, &id) in ids.iter().enumerate() {
+                    y[i] = id as i32;
+                }
+                i32_tensor(&y, &[b])?
             }
-            i32_tensor(&y, &[b])?
+            GatheredLabels::None => anyhow::bail!(
+                "packing needs gathered labels — configure the pipeline's \
+                 DataPlaneConfig with a LabelStore (or use Packer::pack)"
+            ),
         };
 
         Ok(PackedBatch {
@@ -214,6 +333,52 @@ mod tests {
         for row in w.chunks_exact(8).take(200) {
             let s: f32 = row.iter().sum();
             assert!(s.abs() < 1e-4 || (s - 1.0).abs() < 1e-3, "row sum {s}");
+        }
+    }
+
+    #[test]
+    fn pack_gathered_validates_its_inputs() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 0.3);
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[4, 4, 4],
+        );
+        let seeds: Vec<u32> = ds.splits.train[..50].to_vec();
+        let mfg = sampler.sample_fresh(&ds.graph, &seeds, 7);
+        let packer = Packer::new(tiny_cfg());
+        let (feats, labels) = gather_from_dataset(&ds, &mfg);
+        // the explicit pre-gathered path is what pack() runs internally
+        let pb = packer.pack_gathered(&feats, &labels, &mfg).unwrap();
+        assert_eq!(pb.num_seeds, 50);
+        // truncated feature rows are rejected loudly
+        let err = packer.pack_gathered(&feats[..feats.len() - 16], &labels, &mfg);
+        assert!(err.unwrap_err().to_string().contains("pre-gathered features"));
+        // a missing label plane is a named error, not a zero batch
+        let err = packer.pack_gathered(&feats, &GatheredLabels::None, &mfg);
+        assert!(err.unwrap_err().to_string().contains("gathered labels"));
+        // wrong label shape for the artifact
+        let multi = GatheredLabels::Multi { rows: vec![0; 50 * 4], num_classes: 4 };
+        assert!(packer.pack_gathered(&feats, &multi, &mfg).is_err());
+    }
+
+    #[test]
+    fn multilabel_rows_pack_from_gathered_plane() {
+        let mut s = spec("tiny").unwrap().clone();
+        s.multilabel = true;
+        let ds = Dataset::generate(&s, 0.3);
+        let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[4, 4, 4]);
+        let seeds: Vec<u32> = ds.splits.train[..30].to_vec();
+        let mfg = sampler.sample_fresh(&ds.graph, &seeds, 9);
+        let mut cfg = tiny_cfg();
+        cfg.multilabel = true;
+        let packer = Packer::new(cfg);
+        let pb = packer.pack(&ds, &mfg).unwrap();
+        let y = pb.labels.to_vec::<f32>().unwrap();
+        assert_eq!(y.len(), 64 * 4);
+        // first seed's row matches the dataset's multi-hot row
+        let want = ds.multilabel_row(seeds[0]).unwrap();
+        for (j, &v) in want.iter().enumerate() {
+            assert_eq!(y[j], v as f32);
         }
     }
 

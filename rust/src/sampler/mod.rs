@@ -190,15 +190,25 @@ pub enum IterSpec {
 
 impl SamplerKind {
     /// Parse names like `ns`, `labor-0`, `labor-1`, `labor-*`, `ladies`,
-    /// `pladies`, and the sequential Poisson variants `labor-0-seq` /
-    /// `labor-*-seq` (harness CLI). Lowercased [`label`](Self::label)s
-    /// round-trip. LADIES budgets must be set separately.
+    /// `pladies`, the sequential Poisson variants `labor-0-seq` /
+    /// `labor-*-seq`, and budgeted layer samplers `ladies-512,256` /
+    /// `pladies-512,256` (per-layer vertex budgets, seed-adjacent layer
+    /// first — the harness CLI needs no special-casing to select them).
+    /// Lowercased [`label`](Self::label)s round-trip. Bare
+    /// `ladies`/`pladies` leave the budgets empty for the caller to match
+    /// (e.g. `tune::ladies_budgets_matching`).
     pub fn parse(name: &str) -> Option<SamplerKind> {
         match name {
             "ns" | "neighbor" => Some(SamplerKind::Neighbor),
             "ladies" => Some(SamplerKind::Ladies { budgets: vec![] }),
             "pladies" => Some(SamplerKind::Pladies { budgets: vec![] }),
             _ => {
+                if let Some(rest) = name.strip_prefix("ladies-") {
+                    return Some(SamplerKind::Ladies { budgets: Self::parse_budgets(rest)? });
+                }
+                if let Some(rest) = name.strip_prefix("pladies-") {
+                    return Some(SamplerKind::Pladies { budgets: Self::parse_budgets(rest)? });
+                }
                 let (core, sequential) = match name.strip_suffix("-seq") {
                     Some(core) => (core, true),
                     None => (name, false),
@@ -218,7 +228,26 @@ impl SamplerKind {
         }
     }
 
+    /// Comma-separated positive per-layer budgets (`512,256`); rejects
+    /// empty/zero/malformed entries.
+    fn parse_budgets(s: &str) -> Option<Vec<usize>> {
+        if s.is_empty() {
+            return None;
+        }
+        s.split(',')
+            .map(|t| t.parse::<usize>().ok().filter(|&b| b > 0))
+            .collect::<Option<Vec<usize>>>()
+    }
+
     pub fn label(&self) -> String {
+        let budget_label = |prefix: &str, budgets: &[usize]| -> String {
+            if budgets.is_empty() {
+                prefix.to_string()
+            } else {
+                let list: Vec<String> = budgets.iter().map(|b| b.to_string()).collect();
+                format!("{prefix}-{}", list.join(","))
+            }
+        };
         match self {
             SamplerKind::Neighbor => "NS".into(),
             SamplerKind::Labor { iterations, .. } => match iterations {
@@ -229,8 +258,8 @@ impl SamplerKind {
                 IterSpec::Fixed(i) => format!("LABOR-{i}-seq"),
                 IterSpec::Converge => "LABOR-*-seq".into(),
             },
-            SamplerKind::Ladies { .. } => "LADIES".into(),
-            SamplerKind::Pladies { .. } => "PLADIES".into(),
+            SamplerKind::Ladies { budgets } => budget_label("LADIES", budgets),
+            SamplerKind::Pladies { budgets } => budget_label("PLADIES", budgets),
         }
     }
 }
@@ -597,6 +626,29 @@ mod tests {
     }
 
     #[test]
+    fn parse_budgeted_layer_samplers() {
+        assert_eq!(
+            SamplerKind::parse("ladies-512,256"),
+            Some(SamplerKind::Ladies { budgets: vec![512, 256] })
+        );
+        assert_eq!(
+            SamplerKind::parse("pladies-512,256,128"),
+            Some(SamplerKind::Pladies { budgets: vec![512, 256, 128] })
+        );
+        assert_eq!(
+            SamplerKind::parse("ladies-2000"),
+            Some(SamplerKind::Ladies { budgets: vec![2000] })
+        );
+        // malformed budget lists must not parse
+        assert!(SamplerKind::parse("ladies-").is_none());
+        assert!(SamplerKind::parse("ladies-512,").is_none());
+        assert!(SamplerKind::parse("ladies-512,,256").is_none());
+        assert!(SamplerKind::parse("ladies-512,x").is_none());
+        assert!(SamplerKind::parse("pladies-0,256").is_none());
+        assert!(SamplerKind::parse("ladies-*").is_none());
+    }
+
+    #[test]
     fn parse_label_round_trip() {
         let kinds = [
             SamplerKind::Neighbor,
@@ -617,6 +669,8 @@ mod tests {
             },
             SamplerKind::Ladies { budgets: vec![] },
             SamplerKind::Pladies { budgets: vec![] },
+            SamplerKind::Ladies { budgets: vec![512, 256] },
+            SamplerKind::Pladies { budgets: vec![4096, 2048, 1024] },
         ];
         for kind in kinds {
             let label = kind.label();

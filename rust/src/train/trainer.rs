@@ -1,11 +1,20 @@
 //! The training loop: sample → pack → execute compiled train_step → track
 //! metrics; plus sampled evaluation over a split.
+//!
+//! Feature rows and labels reach the trainer **pre-gathered**: the
+//! pipeline's data plane fetches them on the worker threads and
+//! [`Trainer::step_batch`] consumes them straight from the
+//! [`SampledBatch`] — the consumer thread never re-walks the dataset.
+//! [`Trainer::step`] is the non-pipeline path (one-off MFGs, benches):
+//! [`Packer::pack`] gathers the same rows on this thread, straight into
+//! the padded buffer, so both paths train on bit-identical batches.
 
 use super::eval::{micro_f1_multilabel, micro_f1_single};
 use super::state::TrainState;
+use crate::coordinator::pipeline::SampledBatch;
 use crate::data::Dataset;
 use crate::runtime::engine::CompiledModel;
-use crate::runtime::packer::Packer;
+use crate::runtime::packer::{PackedBatch, Packer};
 use crate::sampler::{Mfg, MultiLayerSampler, SamplerScratch};
 use anyhow::Result;
 use xla::Literal;
@@ -45,10 +54,34 @@ impl Trainer {
         Ok(Self { model, packer, state, lr, cum_vertices: 0, cum_edges: 0, overflow_edges: 0 })
     }
 
-    /// One optimization step on a pre-sampled MFG. Returns the record.
+    /// One optimization step on a pipeline batch carrying pre-gathered
+    /// features and labels (requires a
+    /// [`PipelineConfig`](crate::coordinator::PipelineConfig) whose
+    /// `data_plane` has a label store — errors otherwise).
+    pub fn step_batch(&mut self, batch: &SampledBatch) -> Result<TrainRecord> {
+        let t0 = std::time::Instant::now();
+        let packed = self.packer.pack_gathered(&batch.feats, &batch.labels, &batch.mfg)?;
+        self.execute_step(packed, &batch.mfg, t0)
+    }
+
+    /// One optimization step on a pre-sampled MFG, gathering from the
+    /// dataset on this thread (the non-pipeline path — [`Packer::pack`]
+    /// copies the rows straight into the padded buffer). Returns the
+    /// record.
     pub fn step(&mut self, ds: &Dataset, mfg: &Mfg) -> Result<TrainRecord> {
         let t0 = std::time::Instant::now();
         let packed = self.packer.pack(ds, mfg)?;
+        self.execute_step(packed, mfg, t0)
+    }
+
+    /// Shared tail of both step paths: run the compiled train_step on an
+    /// already-packed batch and absorb the new state.
+    fn execute_step(
+        &mut self,
+        packed: PackedBatch,
+        mfg: &Mfg,
+        t0: std::time::Instant,
+    ) -> Result<TrainRecord> {
         self.overflow_edges += packed.overflow_edges as u64;
         let batch = packed.batch_args();
         let lr = crate::runtime::tensor::f32_scalar(self.lr);
@@ -73,7 +106,9 @@ impl Trainer {
     }
 
     /// Sampled evaluation over `split` seeds: micro-F1 with the given
-    /// evaluation sampler (typically NS at the training fanout).
+    /// evaluation sampler (typically NS at the training fanout). Each
+    /// chunk is gathered and packed through [`Packer::pack`] — the same
+    /// bytes the data plane would deliver, gathered on this thread.
     pub fn evaluate(
         &self,
         ds: &Dataset,

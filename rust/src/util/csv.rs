@@ -22,11 +22,22 @@ impl CsvWriter {
 
     pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
         debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
-        writeln!(self.out, "{}", fields.join(","))
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.out, "{}", escaped.join(","))
     }
 
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
+    }
+}
+
+/// RFC-4180 quoting for fields that need it — method labels may carry
+/// commas since budgeted layer samplers label as e.g. `LADIES-512,256`.
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
     }
 }
 
@@ -54,6 +65,21 @@ mod tests {
         }
         let s = std::fs::read_to_string(&path).unwrap();
         assert_eq!(s, "a,b\n1,2.500000\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn comma_bearing_fields_are_quoted() {
+        let dir = std::env::temp_dir().join("labor_csv_quote_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["method", "v"]).unwrap();
+            w.row(&["LADIES-512,256".to_string(), f(3.0)]).unwrap();
+            w.row(&["plain".to_string(), f(4.0)]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "method,v\n\"LADIES-512,256\",3\nplain,4\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

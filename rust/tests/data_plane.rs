@@ -1,0 +1,196 @@
+//! The data plane's determinism and accounting contracts.
+//!
+//! Gather-equivalence: features and labels delivered by the pipeline's
+//! in-worker gather are **bit-identical** to a sequential
+//! gather-after-the-fact from the dataset, for every cache policy ×
+//! worker count × shard count — the same contract PR 3 pinned down for
+//! MFGs, extended to the bytes the trainer actually consumes.
+//!
+//! Cache accounting: hit counts are monotone in cache capacity (a larger
+//! degree-ordered cache is a superset of a smaller one) and
+//! `bytes_saved == hits × row_bytes` exactly.
+
+use labor_gnn::coordinator::cache::{DegreeOrderedCache, FeatureCache, NullCache};
+use labor_gnn::coordinator::feature_store::{FeatureStore, GatheredLabels, TierModel};
+use labor_gnn::coordinator::pipeline::{DataPlaneConfig, PipelineConfig, SamplingPipeline};
+use labor_gnn::data::{spec, Dataset};
+use labor_gnn::runtime::packer::gather_from_dataset;
+use labor_gnn::sampler::{IterSpec, Mfg, MultiLayerSampler, SamplerKind};
+use std::sync::Arc;
+
+fn tiny() -> Dataset {
+    Dataset::generate(spec("tiny").unwrap(), 0.5)
+}
+
+fn run_pipeline(
+    ds: &Dataset,
+    kind: SamplerKind,
+    workers: usize,
+    shards: usize,
+    cache: Arc<dyn FeatureCache>,
+) -> Vec<(Mfg, Vec<f32>, GatheredLabels)> {
+    let plane = DataPlaneConfig::for_dataset(ds, TierModel::pcie(), cache);
+    let sampler = Arc::new(MultiLayerSampler::new(kind, &[8, 8]));
+    let mut p = SamplingPipeline::spawn(
+        Arc::new(ds.graph.clone()),
+        sampler,
+        Arc::new(ds.splits.train.clone()),
+        PipelineConfig {
+            num_workers: workers,
+            queue_depth: 3,
+            batch_size: 128,
+            num_batches: 10,
+            seed: 21,
+            intra_batch_threads: shards,
+            data_plane: Some(plane),
+        },
+    );
+    let mut out = Vec::new();
+    for b in &mut p {
+        out.push((b.mfg, b.feats, b.labels));
+    }
+    p.join();
+    out
+}
+
+#[test]
+fn pipeline_gather_matches_sequential_gather_exactly() {
+    // reference: 1 worker, 1 shard, no cache; every other combination —
+    // including cache policies — must deliver bit-identical bytes
+    let ds = tiny();
+    let kinds = [
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+    ];
+    for kind in kinds {
+        let reference = run_pipeline(&ds, kind.clone(), 1, 1, Arc::new(NullCache));
+        // the pipeline's own gather equals a sequential
+        // gather-after-the-fact from the dataset, row for row
+        for (mfg, feats, labels) in &reference {
+            let (seq_feats, seq_labels) = gather_from_dataset(&ds, mfg);
+            assert_eq!(feats, &seq_feats, "{} in-pipeline vs sequential", kind.label());
+            assert_eq!(labels, &seq_labels, "{} labels", kind.label());
+        }
+        let combos: Vec<(usize, usize, Arc<dyn FeatureCache>)> = vec![
+            (4, 1, Arc::new(NullCache)),
+            (1, 3, Arc::new(DegreeOrderedCache::new(&ds.graph, ds.num_vertices() / 10))),
+            (3, 2, Arc::new(DegreeOrderedCache::new(&ds.graph, ds.num_vertices() / 2))),
+            (2, 1, Arc::new(DegreeOrderedCache::new(&ds.graph, ds.num_vertices()))),
+        ];
+        for (workers, shards, cache) in combos {
+            let what = format!("{} workers={workers} shards={shards}", kind.label());
+            let got = run_pipeline(&ds, kind.clone(), workers, shards, cache);
+            assert_eq!(reference.len(), got.len(), "{what}");
+            for (b, ((_, ref_f, ref_l), (_, got_f, got_l))) in
+                reference.iter().zip(&got).enumerate()
+            {
+                assert_eq!(ref_f, got_f, "{what} batch {b} features");
+                assert_eq!(ref_l, got_l, "{what} batch {b} labels");
+            }
+        }
+    }
+}
+
+#[test]
+fn multilabel_plane_round_trips() {
+    let mut s = spec("tiny").unwrap().clone();
+    s.multilabel = true;
+    let ds = Dataset::generate(&s, 0.5);
+    let kind = SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false };
+    for (mfg, _, labels) in run_pipeline(&ds, kind, 3, 1, Arc::new(NullCache)) {
+        let seeds = &mfg.layers[0].seeds;
+        match labels {
+            GatheredLabels::Multi { rows, num_classes } => {
+                assert_eq!(num_classes, ds.num_classes());
+                assert_eq!(rows.len(), seeds.len() * num_classes);
+                for (i, &s) in seeds.iter().enumerate() {
+                    assert_eq!(
+                        &rows[i * num_classes..(i + 1) * num_classes],
+                        ds.multilabel_row(s).unwrap(),
+                        "seed {i}"
+                    );
+                }
+            }
+            other => panic!("expected multi-hot labels, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn hit_rate_is_monotone_in_cache_capacity() {
+    // one fixed request stream replayed against growing degree caches:
+    // hits never decrease (supersets), and the full cache hits everything
+    let ds = tiny();
+    let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[8, 8]);
+    let mut ids_stream: Vec<Vec<u32>> = Vec::new();
+    for b in 0..6u64 {
+        let seeds: Vec<u32> = ds.splits.train[b as usize * 64..(b as usize + 1) * 64].to_vec();
+        ids_stream.push(sampler.sample_fresh(&ds.graph, &seeds, b).feature_vertices().to_vec());
+    }
+    let nv = ds.num_vertices();
+    let mut prev_hits = 0u64;
+    for rows in [0usize, nv / 20, nv / 5, nv / 2, nv] {
+        let cache: Arc<dyn FeatureCache> = if rows == 0 {
+            Arc::new(NullCache)
+        } else {
+            Arc::new(DegreeOrderedCache::new(&ds.graph, rows))
+        };
+        let store = FeatureStore::new(ds.features.clone(), ds.num_features(), TierModel::pcie())
+            .with_cache(cache);
+        let mut out = Vec::new();
+        for ids in &ids_stream {
+            store.gather(ids, &mut out);
+        }
+        assert!(
+            store.cache_hits() >= prev_hits,
+            "hits dropped from {prev_hits} to {} at capacity {rows}",
+            store.cache_hits()
+        );
+        // exact bytes-saved accounting at every capacity
+        assert_eq!(store.bytes_saved(), store.cache_hits() * store.row_bytes());
+        assert_eq!(
+            store.bytes_fetched() + store.bytes_saved(),
+            store.bytes_gathered(),
+            "hit and miss bytes must partition the gathered bytes"
+        );
+        prev_hits = store.cache_hits();
+    }
+    // the last iteration pinned every row: everything hits
+    let total: u64 = ids_stream.iter().map(|v| v.len() as u64).sum();
+    assert_eq!(prev_hits, total);
+}
+
+#[test]
+fn stage_metrics_are_surfaced_through_the_handle() {
+    let ds = tiny();
+    let plane = DataPlaneConfig::for_dataset(&ds, TierModel::pcie(), Arc::new(NullCache));
+    let sampler = Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        &[8, 8],
+    ));
+    let mut p = SamplingPipeline::spawn(
+        Arc::new(ds.graph.clone()),
+        sampler,
+        Arc::new(ds.splits.train.clone()),
+        PipelineConfig {
+            num_workers: 2,
+            queue_depth: 2,
+            batch_size: 128,
+            num_batches: 6,
+            seed: 3,
+            intra_batch_threads: 1,
+            data_plane: Some(plane),
+        },
+    );
+    for _ in &mut p {}
+    let stages = p.stage_metrics();
+    assert_eq!(stages.batches, 6);
+    assert!(stages.sample > std::time::Duration::ZERO);
+    assert!(stages.gather > std::time::Duration::ZERO);
+    assert!(stages.mean_sample_ms() > 0.0);
+    // the handle exposes the shared store for cache/bytes accounting
+    let store = &p.data_plane().unwrap().store;
+    assert_eq!(store.requests(), 6);
+    assert!(store.bytes_fetched() > 0);
+    p.join();
+}

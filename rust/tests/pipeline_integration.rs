@@ -1,8 +1,11 @@
 //! End-to-end pipeline test: streaming sampling workers + compiled model
-//! training, verifying the full L3 -> L2/L1 composition under concurrency.
+//! training, verifying the full L3 -> L2/L1 composition under concurrency —
+//! now through the data plane: workers gather features/labels in-pipeline
+//! and the trainer consumes them pre-gathered.
 
-use labor_gnn::coordinator::feature_store::{FeatureStore, TierModel};
-use labor_gnn::coordinator::pipeline::{PipelineConfig, SamplingPipeline};
+use labor_gnn::coordinator::cache::{DegreeOrderedCache, NullCache};
+use labor_gnn::coordinator::feature_store::TierModel;
+use labor_gnn::coordinator::pipeline::{DataPlaneConfig, PipelineConfig, SamplingPipeline};
 use labor_gnn::data::Dataset;
 use labor_gnn::runtime::{Engine, Manifest};
 use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
@@ -24,6 +27,7 @@ fn pipeline_feeds_trainer_end_to_end() {
         &[8, 8, 8],
     ));
     let mut trainer = Trainer::new(model, 1).unwrap();
+    let plane = DataPlaneConfig::for_dataset(&ds, TierModel::local(), Arc::new(NullCache));
     let mut pipeline = SamplingPipeline::spawn(
         Arc::new(ds.graph.clone()),
         sampler,
@@ -35,13 +39,18 @@ fn pipeline_feeds_trainer_end_to_end() {
             num_batches: 12,
             seed: 4,
             intra_batch_threads: 1,
+            data_plane: Some(plane),
         },
     );
     let mut losses = Vec::new();
     for b in &mut pipeline {
-        let rec = trainer.step(&ds, &b.mfg).unwrap();
+        // the trainer consumes the pre-gathered rows; it never sees `ds`
+        let rec = trainer.step_batch(&b).unwrap();
         losses.push(rec.loss);
     }
+    let stages = pipeline.stage_metrics();
+    assert_eq!(stages.batches, 12);
+    assert!(stages.gather > std::time::Duration::ZERO);
     pipeline.join();
     assert_eq!(losses.len(), 12);
     assert!(losses.iter().all(|l| l.is_finite()));
@@ -50,10 +59,13 @@ fn pipeline_feeds_trainer_end_to_end() {
 
 #[test]
 fn feature_store_traffic_tracks_sampler_efficiency() {
-    // LABOR-* fetches fewer feature rows than NS through the pipeline
+    // LABOR-* moves fewer feature bytes than NS through the in-pipeline
+    // gather — the paper's §4.1 data-movement claim, measured at the store
     let ds = Arc::new(Dataset::load_or_generate("tiny", 1.0).unwrap());
     let run = |kind: SamplerKind| -> u64 {
         let sampler = Arc::new(MultiLayerSampler::new(kind, &[10, 10, 10]));
+        let plane = DataPlaneConfig::for_dataset(&ds, TierModel::pcie(), Arc::new(NullCache));
+        let store = plane.store.clone();
         let mut p = SamplingPipeline::spawn(
             Arc::new(ds.graph.clone()),
             sampler,
@@ -65,17 +77,66 @@ fn feature_store_traffic_tracks_sampler_efficiency() {
                 num_batches: 10,
                 seed: 5,
                 intra_batch_threads: 2,
+                data_plane: Some(plane),
             },
         );
-        let mut store = FeatureStore::new(&ds.features, ds.spec.num_features, TierModel::pcie());
-        let mut rows = Vec::new();
         for b in &mut p {
-            store.gather(b.mfg.feature_vertices(), &mut rows);
+            assert!(!b.feats.is_empty());
         }
         p.join();
-        store.bytes_fetched
+        store.bytes_fetched()
     };
     let ns = run(SamplerKind::Neighbor);
     let labor = run(SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false });
     assert!(labor < ns, "labor bytes {labor} !< ns bytes {ns}");
+}
+
+#[test]
+fn degree_cache_cuts_slow_tier_traffic_in_the_pipeline() {
+    // same sampler, same seeds: a top-10% degree cache must save bytes on
+    // the slow tier without touching what the consumer receives
+    let ds = Arc::new(Dataset::load_or_generate("tiny", 1.0).unwrap());
+    let run = |cache_rows: usize| -> (u64, u64, Vec<f32>) {
+        let cache: Arc<dyn labor_gnn::coordinator::FeatureCache> = if cache_rows == 0 {
+            Arc::new(NullCache)
+        } else {
+            Arc::new(DegreeOrderedCache::new(&ds.graph, cache_rows))
+        };
+        let plane = DataPlaneConfig::for_dataset(&ds, TierModel::pcie(), cache);
+        let store = plane.store.clone();
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[10, 10, 10],
+        ));
+        let mut p = SamplingPipeline::spawn(
+            Arc::new(ds.graph.clone()),
+            sampler,
+            Arc::new(ds.splits.train.clone()),
+            PipelineConfig {
+                num_workers: 3,
+                queue_depth: 4,
+                batch_size: 256,
+                num_batches: 8,
+                seed: 6,
+                intra_batch_threads: 1,
+                data_plane: Some(plane),
+            },
+        );
+        let mut first_feats = Vec::new();
+        for b in &mut p {
+            if b.batch_id == 0 {
+                first_feats = b.feats.clone();
+            }
+        }
+        p.join();
+        (store.bytes_fetched(), store.bytes_saved(), first_feats)
+    };
+    let (uncached_bytes, saved0, feats_uncached) = run(0);
+    let (cached_bytes, saved, feats_cached) = run(ds.num_vertices() / 10);
+    assert_eq!(saved0, 0);
+    assert!(saved > 0, "degree cache saved no bytes");
+    assert_eq!(cached_bytes + saved, uncached_bytes, "hit+miss bytes must add up");
+    assert!(cached_bytes < uncached_bytes);
+    // the cache never changes the delivered bytes
+    assert_eq!(feats_uncached, feats_cached);
 }
