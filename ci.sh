@@ -23,23 +23,39 @@ echo "== cargo test -q (tier-1, step 2/2)"
 cargo test -q
 
 if [ "$MODE" != "fast" ]; then
-  echo "== bench-smoke: build all bench targets, run the pipeline bench tiny"
+  echo "== graph-pack smoke: .lgx pack + verified reload via the repro CLI"
+  # packs the tiny dataset into the zero-copy format (degree-ordered
+  # layout + perm section), reloads it, and checks graph/perm equality —
+  # the command exits nonzero on any mismatch or checksum failure
+  ./target/release/repro graph pack --dataset tiny --scale 0.2 \
+    --out "${TMPDIR:-/tmp}/labor_ci_tiny.lgx"
+  rm -f "${TMPDIR:-/tmp}/labor_ci_tiny.lgx"
+
+  echo "== bench-smoke: build all bench targets, run pipeline + samplers tiny"
   cargo build --release --benches
   # --smoke: tiny iteration counts; proves the throughput sections, the
-  # data-plane gather sweep, and the allocation probe run end-to-end (see
-  # docs/BENCHMARKS.md); remove any stale perf records first so the
-  # existence checks below can't pass on them
-  rm -f BENCH_pipeline.json BENCH_datapipe.json
+  # data-plane gather sweep, the graph-engine locality sweep, and the
+  # allocation probe run end-to-end (see docs/BENCHMARKS.md); remove any
+  # stale perf records first so the existence checks below can't pass on
+  # them
+  rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json
   cargo bench --bench pipeline -- --smoke
-  # the smoke run must leave both machine-readable perf records behind:
-  # batches/s per thread count, and feature bytes moved per sampler ×
-  # tier × cache (the bench itself asserts LABOR-0 < NS bytes)
+  cargo bench --bench samplers -- --smoke
+  # the smoke runs must leave all machine-readable perf records behind:
+  # batches/s per thread count, feature bytes moved per sampler × tier ×
+  # cache (the bench itself asserts LABOR-0 < NS bytes), and the
+  # original-vs-relabeled sampling/gather sweep + .lgx load-vs-text-parse
+  # comparison (the samplers bench asserts hit-accounting equivalence and
+  # three-way load agreement)
   test -f BENCH_pipeline.json || { echo "BENCH_pipeline.json missing"; exit 1; }
   test -f BENCH_datapipe.json || { echo "BENCH_datapipe.json missing"; exit 1; }
+  test -f BENCH_graph.json || { echo "BENCH_graph.json missing"; exit 1; }
   echo "== BENCH_pipeline.json:"
   cat BENCH_pipeline.json
   echo "== BENCH_datapipe.json:"
   cat BENCH_datapipe.json
+  echo "== BENCH_graph.json:"
+  cat BENCH_graph.json
 fi
 
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"

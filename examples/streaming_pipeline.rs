@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
                 seed: 9,
                 intra_batch_threads: 1,
                 data_plane: Some(DataPlaneConfig { store: store.clone(), labels: None }),
+                output_perm: None,
             },
         );
         let mut v3 = 0usize;

@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
             seed: 42,
             intra_batch_threads: 1,
             data_plane: Some(plane),
+            output_perm: None,
         },
     );
 

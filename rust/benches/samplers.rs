@@ -1,14 +1,34 @@
-//! Sampler micro/throughput benchmarks (backs the it/s column of Table 2).
+//! Sampler micro/throughput benchmarks (backs the it/s column of Table 2)
+//! plus the graph-engine locality sweep.
 //!
 //! `cargo bench --bench samplers` — uses the in-repo timing harness
 //! (crates.io criterion is unavailable in the offline build; the harness
 //! reports mean/p50/p95 and throughput per case).
+//! `cargo bench --bench samplers -- --smoke` — tiny iteration counts (CI).
+//!
+//! The final section measures the `graph::compact` engine: sampling
+//! throughput on the original vs the degree-ordered relabeled layout,
+//! feature-gather time through a bitmap vs a prefix `DegreeOrderedCache`
+//! (with a hit-accounting equivalence check), and `.lgx` zero-copy load
+//! time vs the legacy parse-and-rebuild binary and a text edge list. The
+//! results are written to `BENCH_graph.json` (asserted by ci.sh) — this is
+//! the paper's §4.1 cost model made measurable: LABOR shrinks *how many*
+//! vertices a batch touches, the layout shrinks *how much* each touch
+//! costs.
 
+use labor_gnn::coordinator::cache::{DegreeOrderedCache, FeatureCache};
+use labor_gnn::coordinator::feature_store::{FeatureStore, TierModel};
 use labor_gnn::data::Dataset;
+use labor_gnn::graph::io as graph_io;
 use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch, ScratchPool};
+use labor_gnn::util::json::Json;
 use labor_gnn::util::timer::bench;
+use std::sync::Arc;
+use std::time::Instant;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warm, iters) = if smoke { (1usize, 2usize) } else { (2, 10) };
     let ds = Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset");
     let seeds: Vec<u32> = ds.splits.train[..1024.min(ds.splits.train.len())].to_vec();
     let fanouts = [10usize, 10, 10];
@@ -33,7 +53,7 @@ fn main() {
         // workers hold); compare with `samplers_fresh` below
         let mut scratch = SamplerScratch::new();
         let mut b = 0u64;
-        let r = bench(2, 10, || {
+        let r = bench(warm, iters, || {
             let mfg = sampler.sample(&ds.graph, &seeds, b, &mut scratch);
             std::hint::black_box(mfg.vertex_counts());
             b += 1;
@@ -49,13 +69,13 @@ fn main() {
         );
         let mut scratch = SamplerScratch::new();
         let mut b = 0u64;
-        let r = bench(2, 10, || {
+        let r = bench(warm, iters, || {
             std::hint::black_box(sampler.sample(&ds.graph, &seeds, b, &mut scratch).edge_counts());
             b += 1;
         });
         r.report("labor0_3layer/warm_scratch");
         let mut b = 0u64;
-        let r = bench(2, 10, || {
+        let r = bench(warm, iters, || {
             std::hint::black_box(sampler.sample_fresh(&ds.graph, &seeds, b).edge_counts());
             b += 1;
         });
@@ -71,7 +91,7 @@ fn main() {
         );
         let mut scratch = SamplerScratch::new();
         let mut b = 0u64;
-        let r = bench(2, 20, || {
+        let r = bench(warm, iters.max(4), || {
             std::hint::black_box(sampler.sample(&ds.graph, &seeds, b, &mut scratch).edge_counts());
             b += 1;
         });
@@ -92,7 +112,7 @@ fn main() {
         for shards in [1usize, 2, 4, 8] {
             let mut pool = ScratchPool::for_vertices(ds.graph.num_vertices(), shards);
             let mut b = 0u64;
-            let r = bench(2, 8, || {
+            let r = bench(warm, if smoke { 2 } else { 8 }, || {
                 let mfg = sampler.sample_sharded(&ds.graph, &big, b, shards, &mut pool);
                 std::hint::black_box(mfg.vertex_counts());
                 b += 1;
@@ -100,4 +120,179 @@ fn main() {
             r.report(&format!("sharded_mfg/{name}/shards{shards}"));
         }
     }
+
+    // -- graph engine: original vs degree-ordered relabeled layout -------
+    // Same dataset, same samplers, two physical layouts of the same
+    // logical graph. The relabeled runs use forward-mapped seeds, so the
+    // workload is the isomorphic image of the original one.
+    println!("\n== graph engine: degree-ordered relabeling locality sweep");
+    let (rds, perm) = ds.relabel_by_degree();
+    assert!(rds.graph.is_degree_ordered());
+    let seeds_rel: Vec<u32> = seeds.iter().map(|&v| perm.to_new(v)).collect();
+    let mut relabel_series = Vec::new();
+    for (name, kind) in [
+        ("ns", SamplerKind::Neighbor),
+        ("labor-0", SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }),
+        ("labor-1", SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false }),
+    ] {
+        let sampler = MultiLayerSampler::new(kind, &fanouts);
+        for (layout, g, s) in
+            [("original", &ds.graph, &seeds), ("relabeled", &rds.graph, &seeds_rel)]
+        {
+            let mut scratch = SamplerScratch::for_vertices(g.num_vertices());
+            let mut b = 0u64;
+            let r = bench(warm, iters, || {
+                let mfg = sampler.sample(g, s, b, &mut scratch);
+                std::hint::black_box(mfg.edge_counts_iter().sum::<usize>());
+                b += 1;
+            });
+            r.report(&format!("relabel_mfg/{name}/{layout}"));
+            relabel_series.push(Json::obj(vec![
+                ("sampler", Json::Str(name.into())),
+                ("layout", Json::Str(layout.into())),
+                ("batches_per_s", Json::Num(r.throughput())),
+            ]));
+        }
+    }
+
+    // -- gather sweep: bitmap residency vs the id<k prefix fast path -----
+    // The same top-10% degree policy over both layouts. Hit accounting is
+    // REQUIRED to be identical (same policy, ids mapped); the prefix
+    // representation only changes what a lookup costs.
+    let dim = ds.spec.num_features;
+    let cache_rows = ds.graph.num_vertices() / 10;
+    let orig_cache = Arc::new(DegreeOrderedCache::new(&ds.graph, cache_rows));
+    let rel_cache = Arc::new(DegreeOrderedCache::new(&rds.graph, cache_rows));
+    assert!(!orig_cache.is_prefix() && rel_cache.is_prefix());
+    let orig_store = Arc::new(
+        FeatureStore::new(ds.features.clone(), dim, TierModel::local())
+            .with_cache(orig_cache.clone() as Arc<dyn FeatureCache>),
+    );
+    let rel_store = Arc::new(
+        FeatureStore::new(rds.features.clone(), dim, TierModel::local())
+            .with_cache(rel_cache.clone() as Arc<dyn FeatureCache>),
+    );
+    assert_eq!(rel_store.cache_prefix_rows(), Some(cache_rows));
+    // one deepest-layer id set, gathered through both stores (mapped ids)
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &fanouts,
+    );
+    let mfg = sampler.sample_fresh(&ds.graph, &seeds, 7);
+    let ids_orig: Vec<u32> = mfg.feature_vertices().to_vec();
+    let ids_rel: Vec<u32> = ids_orig.iter().map(|&v| perm.to_new(v)).collect();
+    let mut out = Vec::new();
+    let gather_iters = if smoke { 3 } else { 30 };
+    let t0 = Instant::now();
+    for _ in 0..gather_iters {
+        orig_store.gather(&ids_orig, &mut out);
+        std::hint::black_box(out.len());
+    }
+    let t_orig = t0.elapsed();
+    let t0 = Instant::now();
+    for _ in 0..gather_iters {
+        rel_store.gather(&ids_rel, &mut out);
+        std::hint::black_box(out.len());
+    }
+    let t_rel = t0.elapsed();
+    assert_eq!(
+        orig_store.cache_hits(),
+        rel_store.cache_hits(),
+        "hit accounting must be layout-independent"
+    );
+    assert_eq!(orig_store.bytes_gathered(), rel_store.bytes_gathered());
+    println!(
+        "gather {} rows x{gather_iters}: bitmap {:.2?}, prefix {:.2?} (hit rate {:.1}%, equal)",
+        ids_orig.len(),
+        t_orig,
+        t_rel,
+        orig_store.hit_rate() * 100.0
+    );
+
+    // -- .lgx zero-copy load vs parse-and-rebuild formats ----------------
+    let dir = std::env::temp_dir().join(format!("labor_bench_graph_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let lgx_path = dir.join("g.lgx");
+    let legacy_path = dir.join("g.bin");
+    let text_path = dir.join("g.txt");
+    graph_io::save_lgx(&lgx_path, &rds.graph, Some(&perm)).expect("save lgx");
+    graph_io::save_graph(&legacy_path, &rds.graph).expect("save legacy");
+    graph_io::save_edgelist(&text_path, &rds.graph).expect("save edgelist");
+    let time_load = |f: &mut dyn FnMut()| -> f64 {
+        let n = if smoke { 2 } else { 5 };
+        let t0 = Instant::now();
+        for _ in 0..n {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / n as f64
+    };
+    let t_lgx = time_load(&mut || {
+        let (g, p) = graph_io::load_lgx(&lgx_path).expect("load lgx");
+        assert!(p.is_some());
+        std::hint::black_box(g.num_edges());
+    });
+    let t_legacy = time_load(&mut || {
+        std::hint::black_box(graph_io::load_graph(&legacy_path).expect("load legacy").num_edges());
+    });
+    let t_text = time_load(&mut || {
+        std::hint::black_box(graph_io::load_edgelist(&text_path).expect("load text").num_edges());
+    });
+    // correctness: all three load paths agree
+    let (g_lgx, p_lgx) = graph_io::load_lgx(&lgx_path).unwrap();
+    assert_eq!(g_lgx, rds.graph);
+    assert_eq!(p_lgx.as_ref(), Some(&perm));
+    assert_eq!(graph_io::load_graph(&legacy_path).unwrap(), rds.graph);
+    assert_eq!(graph_io::load_edgelist(&text_path).unwrap(), rds.graph);
+    let fsize = |p: &std::path::Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "load {} edges: .lgx {:.3} ms, legacy {:.3} ms, text {:.3} ms ({:.1}x text/.lgx)",
+        rds.graph.num_edges(),
+        t_lgx * 1e3,
+        t_legacy * 1e3,
+        t_text * 1e3,
+        t_text / t_lgx.max(1e-12)
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("graph".into())),
+        ("dataset", Json::Str("flickr-sim".into())),
+        ("scale", Json::Num(0.1)),
+        ("smoke", Json::Bool(smoke)),
+        ("fanouts", Json::Arr(vec![Json::Num(10.0); 3])),
+        ("batch_size", Json::Num(seeds.len() as f64)),
+        ("relabel_sampling", Json::Arr(relabel_series)),
+        (
+            "gather",
+            Json::obj(vec![
+                ("rows", Json::Num(ids_orig.len() as f64)),
+                ("dim", Json::Num(dim as f64)),
+                ("iters", Json::Num(gather_iters as f64)),
+                ("cache_rows", Json::Num(cache_rows as f64)),
+                ("bitmap_s", Json::Num(t_orig.as_secs_f64())),
+                ("prefix_s", Json::Num(t_rel.as_secs_f64())),
+                ("hit_rate", Json::Num(orig_store.hit_rate())),
+                ("hits_equal", Json::Bool(true)),
+                (
+                    "prefix_rows",
+                    Json::Num(rel_store.cache_prefix_rows().unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        (
+            "formats",
+            Json::obj(vec![
+                ("edges", Json::Num(rds.graph.num_edges() as f64)),
+                ("lgx_bytes", Json::Num(fsize(&lgx_path) as f64)),
+                ("legacy_bytes", Json::Num(fsize(&legacy_path) as f64)),
+                ("text_bytes", Json::Num(fsize(&text_path) as f64)),
+                ("lgx_load_s", Json::Num(t_lgx)),
+                ("legacy_load_s", Json::Num(t_legacy)),
+                ("text_load_s", Json::Num(t_text)),
+                ("text_over_lgx", Json::Num(t_text / t_lgx.max(1e-12))),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_graph.json", format!("{report}\n")).expect("write BENCH_graph.json");
+    println!("wrote BENCH_graph.json");
+    std::fs::remove_dir_all(&dir).ok();
 }

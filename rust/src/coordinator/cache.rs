@@ -9,12 +9,22 @@
 //! often under neighbor-based samplers, so pinning the top-k in-degree
 //! rows captures most of the traffic without any runtime eviction logic.
 //!
+//! On a degree-ordered relabeled graph
+//! ([`VertexPerm::degree_ordered`](crate::graph::compact::VertexPerm::degree_ordered))
+//! the policy degenerates further: the top-k set is exactly `{0, .., k-1}`,
+//! so residency is a single `id < k` compare (no bitmap load at all) and
+//! the resident feature rows form one contiguous — memcpy-able — block at
+//! the front of the store. [`DegreeOrderedCache::new`] detects that layout
+//! and switches representation automatically; the resident *set* (and so
+//! all hit/miss accounting) is identical either way.
+//!
 //! A policy only decides *residency*; hit/miss/bytes-saved accounting
 //! lives in the owning [`FeatureStore`](super::FeatureStore), and gathered
 //! bytes are identical under every policy (the cache redirects cost, not
 //! data) — the property the gather-equivalence suite
 //! (`rust/tests/data_plane.rs`) pins down.
 
+use crate::graph::compact::degree_order;
 use crate::graph::CscGraph;
 
 /// A residency policy: which feature rows live in the fast tier.
@@ -28,6 +38,16 @@ pub trait FeatureCache: Send + Sync {
 
     /// Number of rows this policy keeps resident.
     fn resident_rows(&self) -> usize;
+
+    /// When the resident set is exactly the id prefix `{0, .., k-1}`
+    /// (e.g. a degree cache over a degree-ordered relabeled graph),
+    /// returns `Some(k)`: the cached rows are one contiguous block —
+    /// row `0` through row `k-1` of the store — so bulk staging can
+    /// memcpy them instead of testing row-by-row. `None` for scattered
+    /// residency.
+    fn prefix_rows(&self) -> Option<usize> {
+        None
+    }
 
     /// Human-readable policy name, e.g. `null` or `degree-892`.
     fn policy(&self) -> String;
@@ -51,13 +71,31 @@ impl FeatureCache for NullCache {
     }
 }
 
+/// How a [`DegreeOrderedCache`] stores its resident set.
+#[derive(Clone, Debug)]
+enum Residency {
+    /// Arbitrary vertex order: one bit per vertex.
+    Bitmap(Vec<bool>),
+    /// Degree-ordered layout: resident iff `id < resident_rows`. O(1)
+    /// space, one compare per lookup, contiguous cached rows.
+    Prefix,
+}
+
 /// Static degree-ordered cache: the `capacity_rows` vertices with the
 /// highest in-degree are resident (ties broken by lower vertex id, so a
 /// larger cache is always a superset of a smaller one — hit counts are
 /// monotone in capacity on any fixed request stream).
+///
+/// On a graph whose in-degrees are non-increasing in vertex id
+/// ([`CscGraph::is_degree_ordered`] — the invariant a
+/// [`VertexPerm::degree_ordered`](crate::graph::compact::VertexPerm::degree_ordered)
+/// relabel establishes), the top-k set with that tie-break is exactly
+/// `{0, .., k-1}`, so the constructor drops the bitmap for a pure
+/// `id < k` prefix check. Residency — and therefore every hit/miss/bytes
+/// counter — is identical between the two representations.
 #[derive(Clone, Debug)]
 pub struct DegreeOrderedCache {
-    resident: Vec<bool>,
+    residency: Residency,
     resident_rows: usize,
 }
 
@@ -66,26 +104,50 @@ impl DegreeOrderedCache {
     pub fn new(g: &CscGraph, capacity_rows: usize) -> Self {
         let nv = g.num_vertices();
         let k = capacity_rows.min(nv);
-        let mut order: Vec<u32> = (0..nv as u32).collect();
-        // sort by (in-degree desc, id asc); sort_by_key is stable, so the
-        // ascending-id tie-break comes for free from the initial order
-        order.sort_by_key(|&v| std::cmp::Reverse(g.in_degree(v)));
+        if g.is_degree_ordered() {
+            // relabeled layout: top-k by (degree desc, id asc) IS 0..k;
+            // ids outside the graph's domain are >= k, hence non-resident
+            // under the same compare — no bounds guard needed
+            return Self { residency: Residency::Prefix, resident_rows: k };
+        }
+        // The bitmap pins the SAME ordering the relabeling engine defines
+        // — `compact::degree_order` is the one definition of (in-degree
+        // desc, id asc), so its first k entries are exactly the top-k
+        // vertex set, and the prefix branch above is this bitmap's image
+        // under the permutation: hit accounting is layout-independent by
+        // construction.
         let mut resident = vec![false; nv];
-        for &v in &order[..k] {
+        for &v in &degree_order(g)[..k] {
             resident[v as usize] = true;
         }
-        Self { resident, resident_rows: k }
+        Self { residency: Residency::Bitmap(resident), resident_rows: k }
+    }
+
+    /// True when the `id < k` prefix representation is in use (the graph
+    /// was degree-ordered at construction).
+    pub fn is_prefix(&self) -> bool {
+        matches!(self.residency, Residency::Prefix)
     }
 }
 
 impl FeatureCache for DegreeOrderedCache {
     #[inline]
     fn is_resident(&self, v: u32) -> bool {
-        self.resident.get(v as usize).copied().unwrap_or(false)
+        match &self.residency {
+            Residency::Prefix => (v as usize) < self.resident_rows,
+            Residency::Bitmap(resident) => resident.get(v as usize).copied().unwrap_or(false),
+        }
     }
 
     fn resident_rows(&self) -> usize {
         self.resident_rows
+    }
+
+    fn prefix_rows(&self) -> Option<usize> {
+        match self.residency {
+            Residency::Prefix => Some(self.resident_rows),
+            Residency::Bitmap(_) => None,
+        }
     }
 
     fn policy(&self) -> String {
@@ -96,6 +158,7 @@ impl FeatureCache for DegreeOrderedCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::compact::VertexPerm;
 
     fn skewed() -> CscGraph {
         crate::sampler::testutil::skewed_graph()
@@ -107,6 +170,7 @@ mod tests {
         assert!(!c.is_resident(0));
         assert_eq!(c.resident_rows(), 0);
         assert_eq!(c.policy(), "null");
+        assert_eq!(c.prefix_rows(), None);
     }
 
     #[test]
@@ -115,6 +179,9 @@ mod tests {
         let c = DegreeOrderedCache::new(&g, 5);
         assert_eq!(c.resident_rows(), 5);
         assert_eq!(c.policy(), "degree-5");
+        // the skewed graph is not degree-ordered: bitmap representation
+        assert!(!c.is_prefix());
+        assert_eq!(c.prefix_rows(), None);
         // vertex 0 is the star center (in-degree 199): always resident
         assert!(c.is_resident(0));
         // every resident vertex out-degrees every non-resident one (up to
@@ -132,6 +199,44 @@ mod tests {
         assert!(min_res >= max_non, "resident min degree {min_res} < evicted max {max_non}");
         // out-of-domain ids are simply non-resident (no panic)
         assert!(!c.is_resident(10_000));
+    }
+
+    #[test]
+    fn relabeled_graph_collapses_to_the_prefix_check() {
+        let g = skewed();
+        let perm = VertexPerm::degree_ordered(&g);
+        let rg = perm.apply_to_graph(&g);
+        let c = DegreeOrderedCache::new(&rg, 7);
+        assert!(c.is_prefix());
+        assert_eq!(c.prefix_rows(), Some(7));
+        assert_eq!(c.policy(), "degree-7");
+        for v in 0..rg.num_vertices() as u32 {
+            assert_eq!(c.is_resident(v), (v as usize) < 7, "vertex {v}");
+        }
+        assert!(!c.is_resident(10_000));
+    }
+
+    #[test]
+    fn prefix_and_bitmap_pin_the_same_vertices() {
+        // hit accounting must not change under relabeling: the bitmap
+        // cache on the original graph and the prefix cache on the
+        // relabeled graph are the same policy, modulo the id mapping
+        let g = skewed();
+        let perm = VertexPerm::degree_ordered(&g);
+        let rg = perm.apply_to_graph(&g);
+        for k in [1usize, 5, 20, 150] {
+            let orig = DegreeOrderedCache::new(&g, k);
+            let rel = DegreeOrderedCache::new(&rg, k);
+            assert!(!orig.is_prefix());
+            assert!(rel.is_prefix());
+            for v in 0..g.num_vertices() as u32 {
+                assert_eq!(
+                    orig.is_resident(v),
+                    rel.is_resident(perm.to_new(v)),
+                    "k={k} vertex {v}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -160,6 +160,15 @@ impl FeatureStore {
         &self.cache
     }
 
+    /// When the attached policy keeps an id-prefix resident (a degree
+    /// cache over a degree-ordered relabeled graph), the number of
+    /// contiguous resident rows: `features[..k*dim]` is then one
+    /// memcpy-able block at the front of the store. `None` for scattered
+    /// residency. See [`FeatureCache::prefix_rows`].
+    pub fn cache_prefix_rows(&self) -> Option<usize> {
+        self.cache.prefix_rows()
+    }
+
     /// Gather rows `ids` into `out` (cleared and resized to
     /// `ids.len() * dim`). Returns the (simulated) fetch duration for this
     /// request. Rows resident in the cache are counted as hits and skip
@@ -461,6 +470,23 @@ mod tests {
         assert_eq!(cached.bytes_gathered(), plain.bytes_gathered());
         assert!(cached.simulated_time() < plain.simulated_time());
         assert!((cached.hit_rate() - 0.5).abs() < 1e-12);
+        // star graph is not degree-ordered: no contiguous prefix
+        assert_eq!(cached.cache_prefix_rows(), None);
+    }
+
+    #[test]
+    fn prefix_cache_surfaces_contiguous_rows() {
+        // a degree-ordered graph (star INTO vertex 0) gives the cache its
+        // prefix representation; the store reports the memcpy-able block
+        let g = crate::graph::builder::CscBuilder::new(4)
+            .edges(&[(1, 0), (2, 0), (3, 0)])
+            .build()
+            .unwrap();
+        assert!(g.is_degree_ordered());
+        let cache = Arc::new(DegreeOrderedCache::new(&g, 2));
+        let fs =
+            FeatureStore::new(vec![0.0f32; 4 * 2], 2, TierModel::local()).with_cache(cache);
+        assert_eq!(fs.cache_prefix_rows(), Some(2));
     }
 
     #[test]

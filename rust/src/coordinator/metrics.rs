@@ -31,9 +31,13 @@ impl SamplerStats {
     }
 
     pub fn push(&mut self, mfg: &Mfg, elapsed: Duration) {
-        for (d, layer) in mfg.layers.iter().enumerate() {
-            self.vertices[d].push(layer.num_inputs() as f64);
-            self.edges[d].push(layer.num_edges() as f64);
+        // per-batch metrics path: the non-allocating iterator variants
+        // (not `vertex_counts()`/`edge_counts()`, which build a Vec per
+        // reading — once per batch adds up over an epoch)
+        let counts = mfg.vertex_counts_iter().zip(mfg.edge_counts_iter());
+        for (d, (nv, ne)) in counts.enumerate() {
+            self.vertices[d].push(nv as f64);
+            self.edges[d].push(ne as f64);
         }
         self.sample_time.push(elapsed.as_secs_f64());
         self.batches += 1;
@@ -83,6 +87,7 @@ impl SamplerStats {
 pub struct StageTimers {
     sample_ns: AtomicU64,
     gather_ns: AtomicU64,
+    map_ns: AtomicU64,
     queue_wait_ns: AtomicU64,
     batches: AtomicU64,
 }
@@ -94,6 +99,12 @@ impl StageTimers {
 
     pub fn record_gather(&self, d: Duration) {
         self.gather_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Time spent mapping a relabeled MFG back to original ids at the
+    /// delivery boundary (`output_perm` pipelines only — zero otherwise).
+    pub fn record_map(&self, d: Duration) {
+        self.map_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
     pub fn record_queue_wait(&self, d: Duration) {
@@ -109,6 +120,7 @@ impl StageTimers {
             batches: self.batches.load(Ordering::Relaxed),
             sample: Duration::from_nanos(self.sample_ns.load(Ordering::Relaxed)),
             gather: Duration::from_nanos(self.gather_ns.load(Ordering::Relaxed)),
+            map: Duration::from_nanos(self.map_ns.load(Ordering::Relaxed)),
             queue_wait: Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed)),
         }
     }
@@ -121,6 +133,8 @@ pub struct StageSnapshot {
     pub batches: u64,
     pub sample: Duration,
     pub gather: Duration,
+    /// original-id map-back time (relabeled pipelines; zero otherwise)
+    pub map: Duration,
     pub queue_wait: Duration,
 }
 
@@ -141,6 +155,10 @@ impl StageSnapshot {
         self.per_batch_ms(self.gather)
     }
 
+    pub fn mean_map_ms(&self) -> f64 {
+        self.per_batch_ms(self.map)
+    }
+
     pub fn mean_queue_wait_ms(&self) -> f64 {
         self.per_batch_ms(self.queue_wait)
     }
@@ -157,6 +175,7 @@ mod tests {
         for _ in 0..4 {
             t.record_sample(Duration::from_millis(6));
             t.record_gather(Duration::from_millis(2));
+            t.record_map(Duration::from_millis(3));
             t.record_queue_wait(Duration::from_millis(1));
             t.record_batch();
         }
@@ -165,6 +184,7 @@ mod tests {
         assert_eq!(s.sample, Duration::from_millis(24));
         assert!((s.mean_sample_ms() - 6.0).abs() < 1e-9);
         assert!((s.mean_gather_ms() - 2.0).abs() < 1e-9);
+        assert!((s.mean_map_ms() - 3.0).abs() < 1e-9);
         assert!((s.mean_queue_wait_ms() - 1.0).abs() < 1e-9);
         assert_eq!(StageSnapshot::default().mean_sample_ms(), 0.0);
     }

@@ -28,6 +28,15 @@
 //! Per-stage wall time (sample / gather / queue-wait) is recorded in a
 //! shared [`StageTimers`] surfaced by [`SamplingPipeline::stage_metrics`].
 //!
+//! **Relabeled graphs:** with `PipelineConfig::output_perm` set (the
+//! locality layout of [`crate::graph::compact`]), sampling and gathering
+//! run in the relabeled id space — where the hot vertices sit at the
+//! front of `indptr`/feature rows and the degree cache is an `id < k`
+//! prefix check — and every delivered MFG/seed list is mapped back to
+//! original ids at the delivery boundary, so consumers are
+//! layout-agnostic. Delivered outputs remain bit-identical across worker
+//! and shard counts (the mapping is deterministic).
+//!
 //! Failure semantics: a panicking worker is never silently truncated into
 //! a short epoch — the panic is re-raised on the consuming thread by
 //! [`SamplingPipeline::next`] (or [`SamplingPipeline::join`]). An
@@ -39,6 +48,7 @@ use super::cache::FeatureCache;
 use super::feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
 use super::metrics::{StageSnapshot, StageTimers};
 use crate::data::Dataset;
+use crate::graph::compact::VertexPerm;
 use crate::graph::CscGraph;
 use crate::sampler::{Mfg, MultiLayerSampler, ScratchPool};
 use std::collections::BTreeMap;
@@ -112,6 +122,13 @@ pub struct PipelineConfig {
     /// when set, workers gather features/labels in-pipeline and delivered
     /// batches carry them pre-gathered (see [`DataPlaneConfig`])
     pub data_plane: Option<DataPlaneConfig>,
+    /// when the graph (and `train_ids`) live in a relabeled id space
+    /// (e.g. [`Dataset::relabel_by_degree`]), the permutation that
+    /// produced it: workers sample — and gather — in the relabeled space
+    /// (keeping the locality and the cache's `id < k` prefix fast path)
+    /// and map every delivered MFG and seed list back to **original** ids
+    /// at the delivery boundary, so consumers are layout-agnostic
+    pub output_perm: Option<Arc<VertexPerm>>,
 }
 
 impl Default for PipelineConfig {
@@ -124,6 +141,7 @@ impl Default for PipelineConfig {
             seed: 0,
             intra_batch_threads: 1,
             data_plane: None,
+            output_perm: None,
         }
     }
 }
@@ -163,16 +181,28 @@ impl SamplingPipeline {
         let batches = Arc::new(
             (0..cfg.num_batches).map(|_| Arc::new(batcher.next_batch())).collect::<Vec<_>>(),
         );
+        // Relabeled graphs: sampling/gathering run on the relabeled ids in
+        // `batches`, but delivered seeds must be original ids. The mapped
+        // twin is materialized once here (ids only), so workers hand out
+        // Arc bumps, not per-batch translations of the seed list.
+        let deliver_batches: Arc<Vec<Arc<Vec<u32>>>> = match &cfg.output_perm {
+            Some(perm) => Arc::new(
+                batches.iter().map(|b| Arc::new(perm.mapped_to_old(b))).collect::<Vec<_>>(),
+            ),
+            None => batches.clone(),
+        };
 
         let mut workers = Vec::new();
         for _ in 0..cfg.num_workers.max(1) {
             let graph = graph.clone();
             let sampler = sampler.clone();
             let batches = batches.clone();
+            let deliver_batches = deliver_batches.clone();
             let cursor = cursor.clone();
             let tx = tx.clone();
             let timers = timers.clone();
             let plane = cfg.data_plane.clone();
+            let perm = cfg.output_perm.clone();
             let num_batches = cfg.num_batches;
             let seed = cfg.seed;
             let shards = cfg.intra_batch_threads.max(1);
@@ -194,7 +224,7 @@ impl SamplingPipeline {
                     }
                     let seeds = batches[id as usize].clone();
                     let t_sample = Instant::now();
-                    let mfg = if shards > 1 {
+                    let mut mfg = if shards > 1 {
                         sampler.sample_sharded(&graph, &seeds, seed ^ id, shards, &mut pool)
                     } else {
                         sampler.sample(&graph, &seeds, seed ^ id, pool.main_mut())
@@ -225,6 +255,19 @@ impl SamplingPipeline {
                         }
                         None => (Vec::new(), GatheredLabels::None),
                     };
+                    // Delivery boundary: everything above ran in the
+                    // graph's (possibly relabeled) id space — the gather
+                    // in particular must, so the prefix cache and the
+                    // permuted feature rows line up. From here on the
+                    // consumer sees only original ids. The map-back is
+                    // accounted as its own stage so relabeled runs don't
+                    // under-report worker wall time.
+                    if let Some(p) = &perm {
+                        let t_map = Instant::now();
+                        mfg.map_ids(|v| p.to_old(v));
+                        timers.record_map(t_map.elapsed());
+                    }
+                    let seeds = deliver_batches[id as usize].clone();
                     // count the batch before sending it: once the consumer
                     // has received N batches, N sample/gather recordings
                     // are guaranteed visible (the trailing queue-wait of
@@ -383,6 +426,7 @@ mod tests {
                 seed: 11,
                 intra_batch_threads: shards,
                 data_plane: None,
+                output_perm: None,
             });
             let mut out = Vec::new();
             for b in &mut p {
@@ -438,6 +482,7 @@ mod tests {
                 seed: 7,
                 intra_batch_threads: 1,
                 data_plane: Some(plane),
+                output_perm: None,
             },
         );
         let mut rows = 0u64;
@@ -552,6 +597,7 @@ mod tests {
                 seed: 1,
                 intra_batch_threads: 1,
                 data_plane: Some(DataPlaneConfig { store, labels: None }),
+                output_perm: None,
             },
         );
         while p.next().is_some() {}

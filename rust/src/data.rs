@@ -10,6 +10,7 @@
 //! Features are class-conditional Gaussians over random unit directions, so
 //! the convergence experiments (Figures 1–3) have real signal to learn.
 
+use crate::graph::compact::VertexPerm;
 use crate::graph::gen::{dc_sbm, DcSbmConfig};
 use crate::graph::{io, CscGraph};
 use crate::rng::StreamRng;
@@ -279,6 +280,47 @@ impl Dataset {
         }
     }
 
+    /// Rewrite the whole dataset under the degree-ordered locality
+    /// permutation ([`VertexPerm::degree_ordered`]): the graph, the
+    /// feature rows, both label planes, and the split id lists all move to
+    /// the relabeled id space under ONE permutation, so every
+    /// vertex-indexed structure stays mutually consistent. Split vectors
+    /// keep their order (only the id values change), so epoch batching
+    /// pairs up batch-for-batch with the original dataset. Returns the
+    /// permutation; map pipeline outputs back with
+    /// [`Mfg::map_ids`](crate::sampler::Mfg::map_ids) /
+    /// [`VertexPerm::map_to_old`] — or let the pipeline do it
+    /// (`PipelineConfig::output_perm`).
+    pub fn relabel_by_degree(&self) -> (Dataset, VertexPerm) {
+        let perm = VertexPerm::degree_ordered(&self.graph);
+        let graph = perm.apply_to_graph(&self.graph);
+        // every per-vertex plane moves through the one shared primitive
+        // (VertexPerm::permute_rows), so they cannot drift apart
+        let features = perm.permute_rows(&self.features, self.spec.num_features);
+        let labels = perm.permute_rows(&self.labels, 1);
+        let multilabels = self
+            .multilabels
+            .as_ref()
+            .map(|ml| Arc::new(perm.permute_rows(ml, self.spec.num_classes)));
+        let map_split = |ids: &[u32]| -> Vec<u32> {
+            ids.iter().map(|&v| perm.to_new(v)).collect()
+        };
+        let ds = Dataset {
+            spec: self.spec.clone(),
+            scale: self.scale,
+            graph,
+            features: Arc::new(features),
+            labels: Arc::new(labels),
+            multilabels,
+            splits: Splits {
+                train: map_split(&self.splits.train),
+                val: map_split(&self.splits.val),
+                test: map_split(&self.splits.test),
+            },
+        };
+        (ds, perm)
+    }
+
     fn cache_path(name: &str, scale: f64) -> PathBuf {
         PathBuf::from(
             std::env::var("LABOR_DATA_DIR").unwrap_or_else(|_| "data".to_string()),
@@ -438,6 +480,43 @@ mod tests {
         assert_eq!(a.features, b.features);
         assert_eq!(a.splits, b.splits);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn relabel_keeps_every_vertex_consistent() {
+        let ds = Dataset::generate(spec("tiny").unwrap(), 0.2);
+        let (rds, perm) = ds.relabel_by_degree();
+        assert!(rds.graph.is_degree_ordered());
+        assert_eq!(rds.num_vertices(), ds.num_vertices());
+        assert_eq!(rds.graph.num_edges(), ds.graph.num_edges());
+        rds.graph.validate().unwrap();
+        for old in 0..ds.num_vertices() as u32 {
+            let new = perm.to_new(old);
+            // features, labels, and degrees all moved together
+            assert_eq!(rds.feature(new), ds.feature(old), "features of {old}");
+            assert_eq!(rds.labels[new as usize], ds.labels[old as usize]);
+            assert_eq!(rds.graph.in_degree(new), ds.graph.in_degree(old));
+        }
+        // splits keep order, with ids mapped
+        assert_eq!(rds.splits.train.len(), ds.splits.train.len());
+        for (a, b) in ds.splits.train.iter().zip(&rds.splits.train) {
+            assert_eq!(perm.to_new(*a), *b);
+        }
+    }
+
+    #[test]
+    fn relabel_carries_multilabel_rows() {
+        let mut s = spec("tiny").unwrap().clone();
+        s.multilabel = true;
+        let ds = Dataset::generate(&s, 0.2);
+        let (rds, perm) = ds.relabel_by_degree();
+        for old in 0..ds.num_vertices() as u32 {
+            assert_eq!(
+                rds.multilabel_row(perm.to_new(old)).unwrap(),
+                ds.multilabel_row(old).unwrap(),
+                "multilabel row of {old}"
+            );
+        }
     }
 
     #[test]

@@ -80,11 +80,11 @@ impl CscBuilder {
         for s in 0..nv {
             indptr[s + 1] += indptr[s];
         }
-        let g = CscGraph {
+        let g = CscGraph::from_parts(
             indptr,
             indices,
-            weights: if self.weighted { Some(weights) } else { None },
-        };
+            if self.weighted { Some(weights) } else { None },
+        );
         g.validate()?;
         Ok(g)
     }

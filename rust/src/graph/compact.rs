@@ -1,0 +1,345 @@
+//! Locality-first vertex relabeling: degree-ordered permutations and the
+//! machinery to rewrite a graph (and everything keyed by vertex id) under
+//! them.
+//!
+//! LABOR's win is that it touches far fewer vertices per batch (paper §3,
+//! Table 2), which leaves the *memory system* — indptr/indices walks
+//! during sampling, feature-row gathers afterwards — as the dominant
+//! per-batch cost. Under neighbor-based samplers the hot vertices are the
+//! high-in-degree ones, but the seed layout scatters them across the id
+//! space, so the hot offsets, adjacency slices, and feature rows land on
+//! cold cache lines. A [`VertexPerm::degree_ordered`] relabel renumbers
+//! vertices by descending in-degree once (a GraphSAINT-style one-time
+//! preprocessing transform that pays for itself every epoch): hot vertices
+//! cluster at the front of `indptr`/`indices`/feature rows, and
+//! [`DegreeOrderedCache`](crate::coordinator::DegreeOrderedCache)
+//! residency collapses to an `id < k` prefix check over a contiguous
+//! (memcpy-able) block of cached rows.
+//!
+//! Sampling on the relabeled graph is **equivalent in law** to sampling on
+//! the original: the graph is isomorphic and every sampler's randomness is
+//! keyed by vertex id, so individual draws differ but all distributional
+//! guarantees (`E[d̃_s] ≥ min(k, d_s)`, vertex savings, estimator
+//! unbiasedness) carry over unchanged — `rust/tests/relabel.rs` re-runs
+//! the statistical floors on relabeled graphs to pin this down. Consumers
+//! stay layout-agnostic: the pipeline maps every delivered MFG back to
+//! original ids at the delivery boundary via the inverse permutation
+//! ([`Mfg::map_ids`](crate::sampler::Mfg::map_ids)).
+
+use super::csc::CscGraph;
+
+/// Vertex ids of `g` ranked by (in-degree descending, id ascending) — the
+/// ONE definition of the degree order, shared by
+/// [`VertexPerm::degree_ordered`] and
+/// [`DegreeOrderedCache`](crate::coordinator::DegreeOrderedCache)'s
+/// bitmap constructor so their top-k sets agree by construction.
+pub fn degree_order(g: &CscGraph) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    // stable sort by descending degree: equal degrees keep ascending id
+    order.sort_by_key(|&v| std::cmp::Reverse(g.in_degree(v)));
+    order
+}
+
+/// A bijective vertex renumbering with both directions materialized:
+/// `forward[old] = new`, `inverse[new] = old`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VertexPerm {
+    forward: Vec<u32>,
+    inverse: Vec<u32>,
+}
+
+impl VertexPerm {
+    /// The identity permutation over `n` vertices.
+    pub fn identity(n: usize) -> Self {
+        let forward: Vec<u32> = (0..n as u32).collect();
+        Self { inverse: forward.clone(), forward }
+    }
+
+    /// The locality permutation: new ids ordered by descending in-degree,
+    /// ties broken by ascending old id. The relabeled graph satisfies
+    /// [`CscGraph::is_degree_ordered`], so its top-`k` in-degree vertex
+    /// set (with the same tie-break) is exactly `{0, .., k-1}` for every
+    /// `k` — the prefix-cache invariant.
+    pub fn degree_ordered(g: &CscGraph) -> Self {
+        let inverse = degree_order(g);
+        let mut forward = vec![0u32; inverse.len()];
+        for (new, &old) in inverse.iter().enumerate() {
+            forward[old as usize] = new as u32;
+        }
+        Self { forward, inverse }
+    }
+
+    /// Reconstruct from a forward mapping (e.g. the perm section of an
+    /// `.lgx` file), validating that it is a bijection over `0..n`.
+    pub fn from_forward(forward: Vec<u32>) -> Result<Self, String> {
+        let n = forward.len();
+        let mut inverse = vec![u32::MAX; n];
+        for (old, &new) in forward.iter().enumerate() {
+            if new as usize >= n {
+                return Err(format!("perm maps {old} to {new}, out of range (|V|={n})"));
+            }
+            if inverse[new as usize] != u32::MAX {
+                return Err(format!(
+                    "perm is not a bijection: {} and {old} both map to {new}",
+                    inverse[new as usize]
+                ));
+            }
+            inverse[new as usize] = old as u32;
+        }
+        Ok(Self { forward, inverse })
+    }
+
+    /// Number of vertices covered.
+    pub fn len(&self) -> usize {
+        self.forward.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.forward.is_empty()
+    }
+
+    /// True when this is the identity (relabeling would be a no-op).
+    pub fn is_identity(&self) -> bool {
+        self.forward.iter().enumerate().all(|(old, &new)| old as u32 == new)
+    }
+
+    /// Relabeled id of original vertex `old`.
+    #[inline(always)]
+    pub fn to_new(&self, old: u32) -> u32 {
+        self.forward[old as usize]
+    }
+
+    /// Original id of relabeled vertex `new`.
+    #[inline(always)]
+    pub fn to_old(&self, new: u32) -> u32 {
+        self.inverse[new as usize]
+    }
+
+    /// The forward mapping (`old -> new`), e.g. for serialization.
+    pub fn forward(&self) -> &[u32] {
+        &self.forward
+    }
+
+    /// The inverse mapping (`new -> old`).
+    pub fn inverse(&self) -> &[u32] {
+        &self.inverse
+    }
+
+    /// Map a slice of original ids to relabeled ids in place.
+    pub fn map_to_new(&self, ids: &mut [u32]) {
+        for v in ids.iter_mut() {
+            *v = self.to_new(*v);
+        }
+    }
+
+    /// Map a slice of relabeled ids back to original ids in place.
+    pub fn map_to_old(&self, ids: &mut [u32]) {
+        for v in ids.iter_mut() {
+            *v = self.to_old(*v);
+        }
+    }
+
+    /// Allocating twin of [`map_to_old`](Self::map_to_old) for shared
+    /// (`Arc`-owned) id vectors that cannot be rewritten in place.
+    pub fn mapped_to_old(&self, ids: &[u32]) -> Vec<u32> {
+        ids.iter().map(|&v| self.to_old(v)).collect()
+    }
+
+    /// Permute a row-major `len() × row_len` table into the relabeled
+    /// order: output row `new` is input row `to_old(new)`. The one
+    /// primitive behind moving feature/label/multilabel planes
+    /// ([`Dataset::relabel_by_degree`](crate::data::Dataset::relabel_by_degree)),
+    /// so every per-vertex table is guaranteed to move under the same rule.
+    pub fn permute_rows<T: Copy>(&self, src: &[T], row_len: usize) -> Vec<T> {
+        assert!(row_len > 0, "row_len must be positive");
+        assert_eq!(
+            src.len(),
+            self.len() * row_len,
+            "table of {} elements is not {} rows x {row_len}",
+            src.len(),
+            self.len()
+        );
+        let mut out = Vec::with_capacity(src.len());
+        for new in 0..self.len() {
+            let old = self.to_old(new as u32) as usize;
+            out.extend_from_slice(&src[old * row_len..(old + 1) * row_len]);
+        }
+        out
+    }
+
+    /// Rewrite `g` under this permutation: vertex `old` becomes
+    /// `forward[old]`, every edge endpoint is mapped, per-vertex neighbor
+    /// lists are re-sorted ascending (weights carried alongside), and the
+    /// indptr width is re-chosen for the rewritten layout. The result is
+    /// isomorphic to `g`:
+    /// `relabeled.in_neighbors(to_new(s)) == sort(map(g.in_neighbors(s)))`.
+    pub fn apply_to_graph(&self, g: &CscGraph) -> CscGraph {
+        let nv = g.num_vertices();
+        assert_eq!(nv, self.len(), "permutation covers {} vertices, graph has {nv}", self.len());
+        let ne = g.num_edges() as usize;
+        let mut indptr = Vec::with_capacity(nv + 1);
+        let mut indices = Vec::with_capacity(ne);
+        let weighted = g.weights.is_some();
+        let mut weights: Vec<f32> = Vec::with_capacity(if weighted { ne } else { 0 });
+        // scratch for re-sorting one neighbor slice by its new ids
+        let mut slice: Vec<(u32, f32)> = Vec::new();
+        indptr.push(0u64);
+        for new in 0..nv as u32 {
+            let old = self.to_old(new);
+            slice.clear();
+            match g.in_weights(old) {
+                Some(ws) => {
+                    slice.extend(
+                        g.in_neighbors(old).iter().zip(ws).map(|(&t, &w)| (self.to_new(t), w)),
+                    );
+                }
+                None => {
+                    slice.extend(g.in_neighbors(old).iter().map(|&t| (self.to_new(t), 1.0f32)));
+                }
+            }
+            slice.sort_unstable_by_key(|&(t, _)| t);
+            for &(t, w) in &slice {
+                indices.push(t);
+                if weighted {
+                    weights.push(w);
+                }
+            }
+            indptr.push(indices.len() as u64);
+        }
+        CscGraph::from_parts(indptr, indices, if weighted { Some(weights) } else { None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::CscBuilder;
+    use crate::sampler::testutil::{skewed_graph, test_graph};
+
+    #[test]
+    fn identity_perm_is_a_no_op() {
+        let g = test_graph();
+        let p = VertexPerm::identity(g.num_vertices());
+        assert!(p.is_identity());
+        assert_eq!(p.len(), g.num_vertices());
+        assert_eq!(p.apply_to_graph(&g), g);
+        let mut ids = vec![3u32, 7, 1];
+        p.map_to_new(&mut ids);
+        assert_eq!(ids, vec![3, 7, 1]);
+    }
+
+    #[test]
+    fn degree_ordered_perm_sorts_degrees_non_increasing() {
+        for g in [test_graph(), skewed_graph()] {
+            let p = VertexPerm::degree_ordered(&g);
+            let rg = p.apply_to_graph(&g);
+            assert!(rg.is_degree_ordered());
+            assert_eq!(rg.num_vertices(), g.num_vertices());
+            assert_eq!(rg.num_edges(), g.num_edges());
+            rg.validate().unwrap();
+            // degrees are preserved vertex-by-vertex through the mapping
+            for v in 0..g.num_vertices() as u32 {
+                assert_eq!(g.in_degree(v), rg.in_degree(p.to_new(v)), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn degree_ties_break_by_ascending_old_id() {
+        // star: vertex 0 has degree 3, vertices 1..=3 all have degree 1
+        let g = CscBuilder::new(4)
+            .edges(&[(1, 0), (2, 0), (3, 0), (0, 1), (0, 2), (0, 3)])
+            .build()
+            .unwrap();
+        let p = VertexPerm::degree_ordered(&g);
+        assert_eq!(p.to_new(0), 0);
+        // the tied block keeps old-id order
+        assert_eq!(p.to_new(1), 1);
+        assert_eq!(p.to_new(2), 2);
+        assert_eq!(p.to_new(3), 3);
+    }
+
+    #[test]
+    fn forward_and_inverse_agree() {
+        let g = skewed_graph();
+        let p = VertexPerm::degree_ordered(&g);
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(p.to_old(p.to_new(v)), v);
+            assert_eq!(p.to_new(p.to_old(v)), v);
+        }
+        let rebuilt = VertexPerm::from_forward(p.forward().to_vec()).unwrap();
+        assert_eq!(rebuilt, p);
+    }
+
+    #[test]
+    fn relabeled_graph_preserves_every_edge() {
+        let g = skewed_graph();
+        let p = VertexPerm::degree_ordered(&g);
+        let rg = p.apply_to_graph(&g);
+        for s in 0..g.num_vertices() as u32 {
+            for &t in g.in_neighbors(s) {
+                assert!(rg.has_edge(p.to_new(t), p.to_new(s)), "edge {t}->{s} lost");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_relabel_carries_weights_with_their_edges() {
+        let mut b = CscBuilder::new(4);
+        b.weighted_edge(1, 0, 2.0);
+        b.weighted_edge(2, 0, 3.0);
+        b.weighted_edge(3, 0, 4.0);
+        b.weighted_edge(0, 3, 0.5);
+        let g = b.build().unwrap();
+        let p = VertexPerm::degree_ordered(&g);
+        let rg = p.apply_to_graph(&g);
+        rg.validate().unwrap();
+        for s in 0..g.num_vertices() as u32 {
+            let ws = g.in_weights(s).unwrap();
+            for (&t, &w) in g.in_neighbors(s).iter().zip(ws) {
+                let (ns, nt) = (p.to_new(s), p.to_new(t));
+                let pos = rg.in_neighbors(ns).binary_search(&nt).unwrap();
+                assert_eq!(rg.in_weights(ns).unwrap()[pos], w, "weight of {t}->{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn permute_rows_moves_rows_with_their_vertices() {
+        let p = VertexPerm::from_forward(vec![2, 0, 1]).unwrap();
+        // rows: vertex 0 -> [10, 11], 1 -> [20, 21], 2 -> [30, 31]
+        let src = [10, 11, 20, 21, 30, 31];
+        let out = p.permute_rows(&src, 2);
+        // new row v must be old row to_old(v): [1's row, 2's row, 0's row]
+        assert_eq!(out, vec![20, 21, 30, 31, 10, 11]);
+        // scalar (row_len = 1) plane
+        assert_eq!(p.permute_rows(&[7u16, 8, 9], 1), vec![8, 9, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not")]
+    fn permute_rows_rejects_mis_shaped_tables() {
+        let p = VertexPerm::identity(3);
+        p.permute_rows(&[1.0f32; 7], 2);
+    }
+
+    #[test]
+    fn from_forward_rejects_non_bijections() {
+        assert!(VertexPerm::from_forward(vec![0, 0, 1]).is_err()); // duplicate
+        assert!(VertexPerm::from_forward(vec![0, 5, 1]).is_err()); // out of range
+        assert!(VertexPerm::from_forward(vec![2, 0, 1]).is_ok());
+    }
+
+    #[test]
+    fn map_round_trips_id_slices() {
+        let g = skewed_graph();
+        let p = VertexPerm::degree_ordered(&g);
+        let orig: Vec<u32> = (0..50).collect();
+        let mut ids = orig.clone();
+        p.map_to_new(&mut ids);
+        let back = p.mapped_to_old(&ids);
+        assert_eq!(back, orig);
+        p.map_to_old(&mut ids);
+        assert_eq!(ids, orig);
+    }
+}

@@ -1,14 +1,114 @@
 //! CSC (compressed sparse column) graph: in-neighbor slices per vertex.
 
+/// Width-adaptive offset array backing [`CscGraph::indptr`].
+///
+/// Sampling walks `indptr` for every seed of every layer of every batch —
+/// it is the single hottest array in the system. All paper-scale graphs
+/// have `|E| < 2^32`, so storing the offsets as `u32` halves the bytes the
+/// walk touches (doubling the offsets per cache line) while the `u64`
+/// variant keeps >4B-edge graphs representable. Construction goes through
+/// [`IndPtr::from_u64`], which picks the narrowest width that fits;
+/// samplers read through the `#[inline]` accessors on [`CscGraph`]
+/// ([`in_degree`](CscGraph::in_degree),
+/// [`in_neighbors`](CscGraph::in_neighbors),
+/// [`in_bounds`](CscGraph::in_bounds)), so the width is invisible above
+/// this module. The enum branch is perfectly predicted (one arm per
+/// graph), leaving the byte savings as the net effect.
+#[derive(Clone, Debug)]
+pub enum IndPtr {
+    /// `|E| < 2^32`: half the bytes of the `u64` layout.
+    U32(Vec<u32>),
+    /// >4B-edge graphs.
+    U64(Vec<u64>),
+}
+
+impl IndPtr {
+    /// Build from `u64` offsets, narrowing to `u32` when every offset fits
+    /// (for a valid monotone indptr that is exactly the `|E| < 2^32` case).
+    pub fn from_u64(offsets: Vec<u64>) -> IndPtr {
+        // max(), not last(): don't let a corrupt (non-monotone) input
+        // silently truncate — validation rejects it later either way
+        if offsets.iter().max().copied().unwrap_or(0) <= u32::MAX as u64 {
+            IndPtr::U32(offsets.into_iter().map(|x| x as u32).collect())
+        } else {
+            IndPtr::U64(offsets)
+        }
+    }
+
+    /// Number of offsets (`|V| + 1` in a graph).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            IndPtr::U32(v) => v.len(),
+            IndPtr::U64(v) => v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Offset `i` widened to `u64`. Panics when out of range, like `Vec`.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> u64 {
+        match self {
+            IndPtr::U32(v) => v[i] as u64,
+            IndPtr::U64(v) => v[i],
+        }
+    }
+
+    /// Last offset (= `|E|` in a graph); 0 when empty.
+    #[inline]
+    pub fn last(&self) -> u64 {
+        match self {
+            IndPtr::U32(v) => v.last().copied().unwrap_or(0) as u64,
+            IndPtr::U64(v) => v.last().copied().unwrap_or(0),
+        }
+    }
+
+    /// Bytes per stored offset (4 or 8) — the locality knob this type buys.
+    pub fn width_bytes(&self) -> usize {
+        match self {
+            IndPtr::U32(_) => 4,
+            IndPtr::U64(_) => 8,
+        }
+    }
+
+    /// True when the narrow (`u32`) layout is in use.
+    pub fn is_narrow(&self) -> bool {
+        matches!(self, IndPtr::U32(_))
+    }
+
+    /// Widened copy of the offsets (legacy serialization).
+    pub fn to_u64_vec(&self) -> Vec<u64> {
+        match self {
+            IndPtr::U32(v) => v.iter().map(|&x| x as u64).collect(),
+            IndPtr::U64(v) => v.clone(),
+        }
+    }
+}
+
+/// Width-agnostic equality: a `u32` and a `u64` indptr holding the same
+/// offsets compare equal (constructors always narrow when possible, but
+/// equality must not depend on how a graph was loaded).
+impl PartialEq for IndPtr {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && (0..self.len()).all(|i| self.get(i) == other.get(i))
+    }
+}
+
 /// A directed graph stored as in-edge adjacency (CSC): `in_neighbors(s)`
 /// returns the sources `t` of all edges `t -> s` as one contiguous slice.
 ///
 /// Vertex ids are `u32` (all paper datasets are far below 4B vertices);
-/// offsets are `u64` to allow >4B edges.
+/// offsets are width-adaptive ([`IndPtr`]): `u32` storage when `|E| < 2^32`,
+/// `u64` beyond.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CscGraph {
-    /// `indptr[s]..indptr[s+1]` indexes `indices` for vertex `s`; length |V|+1.
-    pub indptr: Vec<u64>,
+    /// `indptr.get(s)..indptr.get(s+1)` indexes `indices` for vertex `s`;
+    /// length |V|+1.
+    pub indptr: IndPtr,
     /// Concatenated in-neighbor lists, each sorted ascending; length |E|.
     pub indices: Vec<u32>,
     /// Optional per-edge weights `A_ts`, parallel to `indices` (Appendix A.7).
@@ -16,6 +116,11 @@ pub struct CscGraph {
 }
 
 impl CscGraph {
+    /// Assemble from `u64` offsets, picking the narrowest indptr width.
+    pub fn from_parts(indptr: Vec<u64>, indices: Vec<u32>, weights: Option<Vec<f32>>) -> Self {
+        Self { indptr: IndPtr::from_u64(indptr), indices, weights }
+    }
+
     /// Number of vertices.
     #[inline]
     pub fn num_vertices(&self) -> usize {
@@ -25,29 +130,38 @@ impl CscGraph {
     /// Number of (directed) edges.
     #[inline]
     pub fn num_edges(&self) -> u64 {
-        *self.indptr.last().unwrap()
+        self.indptr.last()
+    }
+
+    /// `(start, end)` offsets of vertex `s`'s in-edge slice — the one
+    /// indptr read shared by every hot accessor below.
+    #[inline(always)]
+    pub fn in_bounds(&self, s: u32) -> (usize, usize) {
+        match &self.indptr {
+            IndPtr::U32(v) => (v[s as usize] as usize, v[s as usize + 1] as usize),
+            IndPtr::U64(v) => (v[s as usize] as usize, v[s as usize + 1] as usize),
+        }
     }
 
     /// In-degree `d_s` of vertex `s`.
-    #[inline]
+    #[inline(always)]
     pub fn in_degree(&self, s: u32) -> usize {
-        (self.indptr[s as usize + 1] - self.indptr[s as usize]) as usize
+        let (lo, hi) = self.in_bounds(s);
+        hi - lo
     }
 
     /// In-neighbor slice `N(s)` (sorted ascending).
-    #[inline]
+    #[inline(always)]
     pub fn in_neighbors(&self, s: u32) -> &[u32] {
-        let lo = self.indptr[s as usize] as usize;
-        let hi = self.indptr[s as usize + 1] as usize;
+        let (lo, hi) = self.in_bounds(s);
         &self.indices[lo..hi]
     }
 
     /// Edge weights `A_ts` for edges into `s`, if the graph is weighted.
-    #[inline]
+    #[inline(always)]
     pub fn in_weights(&self, s: u32) -> Option<&[f32]> {
         let w = self.weights.as_ref()?;
-        let lo = self.indptr[s as usize] as usize;
-        let hi = self.indptr[s as usize + 1] as usize;
+        let (lo, hi) = self.in_bounds(s);
         Some(&w[lo..hi])
     }
 
@@ -61,21 +175,31 @@ impl CscGraph {
         self.in_neighbors(s).binary_search(&t).is_ok()
     }
 
+    /// True iff in-degrees are non-increasing in vertex id — the layout
+    /// guarantee of a degree-ordered relabel
+    /// ([`VertexPerm::degree_ordered`](super::compact::VertexPerm::degree_ordered)),
+    /// which e.g. collapses
+    /// [`DegreeOrderedCache`](crate::coordinator::DegreeOrderedCache)
+    /// residency to an `id < k` prefix check.
+    pub fn is_degree_ordered(&self) -> bool {
+        (1..self.num_vertices() as u32).all(|v| self.in_degree(v) <= self.in_degree(v - 1))
+    }
+
     /// Structural validation; used by tests, the builder, and `io` loads.
     pub fn validate(&self) -> Result<(), String> {
         if self.indptr.is_empty() {
             return Err("indptr must have at least one entry".into());
         }
-        if self.indptr[0] != 0 {
+        if self.indptr.get(0) != 0 {
             return Err("indptr[0] != 0".into());
         }
         let nv = self.num_vertices();
         for s in 0..nv {
-            if self.indptr[s] > self.indptr[s + 1] {
+            if self.indptr.get(s) > self.indptr.get(s + 1) {
                 return Err(format!("indptr not monotone at {s}"));
             }
         }
-        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+        if self.indptr.last() as usize != self.indices.len() {
             return Err("indptr tail != |indices|".into());
         }
         for (i, &t) in self.indices.iter().enumerate() {
@@ -133,6 +257,46 @@ mod tests {
     }
 
     #[test]
+    fn small_graphs_use_the_narrow_indptr() {
+        let g = diamond();
+        assert!(g.indptr.is_narrow());
+        assert_eq!(g.indptr.width_bytes(), 4);
+        assert_eq!(g.indptr.to_u64_vec(), vec![0, 0, 0, 2, 4]);
+    }
+
+    #[test]
+    fn indptr_width_selection_at_the_u32_boundary() {
+        // |E| = u32::MAX still fits in the narrow layout; one more forces
+        // the wide one (synthetic offsets — no 4-billion-edge graph needed)
+        let narrow = IndPtr::from_u64(vec![0, u32::MAX as u64]);
+        assert!(narrow.is_narrow());
+        assert_eq!(narrow.last(), u32::MAX as u64);
+        let wide = IndPtr::from_u64(vec![0, u32::MAX as u64 + 1]);
+        assert!(!wide.is_narrow());
+        assert_eq!(wide.width_bytes(), 8);
+        assert_eq!(wide.last(), u32::MAX as u64 + 1);
+    }
+
+    #[test]
+    fn indptr_equality_is_width_agnostic() {
+        let a = IndPtr::U32(vec![0, 1, 3]);
+        let b = IndPtr::U64(vec![0, 1, 3]);
+        assert_eq!(a, b);
+        let c = IndPtr::U64(vec![0, 2, 3]);
+        assert_ne!(a, c);
+        assert_ne!(a, IndPtr::U32(vec![0, 1]));
+    }
+
+    #[test]
+    fn degree_order_detection() {
+        // star into 0: degrees [3, 0, 0, 0] — non-increasing
+        let star = CscBuilder::new(4).edges(&[(1, 0), (2, 0), (3, 0)]).build().unwrap();
+        assert!(star.is_degree_ordered());
+        // diamond degrees are [0, 0, 2, 2] — not ordered
+        assert!(!diamond().is_degree_ordered());
+    }
+
+    #[test]
     fn validate_catches_corruption() {
         let mut g = diamond();
         assert!(g.validate().is_ok());
@@ -140,7 +304,7 @@ mod tests {
         assert!(g.validate().is_err());
 
         let mut g2 = diamond();
-        g2.indptr[1] = 5;
+        g2.indptr = IndPtr::U32(vec![0, 5, 0, 2, 4]);
         assert!(g2.validate().is_err());
 
         let mut g3 = diamond();

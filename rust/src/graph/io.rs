@@ -1,9 +1,42 @@
-//! Binary (de)serialization of graphs and dense arrays for the dataset
-//! cache under `data/`. Format: little-endian, sectioned, versioned.
+//! Graph (de)serialization: the legacy sectioned dataset-cache format, a
+//! text edge-list (the slow baseline), and the `.lgx` zero-copy binary
+//! graph format.
+//!
+//! ## `.lgx` — the large-graph load path
+//!
+//! The legacy format (and any text format) is *parse-and-rebuild*: every
+//! value is decoded element-by-element into freshly grown vectors. At
+//! million-vertex scale that load time rivals an epoch of sampling. `.lgx`
+//! instead lays the graph down exactly as [`CscGraph`] holds it in memory
+//! (little-endian, 64-byte-aligned sections in native indptr width), so
+//! loading is: allocate the right-sized buffers, `read_exact` straight
+//! into them, verify the checksum. No per-element decode, no rebuild, no
+//! realloc. The file is versioned and checksummed (FNV-1a over the
+//! payload, plus a header checksum), and corruption surfaces as a named
+//! [`LgxError`], never as a mis-parsed graph. An optional
+//! [`VertexPerm`] section carries the degree-ordered relabeling
+//! ([`graph::compact`](super::compact)) alongside the graph it produced,
+//! so a packed graph ships with the mapping back to original ids.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! header (64 B): magic "LGXGRAPH" | version u32 | flags u32
+//!                | num_vertices u64 | num_edges u64
+//!                | payload_checksum u64 | header_checksum u64 | pad
+//!                (header_checksum = FNV-1a over header bytes 0..40,
+//!                 i.e. everything before the checksum field itself)
+//! sections, each zero-padded to a 64 B boundary:
+//!   indptr  (|V|+1 entries, u32 or u64 per flags bit 1)
+//!   indices (|E| × u32)
+//!   weights (|E| × f32, iff flags bit 0)
+//!   perm    (|V| × u32 forward mapping, iff flags bit 2)
+//! ```
 
-use super::csc::CscGraph;
+use super::compact::VertexPerm;
+use super::csc::{CscGraph, IndPtr};
 use std::fs::File;
-use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"LABORGR1";
@@ -71,10 +104,11 @@ pub fn read_u16_slice<R: Read>(r: &mut R) -> io::Result<Vec<u16>> {
     Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
-/// Serialize a graph to `w`.
+/// Serialize a graph to `w` (legacy dataset-cache format, parse-and-rebuild
+/// on load; use [`write_lgx`] for the zero-copy path).
 pub fn write_graph<W: Write>(w: &mut W, g: &CscGraph) -> io::Result<()> {
     w.write_all(MAGIC)?;
-    write_u64_slice(w, &g.indptr)?;
+    write_u64_slice(w, &g.indptr.to_u64_vec())?;
     write_u32_slice(w, &g.indices)?;
     match &g.weights {
         Some(ws) => {
@@ -86,7 +120,7 @@ pub fn write_graph<W: Write>(w: &mut W, g: &CscGraph) -> io::Result<()> {
     Ok(())
 }
 
-/// Deserialize and validate a graph from `r`.
+/// Deserialize and validate a graph from `r` (legacy format).
 pub fn read_graph<R: Read>(r: &mut R) -> io::Result<CscGraph> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -96,7 +130,7 @@ pub fn read_graph<R: Read>(r: &mut R) -> io::Result<CscGraph> {
     let indptr = read_u64_slice(r)?;
     let indices = read_u32_slice(r)?;
     let weights = if read_u64(r)? == 1 { Some(read_f32_slice(r)?) } else { None };
-    let g = CscGraph { indptr, indices, weights };
+    let g = CscGraph::from_parts(indptr, indices, weights);
     g.validate().map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
     Ok(g)
 }
@@ -113,6 +147,538 @@ pub fn save_graph<P: AsRef<Path>>(path: P, g: &CscGraph) -> io::Result<()> {
 pub fn load_graph<P: AsRef<Path>>(path: P) -> io::Result<CscGraph> {
     let mut r = BufReader::new(File::open(path)?);
     read_graph(&mut r)
+}
+
+// ---------------------------------------------------------------------
+// Text edge list — the human-readable (and deliberately slow) baseline
+// the `.lgx` bench compares against.
+// ---------------------------------------------------------------------
+
+/// Write `g` as a text edge list:
+/// `labor-edgelist v1` / `<|V|> <|E|> <weighted>` / one `t s [w]` line per
+/// edge. Round-trips exactly for unweighted graphs; weights go through
+/// decimal text (lossless via the `{:?}` shortest-round-trip format).
+pub fn save_edgelist<P: AsRef<Path>>(path: P, g: &CscGraph) -> io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    let weighted = g.weights.is_some();
+    writeln!(w, "labor-edgelist v1")?;
+    writeln!(w, "{} {} {}", g.num_vertices(), g.num_edges(), u8::from(weighted))?;
+    for s in 0..g.num_vertices() as u32 {
+        match g.in_weights(s) {
+            Some(ws) => {
+                for (&t, &wt) in g.in_neighbors(s).iter().zip(ws) {
+                    writeln!(w, "{t} {s} {wt:?}")?;
+                }
+            }
+            None => {
+                for &t in g.in_neighbors(s) {
+                    writeln!(w, "{t} {s}")?;
+                }
+            }
+        }
+    }
+    w.flush()
+}
+
+/// Parse a text edge list written by [`save_edgelist`] (the
+/// parse-and-rebuild path: every edge goes through integer parsing and the
+/// COO→CSC builder).
+pub fn load_edgelist<P: AsRef<Path>>(path: P) -> io::Result<CscGraph> {
+    let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+    let mut r = BufReader::new(File::open(path)?);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    if line.trim_end() != "labor-edgelist v1" {
+        return Err(bad(format!("bad edgelist header '{}'", line.trim_end())));
+    }
+    line.clear();
+    r.read_line(&mut line)?;
+    let mut it = line.split_whitespace();
+    let nv: usize = it
+        .next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| bad("missing |V|".into()))?;
+    let ne: u64 =
+        it.next().and_then(|t| t.parse().ok()).ok_or_else(|| bad("missing |E|".into()))?;
+    let weighted = it.next() == Some("1");
+    let mut b = super::builder::CscBuilder::new(nv);
+    line.clear();
+    while r.read_line(&mut line)? > 0 {
+        if !line.trim().is_empty() {
+            let mut it = line.split_whitespace();
+            let t: u32 = it
+                .next()
+                .and_then(|x| x.parse().ok())
+                .ok_or_else(|| bad(format!("bad edge line '{}'", line.trim_end())))?;
+            let s: u32 = it
+                .next()
+                .and_then(|x| x.parse().ok())
+                .ok_or_else(|| bad(format!("bad edge line '{}'", line.trim_end())))?;
+            if weighted {
+                let w: f32 = it
+                    .next()
+                    .and_then(|x| x.parse().ok())
+                    .ok_or_else(|| bad(format!("bad weight in '{}'", line.trim_end())))?;
+                b.weighted_edge(t, s, w);
+            } else {
+                b.edge(t, s);
+            }
+        }
+        line.clear();
+    }
+    let g = b.build().map_err(bad)?;
+    // compare against the BUILT graph, not the raw line count: the
+    // builder merges duplicate edge lines, and a silent shrink below the
+    // declared count must be reported, not absorbed
+    if g.num_edges() != ne {
+        return Err(bad(format!(
+            "edge count mismatch: header declares {ne}, file yields {}",
+            g.num_edges()
+        )));
+    }
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------
+// .lgx — zero-copy binary graph format
+// ---------------------------------------------------------------------
+
+const LGX_MAGIC: &[u8; 8] = b"LGXGRAPH";
+/// Current `.lgx` format version.
+pub const LGX_VERSION: u32 = 1;
+const LGX_ALIGN: usize = 64;
+const LGX_FLAG_WEIGHTED: u32 = 1 << 0;
+const LGX_FLAG_WIDE_INDPTR: u32 = 1 << 1;
+const LGX_FLAG_PERM: u32 = 1 << 2;
+const LGX_KNOWN_FLAGS: u32 = LGX_FLAG_WEIGHTED | LGX_FLAG_WIDE_INDPTR | LGX_FLAG_PERM;
+
+/// Every way an `.lgx` load can fail, as a named error — corruption is
+/// always reported, never mis-parsed into a wrong graph.
+#[derive(Debug)]
+pub enum LgxError {
+    /// Underlying filesystem/read failure.
+    Io(io::Error),
+    /// The file does not start with the `LGXGRAPH` magic.
+    BadMagic,
+    /// The file declares a format version this build cannot read.
+    UnsupportedVersion(u32),
+    /// The header bytes fail their own checksum (corrupted header).
+    HeaderCorrupt { expected: u64, got: u64 },
+    /// The payload bytes fail the header's payload checksum.
+    ChecksumMismatch { expected: u64, got: u64 },
+    /// The file ends before the named section is complete.
+    Truncated(&'static str),
+    /// Checksums pass but the decoded structures are inconsistent
+    /// (e.g. indptr width flag vs edge count, failed graph validation).
+    Invalid(String),
+}
+
+impl std::fmt::Display for LgxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LgxError::Io(e) => write!(f, "lgx: io error: {e}"),
+            LgxError::BadMagic => write!(f, "lgx: bad magic (not an .lgx file)"),
+            LgxError::UnsupportedVersion(v) => {
+                write!(f, "lgx: unsupported version {v} (this build reads {LGX_VERSION})")
+            }
+            LgxError::HeaderCorrupt { expected, got } => {
+                write!(f, "lgx: header corrupt (checksum {got:#018x}, expected {expected:#018x})")
+            }
+            LgxError::ChecksumMismatch { expected, got } => write!(
+                f,
+                "lgx: payload checksum mismatch ({got:#018x}, expected {expected:#018x})"
+            ),
+            LgxError::Truncated(section) => {
+                write!(f, "lgx: truncated file (section '{section}' incomplete)")
+            }
+            LgxError::Invalid(msg) => write!(f, "lgx: invalid contents: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LgxError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LgxError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for LgxError {
+    fn from(e: io::Error) -> Self {
+        LgxError::Io(e)
+    }
+}
+
+/// FNV-1a 64 over a byte slice, continuing from `h`.
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Checksum of a typed slice as its little-endian byte stream (identical
+/// result on either endianness, and to hashing the on-disk bytes).
+fn checksum_pod<T: Pod>(h: u64, xs: &[T]) -> u64 {
+    if cfg!(target_endian = "little") {
+        // the in-memory bytes ARE the LE stream: one pass, no per-element
+        // re-encode
+        fnv1a(h, pod_bytes(xs))
+    } else {
+        let mut h = h;
+        let mut buf = [0u8; 8];
+        for x in xs {
+            let b = x.to_le_into(&mut buf);
+            h = fnv1a(h, b);
+        }
+        h
+    }
+}
+
+/// Plain-old-data element types an `.lgx` section can hold. The contract
+/// backing the unsafe byte views below: every bit pattern is a valid
+/// value, and the type has no padding.
+///
+/// # Safety
+/// Implementors must be inhabited for every bit pattern and contain no
+/// padding bytes (`u32`/`u64`/`f32` qualify).
+pub unsafe trait Pod: Copy {
+    /// Little-endian encoding of `self` into `buf`; returns the used prefix.
+    fn to_le_into(self, buf: &mut [u8; 8]) -> &[u8];
+    /// In-place little-endian → native fixup (no-op on LE targets).
+    fn fix_endianness(&mut self);
+}
+
+unsafe impl Pod for u32 {
+    fn to_le_into(self, buf: &mut [u8; 8]) -> &[u8] {
+        buf[..4].copy_from_slice(&self.to_le_bytes());
+        &buf[..4]
+    }
+    fn fix_endianness(&mut self) {
+        *self = u32::from_le(*self);
+    }
+}
+
+unsafe impl Pod for u64 {
+    fn to_le_into(self, buf: &mut [u8; 8]) -> &[u8] {
+        buf.copy_from_slice(&self.to_le_bytes());
+        &buf[..8]
+    }
+    fn fix_endianness(&mut self) {
+        *self = u64::from_le(*self);
+    }
+}
+
+unsafe impl Pod for f32 {
+    fn to_le_into(self, buf: &mut [u8; 8]) -> &[u8] {
+        buf[..4].copy_from_slice(&self.to_le_bytes());
+        &buf[..4]
+    }
+    fn fix_endianness(&mut self) {
+        *self = f32::from_bits(u32::from_le(self.to_bits()));
+    }
+}
+
+/// The raw bytes of a pod slice (safe per the [`Pod`] contract).
+fn pod_bytes<T: Pod>(xs: &[T]) -> &[u8] {
+    // SAFETY: T is Pod (no padding, any bit pattern valid), so viewing the
+    // initialized elements as bytes is sound.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+/// Write a section as raw little-endian bytes (single `write_all` on LE
+/// targets — the zero-copy half of the write path) and return the byte
+/// count written (pre-padding).
+fn write_section<W: Write, T: Pod>(w: &mut W, xs: &[T]) -> io::Result<usize> {
+    if cfg!(target_endian = "little") {
+        let bytes = pod_bytes(xs);
+        w.write_all(bytes)?;
+        Ok(bytes.len())
+    } else {
+        let mut buf = [0u8; 8];
+        let mut n = 0;
+        for x in xs {
+            let b = x.to_le_into(&mut buf);
+            w.write_all(b)?;
+            n += b.len();
+        }
+        Ok(n)
+    }
+}
+
+/// Read `n` elements straight into a freshly allocated, exactly sized
+/// buffer — one `read_exact` into the buffer's own bytes, no per-element
+/// decode, no rebuild (the zero-copy half of the read path). Endianness is
+/// fixed in place on big-endian targets only.
+fn read_section<R: Read, T: Pod + Default>(
+    r: &mut R,
+    n: usize,
+    section: &'static str,
+) -> Result<Vec<T>, LgxError> {
+    // fallible allocation: a header-declared size beyond available memory
+    // must surface as a named error, not an allocator abort
+    let mut v: Vec<T> = Vec::new();
+    v.try_reserve_exact(n).map_err(|_| {
+        LgxError::Invalid(format!("section '{section}' declares {n} elements: allocation failed"))
+    })?;
+    v.resize(n, T::default());
+    {
+        // SAFETY: same Pod contract as `pod_bytes`, mutably: the view
+        // covers exactly the vec's initialized elements, and any bytes
+        // `read_exact` deposits form valid values of T.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(
+                v.as_mut_ptr() as *mut u8,
+                n * std::mem::size_of::<T>(),
+            )
+        };
+        r.read_exact(bytes).map_err(|e| truncation(e, section))?;
+    }
+    if cfg!(target_endian = "big") {
+        for x in &mut v {
+            x.fix_endianness();
+        }
+    }
+    Ok(v)
+}
+
+fn truncation(e: io::Error, section: &'static str) -> LgxError {
+    if e.kind() == io::ErrorKind::UnexpectedEof {
+        LgxError::Truncated(section)
+    } else {
+        LgxError::Io(e)
+    }
+}
+
+fn pad_len(bytes: usize) -> usize {
+    (LGX_ALIGN - bytes % LGX_ALIGN) % LGX_ALIGN
+}
+
+fn write_padding<W: Write>(w: &mut W, bytes: usize) -> io::Result<()> {
+    w.write_all(&[0u8; LGX_ALIGN][..pad_len(bytes)])
+}
+
+fn skip_padding<R: Read>(r: &mut R, bytes: usize, section: &'static str) -> Result<(), LgxError> {
+    let mut pad = [0u8; LGX_ALIGN];
+    r.read_exact(&mut pad[..pad_len(bytes)]).map_err(|e| truncation(e, section))
+}
+
+/// Serialize `g` (and optionally the [`VertexPerm`] that produced its
+/// layout) in the `.lgx` format. See the module docs for the layout.
+pub fn write_lgx<W: Write>(
+    w: &mut W,
+    g: &CscGraph,
+    perm: Option<&VertexPerm>,
+) -> Result<(), LgxError> {
+    if let Some(p) = perm {
+        if p.len() != g.num_vertices() {
+            return Err(LgxError::Invalid(format!(
+                "perm covers {} vertices, graph has {}",
+                p.len(),
+                g.num_vertices()
+            )));
+        }
+    }
+    let mut flags = 0u32;
+    if g.weights.is_some() {
+        flags |= LGX_FLAG_WEIGHTED;
+    }
+    if !g.indptr.is_narrow() {
+        flags |= LGX_FLAG_WIDE_INDPTR;
+    }
+    if perm.is_some() {
+        flags |= LGX_FLAG_PERM;
+    }
+
+    // payload checksum over the section byte streams, in order
+    let mut sum = FNV_OFFSET;
+    sum = match &g.indptr {
+        IndPtr::U32(v) => checksum_pod(sum, v),
+        IndPtr::U64(v) => checksum_pod(sum, v),
+    };
+    sum = checksum_pod(sum, &g.indices);
+    if let Some(ws) = &g.weights {
+        sum = checksum_pod(sum, ws);
+    }
+    if let Some(p) = perm {
+        sum = checksum_pod(sum, p.forward());
+    }
+
+    // header: 64 bytes; bytes 0..40 (everything before the header-checksum
+    // field itself) are covered by the FNV-1a header checksum at 40..48
+    let mut header = [0u8; LGX_ALIGN];
+    header[..8].copy_from_slice(LGX_MAGIC);
+    header[8..12].copy_from_slice(&LGX_VERSION.to_le_bytes());
+    header[12..16].copy_from_slice(&flags.to_le_bytes());
+    header[16..24].copy_from_slice(&(g.num_vertices() as u64).to_le_bytes());
+    header[24..32].copy_from_slice(&g.num_edges().to_le_bytes());
+    header[32..40].copy_from_slice(&sum.to_le_bytes());
+    let hsum = fnv1a(FNV_OFFSET, &header[..40]);
+    header[40..48].copy_from_slice(&hsum.to_le_bytes());
+    w.write_all(&header)?;
+
+    let n = match &g.indptr {
+        IndPtr::U32(v) => write_section(w, v)?,
+        IndPtr::U64(v) => write_section(w, v)?,
+    };
+    write_padding(w, n)?;
+    let n = write_section(w, &g.indices)?;
+    write_padding(w, n)?;
+    if let Some(ws) = &g.weights {
+        let n = write_section(w, ws)?;
+        write_padding(w, n)?;
+    }
+    if let Some(p) = perm {
+        let n = write_section(w, p.forward())?;
+        write_padding(w, n)?;
+    }
+    Ok(())
+}
+
+/// Load a graph (and its optional [`VertexPerm`]) from the `.lgx` format,
+/// verifying checksums and structure. The inverse of [`write_lgx`].
+pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let mut header = [0u8; LGX_ALIGN];
+    r.read_exact(&mut header).map_err(|e| truncation(e, "header"))?;
+    if &header[..8] != LGX_MAGIC {
+        return Err(LgxError::BadMagic);
+    }
+    let expected_hsum = u64::from_le_bytes(header[40..48].try_into().unwrap());
+    let got_hsum = fnv1a(FNV_OFFSET, &header[..40]);
+    if got_hsum != expected_hsum {
+        return Err(LgxError::HeaderCorrupt { expected: expected_hsum, got: got_hsum });
+    }
+    let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if version != LGX_VERSION {
+        return Err(LgxError::UnsupportedVersion(version));
+    }
+    let flags = u32::from_le_bytes(header[12..16].try_into().unwrap());
+    let unknown = flags & !LGX_KNOWN_FLAGS;
+    if unknown != 0 {
+        return Err(LgxError::Invalid(format!("unknown flag bits {unknown:#x}")));
+    }
+    let nv = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    let ne = u64::from_le_bytes(header[24..32].try_into().unwrap());
+    let expected_sum = u64::from_le_bytes(header[32..40].try_into().unwrap());
+
+    // plausibility bounds before any allocation is sized from the header:
+    // vertex ids are u32 throughout the engine, and a CSC with sorted
+    // unique neighbor lists holds at most |V|² edges
+    if nv as u64 > u32::MAX as u64 {
+        return Err(LgxError::Invalid(format!(
+            "{nv} vertices: ids must be addressable as u32 (<= {})",
+            u32::MAX
+        )));
+    }
+    if (ne as u128) > (nv as u128) * (nv as u128) {
+        return Err(LgxError::Invalid(format!(
+            "{ne} edges exceed the |V|² = {} bound for {nv} vertices",
+            (nv as u128) * (nv as u128)
+        )));
+    }
+    let wide = flags & LGX_FLAG_WIDE_INDPTR != 0;
+    if !wide && ne > u32::MAX as u64 {
+        return Err(LgxError::Invalid(format!(
+            "narrow (u32) indptr flag with {ne} edges (> u32::MAX)"
+        )));
+    }
+
+    let mut sum = FNV_OFFSET;
+    let indptr = if wide {
+        let v: Vec<u64> = read_section(r, nv + 1, "indptr")?;
+        skip_padding(r, (nv + 1) * 8, "indptr")?;
+        sum = checksum_pod(sum, &v);
+        IndPtr::U64(v)
+    } else {
+        let v: Vec<u32> = read_section(r, nv + 1, "indptr")?;
+        skip_padding(r, (nv + 1) * 4, "indptr")?;
+        sum = checksum_pod(sum, &v);
+        IndPtr::U32(v)
+    };
+    let indices: Vec<u32> = read_section(r, ne as usize, "indices")?;
+    skip_padding(r, ne as usize * 4, "indices")?;
+    sum = checksum_pod(sum, &indices);
+    let weights = if flags & LGX_FLAG_WEIGHTED != 0 {
+        let ws: Vec<f32> = read_section(r, ne as usize, "weights")?;
+        skip_padding(r, ne as usize * 4, "weights")?;
+        sum = checksum_pod(sum, &ws);
+        Some(ws)
+    } else {
+        None
+    };
+    let perm = if flags & LGX_FLAG_PERM != 0 {
+        let forward: Vec<u32> = read_section(r, nv, "perm")?;
+        skip_padding(r, nv * 4, "perm")?;
+        sum = checksum_pod(sum, &forward);
+        Some(forward)
+    } else {
+        None
+    };
+    if sum != expected_sum {
+        return Err(LgxError::ChecksumMismatch { expected: expected_sum, got: sum });
+    }
+
+    let g = CscGraph { indptr, indices, weights };
+    if g.indptr.last() != ne {
+        return Err(LgxError::Invalid(format!(
+            "indptr tail {} != declared edge count {ne}",
+            g.indptr.last()
+        )));
+    }
+    g.validate().map_err(LgxError::Invalid)?;
+    let perm = match perm {
+        Some(forward) => Some(VertexPerm::from_forward(forward).map_err(LgxError::Invalid)?),
+        None => None,
+    };
+    Ok((g, perm))
+}
+
+/// [`write_lgx`] to a file path (directories created as needed). The
+/// bytes go to a sibling `.tmp` file that is renamed into place only
+/// after a fully successful write — a failed save (validation or IO)
+/// never truncates or clobbers an existing file at `path`.
+pub fn save_lgx<P: AsRef<Path>>(
+    path: P,
+    g: &CscGraph,
+    perm: Option<&VertexPerm>,
+) -> Result<(), LgxError> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let written = (|| -> Result<(), LgxError> {
+        let mut w = BufWriter::new(File::create(&tmp)?);
+        write_lgx(&mut w, g, perm)?;
+        w.flush()?;
+        Ok(())
+    })();
+    match written {
+        Ok(()) => {
+            std::fs::rename(&tmp, path)?;
+            Ok(())
+        }
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+/// [`read_lgx`] from a file path.
+pub fn load_lgx<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let mut r = BufReader::new(File::open(path)?);
+    read_lgx(&mut r)
 }
 
 #[cfg(test)]
@@ -159,5 +725,58 @@ mod tests {
         write_graph(&mut buf, &g).unwrap();
         buf.truncate(buf.len() - 3);
         assert!(read_graph(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn edgelist_roundtrip() {
+        let g = CscBuilder::new(5).edges(&[(0, 1), (3, 1), (4, 2), (1, 0)]).build().unwrap();
+        let path = std::env::temp_dir().join(format!("labor_el_{}.txt", std::process::id()));
+        save_edgelist(&path, &g).unwrap();
+        let back = load_edgelist(&path).unwrap();
+        assert_eq!(g, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn edgelist_duplicate_lines_do_not_shrink_silently() {
+        // the builder merges duplicates; the loader must notice that the
+        // built graph no longer matches the header's declared edge count
+        let g = CscBuilder::new(3).edges(&[(0, 1), (1, 2)]).build().unwrap();
+        let path = std::env::temp_dir().join(format!("labor_eld_{}.txt", std::process::id()));
+        save_edgelist(&path, &g).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("0 1\n"); // duplicate of an existing edge line
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines[1] = "3 3 0"; // header now claims 3 edges; dedup yields 2
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        let err = load_edgelist(&path).unwrap_err();
+        assert!(err.to_string().contains("edge count mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn weighted_edgelist_roundtrip() {
+        let mut b = CscBuilder::new(4);
+        b.weighted_edge(0, 1, 0.125); // exactly representable
+        b.weighted_edge(2, 3, 1.7);
+        let g = b.build().unwrap();
+        let path = std::env::temp_dir().join(format!("labor_elw_{}.txt", std::process::id()));
+        save_edgelist(&path, &g).unwrap();
+        let back = load_edgelist(&path).unwrap();
+        assert_eq!(g, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    // .lgx round-trip / corruption coverage lives in rust/tests/lgx_format.rs
+    // (integration suite); this unit test pins the in-memory path only.
+    #[test]
+    fn lgx_in_memory_roundtrip() {
+        let g = CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap();
+        let mut buf = Vec::new();
+        write_lgx(&mut buf, &g, None).unwrap();
+        assert_eq!(buf.len() % 64, 0, "every section is 64-byte padded");
+        let (back, perm) = read_lgx(&mut &buf[..]).unwrap();
+        assert_eq!(g, back);
+        assert!(perm.is_none());
     }
 }

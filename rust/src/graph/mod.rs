@@ -3,11 +3,21 @@
 //! GNN sampling consumes **incoming** edges of seed vertices, so the native
 //! layout is CSC (compressed sparse column over destinations): for a seed
 //! `s` we need `N(s) = {t | (t -> s) in E}` as a contiguous slice.
+//!
+//! The layout itself is a first-class, optimized subsystem: offsets are
+//! width-adaptive ([`IndPtr`]: `u32` storage when `|E| < 2^32`), vertex
+//! ids can be renumbered by descending in-degree so hot vertices cluster
+//! at the front of every array ([`compact::VertexPerm`]), and graphs
+//! serialize to the zero-copy `.lgx` binary format
+//! ([`io::save_lgx`]/[`io::load_lgx`]) so large-graph loads skip
+//! parse-and-rebuild entirely.
 
 pub mod builder;
+pub mod compact;
 pub mod csc;
 pub mod gen;
 pub mod io;
 pub mod stats;
 
-pub use csc::CscGraph;
+pub use compact::VertexPerm;
+pub use csc::{CscGraph, IndPtr};

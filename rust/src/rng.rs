@@ -73,6 +73,15 @@ impl HashRng {
         Self { seed: mix2(self.seed, stream) }
     }
 
+    /// The (pre-mixed) stream key: two `HashRng`s agree everywhere iff
+    /// their keys are equal, so callers can cache values derived from a
+    /// stream (e.g. LABOR's per-candidate `r_t` buffer) and invalidate by
+    /// key comparison instead of re-hashing.
+    #[inline]
+    pub fn key(&self) -> u64 {
+        self.seed
+    }
+
     /// Uniform `f64` in `[0,1)` for the given id (e.g. a vertex id).
     #[inline(always)]
     pub fn uniform(&self, id: u64) -> f64 {

@@ -273,19 +273,56 @@ pub struct Mfg {
 }
 
 impl Mfg {
-    /// Per-layer input vertex counts `[|V^1|, .., |V^L|]`.
+    /// Per-layer input vertex counts `[|V^1|, .., |V^L|]`. Allocates;
+    /// metrics-path callers that only iterate should use
+    /// [`vertex_counts_iter`](Self::vertex_counts_iter).
     pub fn vertex_counts(&self) -> Vec<usize> {
-        self.layers.iter().map(|l| l.num_inputs()).collect()
+        self.vertex_counts_iter().collect()
     }
 
-    /// Per-layer edge counts `[|E^0|, .., |E^{L-1}|]`.
+    /// Per-layer edge counts `[|E^0|, .., |E^{L-1}|]`. Allocates; see
+    /// [`edge_counts_iter`](Self::edge_counts_iter) for the hot path.
     pub fn edge_counts(&self) -> Vec<usize> {
-        self.layers.iter().map(|l| l.num_edges()).collect()
+        self.edge_counts_iter().collect()
+    }
+
+    /// Non-allocating twin of [`vertex_counts`](Self::vertex_counts) —
+    /// the per-batch metrics path runs once per sampled batch, so it must
+    /// not pay a `Vec` per reading.
+    pub fn vertex_counts_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.layers.iter().map(|l| l.num_inputs())
+    }
+
+    /// Non-allocating twin of [`edge_counts`](Self::edge_counts).
+    pub fn edge_counts_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.layers.iter().map(|l| l.num_edges())
     }
 
     /// The vertices whose features must be fetched (deepest layer inputs).
     pub fn feature_vertices(&self) -> &[u32] {
         &self.layers.last().expect("non-empty mfg").inputs
+    }
+
+    /// Rewrite every global vertex id in the MFG (per-layer `seeds` and
+    /// `inputs`) through `map`. Edge arrays hold *local* indices into
+    /// those vectors, so they — and the weights — are untouched; the
+    /// bipartite structure is preserved exactly.
+    ///
+    /// This is the delivery-boundary hook for relabeled graphs: sample on
+    /// the degree-ordered layout, then map back to original ids with the
+    /// inverse permutation
+    /// (`mfg.map_ids(|v| perm.to_old(v))`) so consumers never see the
+    /// internal layout. The pipeline does this automatically when
+    /// `PipelineConfig::output_perm` is set.
+    pub fn map_ids(&mut self, map: impl Fn(u32) -> u32) {
+        for layer in &mut self.layers {
+            for v in layer.seeds.iter_mut() {
+                *v = map(*v);
+            }
+            for v in layer.inputs.iter_mut() {
+                *v = map(*v);
+            }
+        }
     }
 }
 

@@ -125,6 +125,9 @@ pub struct SamplerScratch {
     pub(crate) solver_pi: Vec<f64>,
 
     // --- per-layer sampling buffers (all samplers) ---
+    /// LABOR's shared per-candidate variates: lent to `LaborLayerState`
+    /// (which hashes each candidate once per stream into it) on the
+    /// sequential path; used directly by the shard workers.
     pub(crate) r: Vec<f64>,
     pub(crate) edge_src: Vec<u32>,
     pub(crate) edge_dst: Vec<u32>,

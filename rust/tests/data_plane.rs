@@ -43,6 +43,7 @@ fn run_pipeline(
             seed: 21,
             intra_batch_threads: shards,
             data_plane: Some(plane),
+            output_perm: None,
         },
     );
     let mut out = Vec::new();
@@ -180,6 +181,7 @@ fn stage_metrics_are_surfaced_through_the_handle() {
             seed: 3,
             intra_batch_threads: 1,
             data_plane: Some(plane),
+            output_perm: None,
         },
     );
     for _ in &mut p {}

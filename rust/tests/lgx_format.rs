@@ -1,0 +1,303 @@
+//! `.lgx` zero-copy binary format: round-trip fidelity, corruption
+//! rejection with named errors, and indptr width selection.
+//!
+//! The contract under test: a load either reproduces the written graph
+//! (and permutation) exactly, or fails with a [`LgxError`] naming what is
+//! wrong — a corrupt file must never come back as a plausible-but-wrong
+//! graph.
+
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::compact::VertexPerm;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::io::{
+    load_lgx, read_lgx, save_lgx, write_lgx, LgxError, LGX_VERSION,
+};
+use labor_gnn::graph::{CscGraph, IndPtr};
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 400,
+        num_arcs: 9_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.6,
+        seed: 11,
+    })
+    .graph
+}
+
+fn weighted_graph() -> CscGraph {
+    let mut b = CscBuilder::new(6);
+    b.weighted_edge(0, 1, 2.0);
+    b.weighted_edge(3, 1, 0.5);
+    b.weighted_edge(4, 2, 1.25);
+    b.weighted_edge(5, 2, 3.5);
+    b.weighted_edge(1, 5, 0.75);
+    b.build().unwrap()
+}
+
+fn to_bytes(g: &CscGraph, perm: Option<&VertexPerm>) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_lgx(&mut buf, g, perm).unwrap();
+    buf
+}
+
+#[test]
+fn roundtrip_unweighted_no_perm() {
+    let g = dense_graph();
+    let buf = to_bytes(&g, None);
+    let (back, perm) = read_lgx(&mut &buf[..]).unwrap();
+    assert_eq!(back, g);
+    assert!(perm.is_none());
+    assert!(back.indptr.is_narrow(), "small graph must load with u32 offsets");
+}
+
+#[test]
+fn roundtrip_weighted_with_perm() {
+    let g = weighted_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = perm.apply_to_graph(&g);
+    let buf = to_bytes(&rg, Some(&perm));
+    let (back, back_perm) = read_lgx(&mut &buf[..]).unwrap();
+    assert_eq!(back, rg);
+    assert_eq!(back.weights, rg.weights, "weights must survive bit-exactly");
+    assert_eq!(back_perm.as_ref(), Some(&perm));
+    // the perm still maps relabeled ids back onto the original graph
+    let p = back_perm.unwrap();
+    for s in 0..rg.num_vertices() as u32 {
+        for &t in back.in_neighbors(s) {
+            assert!(g.has_edge(p.to_old(t), p.to_old(s)));
+        }
+    }
+}
+
+#[test]
+fn roundtrip_through_a_file() {
+    let g = dense_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = perm.apply_to_graph(&g);
+    let path = std::env::temp_dir().join(format!("labor_lgx_{}.lgx", std::process::id()));
+    save_lgx(&path, &rg, Some(&perm)).unwrap();
+    let (back, back_perm) = load_lgx(&path).unwrap();
+    assert_eq!(back, rg);
+    assert_eq!(back_perm.as_ref(), Some(&perm));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn empty_and_edgeless_graphs_roundtrip() {
+    let empty = CscBuilder::new(1).build().unwrap();
+    let buf = to_bytes(&empty, None);
+    let (back, _) = read_lgx(&mut &buf[..]).unwrap();
+    assert_eq!(back, empty);
+    let edgeless = CscBuilder::new(50).build().unwrap();
+    let buf = to_bytes(&edgeless, None);
+    let (back, _) = read_lgx(&mut &buf[..]).unwrap();
+    assert_eq!(back.num_vertices(), 50);
+    assert_eq!(back.num_edges(), 0);
+}
+
+#[test]
+fn bad_magic_is_named() {
+    let mut buf = to_bytes(&dense_graph(), None);
+    buf[0] = b'X';
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::BadMagic) => {}
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+}
+
+#[test]
+fn corrupted_header_is_named() {
+    let mut buf = to_bytes(&dense_graph(), None);
+    buf[17] ^= 0xFF; // num_vertices byte: header checksum must catch it
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::HeaderCorrupt { .. }) => {}
+        other => panic!("expected HeaderCorrupt, got {other:?}"),
+    }
+}
+
+#[test]
+fn unsupported_version_is_named() {
+    let mut buf = to_bytes(&dense_graph(), None);
+    // bump the version field AND refresh the header checksum, so the
+    // version check (not the checksum) is what fires
+    buf[8] = (LGX_VERSION + 1) as u8;
+    resign_header(&mut buf);
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::UnsupportedVersion(v)) => assert_eq!(v, LGX_VERSION + 1),
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+}
+
+/// FNV-1a 64 (mirror of the format's checksum, for test-side re-signing).
+fn fnv(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+#[test]
+fn payload_corruption_is_named() {
+    let g = dense_graph();
+    let buf = to_bytes(&g, None);
+    // flip one byte in the indptr region (offset 70) and deep inside the
+    // indices region; each must surface as a checksum mismatch (or a
+    // structural error — never a silent wrong load). Positions avoid the
+    // zero padding between sections, which is alignment filler, not data.
+    for pos in [70usize, 1730, buf.len() / 2] {
+        let mut c = buf.clone();
+        c[pos] ^= 0x01;
+        match read_lgx(&mut &c[..]) {
+            Err(LgxError::ChecksumMismatch { expected, got }) => assert_ne!(expected, got),
+            Err(LgxError::Invalid(_)) => {} // structurally impossible values
+            other => panic!("byte {pos}: expected a named corruption error, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn truncation_is_named_per_section() {
+    let g = weighted_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let full = to_bytes(&perm.apply_to_graph(&g), Some(&perm));
+    // cutting anywhere must produce Truncated (header cut => Truncated("header"))
+    for keep in [0usize, 10, 63, 64, 100, full.len() - 1] {
+        let cut = &full[..keep];
+        match read_lgx(&mut &cut[..]) {
+            Err(LgxError::Truncated(section)) => assert!(!section.is_empty()),
+            other => panic!("keep {keep}: expected Truncated, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn perm_that_is_not_a_bijection_is_rejected() {
+    // hand-corrupt the perm section so checksums pass but the mapping is
+    // invalid: rebuild the file from a forged VertexPerm is impossible
+    // through the API, so splice bytes and re-sign the payload instead
+    let g = CscBuilder::new(3).edges(&[(0, 1), (1, 2)]).build().unwrap();
+    let perm = VertexPerm::identity(3);
+    let mut buf = to_bytes(&g, Some(&perm));
+    // perm section is the last 64-byte block; make forward = [0, 0, 1]
+    let perm_off = buf.len() - 64;
+    buf[perm_off..perm_off + 4].copy_from_slice(&0u32.to_le_bytes());
+    buf[perm_off + 4..perm_off + 8].copy_from_slice(&0u32.to_le_bytes());
+    buf[perm_off + 8..perm_off + 12].copy_from_slice(&1u32.to_le_bytes());
+    // re-sign the payload so only the bijection check can object. The
+    // checksum covers section bytes without padding; for this 3-vertex
+    // graph: indptr 16 B @ 64, indices 8 B @ 128, perm 12 B @ 192.
+    let mut sum = 0xcbf2_9ce4_8422_2325u64;
+    sum = fnv_continue(sum, &buf[64..64 + 16]); // indptr (4 × u32)
+    sum = fnv_continue(sum, &buf[128..128 + 8]); // indices (2 × u32)
+    sum = fnv_continue(sum, &buf[perm_off..perm_off + 12]); // perm (3 × u32)
+    buf[32..40].copy_from_slice(&sum.to_le_bytes());
+    resign_header(&mut buf);
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::Invalid(msg)) => assert!(msg.contains("bijection"), "{msg}"),
+        other => panic!("expected Invalid(bijection), got {other:?}"),
+    }
+}
+
+fn fnv_continue(h: u64, bytes: &[u8]) -> u64 {
+    bytes.iter().fold(h, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// Re-sign a hand-edited header so only the targeted structural check
+/// can object.
+fn resign_header(buf: &mut [u8]) {
+    let hsum = fnv(&buf[..40]);
+    buf[40..48].copy_from_slice(&hsum.to_le_bytes());
+}
+
+#[test]
+fn width_flag_must_be_consistent_with_edge_count() {
+    // a header claiming narrow offsets for >u32::MAX edges is rejected
+    // before any section is read (no absurd allocation attempts); |V| is
+    // forged large enough that the |V|² edge bound is not the check firing
+    let g = CscBuilder::new(2).edges(&[(0, 1)]).build().unwrap();
+    let mut buf = to_bytes(&g, None);
+    buf[16..24].copy_from_slice(&100_000u64.to_le_bytes()); // nv
+    buf[24..32].copy_from_slice(&(u32::MAX as u64 + 1).to_le_bytes()); // ne
+    resign_header(&mut buf);
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::Invalid(msg)) => assert!(msg.contains("u32::MAX"), "{msg}"),
+        other => panic!("expected Invalid(width), got {other:?}"),
+    }
+}
+
+#[test]
+fn absurd_header_sizes_are_rejected_before_allocation() {
+    let g = CscBuilder::new(2).edges(&[(0, 1)]).build().unwrap();
+    // nv beyond u32 addressability
+    let mut buf = to_bytes(&g, None);
+    buf[16..24].copy_from_slice(&(u32::MAX as u64 + 1).to_le_bytes());
+    resign_header(&mut buf);
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::Invalid(msg)) => assert!(msg.contains("addressable"), "{msg}"),
+        other => panic!("expected Invalid(vertex bound), got {other:?}"),
+    }
+    // ne beyond the |V|² structural maximum (wide flag set, so the width
+    // check cannot be the one firing)
+    let mut buf = to_bytes(&g, None);
+    let flags = u32::from_le_bytes(buf[12..16].try_into().unwrap()) | 0b10; // wide
+    buf[12..16].copy_from_slice(&flags.to_le_bytes());
+    buf[24..32].copy_from_slice(&(1u64 << 40).to_le_bytes());
+    resign_header(&mut buf);
+    match read_lgx(&mut &buf[..]) {
+        Err(LgxError::Invalid(msg)) => assert!(msg.contains("bound"), "{msg}"),
+        other => panic!("expected Invalid(edge bound), got {other:?}"),
+    }
+}
+
+#[test]
+fn indptr_width_is_selected_at_the_boundary() {
+    // the in-memory rule the format mirrors: |E| = u32::MAX narrows,
+    // one more widens (file-level: small graphs carry the narrow flag,
+    // verified by the roundtrip tests above keeping `is_narrow`)
+    assert!(IndPtr::from_u64(vec![0, u32::MAX as u64]).is_narrow());
+    assert!(!IndPtr::from_u64(vec![0, u32::MAX as u64 + 1]).is_narrow());
+    // and a wide in-memory graph round-trips through the wide file path:
+    // forge one by hand (tiny logical size, artificially wide offsets)
+    let wide = CscGraph {
+        indptr: IndPtr::U64(vec![0, 1, 2]),
+        indices: vec![1, 0],
+        weights: None,
+    };
+    wide.validate().unwrap();
+    let mut buf = Vec::new();
+    write_lgx(&mut buf, &wide, None).unwrap();
+    let (back, _) = read_lgx(&mut &buf[..]).unwrap();
+    // widths may differ (logical equality is width-agnostic)…
+    assert_eq!(back, wide);
+    // …and the file preserved the writer's width choice exactly
+    assert!(!back.indptr.is_narrow(), "wide flag must survive the round trip");
+}
+
+#[test]
+fn failed_save_never_clobbers_an_existing_file() {
+    let g = dense_graph();
+    let path = std::env::temp_dir().join(format!("labor_lgx_keep_{}.lgx", std::process::id()));
+    save_lgx(&path, &g, None).unwrap();
+    // a save that fails validation (perm size mismatch) must leave the
+    // existing file byte-for-byte intact, with no .tmp litter
+    let wrong_perm = VertexPerm::identity(g.num_vertices() + 1);
+    match save_lgx(&path, &g, Some(&wrong_perm)) {
+        Err(LgxError::Invalid(msg)) => assert!(msg.contains("perm covers"), "{msg}"),
+        other => panic!("expected Invalid(perm size), got {other:?}"),
+    }
+    let (back, perm) = load_lgx(&path).unwrap();
+    assert_eq!(back, g);
+    assert!(perm.is_none());
+    let tmp = format!("{}.tmp", path.display());
+    assert!(!std::path::Path::new(&tmp).exists(), "temp file left behind");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn load_errors_on_missing_file_are_io() {
+    match load_lgx("/nonexistent/labor/never.lgx") {
+        Err(LgxError::Io(_)) => {}
+        other => panic!("expected Io, got {other:?}"),
+    }
+}

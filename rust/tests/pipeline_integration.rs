@@ -40,6 +40,7 @@ fn pipeline_feeds_trainer_end_to_end() {
             seed: 4,
             intra_batch_threads: 1,
             data_plane: Some(plane),
+            output_perm: None,
         },
     );
     let mut losses = Vec::new();
@@ -78,6 +79,7 @@ fn feature_store_traffic_tracks_sampler_efficiency() {
                 seed: 5,
                 intra_batch_threads: 2,
                 data_plane: Some(plane),
+                output_perm: None,
             },
         );
         for b in &mut p {
@@ -120,6 +122,7 @@ fn degree_cache_cuts_slow_tier_traffic_in_the_pipeline() {
                 seed: 6,
                 intra_batch_threads: 1,
                 data_plane: Some(plane),
+                output_perm: None,
             },
         );
         let mut first_feats = Vec::new();

@@ -1,0 +1,285 @@
+//! Relabeled sampling is *equivalent in law* and layout-invisible.
+//!
+//! A degree-ordered relabel (`graph::compact`) changes vertex *numbers*,
+//! not the graph: every sampler's randomness is keyed by vertex id, so
+//! individual draws differ between layouts, but all of the paper's
+//! distributional guarantees must hold unchanged on the relabeled graph —
+//! the §3.2 floors re-run here on relabeled inputs. And the layout must be
+//! invisible to consumers: MFGs sampled on the relabeled graph, mapped
+//! back through the inverse permutation, validate against the *original*
+//! graph, and the pipeline's delivered original-id outputs are
+//! bit-identical across worker/shard counts.
+
+use labor_gnn::coordinator::cache::DegreeOrderedCache;
+use labor_gnn::coordinator::feature_store::TierModel;
+use labor_gnn::coordinator::pipeline::{DataPlaneConfig, PipelineConfig, SamplingPipeline};
+use labor_gnn::coordinator::GatheredLabels;
+use labor_gnn::data::Dataset;
+use labor_gnn::graph::compact::VertexPerm;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::sampler::{IterSpec, Mfg, MultiLayerSampler, SamplerKind, SamplerScratch};
+use std::sync::Arc;
+
+/// Same construction as the statistical-claims suite: dense,
+/// deterministic, 500 vertices, avg in-degree ≈ 60.
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+/// §3.2 degree floor on the relabeled layout: `E[d̃_s] ≥ min(k, d_s)` per
+/// seed, for LABOR-0 (equality), LABOR-1, and LABOR-*.
+#[test]
+fn relabeled_labor_meets_the_fanout_floor() {
+    let g = dense_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = perm.apply_to_graph(&g);
+    assert!(rg.is_degree_ordered());
+    let seeds: Vec<u32> = (0..40u32).map(|v| perm.to_new(v)).collect();
+    let k = 5usize;
+    let trials = 250u64;
+    let tol = 0.45; // > 3σ of the trial mean, as in statistical_claims.rs
+    let mut scratch = SamplerScratch::new();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(1), IterSpec::Converge] {
+        let kind = SamplerKind::Labor { iterations, layer_dependent: false };
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[k]);
+        let mut mean_deg = vec![0.0f64; seeds.len()];
+        for trial in 0..trials {
+            let mfg = sampler.sample(&rg, &seeds, 0xBEE ^ trial, &mut scratch);
+            for (si, d) in mfg.layers[0].sampled_degrees().iter().enumerate() {
+                mean_deg[si] += *d as f64;
+            }
+        }
+        for (si, &s) in seeds.iter().enumerate() {
+            let floor = rg.in_degree(s).min(k) as f64;
+            let got = mean_deg[si] / trials as f64;
+            assert!(
+                got >= floor - tol,
+                "{label} (relabeled): seed {s} E[d̃]={got:.3} < min(k, d)={floor} - {tol}"
+            );
+        }
+    }
+}
+
+/// The vertex-savings claim holds on the relabeled layout: LABOR-0
+/// samples fewer unique inputs than NS at the same fanout.
+#[test]
+fn relabeled_labor0_beats_ns_on_unique_inputs() {
+    let g = dense_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = perm.apply_to_graph(&g);
+    let seeds: Vec<u32> = (0..200u32).map(|v| perm.to_new(v)).collect();
+    let k = 10usize;
+    let trials = 250u64;
+    let labor = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[k],
+    );
+    let ns = MultiLayerSampler::new(SamplerKind::Neighbor, &[k]);
+    let mut scratch = SamplerScratch::new();
+    let (mut labor_total, mut ns_total, mut labor_wins) = (0usize, 0usize, 0usize);
+    for trial in 0..trials {
+        let lv = labor.sample(&rg, &seeds, trial, &mut scratch).layers[0].num_inputs();
+        let nv = ns.sample(&rg, &seeds, trial, &mut scratch).layers[0].num_inputs();
+        labor_total += lv;
+        ns_total += nv;
+        if lv < nv {
+            labor_wins += 1;
+        }
+    }
+    assert!(labor_total < ns_total, "LABOR-0 {labor_total} !< NS {ns_total} on relabeled graph");
+    assert!(
+        labor_wins as f64 >= 0.95 * trials as f64,
+        "LABOR-0 beat NS in only {labor_wins}/{trials} relabeled batches"
+    );
+}
+
+/// MFGs sampled on the relabeled graph, mapped back through the inverse
+/// permutation, are structurally valid against the ORIGINAL graph — for
+/// every sampler kind.
+#[test]
+fn mapped_back_mfgs_validate_against_the_original_graph() {
+    let g = dense_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = perm.apply_to_graph(&g);
+    let seeds: Vec<u32> = (30..110u32).map(|v| perm.to_new(v)).collect();
+    let kinds: Vec<SamplerKind> = vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Ladies { budgets: vec![150, 120] },
+        SamplerKind::Pladies { budgets: vec![150, 120] },
+    ];
+    let mut scratch = SamplerScratch::new();
+    for kind in kinds {
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[6, 6]);
+        let mut mfg = sampler.sample(&rg, &seeds, 99, &mut scratch);
+        // valid in the relabeled space…
+        for layer in &mfg.layers {
+            layer.validate(&rg).unwrap_or_else(|e| panic!("{label} relabeled: {e}"));
+        }
+        // …and, mapped back, valid against the original graph with the
+        // original seed ids
+        mfg.map_ids(|v| perm.to_old(v));
+        assert_eq!(mfg.layers[0].seeds, (30..110u32).collect::<Vec<_>>(), "{label}");
+        for layer in &mfg.layers {
+            layer.validate(&g).unwrap_or_else(|e| panic!("{label} mapped-back: {e}"));
+        }
+        // layers still chain after mapping
+        assert_eq!(mfg.layers[0].inputs, mfg.layers[1].seeds, "{label}");
+    }
+}
+
+fn mfgs_equal(a: &Mfg, b: &Mfg, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.seeds, lb.seeds, "{what} layer {l} seeds");
+        assert_eq!(la.inputs, lb.inputs, "{what} layer {l} inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l} edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l} edge_dst");
+        assert_eq!(la.edge_weight, lb.edge_weight, "{what} layer {l} edge_weight");
+    }
+}
+
+/// The full data plane on a relabeled dataset: delivered batches carry
+/// ORIGINAL ids (seeds and MFG vertices), features/labels that match the
+/// original dataset row-for-row, and are bit-identical for every
+/// (num_workers, intra_batch_threads) combination. The degree cache runs
+/// in its `id < k` prefix representation throughout.
+#[test]
+fn pipeline_delivers_original_ids_bit_identical_across_schedules() {
+    let ds = Dataset::generate(labor_gnn::data::spec("tiny").unwrap(), 0.2);
+    let (rds, perm) = ds.relabel_by_degree();
+    let perm = Arc::new(perm);
+    let cache = Arc::new(DegreeOrderedCache::new(&rds.graph, rds.num_vertices() / 10));
+    assert!(cache.is_prefix(), "relabeled dataset must give the prefix cache");
+    let graph = Arc::new(rds.graph.clone());
+    let train = Arc::new(rds.splits.train.clone());
+
+    let run = |workers: usize, shards: usize| -> Vec<(Vec<u32>, Mfg, Vec<f32>, GatheredLabels)> {
+        let plane = DataPlaneConfig::for_dataset(&rds, TierModel::local(), cache.clone());
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[4, 4],
+        ));
+        let mut p = SamplingPipeline::spawn(
+            graph.clone(),
+            sampler,
+            train.clone(),
+            PipelineConfig {
+                num_workers: workers,
+                queue_depth: 3,
+                batch_size: 64,
+                num_batches: 8,
+                seed: 17,
+                intra_batch_threads: shards,
+                data_plane: Some(plane),
+                output_perm: Some(perm.clone()),
+            },
+        );
+        let mut out = Vec::new();
+        for b in &mut p {
+            out.push((b.seeds.to_vec(), b.mfg, b.feats, b.labels));
+        }
+        // the original-id map-back is accounted as its own worker stage
+        assert!(
+            p.stage_metrics().map > std::time::Duration::ZERO,
+            "relabeled pipeline must record map-back time"
+        );
+        p.join();
+        out
+    };
+
+    let base = run(1, 1);
+    assert_eq!(base.len(), 8);
+    for (seeds, mfg, feats, labels) in &base {
+        // delivered seeds are original ids: members of the original split
+        for s in seeds {
+            assert!(ds.splits.train.contains(s), "seed {s} is not an original train id");
+        }
+        // the mapped-back MFG validates against the ORIGINAL graph
+        for layer in &mfg.layers {
+            layer.validate(&ds.graph).unwrap();
+        }
+        assert_eq!(&mfg.layers[0].seeds, seeds);
+        // delivered feature rows equal the ORIGINAL dataset's rows for the
+        // delivered (original-id) deepest-layer inputs
+        let deep = mfg.feature_vertices();
+        let dim = ds.num_features();
+        assert_eq!(feats.len(), deep.len() * dim);
+        for (r, &v) in deep.iter().enumerate() {
+            assert_eq!(&feats[r * dim..(r + 1) * dim], ds.feature(v), "row of vertex {v}");
+        }
+        // labels line up with the original seeds
+        match labels {
+            GatheredLabels::Single(y) => {
+                for (i, &s) in seeds.iter().enumerate() {
+                    assert_eq!(y[i], ds.labels[s as usize], "label of seed {s}");
+                }
+            }
+            other => panic!("expected single labels, got {other:?}"),
+        }
+    }
+
+    // bit-identical across schedules
+    for (workers, shards) in [(4usize, 1usize), (1, 3), (3, 2)] {
+        let multi = run(workers, shards);
+        assert_eq!(base.len(), multi.len());
+        for (bi, ((s_a, m_a, f_a, l_a), (s_b, m_b, f_b, l_b))) in
+            base.iter().zip(&multi).enumerate()
+        {
+            let what = format!("workers={workers} shards={shards} batch {bi}");
+            assert_eq!(s_a, s_b, "{what} seeds");
+            mfgs_equal(m_a, m_b, &what);
+            assert_eq!(f_a, f_b, "{what} feats");
+            assert_eq!(l_a, l_b, "{what} labels");
+        }
+    }
+}
+
+/// Sanity anchor for the batch correspondence the pipeline relies on:
+/// relabeled splits are the elementwise image of the original splits, so
+/// the delivered (mapped-back) seed sequence equals the sequence an
+/// all-original pipeline produces.
+#[test]
+fn relabeled_pipeline_seed_sequence_matches_the_original_pipeline() {
+    let ds = Dataset::generate(labor_gnn::data::spec("tiny").unwrap(), 0.2);
+    let (rds, perm) = ds.relabel_by_degree();
+    let sampler = || {
+        Arc::new(MultiLayerSampler::new(SamplerKind::Neighbor, &[3]))
+    };
+    let collect = |graph: &CscGraph, train: &[u32], perm: Option<Arc<VertexPerm>>| {
+        let mut p = SamplingPipeline::spawn(
+            Arc::new(graph.clone()),
+            sampler(),
+            Arc::new(train.to_vec()),
+            PipelineConfig {
+                num_workers: 2,
+                queue_depth: 2,
+                batch_size: 32,
+                num_batches: 6,
+                seed: 5,
+                intra_batch_threads: 1,
+                data_plane: None,
+                output_perm: perm,
+            },
+        );
+        let seeds: Vec<Vec<u32>> = (&mut p).map(|b| b.seeds.to_vec()).collect();
+        p.join();
+        seeds
+    };
+    let original = collect(&ds.graph, &ds.splits.train, None);
+    let relabeled =
+        collect(&rds.graph, &rds.splits.train, Some(Arc::new(perm)));
+    assert_eq!(original, relabeled, "mapped-back seed sequence must match the original");
+}
