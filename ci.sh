@@ -38,9 +38,14 @@ if [ "$MODE" != "fast" ]; then
   # allocation probe run end-to-end (see docs/BENCHMARKS.md); remove any
   # stale perf records first so the existence checks below can't pass on
   # them
-  rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json
+  rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json BENCH_serving.json
   cargo bench --bench pipeline -- --smoke
   cargo bench --bench samplers -- --smoke
+  # serving QoS sweep: coalesced-LABOR vs one-at-a-time NS across arrival
+  # rates × window sizes; the bench asserts the headline (coalesced
+  # LABOR-0 gathers fewer feature bytes per request than solo NS under
+  # load) and records p50/p99 latency + bytes/request per series
+  cargo bench --bench serving -- --smoke
   # the smoke runs must leave all machine-readable perf records behind:
   # batches/s per thread count, feature bytes moved per sampler × tier ×
   # cache (the bench itself asserts LABOR-0 < NS bytes), and the
@@ -50,12 +55,23 @@ if [ "$MODE" != "fast" ]; then
   test -f BENCH_pipeline.json || { echo "BENCH_pipeline.json missing"; exit 1; }
   test -f BENCH_datapipe.json || { echo "BENCH_datapipe.json missing"; exit 1; }
   test -f BENCH_graph.json || { echo "BENCH_graph.json missing"; exit 1; }
+  test -f BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
   echo "== BENCH_pipeline.json:"
   cat BENCH_pipeline.json
   echo "== BENCH_datapipe.json:"
   cat BENCH_datapipe.json
   echo "== BENCH_graph.json:"
   cat BENCH_graph.json
+  echo "== BENCH_serving.json:"
+  cat BENCH_serving.json
+
+  echo "== serve smoke: online coalescing front end via the repro CLI"
+  # a short Zipf request stream through `repro serve` (deadline-window
+  # coalescing + demux); the command asserts its own bookkeeping
+  # (served + missed == requests, per-response accounting) and prints the
+  # QoS summary. NOTE: bare boolean flags like --smoke must come last.
+  ./target/release/repro serve --dataset flickr-sim --scale 0.1 \
+    --method labor-0 --rate 4000 --window-us 1000 --smoke
 fi
 
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"

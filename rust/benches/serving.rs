@@ -1,0 +1,212 @@
+//! Online serving QoS: coalesced-LABOR vs one-at-a-time NS.
+//!
+//! An open-loop Zipf request stream (popularity = degree rank, the
+//! serving-realistic skew) is replayed through the coalescing front end
+//! (`coordinator::serving`) at several arrival rates and window sizes,
+//! against a solo baseline — the *same* front-end machinery with
+//! `max_batch = 1` and a zero window, so the only variable is coalescing.
+//! Reported per series: response-time p50/p99, the coalescing factor, and
+//! feature bytes per request (gathered = what the shared pass fetched;
+//! returned = what per-request serving hands back — their ratio is the
+//! §3.2 shared-variate dedup win, measured at the serving boundary).
+//!
+//! Results go to `BENCH_serving.json` (asserted + printed by ci.sh). The
+//! bench itself asserts the headline: at the highest arrival rate,
+//! coalesced LABOR-0 gathers fewer bytes per request than one-at-a-time
+//! NS.
+//!
+//! `cargo bench --bench serving` — full run.
+//! `cargo bench --bench serving -- --smoke` — tiny request counts.
+
+use labor_gnn::coordinator::cache::NullCache;
+use labor_gnn::coordinator::feature_store::{FeatureStore, TierModel};
+use labor_gnn::coordinator::pipeline::DataPlaneConfig;
+use labor_gnn::coordinator::serving::{replay_open_loop, ServingConfig, ServingFrontEnd};
+use labor_gnn::coordinator::ServingSnapshot;
+use labor_gnn::data::Dataset;
+use labor_gnn::graph::compact::degree_order;
+use labor_gnn::graph::gen::{zipf_requests, ZipfRequestConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[allow(clippy::too_many_arguments)]
+fn run_serving(
+    graph: &Arc<CscGraph>,
+    ds: &Dataset,
+    kind: SamplerKind,
+    fanouts: &[usize],
+    seeds: &[u32],
+    gaps: &[Duration],
+    window: Duration,
+    max_batch: usize,
+) -> ServingSnapshot {
+    let store = FeatureStore::new(ds.features.clone(), ds.num_features(), TierModel::local())
+        .with_cache(Arc::new(NullCache));
+    let front = ServingFrontEnd::spawn(
+        graph.clone(),
+        Arc::new(MultiLayerSampler::new(kind, fanouts)),
+        ServingConfig {
+            window,
+            max_batch,
+            queue_depth: 4096,
+            // generous deadline: this bench measures latency and bytes,
+            // not admission-control behavior
+            default_deadline: Duration::from_secs(10),
+            seed: 7,
+            intra_batch_threads: 1,
+            data_plane: Some(DataPlaneConfig { store: Arc::new(store), labels: None }),
+            output_perm: None,
+        },
+    );
+    let handle = front.handle();
+    let pending = replay_open_loop(&handle, seeds, gaps);
+    drop(handle);
+    for p in pending {
+        p.wait().expect("request failed");
+    }
+    let snap = front.shutdown();
+    assert_eq!(snap.served + snap.expired, seeds.len() as u64, "lost responses");
+    snap
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ds = Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset");
+    let graph = Arc::new(ds.graph.clone());
+    let order = degree_order(&graph);
+    let fanouts = [10usize, 10];
+    let requests: usize = if smoke { 150 } else { 1000 };
+    let skew = 1.0f64;
+    let rates = [500.0f64, 2000.0, 8000.0];
+    let windows_us = [500u64, 2000];
+    let max_batch = 64usize;
+
+    println!(
+        "== serving: coalesced labor-0 vs solo ns, flickr-sim 0.1, fanout 10x2, \
+         {requests} requests/series, zipf skew {skew} over degree rank"
+    );
+    println!(
+        "{:<18} {:>8} {:>10} {:>8} {:>9} {:>9} {:>9} {:>11} {:>11}",
+        "mode", "req/s", "window", "coalesce", "p50 ms", "p99 ms", "mean ms", "B/req gath", "B/req ret"
+    );
+
+    let mut series = Vec::new();
+    let mut record = |mode: &str, rate: f64, window_us: u64, snap: &ServingSnapshot| {
+        println!(
+            "{:<18} {:>8.0} {:>8}us {:>8.2} {:>9.3} {:>9.3} {:>9.3} {:>11.0} {:>11.0}",
+            mode,
+            rate,
+            window_us,
+            snap.coalescing_factor(),
+            ms(snap.latency.p50),
+            ms(snap.latency.p99),
+            ms(snap.latency.mean),
+            snap.bytes_gathered_per_request(),
+            snap.bytes_returned_per_request(),
+        );
+        series.push(Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("rate_hz", Json::Num(rate)),
+            ("window_us", Json::Num(window_us as f64)),
+            ("requests", Json::Num(requests as f64)),
+            ("served", Json::Num(snap.served as f64)),
+            ("expired", Json::Num(snap.expired as f64)),
+            ("batches", Json::Num(snap.batches as f64)),
+            ("coalescing_factor", Json::Num(snap.coalescing_factor())),
+            ("p50_ms", Json::Num(ms(snap.latency.p50))),
+            ("p90_ms", Json::Num(ms(snap.latency.p90))),
+            ("p99_ms", Json::Num(ms(snap.latency.p99))),
+            ("mean_ms", Json::Num(ms(snap.latency.mean))),
+            ("max_ms", Json::Num(ms(snap.latency.max))),
+            ("bytes_gathered_per_request", Json::Num(snap.bytes_gathered_per_request())),
+            ("bytes_returned_per_request", Json::Num(snap.bytes_returned_per_request())),
+            ("dedup_ratio", Json::Num(snap.dedup_ratio())),
+        ]));
+    };
+
+    // headline comparison, filled in during the sweep
+    let mut coalesced_best: Option<f64> = None;
+    let mut solo_at_max_rate: Option<f64> = None;
+
+    for &rate in &rates {
+        // the two serving modes share one request stream per rate: same
+        // seeds, same arrival times — coalescing is the only variable
+        let stream = zipf_requests(&ZipfRequestConfig {
+            num_ids: graph.num_vertices(),
+            exponent: skew,
+            num_requests: requests,
+            rate_hz: rate,
+            seed: 42,
+        });
+        let seeds: Vec<u32> = stream.seeds.iter().map(|&r| order[r as usize]).collect();
+
+        for &window_us in &windows_us {
+            let snap = run_serving(
+                &graph,
+                &ds,
+                SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+                &fanouts,
+                &seeds,
+                &stream.gaps,
+                Duration::from_micros(window_us),
+                max_batch,
+            );
+            if rate == rates[rates.len() - 1] && window_us == windows_us[windows_us.len() - 1]
+            {
+                coalesced_best = Some(snap.bytes_gathered_per_request());
+            }
+            record("coalesced-labor0", rate, window_us, &snap);
+        }
+
+        let snap = run_serving(
+            &graph,
+            &ds,
+            SamplerKind::Neighbor,
+            &fanouts,
+            &seeds,
+            &stream.gaps,
+            Duration::ZERO,
+            1,
+        );
+        if rate == rates[rates.len() - 1] {
+            solo_at_max_rate = Some(snap.bytes_gathered_per_request());
+        }
+        record("solo-ns", rate, 0, &snap);
+    }
+
+    // the serving-layer restatement of the paper's data-movement claim:
+    // under load, coalesced LABOR-0 fetches fewer feature bytes per
+    // request than sampling each request alone with NS
+    let (coalesced, solo) = (coalesced_best.unwrap(), solo_at_max_rate.unwrap());
+    assert!(
+        coalesced < solo,
+        "coalesced LABOR-0 gathered {coalesced:.0} B/req, expected < solo NS {solo:.0} B/req"
+    );
+    println!(
+        "(coalesced LABOR-0 fetches {:.1}% of solo NS bytes/request at {} req/s)",
+        coalesced / solo * 100.0,
+        rates[rates.len() - 1]
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("dataset", Json::Str("flickr-sim".into())),
+        ("scale", Json::Num(0.1)),
+        ("smoke", Json::Bool(smoke)),
+        ("fanouts", Json::Arr(fanouts.iter().map(|&f| Json::Num(f as f64)).collect())),
+        ("requests_per_series", Json::Num(requests as f64)),
+        ("zipf_exponent", Json::Num(skew)),
+        ("max_batch", Json::Num(max_batch as f64)),
+        ("series", Json::Arr(series)),
+    ]);
+    std::fs::write("BENCH_serving.json", format!("{report}\n"))
+        .expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
+}

@@ -7,6 +7,125 @@ use crate::util::stats::Welford;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+/// Number of log2 buckets in a [`LatencyHistogram`] — bucket `i` covers
+/// `[2^i, 2^{i+1})` nanoseconds, so 64 buckets span every representable
+/// `u64` nanosecond count (bucket 0 doubles as the `< 2 ns` bucket).
+const HIST_BUCKETS: usize = 64;
+
+/// Fixed-bucket concurrent latency histogram: log2 nanosecond buckets,
+/// relaxed-atomic counters, so any number of threads record into one
+/// shared instance (the same contract as [`StageTimers`]). Replaces
+/// mean-only accounting wherever a tail matters: the pipeline's
+/// queue-wait (backpressure is bursty — a mean hides the stalls) and the
+/// serving layer's per-request response times (p50/p99 are the
+/// quality-of-service metric, cf. `coordinator::serving`).
+///
+/// Quantiles are read from bucket upper edges, clamped to the observed
+/// maximum — reported values are exact to within one power-of-two bucket
+/// (a factor-of-2 resolution), which is what fixed storage buys: 64
+/// counters, O(1) record, no allocation, no lock.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            63 - ns.leading_zeros() as usize
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean over all recorded samples (not bucket-quantized).
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// The `q`-quantile (`0.0 < q <= 1.0`) as the upper edge of the first
+    /// bucket whose cumulative count reaches `ceil(q * count)`, clamped to
+    /// the observed maximum. Zero when nothing was recorded.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let max_ns = self.max_ns.load(Ordering::Relaxed);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                let hi = if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                return Duration::from_nanos(hi.min(max_ns));
+            }
+        }
+        Duration::from_nanos(max_ns)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            max: self.max(),
+        }
+    }
+}
+
+/// A point-in-time read of a [`LatencyHistogram`]. Quantiles carry the
+/// histogram's factor-of-2 bucket resolution; `mean` and `max` are exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
 /// Accumulates per-layer statistics over many sampled batches.
 #[derive(Clone, Debug)]
 pub struct SamplerStats {
@@ -89,6 +208,7 @@ pub struct StageTimers {
     gather_ns: AtomicU64,
     map_ns: AtomicU64,
     queue_wait_ns: AtomicU64,
+    queue_wait_hist: LatencyHistogram,
     batches: AtomicU64,
 }
 
@@ -107,8 +227,12 @@ impl StageTimers {
         self.map_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    /// Per-batch queue-wait: accumulated into the mean *and* a
+    /// [`LatencyHistogram`] — backpressure is bursty, and the p99 of this
+    /// distribution is what the mean used to hide.
     pub fn record_queue_wait(&self, d: Duration) {
         self.queue_wait_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.queue_wait_hist.record(d);
     }
 
     pub fn record_batch(&self) {
@@ -122,6 +246,7 @@ impl StageTimers {
             gather: Duration::from_nanos(self.gather_ns.load(Ordering::Relaxed)),
             map: Duration::from_nanos(self.map_ns.load(Ordering::Relaxed)),
             queue_wait: Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed)),
+            queue_wait_hist: self.queue_wait_hist.snapshot(),
         }
     }
 }
@@ -136,6 +261,9 @@ pub struct StageSnapshot {
     /// original-id map-back time (relabeled pipelines; zero otherwise)
     pub map: Duration,
     pub queue_wait: Duration,
+    /// per-batch queue-wait distribution (p50/p99/max), one sample per
+    /// delivered batch — the tail the `queue_wait` total can't show
+    pub queue_wait_hist: HistogramSnapshot,
 }
 
 impl StageSnapshot {
@@ -186,7 +314,50 @@ mod tests {
         assert!((s.mean_gather_ms() - 2.0).abs() < 1e-9);
         assert!((s.mean_map_ms() - 3.0).abs() < 1e-9);
         assert!((s.mean_queue_wait_ms() - 1.0).abs() < 1e-9);
+        assert_eq!(s.queue_wait_hist.count, 4);
+        assert_eq!(s.queue_wait_hist.mean, Duration::from_millis(1));
+        assert_eq!(s.queue_wait_hist.max, Duration::from_millis(1));
+        // identical samples: every quantile lands in the same bucket, and
+        // the upper edge is clamped to the observed max
+        assert_eq!(s.queue_wait_hist.p50, Duration::from_millis(1));
+        assert_eq!(s.queue_wait_hist.p99, Duration::from_millis(1));
         assert_eq!(StageSnapshot::default().mean_sample_ms(), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_have_bucket_resolution() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.snapshot(), HistogramSnapshot::default());
+        // 98 fast samples and 2 slow outliers: p50 tracks the fast mode,
+        // p99 reaches the tail, everything within the 2x bucket bound
+        for _ in 0..98 {
+            h.record(Duration::from_micros(100));
+        }
+        for _ in 0..2 {
+            h.record(Duration::from_millis(50));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        assert!(p50 >= Duration::from_micros(100) && p50 <= Duration::from_micros(200));
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= Duration::from_millis(25) && p99 <= Duration::from_millis(50));
+        assert_eq!(h.max(), Duration::from_millis(50));
+        assert_eq!(h.quantile(1.0), Duration::from_millis(50));
+        let mean = h.mean();
+        assert!(mean > Duration::from_micros(100) && mean < Duration::from_millis(2));
+    }
+
+    #[test]
+    fn latency_histogram_handles_extremes() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_nanos(1));
+        assert_eq!(h.count(), 2);
+        // both land in bucket 0; the quantile clamps to the observed max
+        assert_eq!(h.quantile(0.99), Duration::from_nanos(1));
+        // a duration beyond u64 nanoseconds saturates instead of wrapping
+        h.record(Duration::from_secs(u64::MAX / 1_000_000_000 + 1));
+        assert_eq!(h.quantile(1.0), Duration::from_nanos(u64::MAX));
     }
 
     #[test]

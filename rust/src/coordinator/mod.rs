@@ -1,17 +1,25 @@
 //! The L3 streaming coordinator: epoch batching, a parallel sampling
-//! pipeline with bounded-queue backpressure, and the feature data plane —
+//! pipeline with bounded-queue backpressure, the feature data plane —
 //! a shared concurrent feature/label store with a simulated slow tier,
-//! pluggable feature-cache policies, in-pipeline gather, and the metrics
-//! that back the paper's tables.
+//! pluggable feature-cache policies, in-pipeline gather — an online
+//! serving front end that coalesces single-seed requests into shared
+//! LABOR batches, and the metrics that back the paper's tables.
 
 pub mod batcher;
 pub mod cache;
 pub mod feature_store;
 pub mod metrics;
 pub mod pipeline;
+pub mod serving;
 
 pub use batcher::EpochBatcher;
 pub use cache::{DegreeOrderedCache, FeatureCache, NullCache};
 pub use feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
-pub use metrics::{SamplerStats, StageSnapshot, StageTimers};
+pub use metrics::{
+    HistogramSnapshot, LatencyHistogram, SamplerStats, StageSnapshot, StageTimers,
+};
 pub use pipeline::{DataPlaneConfig, PipelineConfig, SampledBatch, SamplingPipeline};
+pub use serving::{
+    coalesce_seeds, replay_open_loop, PendingResponse, ServeError, ServeHandle,
+    ServeResponse, ServingConfig, ServingFrontEnd, ServingSnapshot,
+};

@@ -538,6 +538,13 @@ mod tests {
             "blocked sends must register as queue-wait, got {:?}",
             p.stage_metrics().queue_wait
         );
+        // the same waits feed the per-batch histogram (one sample per
+        // delivered batch; the last send may still be mid-record, and the
+        // bucketed p99 can only over-report, never undershoot the mean)
+        let hist = p.stage_metrics().queue_wait_hist;
+        assert!(hist.count >= 9, "expected ≥9 queue-wait samples, got {}", hist.count);
+        assert!(hist.p99 >= hist.p50);
+        assert!(hist.max >= hist.mean);
         p.join();
     }
 

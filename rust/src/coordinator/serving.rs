@@ -1,0 +1,644 @@
+//! Online serving front end: deadline-window coalescing of single-seed
+//! requests into shared-variate LABOR batches.
+//!
+//! Training iterates over an epoch; *serving* answers a stream of
+//! independent single-seed ego-net requests (one user, one inference).
+//! Sampling each request alone forfeits the paper's central win: LABOR's
+//! shared `r_t` variate per candidate vertex (§3.2) makes concurrent
+//! seeds *dedupe* their sampled neighborhoods — but only if they are
+//! sampled in one batch. This module is the admission layer that
+//! manufactures those batches out of a request stream:
+//!
+//! 1. **Queue** — requests enter a bounded MPSC queue (backpressure: a
+//!    full queue blocks the submitter, same discipline as the training
+//!    pipeline's bounded channel), each carrying a deadline.
+//! 2. **Coalesce** — a window opens when the first request lands and the
+//!    batch flushes when the window closes *or* `max_batch` requests
+//!    accumulate, whichever is first. An idle server never flushes —
+//!    windows are request-triggered, so there are no empty batches.
+//! 3. **One shared pass** — deadline-expired requests are failed with a
+//!    named error (never silently dropped), the survivors' seeds are
+//!    deduplicated (first-seen order) and sampled as *one* LABOR batch —
+//!    reusing the training engine untouched: [`ScratchPool`] arenas,
+//!    `intra_batch_threads` shard parallelism, the
+//!    [`FeatureStore`](super::FeatureStore) + cache gather, and
+//!    `output_perm` relabeled layouts.
+//! 4. **Demux** — [`MfgSeedView`] slices the shared MFG back into
+//!    per-seed sub-MFGs (bit-identical to solo sampling for NS; validated
+//!    + statistically pinned for LABOR, see `tests/serving.rs`), and each
+//!    response gets its own feature rows copied out of the shared gather
+//!    buffer, with per-request latency and byte accounting.
+//!
+//! The quality-of-service metrics are the ones the serving literature
+//! asks for: response-time p50/p99 (a [`LatencyHistogram`]), the
+//! coalescing factor (requests per sampler pass), and byte amplification
+//! — unique rows the batch gathered vs rows returned across its
+//! responses. `bytes_gathered / bytes_returned < 1` *is* the dedup win,
+//! measured per batch.
+//!
+//! Failure semantics match the pipeline: a panicking worker disconnects
+//! every pending response (waiters observe [`ServeError::Shutdown`]) and
+//! the panic is re-raised on the thread that calls
+//! [`ServingFrontEnd::shutdown`].
+
+use super::feature_store::GatheredLabels;
+use super::metrics::{HistogramSnapshot, LatencyHistogram};
+use super::pipeline::DataPlaneConfig;
+use crate::graph::compact::VertexPerm;
+use crate::graph::CscGraph;
+use crate::rng::mix2;
+use crate::sampler::{EpochMap, Mfg, MfgSeedView, MultiLayerSampler, ScratchPool};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Admission-layer configuration. The sampling engine itself (graph,
+/// sampler, shards, data plane, relabeling) is shared with the training
+/// pipeline; what's new here is the queueing policy.
+#[derive(Clone)]
+pub struct ServingConfig {
+    /// coalescing window: how long the first request of a batch may wait
+    /// for company before the batch flushes
+    pub window: Duration,
+    /// flush early once this many requests accumulate
+    pub max_batch: usize,
+    /// bounded request-queue depth (submitters block beyond this)
+    pub queue_depth: usize,
+    /// deadline for [`ServeHandle::submit`]; requests past their deadline
+    /// at flush time fail with [`ServeError::DeadlineExpired`]
+    pub default_deadline: Duration,
+    /// base RNG seed; batch `b` samples with `mix2(seed, b)`
+    pub seed: u64,
+    /// intra-batch shard parallelism for the coalesced sampler pass
+    /// (1 = sequential; output is bit-identical either way)
+    pub intra_batch_threads: usize,
+    /// when set, responses carry pre-gathered deepest-layer feature rows
+    /// and the seed's label
+    pub data_plane: Option<DataPlaneConfig>,
+    /// when the graph lives in a relabeled id space (e.g.
+    /// `Dataset::relabel_by_degree`): requests and responses speak
+    /// **original** ids; sampling and gathering run relabeled (keeping the
+    /// cache's `id < k` prefix fast path), exactly as in the pipeline
+    pub output_perm: Option<Arc<VertexPerm>>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            window: Duration::from_millis(1),
+            max_batch: 64,
+            queue_depth: 1024,
+            default_deadline: Duration::from_millis(250),
+            seed: 0,
+            intra_batch_threads: 1,
+            data_plane: None,
+            output_perm: None,
+        }
+    }
+}
+
+/// Why a request failed. Deadline misses are *named*, never silent: the
+/// caller always receives exactly one terminal event per submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// the request was already past its deadline when its batch flushed
+    DeadlineExpired { seed: u32, late_by: Duration },
+    /// the front end shut down (or its worker died) before responding
+    Shutdown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExpired { seed, late_by } => {
+                write!(f, "request for seed {seed} missed its deadline by {late_by:?}")
+            }
+            ServeError::Shutdown => write!(f, "serving front end shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One request's slice of a coalesced batch.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    /// the seed as submitted (original-id space)
+    pub seed: u32,
+    /// the seed's induced sub-MFG (original ids; every layer validates
+    /// against the graph)
+    pub mfg: Mfg,
+    /// this seed's deepest-layer feature rows, row-major `|V^L| × dim` —
+    /// empty without a data plane
+    pub feats: Vec<f32>,
+    /// this seed's label — `None` without a label plane
+    pub label: GatheredLabels,
+    /// submit → response wall time (queue wait + window + sample + demux)
+    pub latency: Duration,
+    /// how many live requests shared this sampler pass (the coalescing
+    /// factor of this batch)
+    pub batch_size: usize,
+    /// feature bytes returned to this request (`|V^L| × row_bytes`)
+    pub bytes_returned: u64,
+    /// unique feature bytes the shared pass gathered for the whole batch —
+    /// `bytes_gathered / Σ bytes_returned` < 1 is the dedup win
+    pub batch_bytes_gathered: u64,
+}
+
+struct ServeRequest {
+    seed: u32,
+    deadline: Instant,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<ServeResponse, ServeError>>,
+}
+
+/// Cloneable submission handle. Dropping every handle (plus the front
+/// end's own sender via [`ServingFrontEnd::shutdown`]) is what lets the
+/// worker drain and exit.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: mpsc::SyncSender<ServeRequest>,
+    default_deadline: Duration,
+}
+
+impl ServeHandle {
+    /// Enqueue a single-seed request with the configured default deadline.
+    /// Blocks while the request queue is full (admission backpressure).
+    pub fn submit(&self, seed: u32) -> PendingResponse {
+        self.submit_with_deadline(seed, self.default_deadline)
+    }
+
+    /// [`submit`](Self::submit) with an explicit deadline budget from now.
+    pub fn submit_with_deadline(&self, seed: u32, budget: Duration) -> PendingResponse {
+        let now = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let req = ServeRequest { seed, deadline: now + budget, enqueued: now, tx };
+        // a dead worker means the request (and its response sender) is
+        // dropped here, which surfaces as `Shutdown` on wait()
+        let _ = self.tx.send(req);
+        PendingResponse { rx }
+    }
+}
+
+/// The caller's side of one submitted request: exactly one terminal event
+/// arrives — a response, a named deadline error, or `Shutdown`.
+pub struct PendingResponse {
+    rx: mpsc::Receiver<Result<ServeResponse, ServeError>>,
+}
+
+impl PendingResponse {
+    /// Block until this request resolves.
+    pub fn wait(self) -> Result<ServeResponse, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Shutdown))
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<ServeResponse, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServeError::Shutdown)),
+        }
+    }
+}
+
+#[derive(Default)]
+struct ServingMetrics {
+    requests: AtomicU64,
+    served: AtomicU64,
+    expired: AtomicU64,
+    batches: AtomicU64,
+    unique_rows: AtomicU64,
+    returned_rows: AtomicU64,
+    bytes_gathered: AtomicU64,
+    bytes_returned: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+impl ServingMetrics {
+    fn snapshot(&self) -> ServingSnapshot {
+        ServingSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            unique_rows: self.unique_rows.load(Ordering::Relaxed),
+            returned_rows: self.returned_rows.load(Ordering::Relaxed),
+            bytes_gathered: self.bytes_gathered.load(Ordering::Relaxed),
+            bytes_returned: self.bytes_returned.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time serving statistics: request/response/timeout counts, the
+/// coalescing factor, row/byte dedup accounting, and the response-time
+/// distribution (p50/p99 via [`HistogramSnapshot`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServingSnapshot {
+    /// requests pulled off the queue so far
+    pub requests: u64,
+    pub served: u64,
+    /// deadline-expired requests (each got a named error)
+    pub expired: u64,
+    /// coalesced sampler passes
+    pub batches: u64,
+    /// unique deepest-layer rows across all batches (what was gathered)
+    pub unique_rows: u64,
+    /// rows handed back across all responses (what solo serving would
+    /// have gathered from those same coalesced samples)
+    pub returned_rows: u64,
+    pub bytes_gathered: u64,
+    pub bytes_returned: u64,
+    /// submit → response latency distribution, one sample per response
+    pub latency: HistogramSnapshot,
+}
+
+impl ServingSnapshot {
+    /// Mean served requests per sampler pass (≥ 1 under load — the knob
+    /// the window/`max_batch` pair controls).
+    pub fn coalescing_factor(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// `unique_rows / returned_rows` — the fraction of per-request row
+    /// traffic the shared pass actually had to gather (< 1 = dedup win).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.returned_rows == 0 {
+            1.0
+        } else {
+            self.unique_rows as f64 / self.returned_rows as f64
+        }
+    }
+
+    pub fn bytes_gathered_per_request(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.bytes_gathered as f64 / self.served as f64
+        }
+    }
+
+    pub fn bytes_returned_per_request(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.bytes_returned as f64 / self.served as f64
+        }
+    }
+}
+
+/// The micro-batching serving front end; see the [module docs](self).
+pub struct ServingFrontEnd {
+    tx: Option<mpsc::SyncSender<ServeRequest>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<ServingMetrics>,
+    default_deadline: Duration,
+}
+
+impl ServingFrontEnd {
+    /// Spawn the coalescer worker. `sampler` must have ≥ 1 layer.
+    pub fn spawn(
+        graph: Arc<CscGraph>,
+        sampler: Arc<MultiLayerSampler>,
+        cfg: ServingConfig,
+    ) -> Self {
+        assert!(sampler.num_layers() > 0, "serving needs a sampler with >= 1 layer");
+        let (tx, rx) = mpsc::sync_channel::<ServeRequest>(cfg.queue_depth.max(1));
+        let metrics = Arc::new(ServingMetrics::default());
+        let default_deadline = cfg.default_deadline;
+        let worker_metrics = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            coalescer_loop(&graph, &sampler, &cfg, &worker_metrics, &rx);
+        });
+        Self { tx: Some(tx), worker: Some(worker), metrics, default_deadline }
+    }
+
+    /// A cloneable submission handle.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            tx: self.tx.clone().expect("front end already shut down"),
+            default_deadline: self.default_deadline,
+        }
+    }
+
+    /// Serving statistics so far; valid mid-stream and after shutdown.
+    pub fn metrics(&self) -> ServingSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful stop: close the front end's sender, wait for the worker
+    /// to drain every queued request (no lost responses — callers must
+    /// drop their [`ServeHandle`] clones for the drain to terminate), and
+    /// re-raise the worker's panic if it died (the pipeline's contract).
+    pub fn shutdown(mut self) -> ServingSnapshot {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            if let Err(panic) = w.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for ServingFrontEnd {
+    fn drop(&mut self) {
+        // close the queue so the worker can drain and exit on its own;
+        // never join here — a surviving ServeHandle clone would deadlock
+        // the drop. `shutdown()` is the graceful (and panic-propagating)
+        // path.
+        drop(self.tx.take());
+    }
+}
+
+/// Deduplicate request seeds in first-seen order. Returns the unique seed
+/// list (the coalesced batch's seed set) and, per request, the position of
+/// its seed inside that list — the demux key for [`MfgSeedView::extract`].
+pub fn coalesce_seeds(seeds: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let mut unique = Vec::with_capacity(seeds.len());
+    let mut pos = Vec::with_capacity(seeds.len());
+    let mut map = std::collections::HashMap::with_capacity(seeds.len());
+    for &s in seeds {
+        let p = *map.entry(s).or_insert_with(|| {
+            unique.push(s);
+            (unique.len() - 1) as u32
+        });
+        pos.push(p);
+    }
+    (unique, pos)
+}
+
+/// Open-loop workload replay: submit `seeds[i]` after the cumulative
+/// arrival gaps `gaps[..=i]` have elapsed (absolute schedule, so sleep
+/// jitter does not accumulate into rate drift). Returns the pending
+/// responses in submission order; an empty/short `gaps` means
+/// back-to-back submission.
+pub fn replay_open_loop(
+    handle: &ServeHandle,
+    seeds: &[u32],
+    gaps: &[Duration],
+) -> Vec<PendingResponse> {
+    let start = Instant::now();
+    let mut due = Duration::ZERO;
+    let mut out = Vec::with_capacity(seeds.len());
+    for (i, &s) in seeds.iter().enumerate() {
+        due += gaps.get(i).copied().unwrap_or(Duration::ZERO);
+        let elapsed = start.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        out.push(handle.submit(s));
+    }
+    out
+}
+
+/// The coalescer: block for the first request (windows are
+/// request-triggered), then fill the batch until the window closes,
+/// `max_batch` is reached, or the queue disconnects. `recv` returning
+/// `Disconnected` implies the queue is closed *and empty*, so shutdown
+/// naturally drains every queued request before the loop exits.
+fn coalescer_loop(
+    graph: &CscGraph,
+    sampler: &MultiLayerSampler,
+    cfg: &ServingConfig,
+    metrics: &ServingMetrics,
+    rx: &mpsc::Receiver<ServeRequest>,
+) {
+    let shards = cfg.intra_batch_threads.max(1);
+    let max_batch = cfg.max_batch.max(1);
+    let mut pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
+    let mut demux_map = EpochMap::default();
+    let mut batch_id = 0u64;
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let flush_at = Instant::now() + cfg.window;
+        let mut disconnected = false;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            match rx.recv_timeout(flush_at - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        serve_batch(graph, sampler, cfg, metrics, batch_id, batch, &mut pool, &mut demux_map);
+        batch_id += 1;
+        if disconnected {
+            return;
+        }
+    }
+}
+
+/// One coalesced pass: expire, dedupe, sample, gather, demux, respond.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    graph: &CscGraph,
+    sampler: &MultiLayerSampler,
+    cfg: &ServingConfig,
+    metrics: &ServingMetrics,
+    batch_id: u64,
+    batch: Vec<ServeRequest>,
+    pool: &mut ScratchPool,
+    demux_map: &mut EpochMap,
+) {
+    metrics.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    // 1. deadline check at flush time: expired requests fail with a named
+    //    error. (A deadline that lapses *during* the sampler pass still
+    //    gets its response — admission rejects, it does not abort.)
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for req in batch {
+        if now > req.deadline {
+            let late_by = now - req.deadline;
+            metrics.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .tx
+                .send(Err(ServeError::DeadlineExpired { seed: req.seed, late_by }));
+        } else {
+            live.push(req);
+        }
+    }
+    if live.is_empty() {
+        // a fully-expired flush performs no sampler pass
+        return;
+    }
+    // 2. dedupe (first-seen order) in the request id space, then translate
+    //    to the sampling id space if the graph is relabeled
+    let request_seeds: Vec<u32> = live.iter().map(|r| r.seed).collect();
+    let (unique, pos) = coalesce_seeds(&request_seeds);
+    let sample_seeds: Vec<u32> = match &cfg.output_perm {
+        Some(perm) => unique.iter().map(|&v| perm.to_new(v)).collect(),
+        None => unique,
+    };
+    // 3. one shared sampler pass (bit-identical across shard counts)
+    let batch_seed = mix2(cfg.seed, batch_id);
+    let shards = cfg.intra_batch_threads.max(1);
+    let mut mfg = if shards > 1 {
+        sampler.sample_sharded(graph, &sample_seeds, batch_seed, shards, pool)
+    } else {
+        sampler.sample(graph, &sample_seeds, batch_seed, pool.main_mut())
+    };
+    // 4. one shared gather (relabeled space, same as the pipeline)
+    let mut batch_feats = Vec::new();
+    let mut batch_labels = GatheredLabels::None;
+    let mut dim = 0usize;
+    let mut row_bytes = 0u64;
+    if let Some(plane) = &cfg.data_plane {
+        plane.store.gather(mfg.feature_vertices(), &mut batch_feats);
+        if let Some(ls) = &plane.labels {
+            batch_labels = ls.gather(&sample_seeds);
+        }
+        dim = plane.store.dim();
+        row_bytes = plane.store.row_bytes();
+    }
+    let batch_rows = mfg.feature_vertices().len() as u64;
+    let batch_bytes = batch_rows * row_bytes;
+    // 5. back to original ids *before* demux — extraction is positional,
+    //    so the sub-MFGs inherit the mapped ids
+    if let Some(perm) = &cfg.output_perm {
+        mfg.map_ids(|v| perm.to_old(v));
+    }
+    // 6. demux: slice the shared payload into per-request responses
+    let view = MfgSeedView::new(&mfg);
+    let batch_size = live.len();
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.unique_rows.fetch_add(batch_rows, Ordering::Relaxed);
+    metrics.bytes_gathered.fetch_add(batch_bytes, Ordering::Relaxed);
+    for (ri, req) in live.into_iter().enumerate() {
+        let ex = view.extract_with(pos[ri] as usize, demux_map);
+        let mut feats = Vec::new();
+        if dim > 0 {
+            feats.reserve(ex.deep_rows.len() * dim);
+            for &r in &ex.deep_rows {
+                let r = r as usize;
+                feats.extend_from_slice(&batch_feats[r * dim..(r + 1) * dim]);
+            }
+        }
+        let label = label_slice(&batch_labels, pos[ri] as usize);
+        let rows = ex.deep_rows.len() as u64;
+        let bytes_returned = rows * row_bytes;
+        metrics.served.fetch_add(1, Ordering::Relaxed);
+        metrics.returned_rows.fetch_add(rows, Ordering::Relaxed);
+        metrics.bytes_returned.fetch_add(bytes_returned, Ordering::Relaxed);
+        let latency = req.enqueued.elapsed();
+        metrics.latency.record(latency);
+        // a dropped PendingResponse is the client's choice, not an error
+        let _ = req.tx.send(Ok(ServeResponse {
+            seed: req.seed,
+            mfg: ex.mfg,
+            feats,
+            label,
+            latency,
+            batch_size,
+            bytes_returned,
+            batch_bytes_gathered: batch_bytes,
+        }));
+    }
+}
+
+/// One request's row of a batch-gathered label block.
+fn label_slice(labels: &GatheredLabels, pos: usize) -> GatheredLabels {
+    match labels {
+        GatheredLabels::None => GatheredLabels::None,
+        GatheredLabels::Single(ys) => GatheredLabels::Single(vec![ys[pos]]),
+        GatheredLabels::Multi { rows, num_classes } => GatheredLabels::Multi {
+            rows: rows[pos * num_classes..(pos + 1) * num_classes].to_vec(),
+            num_classes: *num_classes,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{testutil, IterSpec, SamplerKind};
+
+    fn labor0(fanouts: &[usize]) -> Arc<MultiLayerSampler> {
+        Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            fanouts,
+        ))
+    }
+
+    #[test]
+    fn coalesce_seeds_dedupes_in_first_seen_order() {
+        let (unique, pos) = coalesce_seeds(&[7, 3, 7, 9, 3, 7]);
+        assert_eq!(unique, vec![7, 3, 9]);
+        assert_eq!(pos, vec![0, 1, 0, 2, 1, 0]);
+        for (i, &p) in pos.iter().enumerate() {
+            assert_eq!(unique[p as usize], [7, 3, 7, 9, 3, 7][i]);
+        }
+        assert_eq!(coalesce_seeds(&[]), (vec![], vec![]));
+    }
+
+    #[test]
+    fn round_trip_serves_validating_responses() {
+        let g = Arc::new(testutil::test_graph());
+        let front = ServingFrontEnd::spawn(
+            g.clone(),
+            labor0(&[4, 4]),
+            ServingConfig {
+                window: Duration::from_millis(50),
+                max_batch: 8,
+                ..ServingConfig::default()
+            },
+        );
+        let h = front.handle();
+        let pending: Vec<PendingResponse> = (0..8).map(|s| h.submit(s)).collect();
+        drop(h);
+        for (s, p) in pending.into_iter().enumerate() {
+            let r = p.wait().unwrap();
+            assert_eq!(r.seed, s as u32);
+            assert_eq!(r.mfg.layers[0].seeds, vec![s as u32]);
+            for layer in &r.mfg.layers {
+                layer.validate(&g).unwrap();
+            }
+            assert!(r.batch_size >= 1 && r.batch_size <= 8);
+            assert!(r.latency > Duration::ZERO);
+            // no data plane configured
+            assert!(r.feats.is_empty());
+            assert_eq!(r.label, GatheredLabels::None);
+        }
+        let snap = front.shutdown();
+        assert_eq!(snap.served, 8);
+        assert_eq!(snap.expired, 0);
+        assert_eq!(snap.latency.count, 8);
+        assert!(snap.batches >= 1);
+        assert!(snap.coalescing_factor() >= 1.0);
+        // sub-ego-nets overlap, so returned rows can only exceed unique
+        assert!(snap.returned_rows >= snap.unique_rows);
+    }
+
+    #[test]
+    fn replay_open_loop_submits_everything_without_gaps() {
+        let g = Arc::new(testutil::test_graph());
+        let front = ServingFrontEnd::spawn(
+            g,
+            labor0(&[3]),
+            ServingConfig { window: Duration::from_millis(5), ..ServingConfig::default() },
+        );
+        let h = front.handle();
+        let pending = replay_open_loop(&h, &[1, 2, 3, 4, 5], &[]);
+        drop(h);
+        assert_eq!(pending.len(), 5);
+        for p in pending {
+            p.wait().unwrap();
+        }
+        assert_eq!(front.shutdown().served, 5);
+    }
+}

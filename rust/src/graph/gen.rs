@@ -159,6 +159,64 @@ pub fn rmat(cfg: &RmatConfig) -> CscGraph {
     b.build().expect("rmat emits in-range edges")
 }
 
+/// Configuration of the Zipf request-stream generator (serving workloads).
+#[derive(Clone, Debug)]
+pub struct ZipfRequestConfig {
+    /// id domain: requests draw from `0..num_ids`
+    pub num_ids: usize,
+    /// Zipf skew: id `v` has popularity `∝ 1/(v+1)^exponent` — id 0 is the
+    /// hottest. `0.0` is uniform. Callers that want "popular = high
+    /// degree" map ids through a degree rank (identity on a
+    /// degree-relabeled graph, where the hot ids are exactly the
+    /// `DegreeOrderedCache` prefix).
+    pub exponent: f64,
+    pub num_requests: usize,
+    /// mean arrival rate (requests/second) of the open-loop Poisson
+    /// process; `<= 0` means back-to-back (no gaps)
+    pub rate_hz: f64,
+    pub seed: u64,
+}
+
+impl Default for ZipfRequestConfig {
+    fn default() -> Self {
+        Self { num_ids: 1, exponent: 1.0, num_requests: 0, rate_hz: 0.0, seed: 0 }
+    }
+}
+
+/// An open-loop serving workload: per-request target ids and inter-arrival
+/// gaps (`gaps[i]` precedes `seeds[i]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestStream {
+    pub seeds: Vec<u32>,
+    pub gaps: Vec<std::time::Duration>,
+}
+
+/// Generate a Zipf-popularity request stream with exponential (Poisson
+/// process) inter-arrival gaps. Fully deterministic per seed: same config
+/// → bit-identical stream.
+pub fn zipf_requests(cfg: &ZipfRequestConfig) -> RequestStream {
+    assert!(cfg.num_ids > 0, "request stream needs a non-empty id domain");
+    let weights: Vec<f64> = (0..cfg.num_ids)
+        .map(|v| 1.0 / ((v + 1) as f64).powf(cfg.exponent))
+        .collect();
+    let table = AliasTable::new(&weights);
+    let mut rng = StreamRng::new(cfg.seed);
+    let mut seeds = Vec::with_capacity(cfg.num_requests);
+    let mut gaps = Vec::with_capacity(cfg.num_requests);
+    for _ in 0..cfg.num_requests {
+        seeds.push(table.sample(&mut rng));
+        let gap = if cfg.rate_hz > 0.0 {
+            // inverse-CDF exponential; 1 - u avoids ln(0)
+            let u = rng.next_f64();
+            std::time::Duration::from_secs_f64(-(1.0 - u).ln() / cfg.rate_hz)
+        } else {
+            std::time::Duration::ZERO
+        };
+        gaps.push(gap);
+    }
+    RequestStream { seeds, gaps }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,5 +309,50 @@ mod tests {
         // skew: R-MAT with a=0.57 concentrates edges on low ids
         let lo: u64 = (0..512u32).map(|v| g.in_degree(v) as u64).sum();
         assert!(lo as f64 / g.num_edges() as f64 > 0.6);
+    }
+
+    #[test]
+    fn zipf_requests_deterministic_and_in_range() {
+        let cfg = ZipfRequestConfig {
+            num_ids: 300,
+            exponent: 1.2,
+            num_requests: 500,
+            rate_hz: 1000.0,
+            seed: 9,
+        };
+        let a = zipf_requests(&cfg);
+        let b = zipf_requests(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.seeds.len(), 500);
+        assert_eq!(a.gaps.len(), 500);
+        assert!(a.seeds.iter().all(|&s| (s as usize) < 300));
+        // Poisson process: mean gap ≈ 1/rate (loose 3x bound)
+        let mean = a.gaps.iter().map(|g| g.as_secs_f64()).sum::<f64>() / 500.0;
+        assert!(mean > 0.3e-3 && mean < 3e-3, "mean gap {mean}");
+        let c = zipf_requests(&ZipfRequestConfig { seed: 10, ..cfg });
+        assert_ne!(a.seeds, c.seeds);
+    }
+
+    #[test]
+    fn zipf_requests_skew_and_rate_knobs() {
+        let base = ZipfRequestConfig {
+            num_ids: 200,
+            exponent: 0.0,
+            num_requests: 2000,
+            rate_hz: 0.0,
+            seed: 3,
+        };
+        let top_share = |exp: f64| {
+            let s = zipf_requests(&ZipfRequestConfig { exponent: exp, ..base.clone() });
+            s.seeds.iter().filter(|&&v| v < 20).count() as f64 / 2000.0
+        };
+        // heavier skew concentrates requests on the hot head
+        let (uniform, mid, heavy) = (top_share(0.0), top_share(0.8), top_share(1.6));
+        assert!(uniform < 0.2, "uniform head share {uniform}");
+        assert!(mid > uniform, "skew 0.8 share {mid} <= uniform {uniform}");
+        assert!(heavy > mid, "skew 1.6 share {heavy} <= 0.8 share {mid}");
+        // rate <= 0 means back-to-back
+        let s = zipf_requests(&base);
+        assert!(s.gaps.iter().all(|g| g.is_zero()));
     }
 }

@@ -15,6 +15,9 @@
 //! repro calibrate-caps --dataset products-sim
 //! repro train   --dataset flickr-sim --method labor-1 [--steps 200 ...]
 //! repro graph pack --dataset flickr-sim [--scale 0.1] [--layout degree|original] [--out file.lgx]
+//! repro serve   --dataset flickr-sim [--method labor-0 --rate 2000 --window-us 1000
+//!                --max-batch 64 --deadline-ms 250 --skew 1.0 --requests 2000
+//!                --layout degree|original --cache-rows 0 --threads 1] [--smoke]
 //! ```
 //!
 //! `graph pack` writes the dataset's graph in the zero-copy `.lgx` binary
@@ -23,10 +26,20 @@
 //! reloading it, and reports the load-time advantage over the legacy
 //! parse-and-rebuild format.
 //!
+//! `serve` replays a Zipf-skewed open-loop request stream through the
+//! online serving front end ([`labor_gnn::coordinator::serving`]):
+//! single-seed requests are coalesced into shared-variate LABOR batches
+//! within a deadline window, and the report shows p50/p99 response
+//! latency, the coalescing factor, and bytes/request. Popularity follows
+//! degree rank, so `--layout degree --cache-rows k` exercises the cache's
+//! `id < k` prefix fast path. Note: bare boolean flags (`--smoke`) must
+//! come last — the strict `--key value` parser otherwise swallows the
+//! next flag as their value.
+//!
 //! `--method` takes any [`SamplerKind::parse`] name: `ns`, `labor-<i>`,
 //! `labor-*`, `labor-<i>-seq`, `ladies`, `pladies`, or budgeted layer
 //! samplers like `ladies-512,256` (bare `ladies`/`pladies` get budgets
-//! matched to LABOR-\* automatically).
+//! matched to LABOR-\* automatically; `serve` requires explicit budgets).
 
 use anyhow::{anyhow, Result};
 use labor_gnn::bench;
@@ -178,11 +191,155 @@ fn run_graph(argv: &[String]) -> Result<()> {
     }
 }
 
+/// `repro serve`: replay a Zipf open-loop workload through the coalescing
+/// serving front end and report QoS metrics (p50/p99 latency, coalescing
+/// factor, bytes/request).
+fn run_serve(a: &Args) -> Result<()> {
+    use labor_gnn::coordinator::serving::replay_open_loop;
+    use labor_gnn::coordinator::{
+        DataPlaneConfig, DegreeOrderedCache, FeatureCache, NullCache, ServeError,
+        ServingConfig, ServingFrontEnd, TierModel,
+    };
+    use labor_gnn::graph::compact::degree_order;
+    use labor_gnn::graph::gen::{zipf_requests, ZipfRequestConfig};
+    use labor_gnn::sampler::MultiLayerSampler;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let smoke = a.get("smoke").is_some();
+    let dataset = a.require("dataset")?;
+    let scale = a.f64_or("scale", 0.1)?;
+    let method = a.str_or("method", "labor-0");
+    let kind =
+        SamplerKind::parse(&method).ok_or_else(|| anyhow!("unknown method '{method}'"))?;
+    let fanout = a.usize_or("fanout", 10)?;
+    let layers = a.usize_or("layers", 2)?;
+    let requests = a.usize_or("requests", if smoke { 300 } else { 2000 })?;
+    let rate = a.f64_or("rate", 2000.0)?;
+    let window = Duration::from_micros(a.u64_or("window-us", 1000)?);
+    let max_batch = a.usize_or("max-batch", 64)?;
+    let deadline = Duration::from_millis(a.u64_or("deadline-ms", 250)?);
+    let skew = a.f64_or("skew", 1.0)?;
+    let threads = a.usize_or("threads", 1)?;
+    let cache_rows = a.usize_or("cache-rows", 0)?;
+    let layout = a.str_or("layout", "original");
+    let seed = a.u64_or("seed", 0)?;
+    let tier_name = a.str_or("tier", "local");
+    let tier =
+        TierModel::parse(&tier_name).ok_or_else(|| anyhow!("unknown tier '{tier_name}'"))?;
+
+    let ds = labor_gnn::data::Dataset::load_or_generate(&dataset, scale)?;
+    let (ds, perm) = match layout.as_str() {
+        "degree" => {
+            let (ds, perm) = ds.relabel_by_degree();
+            (ds, Some(Arc::new(perm)))
+        }
+        "original" => (ds, None),
+        other => return Err(anyhow!("--layout expects degree|original, got '{other}'")),
+    };
+    let graph = Arc::new(ds.graph.clone());
+    let sampler = Arc::new(MultiLayerSampler::new(kind, &vec![fanout; layers]));
+    anyhow::ensure!(
+        sampler.num_layers() > 0,
+        "method '{method}' needs explicit budgets for serving (e.g. pladies-60,40)"
+    );
+    let cache: Arc<dyn FeatureCache> = if cache_rows > 0 {
+        Arc::new(DegreeOrderedCache::new(&graph, cache_rows))
+    } else {
+        Arc::new(NullCache)
+    };
+    let plane = DataPlaneConfig::for_dataset(&ds, tier, cache);
+    let store = plane.store.clone();
+
+    // popularity follows degree rank: rank r targets the r-th
+    // highest-degree vertex (identity modulo perm in the degree layout,
+    // which is exactly the DegreeOrderedCache prefix)
+    let stream = zipf_requests(&ZipfRequestConfig {
+        num_ids: graph.num_vertices(),
+        exponent: skew,
+        num_requests: requests,
+        rate_hz: rate,
+        seed,
+    });
+    // requests speak original ids; the front end translates when relabeled
+    let seeds: Vec<u32> = match &perm {
+        Some(p) => stream.seeds.iter().map(|&r| p.to_old(r)).collect(),
+        None => {
+            let order = degree_order(&graph);
+            stream.seeds.iter().map(|&r| order[r as usize]).collect()
+        }
+    };
+
+    let front = ServingFrontEnd::spawn(
+        graph.clone(),
+        sampler,
+        ServingConfig {
+            window,
+            max_batch,
+            queue_depth: 4096,
+            default_deadline: deadline,
+            seed,
+            intra_batch_threads: threads,
+            data_plane: Some(plane),
+            output_perm: perm,
+        },
+    );
+    let handle = front.handle();
+    let t0 = Instant::now();
+    let pending = replay_open_loop(&handle, &seeds, &stream.gaps);
+    drop(handle);
+    let mut served = 0u64;
+    let mut missed = 0u64;
+    for p in pending {
+        match p.wait() {
+            Ok(_) => served += 1,
+            Err(ServeError::DeadlineExpired { .. }) => missed += 1,
+            Err(e) => return Err(anyhow!("serving failed: {e}")),
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = front.shutdown();
+
+    println!(
+        "served {served}/{requests} requests ({missed} deadline misses) in {wall:.2?} \
+         — {method} fanout {fanout}x{layers}, window {window:?}, max_batch {max_batch}, \
+         offered {rate:.0} req/s, skew {skew}"
+    );
+    println!(
+        "  coalescing: {} batches, factor {:.2}, dedup ratio {:.3}",
+        snap.batches,
+        snap.coalescing_factor(),
+        snap.dedup_ratio()
+    );
+    let l = snap.latency;
+    println!(
+        "  latency: p50 {:.2?} p90 {:.2?} p99 {:.2?} max {:.2?} (mean {:.2?})",
+        l.p50, l.p90, l.p99, l.max, l.mean
+    );
+    println!(
+        "  bytes/request: gathered {:.0}, returned {:.0}; store hit rate {:.3}",
+        snap.bytes_gathered_per_request(),
+        snap.bytes_returned_per_request(),
+        store.hit_rate()
+    );
+    if smoke {
+        anyhow::ensure!(
+            served + missed == requests as u64,
+            "lost responses: {served} served + {missed} missed != {requests}"
+        );
+        anyhow::ensure!(snap.batches >= 1, "no batches flushed");
+        anyhow::ensure!(snap.latency.count == served, "latency samples != served");
+        anyhow::ensure!(snap.served == served, "metrics/served mismatch");
+        println!("serve smoke OK");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         eprintln!(
-            "usage: repro <table1|table2|table3|table4|table5|fig1|fig2|fig3|fig4|calibrate-caps|train|graph> [--flags]"
+            "usage: repro <table1|table2|table3|table4|table5|fig1|fig2|fig3|fig4|calibrate-caps|train|graph|serve> [--flags]"
         );
         eprintln!("see `repro help` / README.md");
         std::process::exit(2);
@@ -259,6 +416,9 @@ fn main() -> Result<()> {
                 seed: a.u64_or("seed", 0)?,
             };
             bench::fig4::run(&o)?;
+        }
+        "serve" => {
+            run_serve(&a)?;
         }
         "calibrate-caps" => {
             bench::calibrate::run(

@@ -16,10 +16,12 @@ pub mod par;
 pub mod pladies;
 pub mod poisson;
 pub mod scratch;
+pub mod view;
 pub mod weighted;
 
 pub use par::{partition_seeds, ScratchPool};
 pub use scratch::{EpochMap, SamplerScratch};
+pub use view::{ExtractedSeed, MfgSeedView};
 
 use crate::graph::CscGraph;
 

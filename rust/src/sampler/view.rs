@@ -1,0 +1,223 @@
+//! Seed-offset view over a coalesced [`Mfg`]: extract one seed's induced
+//! sub-MFG from a batch sampled for many seeds at once.
+//!
+//! This is the demultiplexer half of the serving story
+//! (`coordinator::serving`): the admission front end coalesces concurrent
+//! single-seed requests into one shared LABOR pass — so their sampled
+//! neighborhoods dedupe through the shared `r_t` variates (paper §3.2) —
+//! and this view slices the shared payload back into per-request MFGs.
+//!
+//! ## What extraction preserves
+//!
+//! The sub-MFG for seed position `p` keeps, per layer, exactly the frontier
+//! reachable from that seed and **every** edge the coalesced batch sampled
+//! into it, with the original weights. Consequences:
+//!
+//! * Per-seed Hajek weight sums are untouched (all in-edges of every kept
+//!   frontier vertex are kept), so each extracted layer passes
+//!   [`SampledLayer::validate`] whenever the coalesced batch does — for
+//!   *every* [`SamplerKind`](super::SamplerKind).
+//! * For samplers whose per-seed decisions are independent of the rest of
+//!   the batch — Neighbor Sampling's per-seed RNG streams — the extracted
+//!   sub-MFG is **bit-identical** to sampling that seed alone with the
+//!   same `batch_seed`: the frontier is walked in first-touch order and
+//!   each frontier vertex's edges are emitted in their original relative
+//!   order, which reproduces the solo run's `inputs` order, edge order,
+//!   and weights exactly (pinned by `tests/serving.rs`).
+//! * For LABOR the extraction is where the dedup win becomes measurable:
+//!   the union of all extracted `deep_rows` is the coalesced batch's
+//!   (smaller) unique input set.
+//!
+//! Extraction is positional, so it commutes with [`Mfg::map_ids`] — a
+//! relabeled batch can be mapped back to original ids first and sliced
+//! after.
+
+use super::{EpochMap, Mfg, SampledLayer};
+
+/// One seed's slice of a coalesced batch: its induced sub-MFG plus the
+/// positions of its deepest-layer inputs inside the *coalesced* batch's
+/// `feature_vertices()` — the row indices a demultiplexer uses to copy
+/// this seed's share of the shared gathered feature buffer.
+#[derive(Clone, Debug)]
+pub struct ExtractedSeed {
+    pub mfg: Mfg,
+    /// `deep_rows[i]` is the row of `mfg.feature_vertices()[i]` inside the
+    /// coalesced batch's deepest-layer inputs.
+    pub deep_rows: Vec<u32>,
+}
+
+/// Per-layer edge index of a coalesced [`Mfg`], bucketed by destination
+/// seed (a counting sort that keeps the original edge order within each
+/// bucket). Build once per batch, extract many seeds.
+pub struct MfgSeedView<'a> {
+    mfg: &'a Mfg,
+    layers: Vec<DstIndex>,
+}
+
+/// CSR over edge ids: `edge_ids[off[s]..off[s+1]]` are the edges whose
+/// `edge_dst` is seed position `s`, in original order.
+struct DstIndex {
+    off: Vec<u32>,
+    edge_ids: Vec<u32>,
+}
+
+impl DstIndex {
+    fn build(layer: &SampledLayer) -> Self {
+        let ne = layer.num_edges();
+        assert!(ne <= u32::MAX as usize, "layer too large for u32 edge ids");
+        let mut off = vec![0u32; layer.seeds.len() + 1];
+        for &d in &layer.edge_dst {
+            off[d as usize + 1] += 1;
+        }
+        for i in 1..off.len() {
+            off[i] += off[i - 1];
+        }
+        let mut cursor = off.clone();
+        let mut edge_ids = vec![0u32; ne];
+        for (e, &d) in layer.edge_dst.iter().enumerate() {
+            let c = &mut cursor[d as usize];
+            edge_ids[*c as usize] = e as u32;
+            *c += 1;
+        }
+        Self { off, edge_ids }
+    }
+
+    fn edges_of(&self, seed_pos: u32) -> &[u32] {
+        let (lo, hi) = (self.off[seed_pos as usize], self.off[seed_pos as usize + 1]);
+        &self.edge_ids[lo as usize..hi as usize]
+    }
+}
+
+impl<'a> MfgSeedView<'a> {
+    /// Index `mfg` for per-seed extraction. O(|E|) over all layers.
+    pub fn new(mfg: &'a Mfg) -> Self {
+        let layers = mfg.layers.iter().map(DstIndex::build).collect();
+        Self { mfg, layers }
+    }
+
+    /// Number of seeds in the coalesced batch.
+    pub fn num_seeds(&self) -> usize {
+        self.mfg.layers.first().map_or(0, |l| l.seeds.len())
+    }
+
+    /// Extract the induced sub-MFG of the seed at position `seed_pos` in
+    /// the coalesced batch's seed list, with a throwaway scratch map. Hot
+    /// loops should hold an [`EpochMap`] and call
+    /// [`extract_with`](Self::extract_with).
+    pub fn extract(&self, seed_pos: usize) -> ExtractedSeed {
+        self.extract_with(seed_pos, &mut EpochMap::default())
+    }
+
+    /// [`extract`](Self::extract) with a caller-provided scratch map (the
+    /// map is keyed by coalesced input *positions*, which are unique, so
+    /// any domain history is fine — `begin` is called per layer).
+    pub fn extract_with(&self, seed_pos: usize, map: &mut EpochMap) -> ExtractedSeed {
+        assert!(seed_pos < self.num_seeds(), "seed_pos {seed_pos} out of range");
+        // positions into the current layer's seed list; layer l+1's seeds
+        // are layer l's inputs position-for-position, so the dedup order
+        // of one layer's inputs is the next layer's frontier
+        let mut frontier: Vec<u32> = vec![seed_pos as u32];
+        let mut layers = Vec::with_capacity(self.mfg.layers.len());
+        for (layer, idx) in self.mfg.layers.iter().zip(&self.layers) {
+            let mut sub = SampledLayer {
+                seeds: frontier.iter().map(|&p| layer.seeds[p as usize]).collect(),
+                ..SampledLayer::default()
+            };
+            map.begin(layer.inputs.len());
+            // seeds lead the input list (`inputs[..n] == seeds`), so a
+            // seed position doubles as its input position
+            let mut input_pos: Vec<u32> = frontier;
+            for (local, &p) in input_pos.iter().enumerate() {
+                map.insert(p, local as u32);
+            }
+            // `input_pos` grows past the frontier prefix as new sources are
+            // discovered; only the frontier itself receives edges
+            let num_frontier = sub.seeds.len();
+            for local_dst in 0..num_frontier {
+                let p = input_pos[local_dst];
+                for &e in idx.edges_of(p) {
+                    let src_pos = layer.edge_src[e as usize];
+                    let local_src = match map.get(src_pos) {
+                        Some(x) => x,
+                        None => {
+                            let x = input_pos.len() as u32;
+                            map.insert(src_pos, x);
+                            input_pos.push(src_pos);
+                            x
+                        }
+                    };
+                    sub.edge_src.push(local_src);
+                    sub.edge_dst.push(local_dst as u32);
+                    sub.edge_weight.push(layer.edge_weight[e as usize]);
+                }
+            }
+            sub.inputs = input_pos.iter().map(|&p| layer.inputs[p as usize]).collect();
+            frontier = input_pos;
+            layers.push(sub);
+        }
+        ExtractedSeed { mfg: Mfg { layers }, deep_rows: frontier }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{testutil, IterSpec, MultiLayerSampler, SamplerKind};
+    use super::*;
+
+    #[test]
+    fn extracted_seed_covers_all_of_its_edges() {
+        let g = testutil::test_graph();
+        let sampler = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[4, 4],
+        );
+        let seeds: Vec<u32> = (0..16).collect();
+        let mfg = sampler.sample_fresh(&g, &seeds, 7);
+        let view = MfgSeedView::new(&mfg);
+        assert_eq!(view.num_seeds(), seeds.len());
+        let mut total_l0_edges = 0;
+        for (pos, &s) in seeds.iter().enumerate() {
+            let ex = view.extract(pos);
+            assert_eq!(ex.mfg.layers.len(), 2);
+            assert_eq!(ex.mfg.layers[0].seeds, vec![s]);
+            for layer in &ex.mfg.layers {
+                layer.validate(&g).unwrap();
+            }
+            assert_eq!(ex.mfg.layers[0].inputs, ex.mfg.layers[1].seeds);
+            // layer 0 of the extraction carries exactly the seed's edges
+            // from the coalesced batch
+            let coalesced_deg = mfg.layers[0].sampled_degrees()[pos];
+            assert_eq!(ex.mfg.layers[0].num_edges(), coalesced_deg);
+            total_l0_edges += coalesced_deg;
+            // deep_rows point at the coalesced feature rows of the same ids
+            assert_eq!(ex.deep_rows.len(), ex.mfg.feature_vertices().len());
+            for (i, &r) in ex.deep_rows.iter().enumerate() {
+                assert_eq!(
+                    mfg.feature_vertices()[r as usize],
+                    ex.mfg.feature_vertices()[i]
+                );
+            }
+        }
+        assert_eq!(total_l0_edges, mfg.layers[0].num_edges());
+    }
+
+    #[test]
+    fn extraction_is_positional_and_commutes_with_map_ids() {
+        let g = testutil::test_graph();
+        let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[3, 3]);
+        let seeds = [5u32, 9, 13];
+        let mfg = sampler.sample_fresh(&g, &seeds, 99);
+        let mut shifted = mfg.clone();
+        shifted.map_ids(|v| v + 1000);
+        let a = MfgSeedView::new(&mfg).extract(1);
+        let b = MfgSeedView::new(&shifted).extract(1);
+        assert_eq!(a.deep_rows, b.deep_rows);
+        for (la, lb) in a.mfg.layers.iter().zip(&b.mfg.layers) {
+            assert_eq!(la.edge_src, lb.edge_src);
+            assert_eq!(la.edge_dst, lb.edge_dst);
+            assert_eq!(la.edge_weight, lb.edge_weight);
+            let back: Vec<u32> = lb.inputs.iter().map(|&v| v - 1000).collect();
+            assert_eq!(la.inputs, back);
+        }
+    }
+}

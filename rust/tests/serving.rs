@@ -1,0 +1,480 @@
+//! The serving contract, end to end: demux identity, coalescer edge
+//! cases, workload determinism, and the cache/skew interaction.
+//!
+//! * **Demux identity** — slicing a coalesced batch back into per-request
+//!   sub-MFGs ([`MfgSeedView`]) yields, for *every* sampler kind, MFGs
+//!   that validate against the graph; for Neighbor Sampling (whose
+//!   per-seed decisions are batch-independent) the slice is bit-identical
+//!   to sampling that seed alone, and the whole serving path is invariant
+//!   to the intra-batch shard count.
+//! * **Coalescer edge cases** — burst > `max_batch` splits FIFO, deadline
+//!   misses are named errors (never silent drops), an idle server flushes
+//!   nothing, a fully-expired flush runs no sampler pass, shutdown drains
+//!   the queue, and a worker panic reaches both the waiters (as
+//!   `Shutdown`) and the thread that joins.
+//! * **Workload model** — Zipf request streams are seed-deterministic,
+//!   and on a degree-relabeled graph the [`DegreeOrderedCache`] hit rate
+//!   grows with the request skew exponent (the serving premise: hot seeds
+//!   are hub seeds are cached seeds).
+
+use labor_gnn::coordinator::cache::DegreeOrderedCache;
+use labor_gnn::coordinator::feature_store::{
+    FeatureStore, GatheredLabels, LabelStore, TierModel,
+};
+use labor_gnn::coordinator::pipeline::DataPlaneConfig;
+use labor_gnn::coordinator::serving::{
+    coalesce_seeds, replay_open_loop, PendingResponse, ServeError, ServingConfig,
+    ServingFrontEnd,
+};
+use labor_gnn::graph::compact::VertexPerm;
+use labor_gnn::graph::gen::{dc_sbm, zipf_requests, DcSbmConfig, ZipfRequestConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::sampler::{IterSpec, MfgSeedView, MultiLayerSampler, SamplerKind};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Same construction as the crate-internal `testutil::test_graph()`:
+/// dense, deterministic, 500 vertices, avg in-degree ≈ 60.
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+fn labor0(fanouts: &[usize]) -> Arc<MultiLayerSampler> {
+    Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        fanouts,
+    ))
+}
+
+/// Every sampler kind the CLI exposes, at two layers.
+fn every_kind() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: true },
+        SamplerKind::LaborSequential {
+            iterations: IterSpec::Fixed(0),
+            layer_dependent: false,
+        },
+        SamplerKind::Ladies { budgets: vec![60, 40] },
+        SamplerKind::Pladies { budgets: vec![60, 40] },
+    ]
+}
+
+/// Demux identity, part 1: for every sampler kind, every extracted
+/// sub-MFG validates against the graph (per-seed Hajek sums intact),
+/// answers the request's own seed, chains its layers, and its deep rows
+/// point at coalesced feature rows of the same vertices.
+#[test]
+fn demux_yields_valid_sub_mfgs_for_every_sampler_kind() {
+    let g = dense_graph();
+    // a request stream with duplicates — the coalescer's normal diet
+    let requests = [5u32, 17, 5, 42, 99, 17, 3, 250, 42, 5, 77, 123];
+    let (unique, pos) = coalesce_seeds(&requests);
+    assert!(unique.len() < requests.len());
+    for kind in every_kind() {
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[4, 4]);
+        let mfg = sampler.sample_fresh(&g, &unique, 0xBEEF);
+        for layer in &mfg.layers {
+            layer.validate(&g).unwrap();
+        }
+        let view = MfgSeedView::new(&mfg);
+        assert_eq!(view.num_seeds(), unique.len());
+        for (ri, &s) in requests.iter().enumerate() {
+            let ex = view.extract(pos[ri] as usize);
+            assert_eq!(ex.mfg.layers.len(), mfg.layers.len(), "{label}");
+            assert_eq!(ex.mfg.layers[0].seeds, vec![s], "{label}");
+            for (l, layer) in ex.mfg.layers.iter().enumerate() {
+                layer.validate(&g).unwrap_or_else(|e| {
+                    panic!("{label}: request {ri} (seed {s}) layer {l}: {e}")
+                });
+            }
+            for w in ex.mfg.layers.windows(2) {
+                assert_eq!(w[0].inputs, w[1].seeds, "{label}: layers must chain");
+            }
+            assert_eq!(ex.deep_rows.len(), ex.mfg.feature_vertices().len(), "{label}");
+            for (i, &r) in ex.deep_rows.iter().enumerate() {
+                assert_eq!(
+                    mfg.feature_vertices()[r as usize],
+                    ex.mfg.feature_vertices()[i],
+                    "{label}: deep row {i} points at the wrong coalesced row"
+                );
+            }
+        }
+    }
+}
+
+/// Demux identity, part 2: Neighbor Sampling's per-seed decisions don't
+/// depend on who else is in the batch, so the extracted sub-MFG must be
+/// **bit-identical** — inputs order, edge order, weights — to sampling
+/// that seed alone with the same batch seed.
+#[test]
+fn ns_demux_is_bit_identical_to_solo_sampling() {
+    let g = dense_graph();
+    let sampler = MultiLayerSampler::new(SamplerKind::Neighbor, &[3, 3]);
+    let seeds: Vec<u32> = (0..24).map(|i| i * 17 % 500).collect();
+    let batch_seed = 0xA5;
+    let mfg = sampler.sample_fresh(&g, &seeds, batch_seed);
+    let view = MfgSeedView::new(&mfg);
+    for (pos, &s) in seeds.iter().enumerate() {
+        let ex = view.extract(pos);
+        let solo = sampler.sample_fresh(&g, &[s], batch_seed);
+        assert_eq!(ex.mfg.layers.len(), solo.layers.len());
+        for (l, (a, b)) in ex.mfg.layers.iter().zip(&solo.layers).enumerate() {
+            assert_eq!(a.seeds, b.seeds, "seed {s} layer {l}: seeds differ");
+            assert_eq!(a.inputs, b.inputs, "seed {s} layer {l}: inputs differ");
+            assert_eq!(a.edge_src, b.edge_src, "seed {s} layer {l}: edge_src differs");
+            assert_eq!(a.edge_dst, b.edge_dst, "seed {s} layer {l}: edge_dst differs");
+            assert_eq!(
+                a.edge_weight, b.edge_weight,
+                "seed {s} layer {l}: weights differ"
+            );
+        }
+    }
+}
+
+/// One deterministic coalesced batch through the front end: submit exactly
+/// `max_batch` requests so the flush fires on the count (not the timer),
+/// making the batch composition — and therefore every response — a pure
+/// function of the config. The responses must be identical across
+/// intra-batch shard counts (`sample_sharded`'s bit-identity, observed at
+/// the serving boundary).
+#[test]
+fn serving_is_bit_identical_across_shard_counts() {
+    let g = Arc::new(dense_graph());
+    let seeds: [u32; 10] = [3, 141, 59, 26, 5, 358, 97, 93, 238, 462];
+    let serve_all = |threads: usize| -> Vec<labor_gnn::coordinator::ServeResponse> {
+        let front = ServingFrontEnd::spawn(
+            g.clone(),
+            labor0(&[4, 4]),
+            ServingConfig {
+                window: Duration::from_millis(500),
+                max_batch: seeds.len(),
+                seed: 11,
+                intra_batch_threads: threads,
+                ..ServingConfig::default()
+            },
+        );
+        let h = front.handle();
+        let pending: Vec<PendingResponse> = seeds.iter().map(|&s| h.submit(s)).collect();
+        drop(h);
+        let out: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+        let snap = front.shutdown();
+        assert_eq!(snap.batches, 1, "threads={threads}: expected one coalesced batch");
+        out
+    };
+    let base = serve_all(1);
+    for threads in [2, 4] {
+        let got = serve_all(threads);
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.batch_size, b.batch_size);
+            for (la, lb) in a.mfg.layers.iter().zip(&b.mfg.layers) {
+                assert_eq!(la.seeds, lb.seeds, "threads={threads}");
+                assert_eq!(la.inputs, lb.inputs, "threads={threads}");
+                assert_eq!(la.edge_src, lb.edge_src, "threads={threads}");
+                assert_eq!(la.edge_dst, lb.edge_dst, "threads={threads}");
+                assert_eq!(la.edge_weight, lb.edge_weight, "threads={threads}");
+            }
+        }
+    }
+}
+
+/// A burst larger than `max_batch` splits into FIFO batches: with a long
+/// window and `max_batch = 4`, ten queued requests flush as 4 + 4 + 2
+/// (the tail flushes on queue disconnect, not on a timer).
+#[test]
+fn burst_larger_than_max_batch_splits_fifo() {
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[4, 4]),
+        ServingConfig {
+            window: Duration::from_millis(300),
+            max_batch: 4,
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let pending: Vec<PendingResponse> = (0..10).map(|s| h.submit(s)).collect();
+    drop(h);
+    let sizes: Vec<usize> =
+        pending.into_iter().map(|p| p.wait().unwrap().batch_size).collect();
+    assert_eq!(sizes, vec![4, 4, 4, 4, 4, 4, 4, 4, 2, 2]);
+    let snap = front.shutdown();
+    assert_eq!(snap.served, 10);
+    assert_eq!(snap.batches, 3);
+    assert!((snap.coalescing_factor() - 10.0 / 3.0).abs() < 1e-9);
+}
+
+/// A deadline miss is a *named* error carrying the seed and lateness —
+/// never a silent drop — and it doesn't poison batchmates.
+#[test]
+fn deadline_expiry_is_a_named_error_not_a_silent_drop() {
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[3]),
+        ServingConfig { window: Duration::from_millis(20), ..ServingConfig::default() },
+    );
+    let h = front.handle();
+    let doomed = h.submit_with_deadline(5, Duration::ZERO);
+    let healthy = h.submit(7);
+    drop(h);
+    match doomed.wait() {
+        Err(ServeError::DeadlineExpired { seed, late_by }) => {
+            assert_eq!(seed, 5);
+            assert!(late_by > Duration::ZERO);
+        }
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+    let r = healthy.wait().expect("batchmate of an expired request must still be served");
+    assert_eq!(r.seed, 7);
+    let snap = front.shutdown();
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.served, 1);
+    assert_eq!(snap.requests, 2);
+}
+
+/// Windows are request-triggered — an idle server flushes nothing — and a
+/// flush whose every request already expired runs no sampler pass.
+#[test]
+fn idle_server_never_flushes_and_fully_expired_flushes_skip_sampling() {
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[3]),
+        ServingConfig { window: Duration::from_millis(1), ..ServingConfig::default() },
+    );
+    std::thread::sleep(Duration::from_millis(50));
+    let idle = front.metrics();
+    assert_eq!(idle.requests, 0, "idle server pulled requests from nowhere");
+    assert_eq!(idle.batches, 0, "idle server flushed an empty batch");
+    let h = front.handle();
+    let doomed = h.submit_with_deadline(3, Duration::ZERO);
+    drop(h);
+    assert!(matches!(doomed.wait(), Err(ServeError::DeadlineExpired { seed: 3, .. })));
+    let snap = front.shutdown();
+    assert_eq!(snap.requests, 1);
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.served, 0);
+    assert_eq!(snap.batches, 0, "a fully-expired flush must not run the sampler");
+    assert_eq!(snap.latency.count, 0);
+}
+
+/// Closing the queue is graceful: every request enqueued before shutdown
+/// still gets its response (`Disconnected` implies closed *and empty*).
+#[test]
+fn shutdown_drains_every_queued_request() {
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[4, 4]),
+        ServingConfig {
+            window: Duration::from_millis(1),
+            max_batch: 4,
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let pending: Vec<PendingResponse> = (0..20).map(|s| h.submit(s)).collect();
+    drop(h);
+    let snap = front.shutdown();
+    assert_eq!(snap.served, 20, "shutdown lost queued requests");
+    for (s, p) in pending.into_iter().enumerate() {
+        let r = p.wait().unwrap_or_else(|e| panic!("request {s} was dropped: {e}"));
+        assert_eq!(r.seed, s as u32);
+    }
+}
+
+/// A worker panic (here: an out-of-range seed crashing the sampler)
+/// surfaces twice, matching the pipeline contract: pending waiters
+/// observe `Shutdown`, and `shutdown()` re-raises the panic.
+#[test]
+fn worker_panic_reaches_waiters_and_shutdown() {
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[3]),
+        ServingConfig { window: Duration::from_millis(1), ..ServingConfig::default() },
+    );
+    let h = front.handle();
+    let doomed = h.submit(10_000); // 500-vertex graph: the sampler panics
+    drop(h);
+    assert!(matches!(doomed.wait(), Err(ServeError::Shutdown)));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        front.shutdown();
+    }));
+    assert!(result.is_err(), "shutdown() must re-raise the worker panic");
+}
+
+/// The workload model is reproducible: the same `ZipfRequestConfig`
+/// yields the same stream, and the whole stream serves end to end.
+#[test]
+fn zipf_streams_are_deterministic_and_serve_end_to_end() {
+    let cfg = ZipfRequestConfig {
+        num_ids: 500,
+        exponent: 1.2,
+        num_requests: 200,
+        rate_hz: 50_000.0,
+        seed: 77,
+    };
+    let a = zipf_requests(&cfg);
+    let b = zipf_requests(&cfg);
+    assert_eq!(a, b, "same config must yield the same request stream");
+    assert_ne!(
+        a,
+        zipf_requests(&ZipfRequestConfig { seed: 78, ..cfg }),
+        "a different seed must yield a different stream"
+    );
+
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[4, 4]),
+        ServingConfig {
+            window: Duration::from_micros(200),
+            max_batch: 32,
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let pending = replay_open_loop(&h, &a.seeds, &a.gaps);
+    drop(h);
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let snap = front.shutdown();
+    assert_eq!(snap.served, 200);
+    assert_eq!(snap.expired, 0);
+    assert_eq!(snap.latency.count, 200);
+}
+
+/// Serving on a degree-relabeled graph speaks original ids end to end:
+/// requests submit original ids, responses come back with original-id
+/// MFGs that validate against the *original* graph, and the feature rows
+/// and label belong to the right vertices — while sampling and gathering
+/// ran in the relabeled space underneath.
+#[test]
+fn relabeled_serving_speaks_original_ids_end_to_end() {
+    let g = dense_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = Arc::new(perm.apply_to_graph(&g));
+    let nv = g.num_vertices();
+    let dim = 2usize;
+    // row for relabeled id `new` encodes its ORIGINAL id — so a response
+    // row is checkable against the original-id MFG it rides with
+    let mut feats = vec![0.0f32; nv * dim];
+    let mut labels = vec![0u16; nv];
+    for new in 0..nv {
+        let old = perm.to_old(new as u32);
+        feats[new * dim] = old as f32;
+        feats[new * dim + 1] = old as f32 * 2.0;
+        labels[new] = (old % 7) as u16;
+    }
+    let store = Arc::new(FeatureStore::new(feats, dim, TierModel::local()));
+    let front = ServingFrontEnd::spawn(
+        rg,
+        labor0(&[4, 4]),
+        ServingConfig {
+            window: Duration::from_millis(20),
+            max_batch: 16,
+            data_plane: Some(DataPlaneConfig {
+                store: store.clone(),
+                labels: Some(Arc::new(LabelStore::Single(Arc::new(labels)))),
+            }),
+            output_perm: Some(Arc::new(perm)),
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let requests = [5u32, 444, 17, 5, 300, 17, 123];
+    let pending: Vec<PendingResponse> = requests.iter().map(|&s| h.submit(s)).collect();
+    drop(h);
+    for (&s, p) in requests.iter().zip(pending) {
+        let r = p.wait().unwrap();
+        assert_eq!(r.seed, s);
+        assert_eq!(r.mfg.layers[0].seeds, vec![s]);
+        for layer in &r.mfg.layers {
+            layer.validate(&g).unwrap();
+        }
+        let deep = r.mfg.feature_vertices();
+        assert_eq!(r.feats.len(), deep.len() * dim);
+        for (i, &v) in deep.iter().enumerate() {
+            assert_eq!(r.feats[i * dim], v as f32, "row {i} belongs to vertex {v}");
+            assert_eq!(r.feats[i * dim + 1], v as f32 * 2.0);
+        }
+        assert_eq!(r.label, GatheredLabels::Single(vec![(s % 7) as u16]));
+        assert_eq!(r.bytes_returned, deep.len() as u64 * store.row_bytes());
+    }
+    let snap = front.shutdown();
+    assert_eq!(snap.served, requests.len() as u64);
+    // duplicates in the request stream dedupe inside their batch
+    assert!(snap.returned_rows > snap.unique_rows);
+}
+
+/// The serving premise of the degree cache: hotter request skew ⇒ hotter
+/// (higher-degree, lower-relabeled-id) seeds ⇒ higher hit rate against a
+/// degree-prefix cache. Served solo (no coalescing) so each exponent's
+/// hit rate is a clean per-request property.
+#[test]
+fn degree_cache_hit_rate_grows_with_request_skew() {
+    let g = dense_graph();
+    let rg = Arc::new(VertexPerm::degree_ordered(&g).apply_to_graph(&g));
+    let nv = rg.num_vertices();
+    let dim = 4usize;
+    let cache_rows = nv / 5; // top 20% of vertices by degree
+    let mut rates = Vec::new();
+    for exponent in [0.0f64, 1.0, 2.0] {
+        let store = Arc::new(
+            FeatureStore::new(vec![0.0f32; nv * dim], dim, TierModel::local())
+                .with_cache(Arc::new(DegreeOrderedCache::new(&rg, cache_rows))),
+        );
+        let front = ServingFrontEnd::spawn(
+            rg.clone(),
+            Arc::new(MultiLayerSampler::new(SamplerKind::Neighbor, &[2])),
+            ServingConfig {
+                window: Duration::ZERO,
+                max_batch: 1,
+                data_plane: Some(DataPlaneConfig { store: store.clone(), labels: None }),
+                ..ServingConfig::default()
+            },
+        );
+        let stream = zipf_requests(&ZipfRequestConfig {
+            num_ids: nv,
+            exponent,
+            num_requests: 500,
+            rate_hz: 0.0,
+            seed: 9,
+        });
+        // the graph is degree-relabeled, so Zipf rank == vertex id: the
+        // hottest requests are exactly the cache-resident prefix
+        let h = front.handle();
+        let pending = replay_open_loop(&h, &stream.seeds, &stream.gaps);
+        drop(h);
+        for p in pending {
+            p.wait().unwrap();
+        }
+        assert_eq!(front.shutdown().served, 500);
+        rates.push(store.hit_rate());
+    }
+    assert!(
+        rates[1] >= rates[0] - 0.02 && rates[2] >= rates[1] - 0.02,
+        "hit rate must be monotone in skew: {rates:?}"
+    );
+    assert!(
+        rates[2] > rates[0] + 0.1,
+        "skew 2.0 must clearly beat uniform: {rates:?}"
+    );
+}

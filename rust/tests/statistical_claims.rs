@@ -15,9 +15,12 @@
 //! All trials run through one reused [`SamplerScratch`] — doubling as a
 //! long-haul soak of the arena (hundreds of epoch-map generations).
 
+use labor_gnn::coordinator::coalesce_seeds;
 use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
 use labor_gnn::graph::CscGraph;
-use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, SamplerScratch};
+use labor_gnn::sampler::{
+    EpochMap, IterSpec, MfgSeedView, MultiLayerSampler, SamplerKind, SamplerScratch,
+};
 
 /// Same construction as the crate-internal `testutil::test_graph()`:
 /// dense, deterministic, 500 vertices, avg in-degree ≈ 60.
@@ -186,4 +189,85 @@ fn pladies_hajek_mean_aggregation_is_unbiased() {
     for (si, gap) in gaps.iter().enumerate() {
         assert!(*gap < 0.08, "PLADIES: seed #{si} estimator is off by {gap:.4}");
     }
+}
+
+/// The §3.2 degree floor, measured *through the serving demux*: coalesce
+/// a duplicate-bearing request stream, sample the deduped seeds as one
+/// LABOR batch, slice each request's sub-MFG back out with
+/// [`MfgSeedView`], and check `E[d̃] ≥ min(k, d)` per *request* — i.e.
+/// sharing a batch with other requests (including duplicates of yourself)
+/// costs no request any expected sampled degree.
+#[test]
+fn coalesced_labor_keeps_the_degree_floor_through_demux() {
+    let g = dense_graph();
+    let requests: Vec<u32> = (0..40).chain(0..10).collect(); // 10 duplicate seeds
+    let (unique, pos) = coalesce_seeds(&requests);
+    assert_eq!(unique.len(), 40);
+    let k = 5usize;
+    let trials = 250u64;
+    let tol = 0.45; // > 3σ of the trial mean, as in the solo floor test
+    let mut scratch = SamplerScratch::new();
+    let mut demux_map = EpochMap::default();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(1)] {
+        let kind = SamplerKind::Labor { iterations, layer_dependent: false };
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[k]);
+        let mut mean_deg = vec![0.0f64; requests.len()];
+        for trial in 0..trials {
+            let mfg = sampler.sample(&g, &unique, 0xC0A ^ trial, &mut scratch);
+            let view = MfgSeedView::new(&mfg);
+            for (ri, m) in mean_deg.iter_mut().enumerate() {
+                let ex = view.extract_with(pos[ri] as usize, &mut demux_map);
+                *m += ex.mfg.layers[0].num_edges() as f64;
+            }
+        }
+        for (ri, &s) in requests.iter().enumerate() {
+            let floor = g.in_degree(s).min(k) as f64;
+            let got = mean_deg[ri] / trials as f64;
+            assert!(
+                got >= floor - tol,
+                "{label}: request {ri} (seed {s}) E[d̃]={got:.3} < min(k, d)={floor} - {tol}"
+            );
+        }
+    }
+}
+
+/// The coalescing win itself (§3.2 shared variates): the unique vertex
+/// set of one coalesced LABOR batch never exceeds the sum of solo runs of
+/// the same seeds under the same batch seed — per trial for LABOR-0
+/// (whose per-seed thresholds are batch-independent, so the coalesced set
+/// is exactly the union of the solo sets), and strictly smaller in
+/// aggregate.
+#[test]
+fn coalesced_labor_unique_vertices_never_exceed_sum_of_solo_runs() {
+    let g = dense_graph();
+    let seeds: Vec<u32> = (0..60).collect();
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[4, 4],
+    );
+    let trials = 60u64;
+    let mut scratch = SamplerScratch::new();
+    let mut coalesced_total = 0usize;
+    let mut solo_total = 0usize;
+    for trial in 0..trials {
+        let coalesced =
+            sampler.sample(&g, &seeds, trial, &mut scratch).feature_vertices().len();
+        let mut solo_sum = 0usize;
+        for &s in &seeds {
+            solo_sum += sampler.sample(&g, &[s], trial, &mut scratch).feature_vertices().len();
+        }
+        assert!(
+            coalesced <= solo_sum,
+            "trial {trial}: coalesced batch sampled {coalesced} unique vertices, \
+             solo runs only {solo_sum} in total"
+        );
+        coalesced_total += coalesced;
+        solo_total += solo_sum;
+    }
+    assert!(
+        coalesced_total < solo_total,
+        "coalescing saved nothing over {trials} trials \
+         ({coalesced_total} vs {solo_total} vertices)"
+    );
 }
