@@ -22,6 +22,18 @@ fi
 echo "== cargo test -q (tier-1, step 2/2)"
 cargo test -q
 
+echo "== scalar-fallback pass: full test suite with SIMD/prefetch forced off"
+# LABOR_NO_SIMD=1 routes FeatureStore::gather, the serving demux, and the
+# sampler frontier walks through their scalar/unhinted paths; the suite —
+# including the bit-identity tests — must stay green on both paths
+LABOR_NO_SIMD=1 cargo test -q
+
+echo "== hardened-reader + identity tests, explicitly"
+# corrupt/forged-length files must fail with named errors (never a panic
+# or an OOM-sized allocation), mmap and buffered .lgx loads must be
+# bit-identical, and SIMD must match scalar to the bit for every sampler
+cargo test -q --test io_hardening --test simd_identity --test lgx_format
+
 if [ "$MODE" != "fast" ]; then
   echo "== graph-pack smoke: .lgx pack + verified reload via the repro CLI"
   # packs the tiny dataset into the zero-copy format (degree-ordered
@@ -56,6 +68,12 @@ if [ "$MODE" != "fast" ]; then
   test -f BENCH_datapipe.json || { echo "BENCH_datapipe.json missing"; exit 1; }
   test -f BENCH_graph.json || { echo "BENCH_graph.json missing"; exit 1; }
   test -f BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
+  # this PR's memory-system records must be present: the mmap-vs-buffered
+  # .lgx load series and the SIMD-vs-scalar gather micro-bench
+  grep -q '"lgx_mmap_load_s"' BENCH_graph.json \
+    || { echo "BENCH_graph.json is missing the mmap-load record"; exit 1; }
+  grep -q '"simd_gather"' BENCH_datapipe.json \
+    || { echo "BENCH_datapipe.json is missing the simd-gather record"; exit 1; }
   echo "== BENCH_pipeline.json:"
   cat BENCH_pipeline.json
   echo "== BENCH_datapipe.json:"

@@ -277,6 +277,45 @@ fn main() {
         "(LABOR-0 moves {:.1}% of NS's feature bytes at equal fanout)",
         l0_b as f64 / ns_b as f64 * 100.0
     );
+    // -- SIMD vs scalar feature-row gather (micro) ---------------------
+    // The same rows through both FeatureStore::gather code paths: the
+    // wide-copy + prefetch path and the scalar reference, asserted
+    // bit-identical before timing.
+    use labor_gnn::util::simd;
+    let rows = (feats_shared.len() / dim) as u64;
+    let mut grng = labor_gnn::rng::StreamRng::new(7);
+    let gather_n: usize = if smoke { 4_096 } else { 262_144 };
+    let gather_iters: usize = if smoke { 3 } else { 20 };
+    let gids: Vec<u32> = (0..gather_n).map(|_| grng.below(rows) as u32).collect();
+    let mut out_simd = Vec::new();
+    let mut out_scalar = Vec::new();
+    simd::gather_rows_f32_simd(feats_shared.as_slice(), dim, &gids, &mut out_simd);
+    simd::gather_rows_f32_scalar(feats_shared.as_slice(), dim, &gids, &mut out_scalar);
+    let identical = out_simd.len() == out_scalar.len()
+        && out_simd.iter().zip(&out_scalar).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "SIMD gather must be bit-identical to scalar");
+    let t0 = Instant::now();
+    for _ in 0..gather_iters {
+        out_simd.clear();
+        simd::gather_rows_f32_simd(feats_shared.as_slice(), dim, &gids, &mut out_simd);
+        std::hint::black_box(out_simd.len());
+    }
+    let simd_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..gather_iters {
+        out_scalar.clear();
+        simd::gather_rows_f32_scalar(feats_shared.as_slice(), dim, &gids, &mut out_scalar);
+        std::hint::black_box(out_scalar.len());
+    }
+    let scalar_s = t0.elapsed().as_secs_f64();
+    println!(
+        "\nsimd gather {gather_n} rows (dim {dim}) x{gather_iters}: simd {:.3} ms, \
+         scalar {:.3} ms ({:.2}x, bit-identical)",
+        simd_s * 1e3,
+        scalar_s * 1e3,
+        scalar_s / simd_s.max(1e-12)
+    );
+
     let datapipe_report = Json::obj(vec![
         ("bench", Json::Str("datapipe".into())),
         ("dataset", Json::Str("flickr-sim".into())),
@@ -288,6 +327,17 @@ fn main() {
         ("num_workers", Json::Num(4.0)),
         ("cache_rows", Json::Num(cache_rows as f64)),
         ("feature_dim", Json::Num(dim as f64)),
+        (
+            "simd_gather",
+            Json::obj(vec![
+                ("rows", Json::Num(gather_n as f64)),
+                ("dim", Json::Num(dim as f64)),
+                ("iters", Json::Num(gather_iters as f64)),
+                ("simd_s", Json::Num(simd_s)),
+                ("scalar_s", Json::Num(scalar_s)),
+                ("identical", Json::Bool(identical)),
+            ]),
+        ),
         ("series", Json::Arr(datapipe)),
     ]);
     std::fs::write("BENCH_datapipe.json", format!("{datapipe_report}\n"))

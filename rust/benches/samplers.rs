@@ -227,26 +227,46 @@ fn main() {
         t0.elapsed().as_secs_f64() / n as f64
     };
     let t_lgx = time_load(&mut || {
-        let (g, p) = graph_io::load_lgx(&lgx_path).expect("load lgx");
+        let (g, p) = graph_io::load_lgx_buffered(&lgx_path).expect("load lgx");
         assert!(p.is_some());
         std::hint::black_box(g.num_edges());
     });
+    let mmap_available = graph_io::mmap_enabled();
+    let t_mmap = if mmap_available {
+        time_load(&mut || {
+            let (g, p) = graph_io::load_lgx_mmap(&lgx_path).expect("load lgx mmap");
+            assert!(g.is_mapped(), "mmap load must borrow the mapping");
+            assert!(p.is_some());
+            std::hint::black_box(g.num_edges());
+        })
+    } else {
+        0.0
+    };
     let t_legacy = time_load(&mut || {
         std::hint::black_box(graph_io::load_graph(&legacy_path).expect("load legacy").num_edges());
     });
     let t_text = time_load(&mut || {
         std::hint::black_box(graph_io::load_edgelist(&text_path).expect("load text").num_edges());
     });
-    // correctness: all three load paths agree
-    let (g_lgx, p_lgx) = graph_io::load_lgx(&lgx_path).unwrap();
+    // correctness: all load paths agree, and the mapped loader is
+    // bit-identical to the buffered one
+    let (g_lgx, p_lgx) = graph_io::load_lgx_buffered(&lgx_path).unwrap();
     assert_eq!(g_lgx, rds.graph);
     assert_eq!(p_lgx.as_ref(), Some(&perm));
+    if mmap_available {
+        let (g_map, p_map) = graph_io::load_lgx_mmap(&lgx_path).unwrap();
+        assert!(g_map.is_mapped());
+        assert_eq!(g_map, g_lgx, "mmap load differs from buffered load");
+        assert_eq!(p_map, p_lgx, "mmap perm differs from buffered perm");
+    }
     assert_eq!(graph_io::load_graph(&legacy_path).unwrap(), rds.graph);
     assert_eq!(graph_io::load_edgelist(&text_path).unwrap(), rds.graph);
     let fsize = |p: &std::path::Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
     println!(
-        "load {} edges: .lgx {:.3} ms, legacy {:.3} ms, text {:.3} ms ({:.1}x text/.lgx)",
+        "load {} edges: .lgx mmap {:.3} ms, .lgx buffered {:.3} ms, legacy {:.3} ms, \
+         text {:.3} ms ({:.1}x text/.lgx)",
         rds.graph.num_edges(),
+        t_mmap * 1e3,
         t_lgx * 1e3,
         t_legacy * 1e3,
         t_text * 1e3,
@@ -286,6 +306,8 @@ fn main() {
                 ("legacy_bytes", Json::Num(fsize(&legacy_path) as f64)),
                 ("text_bytes", Json::Num(fsize(&text_path) as f64)),
                 ("lgx_load_s", Json::Num(t_lgx)),
+                ("lgx_mmap_load_s", Json::Num(t_mmap)),
+                ("mmap_available", Json::Bool(mmap_available)),
                 ("legacy_load_s", Json::Num(t_legacy)),
                 ("text_load_s", Json::Num(t_text)),
                 ("text_over_lgx", Json::Num(t_text / t_lgx.max(1e-12))),

@@ -182,9 +182,11 @@ impl FeatureStore {
     pub fn gather(&self, ids: &[u32], out: &mut Vec<f32>) -> Duration {
         let t0 = Instant::now();
         out.clear();
-        out.reserve(ids.len() * self.dim);
         let mut hits = 0u64;
         let rows = self.num_rows();
+        // validation + cache accounting first, then one bulk row copy:
+        // the SIMD path does wide copies with software prefetch of the
+        // upcoming rows, and is bit-identical to the scalar fallback
         for &v in ids {
             assert!(
                 (v as usize) < rows,
@@ -193,9 +195,8 @@ impl FeatureStore {
             if self.cache.is_resident(v) {
                 hits += 1;
             }
-            let base = v as usize * self.dim;
-            out.extend_from_slice(&self.features[base..base + self.dim]);
         }
+        crate::util::simd::gather_rows_f32(&self.features, self.dim, ids, out);
         let misses = ids.len() as u64 - hits;
         let miss_bytes = misses * self.row_bytes();
         self.cache_hits.fetch_add(hits, Ordering::Relaxed);

@@ -17,7 +17,10 @@
 //!    accumulate, whichever is first. An idle server never flushes —
 //!    windows are request-triggered, so there are no empty batches.
 //! 3. **One shared pass** — deadline-expired requests are failed with a
-//!    named error (never silently dropped), the survivors' seeds are
+//!    named error (never silently dropped), out-of-range seeds are
+//!    rejected at flush with [`ServeError::InvalidSeed`] (a bad request
+//!    must never panic the shared worker and take its coalesced peers
+//!    down with it), and the survivors' seeds are
 //!    deduplicated (first-seen order) and sampled as *one* LABOR batch —
 //!    reusing the training engine untouched: [`ScratchPool`] arenas,
 //!    `intra_batch_threads` shard parallelism, the
@@ -103,6 +106,11 @@ impl Default for ServingConfig {
 pub enum ServeError {
     /// the request was already past its deadline when its batch flushed
     DeadlineExpired { seed: u32, late_by: Duration },
+    /// the seed is not a vertex of the served graph — rejected at flush,
+    /// before it can reach the sampler or the feature store (whose
+    /// out-of-range behavior is a panic that would kill the shared
+    /// worker and every coalesced peer request)
+    InvalidSeed { seed: u32, num_vertices: usize },
     /// the front end shut down (or its worker died) before responding
     Shutdown,
 }
@@ -112,6 +120,9 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::DeadlineExpired { seed, late_by } => {
                 write!(f, "request for seed {seed} missed its deadline by {late_by:?}")
+            }
+            ServeError::InvalidSeed { seed, num_vertices } => {
+                write!(f, "seed {seed} is out of range (graph has {num_vertices} vertices)")
             }
             ServeError::Shutdown => write!(f, "serving front end shut down"),
         }
@@ -207,6 +218,7 @@ struct ServingMetrics {
     requests: AtomicU64,
     served: AtomicU64,
     expired: AtomicU64,
+    invalid: AtomicU64,
     batches: AtomicU64,
     unique_rows: AtomicU64,
     returned_rows: AtomicU64,
@@ -221,6 +233,7 @@ impl ServingMetrics {
             requests: self.requests.load(Ordering::Relaxed),
             served: self.served.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
+            invalid: self.invalid.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             unique_rows: self.unique_rows.load(Ordering::Relaxed),
             returned_rows: self.returned_rows.load(Ordering::Relaxed),
@@ -241,6 +254,10 @@ pub struct ServingSnapshot {
     pub served: u64,
     /// deadline-expired requests (each got a named error)
     pub expired: u64,
+    /// out-of-range seeds rejected at flush (each got
+    /// [`ServeError::InvalidSeed`]; the worker and its batch peers
+    /// continue unaffected)
+    pub invalid: u64,
     /// coalesced sampler passes
     pub batches: u64,
     /// unique deepest-layer rows across all batches (what was gathered)
@@ -457,10 +474,16 @@ fn serve_batch(
     demux_map: &mut EpochMap,
 ) {
     metrics.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-    // 1. deadline check at flush time: expired requests fail with a named
-    //    error. (A deadline that lapses *during* the sampler pass still
-    //    gets its response — admission rejects, it does not abort.)
+    // 1. admission checks at flush time: expired requests and out-of-range
+    //    seeds fail with named errors. Seed validity is checked against
+    //    |V| — valid in both id spaces, since a VertexPerm is a bijection
+    //    over exactly the graph's vertices. Rejecting here (instead of
+    //    letting the sampler or FeatureStore::gather panic) is what keeps
+    //    one bad request from killing the shared worker and failing every
+    //    coalesced peer. (A deadline that lapses *during* the sampler pass
+    //    still gets its response — admission rejects, it does not abort.)
     let now = Instant::now();
+    let nv = graph.num_vertices();
     let mut live = Vec::with_capacity(batch.len());
     for req in batch {
         if now > req.deadline {
@@ -469,6 +492,11 @@ fn serve_batch(
             let _ = req
                 .tx
                 .send(Err(ServeError::DeadlineExpired { seed: req.seed, late_by }));
+        } else if req.seed as usize >= nv {
+            metrics.invalid.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .tx
+                .send(Err(ServeError::InvalidSeed { seed: req.seed, num_vertices: nv }));
         } else {
             live.push(req);
         }
@@ -523,11 +551,8 @@ fn serve_batch(
         let ex = view.extract_with(pos[ri] as usize, demux_map);
         let mut feats = Vec::new();
         if dim > 0 {
-            feats.reserve(ex.deep_rows.len() * dim);
-            for &r in &ex.deep_rows {
-                let r = r as usize;
-                feats.extend_from_slice(&batch_feats[r * dim..(r + 1) * dim]);
-            }
+            // same SIMD wide-copy row gather as the FeatureStore path
+            crate::util::simd::gather_rows_f32(&batch_feats, dim, &ex.deep_rows, &mut feats);
         }
         let label = label_slice(&batch_labels, pos[ri] as usize);
         let rows = ex.deep_rows.len() as u64;

@@ -1,5 +1,143 @@
 //! CSC (compressed sparse column) graph: in-neighbor slices per vertex.
 
+use super::io::Pod;
+use crate::util::mmap::Mmap;
+use std::sync::Arc;
+
+/// Backing storage for one graph section (`indptr`, `indices`, `weights`):
+/// either heap-owned elements or a typed window into a shared mmap'd
+/// `.lgx` file — the zero-copy load path, where the bytes on disk ARE the
+/// in-memory array. `Deref<Target = [T]>` makes the two cases
+/// indistinguishable to every reader; the rare writer goes through
+/// [`to_mut`](GraphBuf::to_mut), which copies a mapped window out on
+/// first mutation (copy-on-write), so samplers never pay for the
+/// generality.
+pub enum GraphBuf<T: Pod> {
+    /// Heap-owned elements (builder output, legacy/buffered loads).
+    Owned(Vec<T>),
+    /// `len` elements starting `byte_off` bytes into a shared mapping.
+    /// Alignment and bounds are proven once at construction
+    /// ([`mapped`](GraphBuf::mapped)); `Arc` keeps the mapping alive for
+    /// as long as any section (or clone of the graph) references it.
+    Mapped {
+        map: Arc<Mmap>,
+        byte_off: usize,
+        len: usize,
+    },
+}
+
+impl<T: Pod> GraphBuf<T> {
+    /// Wrap `len` elements at `byte_off` into `map` as a typed window.
+    /// Verifies bounds (with overflow-checked arithmetic) and alignment
+    /// up front — the `unsafe` slice view in [`as_slice`] relies on
+    /// exactly these two facts plus the [`Pod`] contract.
+    pub fn mapped(map: Arc<Mmap>, byte_off: usize, len: usize) -> Result<Self, String> {
+        let bytes = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| format!("mapped section of {len} elements overflows usize"))?;
+        let end = byte_off
+            .checked_add(bytes)
+            .ok_or_else(|| format!("mapped section at offset {byte_off} overflows usize"))?;
+        if end > map.len() {
+            return Err(format!(
+                "mapped section [{byte_off}, {end}) exceeds the {}-byte mapping",
+                map.len()
+            ));
+        }
+        if (map.bytes().as_ptr() as usize + byte_off) % std::mem::align_of::<T>() != 0 {
+            return Err(format!("mapped section at offset {byte_off} is misaligned"));
+        }
+        Ok(GraphBuf::Mapped { map, byte_off, len })
+    }
+
+    /// View as a slice — zero-cost for both variants.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            GraphBuf::Owned(v) => v,
+            GraphBuf::Mapped { map, byte_off, len } => {
+                // SAFETY: `mapped` proved [byte_off, byte_off + len*size)
+                // lies inside the mapping and is aligned for T; T is Pod,
+                // so any mapped bytes are valid values; the borrow ties
+                // the slice to `self`, which keeps the Arc'd map alive.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.bytes().as_ptr().add(*byte_off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    /// True when this section borrows an mmap'd file region.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, GraphBuf::Mapped { .. })
+    }
+
+    /// Mutable access, copying a mapped window into an owned `Vec` first
+    /// (copy-on-write — the mapping itself is `PROT_READ`).
+    pub fn to_mut(&mut self) -> &mut Vec<T> {
+        if self.is_mapped() {
+            let owned = self.as_slice().to_vec();
+            *self = GraphBuf::Owned(owned);
+        }
+        match self {
+            GraphBuf::Owned(v) => v,
+            GraphBuf::Mapped { .. } => unreachable!("mapped variant replaced above"),
+        }
+    }
+
+    /// Owned copy of the elements.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl<T: Pod> std::ops::Deref for GraphBuf<T> {
+    type Target = [T];
+    #[inline(always)]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for GraphBuf<T> {
+    fn from(v: Vec<T>) -> Self {
+        GraphBuf::Owned(v)
+    }
+}
+
+impl<T: Pod> Clone for GraphBuf<T> {
+    fn clone(&self) -> Self {
+        match self {
+            GraphBuf::Owned(v) => GraphBuf::Owned(v.clone()),
+            // clones share the mapping — cloning a mapped graph is O(1)
+            GraphBuf::Mapped { map, byte_off, len } => {
+                GraphBuf::Mapped { map: Arc::clone(map), byte_off: *byte_off, len: *len }
+            }
+        }
+    }
+}
+
+/// Content equality regardless of backing (a mapped and an owned section
+/// holding the same elements compare equal — the bit-identity contract
+/// between the mmap and buffered `.lgx` loaders is stated in these terms).
+impl<T: Pod + PartialEq> PartialEq for GraphBuf<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for GraphBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_mapped() {
+            f.write_str("mapped:")?;
+        }
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
 /// Width-adaptive offset array backing [`CscGraph::indptr`].
 ///
 /// Sampling walks `indptr` for every seed of every layer of every batch —
@@ -17,9 +155,9 @@
 #[derive(Clone, Debug)]
 pub enum IndPtr {
     /// `|E| < 2^32`: half the bytes of the `u64` layout.
-    U32(Vec<u32>),
+    U32(GraphBuf<u32>),
     /// >4B-edge graphs.
-    U64(Vec<u64>),
+    U64(GraphBuf<u64>),
 }
 
 impl IndPtr {
@@ -29,9 +167,9 @@ impl IndPtr {
         // max(), not last(): don't let a corrupt (non-monotone) input
         // silently truncate — validation rejects it later either way
         if offsets.iter().max().copied().unwrap_or(0) <= u32::MAX as u64 {
-            IndPtr::U32(offsets.into_iter().map(|x| x as u32).collect())
+            IndPtr::U32(offsets.into_iter().map(|x| x as u32).collect::<Vec<u32>>().into())
         } else {
-            IndPtr::U64(offsets)
+            IndPtr::U64(offsets.into())
         }
     }
 
@@ -84,7 +222,15 @@ impl IndPtr {
     pub fn to_u64_vec(&self) -> Vec<u64> {
         match self {
             IndPtr::U32(v) => v.iter().map(|&x| x as u64).collect(),
-            IndPtr::U64(v) => v.clone(),
+            IndPtr::U64(v) => v.to_vec(),
+        }
+    }
+
+    /// True when the offsets borrow an mmap'd `.lgx` region.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            IndPtr::U32(v) => v.is_mapped(),
+            IndPtr::U64(v) => v.is_mapped(),
         }
     }
 }
@@ -110,15 +256,26 @@ pub struct CscGraph {
     /// length |V|+1.
     pub indptr: IndPtr,
     /// Concatenated in-neighbor lists, each sorted ascending; length |E|.
-    pub indices: Vec<u32>,
+    pub indices: GraphBuf<u32>,
     /// Optional per-edge weights `A_ts`, parallel to `indices` (Appendix A.7).
-    pub weights: Option<Vec<f32>>,
+    pub weights: Option<GraphBuf<f32>>,
 }
 
 impl CscGraph {
     /// Assemble from `u64` offsets, picking the narrowest indptr width.
     pub fn from_parts(indptr: Vec<u64>, indices: Vec<u32>, weights: Option<Vec<f32>>) -> Self {
-        Self { indptr: IndPtr::from_u64(indptr), indices, weights }
+        Self {
+            indptr: IndPtr::from_u64(indptr),
+            indices: indices.into(),
+            weights: weights.map(Into::into),
+        }
+    }
+
+    /// True when any section borrows an mmap'd `.lgx` region (zero-copy
+    /// load). The payload sections always share one backing, so indices
+    /// speak for the graph.
+    pub fn is_mapped(&self) -> bool {
+        self.indices.is_mapped()
     }
 
     /// Number of vertices.
@@ -140,6 +297,30 @@ impl CscGraph {
         match &self.indptr {
             IndPtr::U32(v) => (v[s as usize] as usize, v[s as usize + 1] as usize),
             IndPtr::U64(v) => (v[s as usize] as usize, v[s as usize + 1] as usize),
+        }
+    }
+
+    /// Prefetch-hint the indptr cache line for vertex `s`. Non-faulting
+    /// for ANY `s` (wrapping pointer arithmetic + architecturally
+    /// non-faulting prefetch), so frontier walks can hint a few seeds
+    /// ahead without bounds anxiety.
+    #[inline(always)]
+    pub fn prefetch_in_bounds(&self, s: u32) {
+        use crate::util::simd::prefetch_read;
+        match &self.indptr {
+            IndPtr::U32(v) => prefetch_read(v.as_ptr().wrapping_add(s as usize)),
+            IndPtr::U64(v) => prefetch_read(v.as_ptr().wrapping_add(s as usize)),
+        }
+    }
+
+    /// Prefetch-hint the head of `s`'s neighbor slice (reads indptr, so
+    /// `s` must be in range — panics like [`in_bounds`](Self::in_bounds)
+    /// otherwise).
+    #[inline(always)]
+    pub fn prefetch_in_neighbors(&self, s: u32) {
+        let (lo, hi) = self.in_bounds(s);
+        if lo < hi {
+            crate::util::simd::prefetch_read(self.indices.as_ptr().wrapping_add(lo));
         }
     }
 
@@ -279,12 +460,12 @@ mod tests {
 
     #[test]
     fn indptr_equality_is_width_agnostic() {
-        let a = IndPtr::U32(vec![0, 1, 3]);
-        let b = IndPtr::U64(vec![0, 1, 3]);
+        let a = IndPtr::U32(vec![0, 1, 3].into());
+        let b = IndPtr::U64(vec![0, 1, 3].into());
         assert_eq!(a, b);
-        let c = IndPtr::U64(vec![0, 2, 3]);
+        let c = IndPtr::U64(vec![0, 2, 3].into());
         assert_ne!(a, c);
-        assert_ne!(a, IndPtr::U32(vec![0, 1]));
+        assert_ne!(a, IndPtr::U32(vec![0, 1].into()));
     }
 
     #[test]
@@ -300,19 +481,63 @@ mod tests {
     fn validate_catches_corruption() {
         let mut g = diamond();
         assert!(g.validate().is_ok());
-        g.indices[0] = 99;
+        g.indices.to_mut()[0] = 99;
         assert!(g.validate().is_err());
 
         let mut g2 = diamond();
-        g2.indptr = IndPtr::U32(vec![0, 5, 0, 2, 4]);
+        g2.indptr = IndPtr::U32(vec![0, 5, 0, 2, 4].into());
         assert!(g2.validate().is_err());
 
         let mut g3 = diamond();
-        g3.weights = Some(vec![1.0; 3]); // wrong length
+        g3.weights = Some(vec![1.0; 3].into()); // wrong length
         assert!(g3.validate().is_err());
 
         let mut g4 = diamond();
-        g4.weights = Some(vec![1.0, -1.0, 1.0, 1.0]); // negative weight
+        g4.weights = Some(vec![1.0, -1.0, 1.0, 1.0].into()); // negative weight
         assert!(g4.validate().is_err());
+    }
+
+    #[test]
+    fn graphbuf_mapped_window_matches_owned_and_cow_detaches() {
+        use crate::util::mmap::Mmap;
+        use std::io::Write;
+        if !Mmap::supported() {
+            return;
+        }
+        let vals: Vec<u32> = (0..64u32).map(|x| x.wrapping_mul(2_654_435_761)).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let path = std::env::temp_dir().join(format!("labor_gbuf_{}.bin", std::process::id()));
+        std::fs::File::create(&path).unwrap().write_all(&bytes).unwrap();
+        let map = Arc::new(Mmap::map_file(&std::fs::File::open(&path).unwrap()).unwrap());
+
+        // a window over the second half, element-aligned
+        let half = GraphBuf::<u32>::mapped(Arc::clone(&map), 32 * 4, 32).unwrap();
+        assert!(half.is_mapped());
+        assert_eq!(&half[..], &vals[32..]);
+        assert_eq!(half, GraphBuf::Owned(vals[32..].to_vec()));
+
+        // bounds and alignment are rejected at construction
+        assert!(GraphBuf::<u32>::mapped(Arc::clone(&map), 0, 65).is_err());
+        assert!(GraphBuf::<u32>::mapped(Arc::clone(&map), 2, 4).is_err());
+        assert!(GraphBuf::<u64>::mapped(Arc::clone(&map), 0, usize::MAX).is_err());
+
+        // copy-on-write: mutation detaches from the mapping
+        let mut cow = half.clone();
+        cow.to_mut()[0] = 7;
+        assert!(!cow.is_mapped());
+        assert_eq!(cow[0], 7);
+        assert_eq!(half[0], vals[32], "original window untouched");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefetch_helpers_accept_edge_vertices() {
+        let g = diamond();
+        // any id, even far out of range, is a safe bounds hint
+        g.prefetch_in_bounds(0);
+        g.prefetch_in_bounds(u32::MAX);
+        for s in 0..g.num_vertices() as u32 {
+            g.prefetch_in_neighbors(s);
+        }
     }
 }

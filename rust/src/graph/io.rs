@@ -34,12 +34,73 @@
 //! ```
 
 use super::compact::VertexPerm;
-use super::csc::{CscGraph, IndPtr};
+use super::csc::{CscGraph, GraphBuf, IndPtr};
+use crate::util::mmap::Mmap;
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"LABORGR1";
+
+/// Cap on a single allocation/read step while draining a length-prefixed
+/// section. Length fields come straight off disk, so the buffer grows
+/// chunk by chunk as bytes actually arrive: a corrupt or hostile length
+/// (e.g. `u64::MAX`) costs at most one spare chunk before the read hits
+/// `UnexpectedEof` — never a capacity-overflow panic and never a multi-GB
+/// zeroed allocation that Linux overcommit would admit and then OOM-kill.
+const IO_CHUNK_BYTES: usize = 1 << 20;
+
+fn invalid_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Read a `u64`-length-prefixed section of pod elements with hardened
+/// length handling: the byte size is computed with overflow-checked
+/// arithmetic (named `InvalidData` error on overflow) and the buffer is
+/// filled in [`IO_CHUNK_BYTES`] steps (see there for why).
+fn read_len_prefixed<R: Read, T: Pod + Default>(
+    r: &mut R,
+    what: &'static str,
+) -> io::Result<Vec<T>> {
+    let declared = read_u64(r)?;
+    let width = std::mem::size_of::<T>();
+    let n: usize = usize::try_from(declared)
+        .ok()
+        .filter(|n| n.checked_mul(width).is_some())
+        .ok_or_else(|| {
+            invalid_data(format!("{what}: declared length {declared} overflows the address space"))
+        })?;
+    let chunk = (IO_CHUNK_BYTES / width).max(1);
+    let mut v: Vec<T> = Vec::new();
+    // reserve (without touching pages) up front, then fault pages in only
+    // as data arrives
+    v.try_reserve_exact(n)
+        .map_err(|_| invalid_data(format!("{what}: cannot allocate {n} elements")))?;
+    while v.len() < n {
+        let take = chunk.min(n - v.len());
+        let old = v.len();
+        v.resize(old + take, T::default());
+        // SAFETY: T is Pod (no padding, every bit pattern valid), so the
+        // freshly resized elements can be viewed and filled as raw bytes.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(v.as_mut_ptr().add(old) as *mut u8, take * width)
+        };
+        r.read_exact(bytes).map_err(|e| {
+            if e.kind() == io::ErrorKind::UnexpectedEof {
+                invalid_data(format!("{what}: file ends before the declared {declared} elements"))
+            } else {
+                e
+            }
+        })?;
+    }
+    if cfg!(target_endian = "big") {
+        for x in &mut v {
+            x.fix_endianness();
+        }
+    }
+    Ok(v)
+}
 
 pub fn write_u64<W: Write>(w: &mut W, x: u64) -> io::Result<()> {
     w.write_all(&x.to_le_bytes())
@@ -59,10 +120,7 @@ pub fn write_u32_slice<W: Write>(w: &mut W, xs: &[u32]) -> io::Result<()> {
 }
 
 pub fn read_u32_slice<R: Read>(r: &mut R) -> io::Result<Vec<u32>> {
-    let n = read_u64(r)? as usize;
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    read_len_prefixed(r, "u32 section")
 }
 
 pub fn write_u64_slice<W: Write>(w: &mut W, xs: &[u64]) -> io::Result<()> {
@@ -72,10 +130,7 @@ pub fn write_u64_slice<W: Write>(w: &mut W, xs: &[u64]) -> io::Result<()> {
 }
 
 pub fn read_u64_slice<R: Read>(r: &mut R) -> io::Result<Vec<u64>> {
-    let n = read_u64(r)? as usize;
-    let mut bytes = vec![0u8; n * 8];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    read_len_prefixed(r, "u64 section")
 }
 
 pub fn write_f32_slice<W: Write>(w: &mut W, xs: &[f32]) -> io::Result<()> {
@@ -85,10 +140,7 @@ pub fn write_f32_slice<W: Write>(w: &mut W, xs: &[f32]) -> io::Result<()> {
 }
 
 pub fn read_f32_slice<R: Read>(r: &mut R) -> io::Result<Vec<f32>> {
-    let n = read_u64(r)? as usize;
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    read_len_prefixed(r, "f32 section")
 }
 
 pub fn write_u16_slice<W: Write>(w: &mut W, xs: &[u16]) -> io::Result<()> {
@@ -98,10 +150,7 @@ pub fn write_u16_slice<W: Write>(w: &mut W, xs: &[u16]) -> io::Result<()> {
 }
 
 pub fn read_u16_slice<R: Read>(r: &mut R) -> io::Result<Vec<u16>> {
-    let n = read_u64(r)? as usize;
-    let mut bytes = vec![0u8; n * 2];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+    read_len_prefixed(r, "u16 section")
 }
 
 /// Serialize a graph to `w` (legacy dataset-cache format, parse-and-rebuild
@@ -145,7 +194,11 @@ pub fn save_graph<P: AsRef<Path>>(path: P, g: &CscGraph) -> io::Result<()> {
 }
 
 pub fn load_graph<P: AsRef<Path>>(path: P) -> io::Result<CscGraph> {
-    let mut r = BufReader::new(File::open(path)?);
+    let f = File::open(path)?;
+    // sanity-bound the reader at the file's true size: no declared length
+    // can pull (or allocate toward) more bytes than the file holds
+    let len = f.metadata()?.len();
+    let mut r = BufReader::new(f).take(len);
     read_graph(&mut r)
 }
 
@@ -387,6 +440,16 @@ unsafe impl Pod for f32 {
     }
 }
 
+unsafe impl Pod for u16 {
+    fn to_le_into(self, buf: &mut [u8; 8]) -> &[u8] {
+        buf[..2].copy_from_slice(&self.to_le_bytes());
+        &buf[..2]
+    }
+    fn fix_endianness(&mut self) {
+        *self = u16::from_le(*self);
+    }
+}
+
 /// The raw bytes of a pod slice (safe per the [`Pod`] contract).
 fn pod_bytes<T: Pod>(xs: &[T]) -> &[u8] {
     // SAFETY: T is Pod (no padding, any bit pattern valid), so viewing the
@@ -415,30 +478,35 @@ fn write_section<W: Write, T: Pod>(w: &mut W, xs: &[T]) -> io::Result<usize> {
 }
 
 /// Read `n` elements straight into a freshly allocated, exactly sized
-/// buffer — one `read_exact` into the buffer's own bytes, no per-element
-/// decode, no rebuild (the zero-copy half of the read path). Endianness is
+/// buffer — `read_exact` into the buffer's own bytes, no per-element
+/// decode, no rebuild (the copy-once half of the read path). Endianness is
 /// fixed in place on big-endian targets only.
+///
+/// The allocation is reserved fallibly up front (named error, not an
+/// allocator abort) but its pages are touched in [`IO_CHUNK_BYTES`] steps
+/// as data actually arrives, so a forged element count from a corrupt
+/// header surfaces as [`LgxError::Truncated`] after at most one spare
+/// chunk — not as an OOM kill while zeroing a huge buffer.
 fn read_section<R: Read, T: Pod + Default>(
     r: &mut R,
     n: usize,
     section: &'static str,
 ) -> Result<Vec<T>, LgxError> {
-    // fallible allocation: a header-declared size beyond available memory
-    // must surface as a named error, not an allocator abort
+    let width = std::mem::size_of::<T>();
+    let chunk = (IO_CHUNK_BYTES / width).max(1);
     let mut v: Vec<T> = Vec::new();
     v.try_reserve_exact(n).map_err(|_| {
         LgxError::Invalid(format!("section '{section}' declares {n} elements: allocation failed"))
     })?;
-    v.resize(n, T::default());
-    {
+    while v.len() < n {
+        let take = chunk.min(n - v.len());
+        let old = v.len();
+        v.resize(old + take, T::default());
         // SAFETY: same Pod contract as `pod_bytes`, mutably: the view
-        // covers exactly the vec's initialized elements, and any bytes
+        // covers exactly the freshly resized elements, and any bytes
         // `read_exact` deposits form valid values of T.
         let bytes = unsafe {
-            std::slice::from_raw_parts_mut(
-                v.as_mut_ptr() as *mut u8,
-                n * std::mem::size_of::<T>(),
-            )
+            std::slice::from_raw_parts_mut(v.as_mut_ptr().add(old) as *mut u8, take * width)
         };
         r.read_exact(bytes).map_err(|e| truncation(e, section))?;
     }
@@ -448,6 +516,22 @@ fn read_section<R: Read, T: Pod + Default>(
         }
     }
     Ok(v)
+}
+
+/// Byte size of a section of `n` elements of `width` bytes each, as a
+/// named overflow error rather than wrapped arithmetic. The `.lgx`
+/// loaders compute EVERY section size through this before reading or
+/// allocating anything, so e.g. a forged edge count near `u64::MAX`
+/// fails here by name instead of overflowing `ne * 4` downstream.
+fn sec_bytes(n: u64, width: usize, section: &'static str) -> Result<usize, LgxError> {
+    usize::try_from(n)
+        .ok()
+        .and_then(|n| n.checked_mul(width))
+        .ok_or_else(|| {
+            LgxError::Invalid(format!(
+                "section '{section}': {n} elements of {width} B overflow the address space"
+            ))
+        })
 }
 
 fn truncation(e: io::Error, section: &'static str) -> LgxError {
@@ -501,12 +585,12 @@ pub fn write_lgx<W: Write>(
     // payload checksum over the section byte streams, in order
     let mut sum = FNV_OFFSET;
     sum = match &g.indptr {
-        IndPtr::U32(v) => checksum_pod(sum, v),
-        IndPtr::U64(v) => checksum_pod(sum, v),
+        IndPtr::U32(v) => checksum_pod(sum, v.as_slice()),
+        IndPtr::U64(v) => checksum_pod(sum, v.as_slice()),
     };
-    sum = checksum_pod(sum, &g.indices);
+    sum = checksum_pod(sum, g.indices.as_slice());
     if let Some(ws) = &g.weights {
-        sum = checksum_pod(sum, ws);
+        sum = checksum_pod(sum, ws.as_slice());
     }
     if let Some(p) = perm {
         sum = checksum_pod(sum, p.forward());
@@ -526,14 +610,14 @@ pub fn write_lgx<W: Write>(
     w.write_all(&header)?;
 
     let n = match &g.indptr {
-        IndPtr::U32(v) => write_section(w, v)?,
-        IndPtr::U64(v) => write_section(w, v)?,
+        IndPtr::U32(v) => write_section(w, v.as_slice())?,
+        IndPtr::U64(v) => write_section(w, v.as_slice())?,
     };
     write_padding(w, n)?;
-    let n = write_section(w, &g.indices)?;
+    let n = write_section(w, g.indices.as_slice())?;
     write_padding(w, n)?;
     if let Some(ws) = &g.weights {
-        let n = write_section(w, ws)?;
+        let n = write_section(w, ws.as_slice())?;
         write_padding(w, n)?;
     }
     if let Some(p) = perm {
@@ -543,11 +627,25 @@ pub fn write_lgx<W: Write>(
     Ok(())
 }
 
-/// Load a graph (and its optional [`VertexPerm`]) from the `.lgx` format,
-/// verifying checksums and structure. The inverse of [`write_lgx`].
-pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
-    let mut header = [0u8; LGX_ALIGN];
-    r.read_exact(&mut header).map_err(|e| truncation(e, "header"))?;
+/// Decoded, bounds-checked `.lgx` header fields, shared by the buffered
+/// ([`read_lgx`]) and zero-copy mapped ([`load_lgx_mmap`]) loaders.
+struct LgxHeader {
+    flags: u32,
+    nv: usize,
+    ne: u64,
+    payload_sum: u64,
+}
+
+impl LgxHeader {
+    fn wide(&self) -> bool {
+        self.flags & LGX_FLAG_WIDE_INDPTR != 0
+    }
+}
+
+/// Validate and decode the 64-byte `.lgx` header: magic, header checksum,
+/// version, flag bits, and the plausibility bounds that make every
+/// downstream allocation header-safe.
+fn parse_lgx_header(header: &[u8; LGX_ALIGN]) -> Result<LgxHeader, LgxError> {
     if &header[..8] != LGX_MAGIC {
         return Err(LgxError::BadMagic);
     }
@@ -565,14 +663,14 @@ pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), Lg
     if unknown != 0 {
         return Err(LgxError::Invalid(format!("unknown flag bits {unknown:#x}")));
     }
-    let nv = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    let nv = u64::from_le_bytes(header[16..24].try_into().unwrap());
     let ne = u64::from_le_bytes(header[24..32].try_into().unwrap());
-    let expected_sum = u64::from_le_bytes(header[32..40].try_into().unwrap());
+    let payload_sum = u64::from_le_bytes(header[32..40].try_into().unwrap());
 
     // plausibility bounds before any allocation is sized from the header:
     // vertex ids are u32 throughout the engine, and a CSC with sorted
     // unique neighbor lists holds at most |V|² edges
-    if nv as u64 > u32::MAX as u64 {
+    if nv > u32::MAX as u64 {
         return Err(LgxError::Invalid(format!(
             "{nv} vertices: ids must be addressable as u32 (<= {})",
             u32::MAX
@@ -584,60 +682,186 @@ pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), Lg
             (nv as u128) * (nv as u128)
         )));
     }
-    let wide = flags & LGX_FLAG_WIDE_INDPTR != 0;
-    if !wide && ne > u32::MAX as u64 {
+    if flags & LGX_FLAG_WIDE_INDPTR == 0 && ne > u32::MAX as u64 {
         return Err(LgxError::Invalid(format!(
             "narrow (u32) indptr flag with {ne} edges (> u32::MAX)"
         )));
     }
+    Ok(LgxHeader { flags, nv: nv as usize, ne, payload_sum })
+}
 
-    let mut sum = FNV_OFFSET;
-    let indptr = if wide {
-        let v: Vec<u64> = read_section(r, nv + 1, "indptr")?;
-        skip_padding(r, (nv + 1) * 8, "indptr")?;
-        sum = checksum_pod(sum, &v);
-        IndPtr::U64(v)
-    } else {
-        let v: Vec<u32> = read_section(r, nv + 1, "indptr")?;
-        skip_padding(r, (nv + 1) * 4, "indptr")?;
-        sum = checksum_pod(sum, &v);
-        IndPtr::U32(v)
-    };
-    let indices: Vec<u32> = read_section(r, ne as usize, "indices")?;
-    skip_padding(r, ne as usize * 4, "indices")?;
-    sum = checksum_pod(sum, &indices);
-    let weights = if flags & LGX_FLAG_WEIGHTED != 0 {
-        let ws: Vec<f32> = read_section(r, ne as usize, "weights")?;
-        skip_padding(r, ne as usize * 4, "weights")?;
-        sum = checksum_pod(sum, &ws);
-        Some(ws)
-    } else {
-        None
-    };
-    let perm = if flags & LGX_FLAG_PERM != 0 {
-        let forward: Vec<u32> = read_section(r, nv, "perm")?;
-        skip_padding(r, nv * 4, "perm")?;
-        sum = checksum_pod(sum, &forward);
-        Some(forward)
-    } else {
-        None
-    };
-    if sum != expected_sum {
-        return Err(LgxError::ChecksumMismatch { expected: expected_sum, got: sum });
-    }
-
-    let g = CscGraph { indptr, indices, weights };
+/// Shared load tail: structural validation after the checksums pass.
+fn validate_loaded(g: &CscGraph, ne: u64) -> Result<(), LgxError> {
     if g.indptr.last() != ne {
         return Err(LgxError::Invalid(format!(
             "indptr tail {} != declared edge count {ne}",
             g.indptr.last()
         )));
     }
-    g.validate().map_err(LgxError::Invalid)?;
+    g.validate().map_err(LgxError::Invalid)
+}
+
+/// Load a graph (and its optional [`VertexPerm`]) from the `.lgx` format,
+/// verifying checksums and structure. The inverse of [`write_lgx`] — the
+/// buffered (`read_exact`) loader; [`load_lgx`] prefers the zero-copy
+/// mapped path on top of the same header/checksum/validation logic.
+pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let mut header = [0u8; LGX_ALIGN];
+    r.read_exact(&mut header).map_err(|e| truncation(e, "header"))?;
+    let h = parse_lgx_header(&header)?;
+
+    // every section byte size is computed (overflow-checked) before any
+    // payload byte is read — forged counts fail here by name
+    let indptr_bytes = sec_bytes(h.nv as u64 + 1, if h.wide() { 8 } else { 4 }, "indptr")?;
+    let indices_bytes = sec_bytes(h.ne, 4, "indices")?;
+    let perm_bytes = sec_bytes(h.nv as u64, 4, "perm")?;
+
+    let mut sum = FNV_OFFSET;
+    let indptr = if h.wide() {
+        let v: Vec<u64> = read_section(r, h.nv + 1, "indptr")?;
+        skip_padding(r, indptr_bytes, "indptr")?;
+        sum = checksum_pod(sum, &v);
+        IndPtr::U64(v.into())
+    } else {
+        let v: Vec<u32> = read_section(r, h.nv + 1, "indptr")?;
+        skip_padding(r, indptr_bytes, "indptr")?;
+        sum = checksum_pod(sum, &v);
+        IndPtr::U32(v.into())
+    };
+    let indices: Vec<u32> = read_section(r, h.ne as usize, "indices")?;
+    skip_padding(r, indices_bytes, "indices")?;
+    sum = checksum_pod(sum, &indices);
+    let weights = if h.flags & LGX_FLAG_WEIGHTED != 0 {
+        let ws: Vec<f32> = read_section(r, h.ne as usize, "weights")?;
+        skip_padding(r, indices_bytes, "weights")?;
+        sum = checksum_pod(sum, &ws);
+        Some(ws)
+    } else {
+        None
+    };
+    let perm = if h.flags & LGX_FLAG_PERM != 0 {
+        let forward: Vec<u32> = read_section(r, h.nv, "perm")?;
+        skip_padding(r, perm_bytes, "perm")?;
+        sum = checksum_pod(sum, &forward);
+        Some(forward)
+    } else {
+        None
+    };
+    if sum != h.payload_sum {
+        return Err(LgxError::ChecksumMismatch { expected: h.payload_sum, got: sum });
+    }
+
+    let g = CscGraph { indptr, indices: indices.into(), weights: weights.map(Into::into) };
+    validate_loaded(&g, h.ne)?;
     let perm = match perm {
         Some(forward) => Some(VertexPerm::from_forward(forward).map_err(LgxError::Invalid)?),
         None => None,
     };
+    Ok((g, perm))
+}
+
+/// Advance a byte cursor over one 64-byte-padded section of a mapping of
+/// `total` bytes, returning the section's unpadded byte range. Running
+/// past the mapping (content or padding) is a named truncation error.
+fn section_range(
+    total: usize,
+    off: &mut usize,
+    n_bytes: usize,
+    section: &'static str,
+) -> Result<std::ops::Range<usize>, LgxError> {
+    let start = *off;
+    let end = start.checked_add(n_bytes).ok_or(LgxError::Truncated(section))?;
+    let padded = end.checked_add(pad_len(n_bytes)).ok_or(LgxError::Truncated(section))?;
+    if padded > total {
+        return Err(LgxError::Truncated(section));
+    }
+    *off = padded;
+    Ok(start..end)
+}
+
+/// The zero-copy `.lgx` parse: the payload checksum is verified over the
+/// mapped bytes **in place**, then `indptr`/`indices`/`weights` become
+/// [`GraphBuf::Mapped`] windows into the shared mapping — no payload
+/// bytes are copied. (The perm section alone is materialized: its inverse
+/// must be computed into owned memory regardless, and it is |V| × u32 —
+/// small next to the payload.) Same header, checksum, and validation
+/// logic as [`read_lgx`], so the two loaders are bit-identical.
+fn parse_lgx_mapped(map: Arc<Mmap>) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    if cfg!(target_endian = "big") {
+        // the on-disk sections are little-endian; a BE build cannot view
+        // them in place — load_lgx never routes here on BE targets
+        return Err(LgxError::Invalid("mapped loads require a little-endian target".into()));
+    }
+    let bytes = map.bytes();
+    let header: &[u8; LGX_ALIGN] = bytes
+        .get(..LGX_ALIGN)
+        .and_then(|b| b.try_into().ok())
+        .ok_or(LgxError::Truncated("header"))?;
+    let h = parse_lgx_header(header)?;
+    let indptr_bytes = sec_bytes(h.nv as u64 + 1, if h.wide() { 8 } else { 4 }, "indptr")?;
+    let indices_bytes = sec_bytes(h.ne, 4, "indices")?;
+    let perm_bytes = sec_bytes(h.nv as u64, 4, "perm")?;
+
+    let total = bytes.len();
+    let mut off = LGX_ALIGN;
+    let indptr_r = section_range(total, &mut off, indptr_bytes, "indptr")?;
+    let indices_r = section_range(total, &mut off, indices_bytes, "indices")?;
+    let weights_r = if h.flags & LGX_FLAG_WEIGHTED != 0 {
+        Some(section_range(total, &mut off, indices_bytes, "weights")?)
+    } else {
+        None
+    };
+    let perm_r = if h.flags & LGX_FLAG_PERM != 0 {
+        Some(section_range(total, &mut off, perm_bytes, "perm")?)
+    } else {
+        None
+    };
+
+    // payload checksum straight over the mapped section bytes, in order
+    let mut sum = fnv1a(FNV_OFFSET, &bytes[indptr_r.clone()]);
+    sum = fnv1a(sum, &bytes[indices_r.clone()]);
+    if let Some(r) = &weights_r {
+        sum = fnv1a(sum, &bytes[r.clone()]);
+    }
+    if let Some(r) = &perm_r {
+        sum = fnv1a(sum, &bytes[r.clone()]);
+    }
+    if sum != h.payload_sum {
+        return Err(LgxError::ChecksumMismatch { expected: h.payload_sum, got: sum });
+    }
+
+    let indptr = if h.wide() {
+        IndPtr::U64(
+            GraphBuf::mapped(Arc::clone(&map), indptr_r.start, h.nv + 1)
+                .map_err(LgxError::Invalid)?,
+        )
+    } else {
+        IndPtr::U32(
+            GraphBuf::mapped(Arc::clone(&map), indptr_r.start, h.nv + 1)
+                .map_err(LgxError::Invalid)?,
+        )
+    };
+    let indices = GraphBuf::mapped(Arc::clone(&map), indices_r.start, h.ne as usize)
+        .map_err(LgxError::Invalid)?;
+    let weights = match &weights_r {
+        Some(r) => Some(
+            GraphBuf::mapped(Arc::clone(&map), r.start, h.ne as usize)
+                .map_err(LgxError::Invalid)?,
+        ),
+        None => None,
+    };
+    let perm = match &perm_r {
+        Some(r) => {
+            let forward: Vec<u32> = bytes[r.clone()]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Some(VertexPerm::from_forward(forward).map_err(LgxError::Invalid)?)
+        }
+        None => None,
+    };
+    let g = CscGraph { indptr, indices, weights };
+    validate_loaded(&g, h.ne)?;
     Ok((g, perm))
 }
 
@@ -675,10 +899,51 @@ pub fn save_lgx<P: AsRef<Path>>(
     }
 }
 
-/// [`read_lgx`] from a file path.
+/// Whether the zero-copy mapped `.lgx` load path engages: a unix target
+/// (mmap available), little-endian (the mapped bytes are viewed in
+/// place), and not disabled via `LABOR_NO_MMAP=1`.
+pub fn mmap_enabled() -> bool {
+    Mmap::supported()
+        && cfg!(target_endian = "little")
+        && !std::env::var_os("LABOR_NO_MMAP").is_some_and(|v| v != "0")
+}
+
+/// Load an `.lgx` graph from a file path — the default entry point.
+///
+/// Prefers the zero-copy mapped loader when [`mmap_enabled`]; if the
+/// *mapping itself* cannot be established (non-unix target, syscall
+/// failure, empty file) it silently falls back to the buffered
+/// `read_exact` loader, which produces a bit-identical graph. Parse and
+/// corruption errors do NOT fall back: a corrupt file is corrupt through
+/// either loader, and retrying would only mask the named error.
 pub fn load_lgx<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let path = path.as_ref();
+    if mmap_enabled() {
+        if let Ok(f) = File::open(path) {
+            if let Ok(map) = Mmap::map_file(&f) {
+                return parse_lgx_mapped(Arc::new(map));
+            }
+        }
+    }
+    load_lgx_buffered(path)
+}
+
+/// [`read_lgx`] from a file path through the buffered `read_exact` path —
+/// the documented fallback when mapping is unavailable, and the
+/// cross-check loader the bit-identity tests compare against.
+pub fn load_lgx_buffered<P: AsRef<Path>>(
+    path: P,
+) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
     let mut r = BufReader::new(File::open(path)?);
     read_lgx(&mut r)
+}
+
+/// Force the zero-copy mapped loader: errors when mapping is unavailable
+/// instead of falling back. Benches and tests use this to pin the path.
+pub fn load_lgx_mmap<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let f = File::open(path)?;
+    let map = Mmap::map_file(&f)?;
+    parse_lgx_mapped(Arc::new(map))
 }
 
 #[cfg(test)]

@@ -20,4 +20,4 @@ pub mod io;
 pub mod stats;
 
 pub use compact::VertexPerm;
-pub use csc::{CscGraph, IndPtr};
+pub use csc::{CscGraph, GraphBuf, IndPtr};

@@ -169,7 +169,23 @@ fn run_graph(argv: &[String]) -> Result<()> {
             if layout == "degree" {
                 anyhow::ensure!(back.is_degree_ordered(), "packed graph lost degree order");
             }
-            println!("  reload: {t_lgx:.2?}, graph and perm verified");
+            println!(
+                "  reload: {t_lgx:.2?} ({}), graph and perm verified",
+                if back.is_mapped() { "mmap, zero-copy" } else { "buffered read" }
+            );
+
+            // cross-check the two .lgx loaders against each other: the
+            // mapped and buffered paths must produce bit-identical graphs
+            if back.is_mapped() {
+                let (buffered, buffered_perm) = graph_io::load_lgx_buffered(&out)
+                    .map_err(|e| anyhow!("buffered reload failed: {e}"))?;
+                anyhow::ensure!(buffered == back, "buffered load differs from mapped load");
+                anyhow::ensure!(
+                    buffered_perm.as_ref() == back_perm.as_ref(),
+                    "buffered perm differs from mapped perm"
+                );
+                println!("  mmap vs buffered loaders: bit-identical");
+            }
 
             // the load-time story vs the legacy parse-and-rebuild format;
             // the scratch file is removed before any verification can bail

@@ -201,8 +201,28 @@ impl<'a> LaborLayerState<'a> {
         let map = &mut scratch.map;
         map.begin(g.num_vertices());
         nbr_off.push(0);
-        for &s in seeds {
-            for &t in g.in_neighbors(s) {
+        // candidate discovery is the frontier walk: indptr/indices reads
+        // are seed-ordered but the epoch-map probes are scattered. Hint
+        // upcoming seeds' offsets/neighbor slices and the map slots a few
+        // neighbors ahead — pure prefetch, the visit order (and therefore
+        // the first-seen candidate numbering) is untouched.
+        let pf = crate::util::simd::simd_enabled();
+        for (i, &s) in seeds.iter().enumerate() {
+            if pf {
+                if i + 4 < seeds.len() {
+                    g.prefetch_in_bounds(seeds[i + 4]);
+                }
+                if i + 1 < seeds.len() {
+                    g.prefetch_in_neighbors(seeds[i + 1]);
+                }
+            }
+            let nbrs = g.in_neighbors(s);
+            for (j, &t) in nbrs.iter().enumerate() {
+                if pf {
+                    if let Some(&tn) = nbrs.get(j + 8) {
+                        map.prefetch(tn);
+                    }
+                }
                 let id = match map.get(t) {
                     Some(id) => id,
                     None => {

@@ -488,7 +488,15 @@ pub(crate) fn finalize_inputs_in(
     for (i, &s) in seeds.iter().enumerate() {
         map.insert(s, i as u32);
     }
-    for src in edge_src_global.iter_mut() {
+    // the map probes are the scattered reads of this loop; hint a few
+    // edges ahead (pure prefetch — rewrite order is unchanged)
+    let pf = crate::util::simd::simd_enabled();
+    let n = edge_src_global.len();
+    for i in 0..n {
+        if pf && i + 8 < n {
+            map.prefetch(edge_src_global[i + 8]);
+        }
+        let src = &mut edge_src_global[i];
         let id = match map.get(*src) {
             Some(id) => id,
             None => {

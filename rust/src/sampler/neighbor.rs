@@ -63,7 +63,16 @@ fn sample_ns_shard(
     edge_src.clear();
     edge_dst.clear();
     edge_weight.clear();
+    let pf = crate::util::simd::simd_enabled();
     for (si, &s) in shard_seeds.iter().enumerate() {
+        if pf {
+            if si + 4 < shard_seeds.len() {
+                g.prefetch_in_bounds(shard_seeds[si + 4]);
+            }
+            if si + 1 < shard_seeds.len() {
+                g.prefetch_in_neighbors(shard_seeds[si + 1]);
+            }
+        }
         let nbrs = g.in_neighbors(s);
         let d = nbrs.len();
         if d == 0 {
@@ -110,7 +119,16 @@ impl LayerSampler for NeighborSampler {
         edge_dst.clear();
         edge_weight.clear();
 
+        let pf = crate::util::simd::simd_enabled();
         for (si, &s) in seeds.iter().enumerate() {
+            if pf {
+                if si + 4 < seeds.len() {
+                    g.prefetch_in_bounds(seeds[si + 4]);
+                }
+                if si + 1 < seeds.len() {
+                    g.prefetch_in_neighbors(seeds[si + 1]);
+                }
+            }
             let nbrs = g.in_neighbors(s);
             let d = nbrs.len();
             if d == 0 {

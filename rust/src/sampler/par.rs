@@ -246,8 +246,25 @@ pub(crate) fn discover_shard(
     let map = &mut scratch.map;
     map.begin(g.num_vertices());
     nbr_off.push(0);
-    for &s in shard_seeds {
-        for &t in g.in_neighbors(s) {
+    // same prefetch schedule as the sequential discovery walk
+    // (LaborLayerState::new_in): hints only, visit order untouched
+    let pf = crate::util::simd::simd_enabled();
+    for (i, &s) in shard_seeds.iter().enumerate() {
+        if pf {
+            if i + 4 < shard_seeds.len() {
+                g.prefetch_in_bounds(shard_seeds[i + 4]);
+            }
+            if i + 1 < shard_seeds.len() {
+                g.prefetch_in_neighbors(shard_seeds[i + 1]);
+            }
+        }
+        let nbrs = g.in_neighbors(s);
+        for (j, &t) in nbrs.iter().enumerate() {
+            if pf {
+                if let Some(&tn) = nbrs.get(j + 8) {
+                    map.prefetch(tn);
+                }
+            }
             let id = match map.get(t) {
                 Some(id) => id,
                 None => {

@@ -91,6 +91,20 @@ impl EpochMap {
         self.slot[key as usize] = value;
     }
 
+    /// Prefetch-hint the stamp/slot cache lines for `key`. The epoch-map
+    /// probes of candidate discovery are the one scattered access of the
+    /// frontier walk, so hot loops hint a few neighbors ahead. Never
+    /// faults and never reads: out-of-domain keys are simply skipped.
+    #[inline(always)]
+    pub fn prefetch(&self, key: u32) {
+        use crate::util::simd::prefetch_read;
+        let i = key as usize;
+        if i < self.stamp.len() {
+            prefetch_read(self.stamp.as_ptr().wrapping_add(i));
+            prefetch_read(self.slot.as_ptr().wrapping_add(i));
+        }
+    }
+
     /// Largest domain this map has been sized for.
     pub fn domain(&self) -> usize {
         self.stamp.len()

@@ -1,0 +1,181 @@
+//! Minimal read-only memory mapping over raw `mmap(2)`/`munmap(2)` —
+//! no external crates (the offline build vendors no `libc`/`memmap2`).
+//!
+//! This exists for one consumer: the zero-copy `.lgx` graph load path
+//! ([`graph::io::load_lgx`](crate::graph::io::load_lgx)), where the
+//! graph's `indptr`/`indices`/`weights` sections borrow the mapped file
+//! in place via [`GraphBuf`](crate::graph::csc::GraphBuf) instead of
+//! being `read_exact`-copied into owned vectors.
+//!
+//! ## Safety argument
+//!
+//! The only `unsafe` here is (a) the two `extern "C"` syscall bindings
+//! and (b) viewing the mapped region as `&[u8]`. The view is sound
+//! because:
+//!
+//! * the mapping is `PROT_READ` + `MAP_PRIVATE`: nothing through this
+//!   type can write the region, and writes by other processes to the
+//!   underlying file are not required to be visible here;
+//! * the region stays mapped for exactly the lifetime of the [`Mmap`]
+//!   value (`Drop` unmaps), and every borrow of the bytes is tied to
+//!   that lifetime;
+//! * `mmap` returns page-aligned addresses, so any alignment ≤ page
+//!   size required by typed views layered on top (e.g. the 64-byte
+//!   `.lgx` section alignment) is preserved.
+//!
+//! The one hazard `mmap` cannot rule out is the file being *truncated*
+//! by another process while mapped (touching unmapped-backing pages then
+//! faults). `.lgx` artifacts are written atomically (tmp + rename) and
+//! treated as immutable once packed; callers that cannot assume this
+//! should use the buffered loader, which is the documented fallback
+//! everywhere mapping is used.
+
+use std::fs::File;
+use std::io;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // POSIX values shared by every unix target this crate builds for
+    // (Linux and macOS both define PROT_READ = 0x1, MAP_PRIVATE = 0x02).
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x02;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only, private memory mapping of an entire file. See the
+/// [module docs](self) for the safety argument.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only for its whole lifetime, so shared
+// access from any thread is data-race-free; the raw pointer is merely
+// the region's address, not thread-affine state.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Whether this build can memory-map at all (unix targets only —
+    /// elsewhere [`map_file`](Self::map_file) always errors and callers
+    /// take their buffered fallback).
+    pub fn supported() -> bool {
+        cfg!(unix)
+    }
+
+    /// Map the whole of `f` read-only. Errors (rather than panicking) on
+    /// empty files, files larger than the address space, or any syscall
+    /// failure — callers treat every error as "fall back to buffered".
+    #[cfg(unix)]
+    pub fn map_file(f: &File) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = f.metadata()?.len();
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; surface it without the syscall
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "cannot map an empty file"));
+        }
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "file exceeds the addressable range",
+            ));
+        }
+        let len = len as usize;
+        // SAFETY: fd is a valid open file descriptor for the lifetime of
+        // the call; a NULL addr + MAP_PRIVATE asks the kernel to pick an
+        // unused range, so no existing mapping is clobbered.
+        let p = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ, sys::MAP_PRIVATE, f.as_raw_fd(), 0)
+        };
+        if p as usize == usize::MAX {
+            // MAP_FAILED
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr: p as *const u8, len })
+    }
+
+    /// Non-unix stub: mapping is unavailable, callers fall back to the
+    /// buffered load path.
+    #[cfg(not(unix))]
+    pub fn map_file(_f: &File) -> io::Result<Mmap> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "mmap is unavailable on this platform"))
+    }
+
+    /// The mapped bytes, borrowed for the mapping's lifetime.
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+        // `self` (see the module-level safety argument).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: ptr/len are exactly what mmap returned; the region is
+        // unmapped once, here, at the end of the owning value's life.
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_a_file_and_reads_it_back() {
+        if !Mmap::supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join(format!("labor_mmap_{}.bin", std::process::id()));
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::File::create(&path).unwrap().write_all(&payload).unwrap();
+        let f = File::open(&path).unwrap();
+        let m = Mmap::map_file(&f).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(m.bytes(), &payload[..]);
+        drop(f); // the mapping outlives the descriptor
+        assert_eq!(m.bytes()[9_999], payload[9_999]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_errors_instead_of_panicking() {
+        let path = std::env::temp_dir().join(format!("labor_mmap_e_{}.bin", std::process::id()));
+        std::fs::File::create(&path).unwrap();
+        let f = File::open(&path).unwrap();
+        assert!(Mmap::map_file(&f).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -10,8 +10,12 @@
 //!   `results/` series behind every table and figure.
 //! * [`json`] — a dependency-free JSON value type with emitter and parser;
 //!   used for the AOT artifact manifest and experiment outputs.
+//! * [`mmap`] — minimal read-only `mmap(2)` wrapper (no external crates)
+//!   behind the zero-copy `.lgx` load path.
 //! * [`prop`] — `for_cases`: seeded random property cases with replayable
 //!   failure seeds (a micro `proptest` substitute).
+//! * [`simd`] — SIMD feature-row gather + software-prefetch hints with a
+//!   bit-identical scalar fallback (`LABOR_NO_SIMD`).
 //! * [`stats`] — Welford online mean/variance, exact means, quantiles.
 //! * [`timer`] — warmup + repeat wall-clock benchmarking with mean/p50/p95
 //!   reporting, used by the `benches/` targets.
@@ -19,7 +23,9 @@
 pub mod alias;
 pub mod csv;
 pub mod json;
+pub mod mmap;
 pub mod prop;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 

@@ -1,0 +1,226 @@
+//! Explicit SIMD + software-prefetch primitives for the two hottest
+//! loops in the system — feature-row gather
+//! ([`FeatureStore::gather`](crate::coordinator::feature_store::FeatureStore::gather))
+//! and the samplers' frontier walks — with a scalar fallback that is
+//! **bit-identical by construction**: every operation here moves `f32`
+//! lanes or hints the cache; nothing reinterprets or recombines values,
+//! so SIMD-vs-scalar equality is exact, not approximate (pinned by
+//! `tests/simd_identity.rs`).
+//!
+//! Dispatch is a process-wide runtime toggle rather than a compile-time
+//! feature: `LABOR_NO_SIMD=1` in the environment (or
+//! [`set_simd_enabled`] from tests) forces the scalar paths, which is
+//! what `ci.sh`'s scalar-fallback pass uses to keep both paths green.
+//! Intrinsics are the portable stable baseline per architecture — SSE2
+//! on `x86_64` (including `_mm_prefetch`), NEON on `aarch64` (which has
+//! no stable prefetch intrinsic; prefetch is a no-op there) — and any
+//! other architecture compiles to the scalar path unconditionally.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const MODE_UNSET: u8 = 0;
+const MODE_SIMD: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+
+/// Process-wide dispatch mode, initialized lazily from `LABOR_NO_SIMD`.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Whether the SIMD/prefetch paths are active. First call reads
+/// `LABOR_NO_SIMD` (any value other than `0` disables); later calls are
+/// one relaxed atomic load. Hot loops hoist this into a local.
+#[inline]
+pub fn simd_enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_SIMD => true,
+        MODE_SCALAR => false,
+        _ => {
+            let off = std::env::var_os("LABOR_NO_SIMD").is_some_and(|v| v != "0");
+            MODE.store(if off { MODE_SCALAR } else { MODE_SIMD }, Ordering::Relaxed);
+            !off
+        }
+    }
+}
+
+/// Override the dispatch mode at runtime (tests and benches; wins over
+/// the environment). Process-wide — identity tests that flip this
+/// serialize on their own lock.
+pub fn set_simd_enabled(on: bool) {
+    MODE.store(if on { MODE_SIMD } else { MODE_SCALAR }, Ordering::Relaxed);
+}
+
+/// How many rows ahead [`gather_rows_f32`] prefetches, and the distance
+/// sampler frontier walks use for their indptr/map hints.
+pub const PREFETCH_DIST: usize = 8;
+
+/// Best-effort prefetch of the cache line holding `*p` into L1.
+///
+/// Safe for **any** pointer value, including out-of-range ones produced
+/// with `wrapping_add`: prefetch instructions are architecturally
+/// non-faulting hints, and on targets without a stable prefetch
+/// intrinsic this is a no-op.
+#[inline(always)]
+pub fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: PREFETCHT0 never faults, for any address.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// Copy `len` `f32`s from `src` to `dst` with 128-bit vector moves where
+/// available, scalar tail otherwise. Pure lane movement — bit-identical
+/// to `ptr::copy_nonoverlapping` on every target.
+///
+/// # Safety
+/// `src` must be valid for `len` reads and `dst` for `len` writes, and
+/// the two ranges must not overlap.
+#[inline(always)]
+unsafe fn copy_f32_wide(src: *const f32, dst: *mut f32, len: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use core::arch::x86_64::{_mm_loadu_ps, _mm_storeu_ps};
+        let mut i = 0;
+        while i + 8 <= len {
+            let a = _mm_loadu_ps(src.add(i));
+            let b = _mm_loadu_ps(src.add(i + 4));
+            _mm_storeu_ps(dst.add(i), a);
+            _mm_storeu_ps(dst.add(i + 4), b);
+            i += 8;
+        }
+        if i + 4 <= len {
+            _mm_storeu_ps(dst.add(i), _mm_loadu_ps(src.add(i)));
+            i += 4;
+        }
+        while i < len {
+            *dst.add(i) = *src.add(i);
+            i += 1;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        use core::arch::aarch64::{vld1q_f32, vst1q_f32};
+        let mut i = 0;
+        while i + 4 <= len {
+            vst1q_f32(dst.add(i), vld1q_f32(src.add(i)));
+            i += 4;
+        }
+        while i < len {
+            *dst.add(i) = *src.add(i);
+            i += 1;
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    std::ptr::copy_nonoverlapping(src, dst, len);
+}
+
+/// Append rows `ids` (each `dim` wide) of the row-major matrix `src` to
+/// `out`, dispatching to the wide-copy + prefetch path unless the scalar
+/// fallback is forced. Output bytes are identical either way.
+///
+/// # Panics
+/// When any row `id` does not fully fit in `src` (same contract as the
+/// slice indexing of the scalar path).
+#[inline]
+pub fn gather_rows_f32(src: &[f32], dim: usize, ids: &[u32], out: &mut Vec<f32>) {
+    if simd_enabled() {
+        gather_rows_f32_simd(src, dim, ids, out);
+    } else {
+        gather_rows_f32_scalar(src, dim, ids, out);
+    }
+}
+
+/// The reference gather: per-row `extend_from_slice`. Public so tests
+/// and benches can pin the SIMD path against it bit-for-bit.
+pub fn gather_rows_f32_scalar(src: &[f32], dim: usize, ids: &[u32], out: &mut Vec<f32>) {
+    out.reserve(ids.len() * dim);
+    for &v in ids {
+        let base = v as usize * dim;
+        out.extend_from_slice(&src[base..base + dim]);
+    }
+}
+
+/// The vectorized gather: bounds are validated up front, the destination
+/// is reserved once, then each row is one wide copy while the row
+/// [`PREFETCH_DIST`] ahead is prefetched — hiding the DRAM latency of
+/// the scattered row reads behind the current row's copy.
+pub fn gather_rows_f32_simd(src: &[f32], dim: usize, ids: &[u32], out: &mut Vec<f32>) {
+    let n = ids.len();
+    // validate every row before any raw-pointer work, with checked
+    // arithmetic so absurd (id, dim) pairs fail loudly instead of wrapping
+    for &v in ids {
+        let end = (v as usize).checked_mul(dim).and_then(|b| b.checked_add(dim));
+        assert!(
+            end.is_some_and(|e| e <= src.len()),
+            "gather_rows_f32: row {v} (dim {dim}) out of range for {} values",
+            src.len()
+        );
+    }
+    out.reserve(n * dim);
+    let old = out.len();
+    let src_p = src.as_ptr();
+    // SAFETY: every source row was bounds-checked above; the destination
+    // has reserved capacity for `n * dim` more elements, written densely
+    // from `old` before set_len exposes them.
+    unsafe {
+        let mut dst = out.as_mut_ptr().add(old);
+        for i in 0..n {
+            if i + PREFETCH_DIST < n {
+                prefetch_read(src_p.wrapping_add(ids[i + PREFETCH_DIST] as usize * dim));
+            }
+            copy_f32_wide(src_p.add(ids[i] as usize * dim), dst, dim);
+            dst = dst.add(dim);
+        }
+        out.set_len(old + n * dim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StreamRng;
+
+    #[test]
+    fn simd_gather_is_bit_identical_to_scalar() {
+        let mut rng = StreamRng::new(41);
+        for dim in [1usize, 3, 4, 5, 7, 8, 12, 16, 33, 128] {
+            let rows = 200;
+            let src: Vec<f32> =
+                (0..rows * dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let ids: Vec<u32> = (0..500).map(|_| rng.below(rows as u64) as u32).collect();
+            let (mut a, mut b) = (vec![0.5f32], vec![0.5f32]); // non-empty: appends
+            gather_rows_f32_scalar(&src, dim, &ids, &mut a);
+            gather_rows_f32_simd(&src, dim, &ids, &mut b);
+            assert_eq!(a.len(), b.len(), "dim {dim}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "dim {dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_ids_and_zero_dim_are_noops() {
+        let src = vec![1.0f32; 8];
+        let mut out = Vec::new();
+        gather_rows_f32_simd(&src, 4, &[], &mut out);
+        assert!(out.is_empty());
+        gather_rows_f32_simd(&src, 0, &[3, 7], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn simd_gather_rejects_out_of_range_rows() {
+        let src = vec![0.0f32; 8];
+        gather_rows_f32_simd(&src, 4, &[2], &mut Vec::new());
+    }
+
+    #[test]
+    fn prefetch_accepts_any_address() {
+        // non-faulting for null, dangling, and wrapped addresses
+        prefetch_read(std::ptr::null::<u32>());
+        let x = 0u64;
+        prefetch_read((&x as *const u64).wrapping_add(1 << 40));
+    }
+}

@@ -1,0 +1,270 @@
+//! Hardened readers under hostile input: forged length fields, truncated
+//! sections, and corrupted payloads must surface as *named* errors —
+//! never a capacity-overflow panic, never a multi-GB allocation that the
+//! OOM killer resolves, never a plausible-but-wrong graph.
+//!
+//! Also pins the loader-equivalence contract: the zero-copy mapped
+//! `.lgx` loader and the buffered `read_exact` loader produce
+//! bit-identical graphs from the same file, and corruption fails by name
+//! through *both* paths (parse errors never silently fall back).
+
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::compact::VertexPerm;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::io::{
+    load_graph, load_lgx, load_lgx_buffered, load_lgx_mmap, mmap_enabled, read_f32_slice,
+    read_graph, read_u16_slice, read_u32_slice, read_u64_slice, save_graph, save_lgx,
+    write_graph, LgxError,
+};
+use labor_gnn::graph::CscGraph;
+use std::io::ErrorKind;
+use std::path::PathBuf;
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 300,
+        num_arcs: 6_000,
+        num_communities: 3,
+        homophily: 0.7,
+        degree_exponent: 0.5,
+        seed: 19,
+    })
+    .graph
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("labor_iohard_{tag}_{}.bin", std::process::id()))
+}
+
+/// A length-prefixed section whose header declares `declared` elements,
+/// followed by `payload` bytes.
+fn forged_section(declared: u64, payload: &[u8]) -> Vec<u8> {
+    let mut buf = declared.to_le_bytes().to_vec();
+    buf.extend_from_slice(payload);
+    buf
+}
+
+// --- legacy length-prefixed readers ----------------------------------
+
+/// `u64::MAX` as a declared element count must fail by name in every
+/// legacy reader. Before hardening this was `vec![0u8; n * width]` on the
+/// raw count: a capacity-overflow panic (`n * width` wrapping) or an
+/// attempted 16-exabyte allocation.
+#[test]
+fn forged_u64_max_length_is_a_named_error_in_every_reader() {
+    let buf = forged_section(u64::MAX, &[0u8; 64]);
+    let errors = [
+        read_u32_slice(&mut &buf[..]).unwrap_err(),
+        read_u64_slice(&mut &buf[..]).unwrap_err(),
+        read_f32_slice(&mut &buf[..]).unwrap_err(),
+        read_u16_slice(&mut &buf[..]).unwrap_err(),
+    ];
+    for err in errors {
+        assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+        assert!(
+            err.to_string().contains("overflow"),
+            "error must name the overflow: {err}"
+        );
+    }
+}
+
+/// A declared count whose byte size fits `usize` but not the machine
+/// (2⁶¹ u32 elements = 2⁶³ bytes) fails at the up-front reservation with
+/// a named error — the allocator refusal is caught, not unwrapped.
+#[test]
+fn forged_exabyte_length_fails_reservation_by_name() {
+    let buf = forged_section(1u64 << 61, &[0u8; 64]);
+    let err = read_u32_slice(&mut &buf[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    assert!(err.to_string().contains("cannot allocate"), "{err}");
+}
+
+/// A plausible-but-wrong count (file ends first) is a named truncation
+/// error carrying the declared count — including the off-by-one case and
+/// a count that crosses the chunked-read boundary.
+#[test]
+fn declared_count_beyond_eof_is_a_named_truncation() {
+    // 8 u32s on disk, 9 declared (off by one)
+    let payload: Vec<u8> = (0..8u32).flat_map(|x| x.to_le_bytes()).collect();
+    let buf = forged_section(9, &payload);
+    let err = read_u32_slice(&mut &buf[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    assert!(err.to_string().contains("file ends before the declared 9"), "{err}");
+
+    // a declared count larger than one read chunk (2²⁰ bytes), 5 bytes on
+    // disk: the chunked reader must hit EOF after one chunk, not zero-fill
+    // the whole declared size first
+    let buf = forged_section(1 << 20, &[1, 2, 3, 4, 5]);
+    let err = read_u32_slice(&mut &buf[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    assert!(err.to_string().contains("file ends before the declared"), "{err}");
+}
+
+/// An honest section still round-trips through the hardened reader.
+#[test]
+fn honest_sections_still_roundtrip() {
+    let xs: Vec<u32> = (0..1000).map(|i| i * 7).collect();
+    let payload: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let buf = forged_section(xs.len() as u64, &payload);
+    assert_eq!(read_u32_slice(&mut &buf[..]).unwrap(), xs);
+}
+
+/// The legacy whole-graph reader inherits the hardening: a forged indptr
+/// length inside an otherwise valid file is a named error, not a panic.
+#[test]
+fn legacy_graph_with_forged_section_length_is_rejected() {
+    let g = dense_graph();
+    let mut buf = Vec::new();
+    write_graph(&mut buf, &g).unwrap();
+    // the indptr length prefix sits right after the 8-byte magic
+    buf[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    let err = read_graph(&mut &buf[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+
+    // and a mid-file truncation through the file loader is named too
+    let path = tmp_path("legacy_trunc");
+    save_graph(&path, &g).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    let err = load_graph(&path).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+// --- .lgx: mapped loader vs buffered loader --------------------------
+
+/// The loader-equivalence contract: the same `.lgx` file loads
+/// bit-identically through the zero-copy mapped path and the buffered
+/// `read_exact` path — graph, weights, and permutation.
+#[test]
+fn mmap_and_buffered_loads_are_bit_identical() {
+    let g = dense_graph();
+    let perm = VertexPerm::degree_ordered(&g);
+    let rg = perm.apply_to_graph(&g);
+    let path = tmp_path("identity");
+    save_lgx(&path, &rg, Some(&perm)).unwrap();
+
+    let (buffered, perm_b) = load_lgx_buffered(&path).unwrap();
+    assert!(!buffered.is_mapped());
+    assert_eq!(buffered, rg);
+    assert_eq!(perm_b.as_ref(), Some(&perm));
+
+    if mmap_enabled() {
+        let (mapped, perm_m) = load_lgx_mmap(&path).unwrap();
+        assert!(mapped.is_mapped(), "forced mmap load must be backed by the mapping");
+        assert_eq!(mapped, buffered, "mapped and buffered loads must be bit-identical");
+        assert_eq!(perm_m, perm_b);
+        // the default entry point picks the mapped path on this target
+        let (auto, _) = load_lgx(&path).unwrap();
+        assert!(auto.is_mapped());
+        assert_eq!(auto, buffered);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A mapped graph answers the same queries as its owned twin (the
+/// `GraphBuf` windows really do point at the right file bytes).
+#[test]
+fn mapped_graph_answers_queries_identically() {
+    if !mmap_enabled() {
+        return;
+    }
+    let g = dense_graph();
+    let path = tmp_path("queries");
+    save_lgx(&path, &g, None).unwrap();
+    let (m, _) = load_lgx_mmap(&path).unwrap();
+    assert_eq!(m.num_vertices(), g.num_vertices());
+    assert_eq!(m.num_edges(), g.num_edges());
+    for s in 0..g.num_vertices() as u32 {
+        assert_eq!(m.in_neighbors(s), g.in_neighbors(s), "vertex {s}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Corruption fails by name through the mapped loader exactly as through
+/// the buffered one — a parse error must never silently fall back.
+#[test]
+fn mapped_loader_names_corruption_and_truncation() {
+    if !mmap_enabled() {
+        return;
+    }
+    let g = dense_graph();
+    let path = tmp_path("corrupt");
+    save_lgx(&path, &g, None).unwrap();
+    let full = std::fs::read(&path).unwrap();
+
+    // one flipped payload byte (inside the indptr section) → checksum
+    let mut c = full.clone();
+    c[70] ^= 0x01;
+    std::fs::write(&path, &c).unwrap();
+    match load_lgx_mmap(&path) {
+        Err(LgxError::ChecksumMismatch { expected, got }) => assert_ne!(expected, got),
+        other => panic!("expected ChecksumMismatch, got {other:?}"),
+    }
+    // the default entry point reports the same named error (no fallback)
+    match load_lgx(&path) {
+        Err(LgxError::ChecksumMismatch { .. }) => {}
+        other => panic!("load_lgx must not mask corruption, got {other:?}"),
+    }
+
+    // a file cut mid-section → named truncation (bounds are checked
+    // against the mapping before any section is touched)
+    for keep in [10usize, 63, 64, 100, full.len() - 1] {
+        std::fs::write(&path, &full[..keep]).unwrap();
+        match load_lgx_mmap(&path) {
+            Err(LgxError::Truncated(section)) => assert!(!section.is_empty()),
+            other => panic!("keep {keep}: expected Truncated, got {other:?}"),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A forged header declaring billions of edges (within the |V|² bound,
+/// wide flag set, header re-signed so only section mathematics can
+/// object) dies as a named truncation in both loaders — the section size
+/// is computed and bounds-checked before any allocation or read.
+#[test]
+fn forged_giant_edge_count_is_truncation_not_oom() {
+    fn fnv(bytes: &[u8]) -> u64 {
+        bytes
+            .iter()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+    }
+    let g = CscBuilder::new(2).edges(&[(0, 1)]).build().unwrap();
+    let path = tmp_path("giant");
+    save_lgx(&path, &g, None).unwrap();
+    let mut buf = std::fs::read(&path).unwrap();
+    buf[16..24].copy_from_slice(&1_000_000u64.to_le_bytes()); // nv
+    buf[24..32].copy_from_slice(&10_000_000_000u64.to_le_bytes()); // ne: 40 GB of indices
+    let flags = u32::from_le_bytes(buf[12..16].try_into().unwrap()) | 0b10; // wide indptr
+    buf[12..16].copy_from_slice(&flags.to_le_bytes());
+    let hsum = fnv(&buf[..40]);
+    buf[40..48].copy_from_slice(&hsum.to_le_bytes());
+    std::fs::write(&path, &buf).unwrap();
+
+    match load_lgx_buffered(&path) {
+        Err(LgxError::Truncated(_)) => {}
+        other => panic!("buffered: expected Truncated, got {other:?}"),
+    }
+    if mmap_enabled() {
+        match load_lgx_mmap(&path) {
+            Err(LgxError::Truncated(_)) => {}
+            other => panic!("mapped: expected Truncated, got {other:?}"),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// An empty file cannot be mapped; the default entry point falls back to
+/// the buffered loader and reports the same named header truncation a
+/// buffered-only build would.
+#[test]
+fn empty_file_falls_back_and_names_the_header() {
+    let path = tmp_path("empty");
+    std::fs::write(&path, b"").unwrap();
+    match load_lgx(&path) {
+        Err(LgxError::Truncated(section)) => assert_eq!(section, "header"),
+        other => panic!("expected Truncated(header), got {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}

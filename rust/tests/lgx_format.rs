@@ -260,8 +260,8 @@ fn indptr_width_is_selected_at_the_boundary() {
     // and a wide in-memory graph round-trips through the wide file path:
     // forge one by hand (tiny logical size, artificially wide offsets)
     let wide = CscGraph {
-        indptr: IndPtr::U64(vec![0, 1, 2]),
-        indices: vec![1, 0],
+        indptr: IndPtr::U64(vec![0, 1, 2].into()),
+        indices: vec![1, 0].into(),
         weights: None,
     };
     wide.validate().unwrap();

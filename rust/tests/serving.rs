@@ -8,7 +8,8 @@
 //!   to sampling that seed alone, and the whole serving path is invariant
 //!   to the intra-batch shard count.
 //! * **Coalescer edge cases** — burst > `max_batch` splits FIFO, deadline
-//!   misses are named errors (never silent drops), an idle server flushes
+//!   misses and out-of-range seeds are named errors (never silent drops,
+//!   never a worker panic), an idle server flushes
 //!   nothing, a fully-expired flush runs no sampler pass, shutdown drains
 //!   the queue, and a worker panic reaches both the waiters (as
 //!   `Shutdown`) and the thread that joins.
@@ -298,19 +299,73 @@ fn shutdown_drains_every_queued_request() {
     }
 }
 
-/// A worker panic (here: an out-of-range seed crashing the sampler)
-/// surfaces twice, matching the pipeline contract: pending waiters
-/// observe `Shutdown`, and `shutdown()` re-raises the panic.
+/// An out-of-range seed is a *client* error, not a worker crash: it is
+/// rejected at flush with a named [`ServeError::InvalidSeed`] carrying
+/// the seed and the graph size, its coalesced batchmates are still
+/// served, and the worker keeps serving later batches. (Before this
+/// admission check, one bad seed panicked the shared worker and failed
+/// every in-flight peer with `Shutdown`.)
+#[test]
+fn invalid_seed_is_rejected_and_peers_survive() {
+    let g = Arc::new(dense_graph()); // 500 vertices
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[4, 4]),
+        ServingConfig {
+            window: Duration::from_millis(50),
+            max_batch: 8,
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let ok_a = h.submit(5);
+    let bad = h.submit(5_000); // not a vertex of the 500-vertex graph
+    let ok_b = h.submit(7);
+    drop(h);
+    match bad.wait() {
+        Err(ServeError::InvalidSeed { seed, num_vertices }) => {
+            assert_eq!(seed, 5_000);
+            assert_eq!(num_vertices, 500);
+        }
+        other => panic!("expected InvalidSeed, got {other:?}"),
+    }
+    // coalesced peers of the bad request are served normally
+    assert_eq!(ok_a.wait().unwrap().seed, 5);
+    assert_eq!(ok_b.wait().unwrap().seed, 7);
+    // the worker survived: a later batch on a fresh handle still serves
+    let h = front.handle();
+    let later = h.submit(42);
+    drop(h);
+    assert_eq!(later.wait().unwrap().seed, 42);
+    let snap = front.shutdown();
+    assert_eq!(snap.requests, 4);
+    assert_eq!(snap.served, 3);
+    assert_eq!(snap.invalid, 1);
+    assert_eq!(snap.expired, 0);
+}
+
+/// A genuine worker panic still surfaces twice, matching the pipeline
+/// contract: pending waiters observe `Shutdown`, and `shutdown()`
+/// re-raises the panic. (The trigger here is a feature store smaller
+/// than the graph — a deployment bug, unlike a bad request seed, which
+/// admission now rejects without killing the worker.)
 #[test]
 fn worker_panic_reaches_waiters_and_shutdown() {
-    let g = Arc::new(dense_graph());
+    let g = Arc::new(dense_graph()); // 500 vertices
+    let dim = 2usize;
+    // only 10 feature rows: any sampled vertex ≥ 10 panics the gather
+    let store = Arc::new(FeatureStore::new(vec![0.0f32; 10 * dim], dim, TierModel::local()));
     let front = ServingFrontEnd::spawn(
         g,
         labor0(&[3]),
-        ServingConfig { window: Duration::from_millis(1), ..ServingConfig::default() },
+        ServingConfig {
+            window: Duration::from_millis(1),
+            data_plane: Some(DataPlaneConfig { store, labels: None }),
+            ..ServingConfig::default()
+        },
     );
     let h = front.handle();
-    let doomed = h.submit(10_000); // 500-vertex graph: the sampler panics
+    let doomed = h.submit(499); // valid seed; its feature row does not exist
     drop(h);
     assert!(matches!(doomed.wait(), Err(ServeError::Shutdown)));
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {

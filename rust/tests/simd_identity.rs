@@ -1,0 +1,138 @@
+//! The SIMD/prefetch contract: the vectorized feature gather and the
+//! prefetch-hinted sampler walks are *accelerations only* — every result
+//! is bit-identical to the scalar/unhinted path.
+//!
+//! The toggle under test is the same one `LABOR_NO_SIMD=1` flips at
+//! startup ([`set_simd_enabled`]); it is process-global state, so every
+//! test that flips it serializes on one mutex and restores the default
+//! before releasing it.
+
+use labor_gnn::coordinator::feature_store::{FeatureStore, TierModel};
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::{
+    IterSpec, Mfg, MultiLayerSampler, SamplerKind, SamplerScratch, ScratchPool,
+};
+use labor_gnn::util::simd::{
+    gather_rows_f32_scalar, gather_rows_f32_simd, set_simd_enabled,
+};
+use std::sync::Mutex;
+
+/// Serializes every test that flips the process-global SIMD mode.
+static SIMD_TOGGLE: Mutex<()> = Mutex::new(());
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+fn every_kind() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(1), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: true },
+        SamplerKind::LaborSequential {
+            iterations: IterSpec::Fixed(0),
+            layer_dependent: false,
+        },
+        SamplerKind::Ladies { budgets: vec![60, 40] },
+        SamplerKind::Pladies { budgets: vec![60, 40] },
+    ]
+}
+
+fn assert_mfgs_identical(a: &Mfg, b: &Mfg, label: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{label}");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.seeds, lb.seeds, "{label} layer {l}: seeds");
+        assert_eq!(la.inputs, lb.inputs, "{label} layer {l}: inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{label} layer {l}: edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{label} layer {l}: edge_dst");
+        assert_eq!(la.edge_weight, lb.edge_weight, "{label} layer {l}: edge_weight");
+    }
+}
+
+/// The two row-gather kernels agree to the bit across awkward dims
+/// (sub-vector, exact-vector, straddling, large) and duplicate/reversed
+/// id lists, straight through the public dispatcher inputs.
+#[test]
+fn gather_kernels_are_bit_identical_across_dims() {
+    let mut rng = StreamRng::new(0x51D);
+    for dim in [1usize, 2, 3, 4, 5, 7, 8, 11, 16, 31, 64, 100, 256] {
+        let rows = 257;
+        let feats: Vec<f32> = (0..rows * dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let mut ids: Vec<u32> = (0..500).map(|_| rng.below(rows as u64) as u32).collect();
+        ids.extend_from_slice(&[0, 0, (rows - 1) as u32, 0]); // dupes + edges
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        gather_rows_f32_simd(&feats, dim, &ids, &mut a);
+        gather_rows_f32_scalar(&feats, dim, &ids, &mut b);
+        assert_eq!(a.len(), b.len(), "dim {dim}");
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "dim {dim}, element {i}");
+        }
+    }
+}
+
+/// `FeatureStore::gather` returns bit-identical rows (and identical
+/// accounting) with SIMD on and off.
+#[test]
+fn feature_store_gather_is_toggle_invariant() {
+    let _guard = SIMD_TOGGLE.lock().unwrap();
+    let mut rng = StreamRng::new(7);
+    let (rows, dim) = (400usize, 33usize);
+    let feats: Vec<f32> = (0..rows * dim).map(|_| rng.next_f32()).collect();
+    let ids: Vec<u32> = (0..2_000).map(|_| rng.below(rows as u64) as u32).collect();
+    let store = FeatureStore::new(feats, dim, TierModel::local());
+
+    set_simd_enabled(true);
+    let mut fast = Vec::new();
+    store.gather(&ids, &mut fast);
+    set_simd_enabled(false);
+    let mut slow = Vec::new();
+    store.gather(&ids, &mut slow);
+    set_simd_enabled(true);
+
+    assert_eq!(fast.len(), slow.len());
+    for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "row element {i}");
+    }
+}
+
+/// Every sampler kind produces a bit-identical MFG with prefetch hints
+/// enabled and disabled — the hints must not perturb visit order,
+/// first-seen candidate numbering, or any sampled edge. Checked on the
+/// sequential path and the sharded path (which has its own hinted walk).
+#[test]
+fn every_sampler_kind_is_prefetch_invariant() {
+    let _guard = SIMD_TOGGLE.lock().unwrap();
+    let g = dense_graph();
+    let seeds: Vec<u32> = (0..64).map(|i| i * 7 % 500).collect();
+    for kind in every_kind() {
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[5, 5]);
+
+        set_simd_enabled(true);
+        let hinted = sampler.sample(&g, &seeds, 0xFEED, &mut SamplerScratch::new());
+        let mut pool = ScratchPool::for_vertices(g.num_vertices(), 4);
+        let hinted_sh = sampler.sample_sharded(&g, &seeds, 0xFEED, 4, &mut pool);
+
+        set_simd_enabled(false);
+        let plain = sampler.sample(&g, &seeds, 0xFEED, &mut SamplerScratch::new());
+        let mut pool = ScratchPool::for_vertices(g.num_vertices(), 4);
+        let plain_sh = sampler.sample_sharded(&g, &seeds, 0xFEED, 4, &mut pool);
+        set_simd_enabled(true);
+
+        assert_mfgs_identical(&hinted, &plain, &format!("{label} (sequential)"));
+        assert_mfgs_identical(&hinted_sh, &plain_sh, &format!("{label} (sharded)"));
+        assert_mfgs_identical(&hinted, &hinted_sh, &format!("{label} (seq vs sharded)"));
+    }
+}
