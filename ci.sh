@@ -34,6 +34,13 @@ echo "== hardened-reader + identity tests, explicitly"
 # bit-identical, and SIMD must match scalar to the bit for every sampler
 cargo test -q --test io_hardening --test simd_identity --test lgx_format
 
+echo "== chaos suite: fault injection, supervised recovery, degradation"
+# deterministic failpoint schedules against the serving front end and the
+# sampling pipeline: a 1k-request chaos stream completes with zero silent
+# drops, the same schedule replays bit-identically, overload sheds with
+# named errors, and the fanout-degradation ladder steps down and recovers
+cargo test -q --test chaos
+
 if [ "$MODE" != "fast" ]; then
   echo "== graph-pack smoke: .lgx pack + verified reload via the repro CLI"
   # packs the tiny dataset into the zero-copy format (degree-ordered
@@ -50,7 +57,8 @@ if [ "$MODE" != "fast" ]; then
   # allocation probe run end-to-end (see docs/BENCHMARKS.md); remove any
   # stale perf records first so the existence checks below can't pass on
   # them
-  rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json BENCH_serving.json
+  rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json BENCH_serving.json \
+    BENCH_chaos.json
   cargo bench --bench pipeline -- --smoke
   cargo bench --bench samplers -- --smoke
   # serving QoS sweep: coalesced-LABOR vs one-at-a-time NS across arrival
@@ -68,12 +76,19 @@ if [ "$MODE" != "fast" ]; then
   test -f BENCH_datapipe.json || { echo "BENCH_datapipe.json missing"; exit 1; }
   test -f BENCH_graph.json || { echo "BENCH_graph.json missing"; exit 1; }
   test -f BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
+  test -f BENCH_chaos.json || { echo "BENCH_chaos.json missing"; exit 1; }
   # this PR's memory-system records must be present: the mmap-vs-buffered
   # .lgx load series and the SIMD-vs-scalar gather micro-bench
   grep -q '"lgx_mmap_load_s"' BENCH_graph.json \
     || { echo "BENCH_graph.json is missing the mmap-load record"; exit 1; }
   grep -q '"simd_gather"' BENCH_datapipe.json \
     || { echo "BENCH_datapipe.json is missing the simd-gather record"; exit 1; }
+  # this PR's robustness records: tail latency under the degradation
+  # ladder and the admission shed rate of the overload series
+  grep -q '"degraded_p99_ms"' BENCH_chaos.json \
+    || { echo "BENCH_chaos.json is missing the degraded-p99 record"; exit 1; }
+  grep -q '"shed_rate"' BENCH_chaos.json \
+    || { echo "BENCH_chaos.json is missing the shed-rate record"; exit 1; }
   echo "== BENCH_pipeline.json:"
   cat BENCH_pipeline.json
   echo "== BENCH_datapipe.json:"
@@ -82,6 +97,8 @@ if [ "$MODE" != "fast" ]; then
   cat BENCH_graph.json
   echo "== BENCH_serving.json:"
   cat BENCH_serving.json
+  echo "== BENCH_chaos.json:"
+  cat BENCH_chaos.json
 
   echo "== serve smoke: online coalescing front end via the repro CLI"
   # a short Zipf request stream through `repro serve` (deadline-window
@@ -90,6 +107,18 @@ if [ "$MODE" != "fast" ]; then
   # QoS summary. NOTE: bare boolean flags like --smoke must come last.
   ./target/release/repro serve --dataset flickr-sim --scale 0.1 \
     --method labor-0 --rate 4000 --window-us 1000 --smoke
+
+  echo "== chaos serve smoke: supervised recovery + degradation via the CLI"
+  # same front end under an armed failpoint schedule: flush panics every
+  # 40th hit and transient gather errors every 25th, a supervised worker,
+  # bounded admission, and the 10,7,4 degradation ladder; the command
+  # asserts outcome conservation (served + missed + invalid + failed +
+  # died + shed == requests) and that chaos stayed armed end to end
+  ./target/release/repro serve --dataset flickr-sim --scale 0.1 \
+    --method labor-0 --rate 4000 --window-us 1000 \
+    --policy supervise --max-restarts 50 --max-queue 256 \
+    --degrade-ladder 10,7,4 \
+    --chaos 'sample_flush=panic@every40;gather=error@every25' --smoke
 fi
 
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"

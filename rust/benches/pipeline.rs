@@ -121,6 +121,7 @@ fn main() {
                 intra_batch_threads: 1,
                 data_plane: None,
                 output_perm: None,
+                ..PipelineConfig::default()
             },
         );
         println!("workers={workers}: {rate:.1} batches/s");
@@ -153,6 +154,7 @@ fn main() {
                 intra_batch_threads: threads,
                 data_plane: None,
                 output_perm: None,
+                ..PipelineConfig::default()
             },
         );
         println!("intra_batch_threads={threads}: {rate:.2} batches/s");
@@ -222,6 +224,7 @@ fn main() {
                     intra_batch_threads: 1,
                     data_plane: Some(DataPlaneConfig { store: store.clone(), labels: None }),
                     output_perm: None,
+                    ..PipelineConfig::default()
                 },
             );
             for b in &mut p {
@@ -371,6 +374,7 @@ fn main() {
                 intra_batch_threads: 1,
                 data_plane: None,
                 output_perm,
+                ..PipelineConfig::default()
             },
         );
         println!("{layout}: {rate:.1} batches/s");

@@ -232,6 +232,22 @@ impl FeatureStore {
         Ok(())
     }
 
+    /// The `Result` twin of [`gather`](Self::gather), and the **`gather`
+    /// failpoint site**: injected faults and out-of-range ids come back as
+    /// a named [`GatherError`] instead of a panic, so supervised workers
+    /// (see [`FailurePolicy`](super::supervise::FailurePolicy)) can retry
+    /// transients and fail single batches without dying. With no failpoint
+    /// armed and valid ids, this is `gather` plus one O(|ids|) bounds scan
+    /// — the gathered bytes and the accounting are identical.
+    pub fn try_gather(&self, ids: &[u32], out: &mut Vec<f32>) -> Result<Duration, GatherError> {
+        crate::util::failpoint::hit("gather").map_err(GatherError::Injected)?;
+        let rows = self.num_rows();
+        if let Some(&v) = ids.iter().find(|&&v| v as usize >= rows) {
+            return Err(GatherError::OutOfRange { id: v, rows });
+        }
+        Ok(self.gather(ids, out))
+    }
+
     /// Bytes actually moved over the simulated slow tier (miss bytes).
     pub fn bytes_fetched(&self) -> u64 {
         self.bytes_fetched.load(Ordering::Relaxed)
@@ -361,6 +377,33 @@ impl LabelStore {
     }
 }
 
+/// Why a [`FeatureStore::try_gather`] failed, split along the
+/// transient/permanent line the supervision layer retries on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GatherError {
+    /// an armed `gather` failpoint fired — *transient* (a retry re-runs
+    /// the same deterministic gather and may pass)
+    Injected(crate::util::failpoint::Injected),
+    /// a vertex id beyond the store's rows — *permanent* (the exact
+    /// condition the panicking [`FeatureStore::gather`] asserts, with the
+    /// same message)
+    OutOfRange { id: u32, rows: usize },
+}
+
+impl std::fmt::Display for GatherError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GatherError::Injected(e) => write!(f, "{e}"),
+            GatherError::OutOfRange { id, rows } => write!(
+                f,
+                "FeatureStore::gather: vertex id {id} out of range (store has {rows} rows)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GatherError {}
+
 /// Pre-gathered per-seed labels riding with a
 /// [`SampledBatch`](super::pipeline::SampledBatch).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -438,6 +481,26 @@ mod tests {
     fn out_of_range_id_is_a_named_error() {
         let fs = FeatureStore::new(vec![0.0f32; 20], 4, TierModel::local());
         fs.gather(&[1, 7], &mut Vec::new());
+    }
+
+    #[test]
+    fn try_gather_matches_gather_and_names_bad_ids() {
+        // no failpoint armed in this process: the Ok path must be
+        // byte-identical to the panicking gather, with the same accounting
+        let feats: Vec<f32> = (0..20).map(|x| x as f32).collect(); // 5 rows x 4
+        let a = FeatureStore::new(feats.clone(), 4, TierModel::local());
+        let b = FeatureStore::new(feats, 4, TierModel::local());
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        a.gather(&[1, 3, 1], &mut oa);
+        b.try_gather(&[1, 3, 1], &mut ob).unwrap();
+        assert_eq!(oa, ob);
+        assert_eq!(a.bytes_gathered(), b.bytes_gathered());
+        assert_eq!(a.requests(), b.requests());
+        let err = b.try_gather(&[1, 7], &mut ob).unwrap_err();
+        assert_eq!(err, GatherError::OutOfRange { id: 7, rows: 5 });
+        assert!(err.to_string().contains("vertex id 7 out of range"), "{err}");
+        // a failed gather performs no request and moves no bytes
+        assert_eq!(b.requests(), 1);
     }
 
     #[test]

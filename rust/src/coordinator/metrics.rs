@@ -292,10 +292,104 @@ impl StageSnapshot {
     }
 }
 
+/// Shared fault/robustness accounting for supervised workers (pipeline
+/// and serving alike): how often transient faults were retried, how many
+/// batches failed with a named error, how many worker respawns happened,
+/// how many requests were shed at admission, and how many responses were
+/// served degraded (fanout-capped). Relaxed atomics, same concurrency
+/// contract as [`StageTimers`]. All zeros under
+/// [`FailurePolicy::Propagate`](super::supervise::FailurePolicy::Propagate)
+/// with no failpoint schedule armed — the counters are part of the
+/// deterministic-replay surface (see `tests/chaos.rs`).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    retried: AtomicU64,
+    failed: AtomicU64,
+    restarts: AtomicU64,
+    shed: AtomicU64,
+    degraded: AtomicU64,
+}
+
+impl FaultCounters {
+    /// One in-place retry of a transient fault.
+    pub fn record_retry(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One batch (pipeline) or request (serving) failed with a named
+    /// non-deadline error.
+    pub fn record_failed(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One worker respawn; returns the new total (used to stamp
+    /// `WorkerLost`/`WorkerDied` errors with the restart ordinal).
+    pub fn record_restart(&self) -> u64 {
+        self.restarts.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// One request refused at admission (`try_submit` on a full queue).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` responses served under a degraded (fanout-capped) budget.
+    pub fn record_degraded(&self, n: u64) {
+        self.degraded.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FaultSnapshot {
+        FaultSnapshot {
+            retried: self.retried.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time read of [`FaultCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    /// transient faults retried in place
+    pub retried: u64,
+    /// batches/requests failed with a named non-deadline error
+    pub failed: u64,
+    /// worker respawns performed by supervision
+    pub restarts: u64,
+    /// requests refused at admission (bounded-queue overload)
+    pub shed: u64,
+    /// responses served under a degraded fanout budget
+    pub degraded: u64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let c = FaultCounters::default();
+        assert_eq!(c.snapshot(), FaultSnapshot::default());
+        c.record_retry();
+        c.record_retry();
+        c.record_failed(3);
+        assert_eq!(c.record_restart(), 1);
+        assert_eq!(c.record_restart(), 2);
+        assert_eq!(c.restarts(), 2);
+        c.record_shed();
+        c.record_degraded(5);
+        assert_eq!(
+            c.snapshot(),
+            FaultSnapshot { retried: 2, failed: 3, restarts: 2, shed: 1, degraded: 5 }
+        );
+    }
 
     #[test]
     fn stage_timers_accumulate_and_average() {

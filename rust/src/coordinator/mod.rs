@@ -11,15 +11,20 @@ pub mod feature_store;
 pub mod metrics;
 pub mod pipeline;
 pub mod serving;
+pub mod supervise;
 
 pub use batcher::EpochBatcher;
 pub use cache::{DegreeOrderedCache, FeatureCache, NullCache};
-pub use feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
+pub use feature_store::{FeatureStore, GatherError, GatheredLabels, LabelStore, TierModel};
 pub use metrics::{
-    HistogramSnapshot, LatencyHistogram, SamplerStats, StageSnapshot, StageTimers,
+    FaultCounters, FaultSnapshot, HistogramSnapshot, LatencyHistogram, SamplerStats,
+    StageSnapshot, StageTimers,
 };
 pub use pipeline::{DataPlaneConfig, PipelineConfig, SampledBatch, SamplingPipeline};
 pub use serving::{
     coalesce_seeds, replay_open_loop, PendingResponse, ServeError, ServeHandle,
     ServeResponse, ServingConfig, ServingFrontEnd, ServingSnapshot,
+};
+pub use supervise::{
+    Backoff, BatchError, DegradeConfig, DegradeController, FailurePolicy, WorkFault,
 };

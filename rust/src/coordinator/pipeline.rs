@@ -37,20 +37,35 @@
 //! layout-agnostic. Delivered outputs remain bit-identical across worker
 //! and shard counts (the mapping is deterministic).
 //!
-//! Failure semantics: a panicking worker is never silently truncated into
-//! a short epoch — the panic is re-raised on the consuming thread by
-//! [`SamplingPipeline::next`] (or [`SamplingPipeline::join`]). An
-//! out-of-range vertex id in the gather path panics with a named error
-//! (see [`FeatureStore::gather`]) and surfaces the same way.
+//! Failure semantics follow [`PipelineConfig::failure_policy`]:
+//!
+//! * [`FailurePolicy::Propagate`] (default) — a panicking worker is never
+//!   silently truncated into a short epoch: the panic is re-raised on the
+//!   consuming thread by [`SamplingPipeline::next`] (or
+//!   [`SamplingPipeline::join`], which always joins *every* worker before
+//!   re-raising the first payload, so no thread leaks behind the panic).
+//!   An out-of-range vertex id in the gather path panics with a named
+//!   error (see [`FeatureStore::gather`]) and surfaces the same way.
+//! * [`FailurePolicy::Supervise`] — a panicked batch fails *alone*: the
+//!   consumer receives a named [`BatchError::WorkerLost`] through
+//!   [`SamplingPipeline::next_result`], the worker restarts with fresh
+//!   scratch state after a deterministic [`Backoff`] (until the shared
+//!   restart budget is spent), and *transient* faults — injected
+//!   failpoint errors (see [`crate::util::failpoint`]), gather hiccups —
+//!   are retried in place up to `max_retries` times before the batch
+//!   fails with [`BatchError::TransientExhausted`]. Peer batches are
+//!   never affected.
 
 use super::batcher::EpochBatcher;
 use super::cache::FeatureCache;
 use super::feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
-use super::metrics::{StageSnapshot, StageTimers};
+use super::metrics::{FaultCounters, FaultSnapshot, StageSnapshot, StageTimers};
+use super::supervise::{Backoff, BatchError, FailurePolicy, WorkFault};
 use crate::data::Dataset;
 use crate::graph::compact::VertexPerm;
 use crate::graph::CscGraph;
 use crate::sampler::{Mfg, MultiLayerSampler, ScratchPool};
+use crate::util::failpoint;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -129,6 +144,9 @@ pub struct PipelineConfig {
     /// and map every delivered MFG and seed list back to **original** ids
     /// at the delivery boundary, so consumers are layout-agnostic
     pub output_perm: Option<Arc<VertexPerm>>,
+    /// what a worker does when a batch faults: fail fast (deterministic
+    /// default) or restart/retry (see the module docs)
+    pub failure_policy: FailurePolicy,
 }
 
 impl Default for PipelineConfig {
@@ -142,6 +160,7 @@ impl Default for PipelineConfig {
             intra_batch_threads: 1,
             data_plane: None,
             output_perm: None,
+            failure_policy: FailurePolicy::Propagate,
         }
     }
 }
@@ -149,12 +168,13 @@ impl Default for PipelineConfig {
 /// Handle to a running pipeline; consume it through its [`Iterator`]
 /// implementation (`while let Some(batch) = pipeline.next() { .. }`).
 pub struct SamplingPipeline {
-    rx: mpsc::Receiver<SampledBatch>,
-    reorder: BTreeMap<u64, SampledBatch>,
+    rx: mpsc::Receiver<Result<SampledBatch, BatchError>>,
+    reorder: BTreeMap<u64, Result<SampledBatch, BatchError>>,
     next_id: u64,
     num_batches: u64,
     workers: Vec<std::thread::JoinHandle<()>>,
     timers: Arc<StageTimers>,
+    faults: Arc<FaultCounters>,
     data_plane: Option<DataPlaneConfig>,
 }
 
@@ -167,9 +187,20 @@ impl SamplingPipeline {
         train_ids: Arc<Vec<u32>>,
         cfg: PipelineConfig,
     ) -> Self {
-        let (tx, rx) = mpsc::sync_channel::<SampledBatch>(cfg.queue_depth.max(1));
+        let (tx, rx) =
+            mpsc::sync_channel::<Result<SampledBatch, BatchError>>(cfg.queue_depth.max(1));
         let cursor = Arc::new(AtomicU64::new(0));
         let timers = Arc::new(StageTimers::default());
+        let faults = Arc::new(FaultCounters::default());
+        // the restart budget is pipeline-wide (shared), matching the
+        // serving front end's single-worker budget semantics
+        let restarts = Arc::new(AtomicU64::new(0));
+        let (supervised, max_restarts, max_retries, backoff) = match cfg.failure_policy {
+            FailurePolicy::Propagate => (false, 0u32, 0u32, Backoff::default()),
+            FailurePolicy::Supervise { max_restarts, max_retries, backoff } => {
+                (true, max_restarts, max_retries, backoff)
+            }
+        };
 
         // Pre-materialize the seed batches so that workers can claim
         // arbitrary batch ids without a shared mutable batcher. This is
@@ -206,7 +237,21 @@ impl SamplingPipeline {
             let num_batches = cfg.num_batches;
             let seed = cfg.seed;
             let shards = cfg.intra_batch_threads.max(1);
+            let faults = faults.clone();
+            let restarts = restarts.clone();
             workers.push(std::thread::spawn(move || {
+                // simulated spawn failures (the `worker_spawn` failpoint):
+                // supervised workers retry the spawn with backoff;
+                // propagate workers die on the spot
+                let mut spawn_attempt = 0u32;
+                while let Err(inj) = failpoint::hit("worker_spawn") {
+                    if !supervised || spawn_attempt >= max_retries {
+                        panic!("pipeline worker failed to spawn: {inj}");
+                    }
+                    faults.record_retry();
+                    std::thread::sleep(backoff.delay(spawn_attempt));
+                    spawn_attempt += 1;
+                }
                 // Each worker owns one long-lived scratch pool (the merge
                 // arena plus one arena per shard): after the first few
                 // batches size it to steady state, sampling performs no
@@ -222,62 +267,98 @@ impl SamplingPipeline {
                     if id >= num_batches {
                         return;
                     }
-                    let seeds = batches[id as usize].clone();
-                    let t_sample = Instant::now();
-                    let mut mfg = if shards > 1 {
-                        sampler.sample_sharded(&graph, &seeds, seed ^ id, shards, &mut pool)
-                    } else {
-                        sampler.sample(&graph, &seeds, seed ^ id, pool.main_mut())
-                    };
-                    timers.record_sample(t_sample.elapsed());
-                    // In-pipeline gather: the feature rows of the deepest
-                    // layer (the traffic LABOR shrinks) plus the seeds'
-                    // labels, fetched here so the consumer never touches
-                    // the dataset. The bytes depend only on the MFG, never
-                    // on the cache policy or scheduling.
-                    let (feats, labels) = match &plane {
-                        Some(p) => {
-                            let t_gather = Instant::now();
-                            // gather straight into the delivered payload:
-                            // `gather` reserves the exact row count up
-                            // front, so this is one allocation + one copy
-                            // per batch — the payload is handed to the
-                            // consumer, so a reusable staging buffer would
-                            // only add a second full memcpy
-                            let mut feats = Vec::new();
-                            p.store.gather(mfg.feature_vertices(), &mut feats);
-                            let labels = match &p.labels {
-                                Some(ls) => ls.gather(&seeds),
-                                None => GatheredLabels::None,
-                            };
-                            timers.record_gather(t_gather.elapsed());
-                            (feats, labels)
+                    let seeds = &batches[id as usize];
+                    let deliver_seeds = &deliver_batches[id as usize];
+                    let item: Result<SampledBatch, BatchError> = if supervised {
+                        let mut attempts = 0u32;
+                        loop {
+                            let attempt =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    produce_batch(
+                                        &graph, &sampler, seeds, deliver_seeds, id, seed,
+                                        shards, &plane, &perm, &timers, &mut pool,
+                                    )
+                                }));
+                            match attempt {
+                                Ok(Ok(b)) => break Ok(b),
+                                Ok(Err(fault)) => {
+                                    // deterministic in-place retry: the
+                                    // sampler re-runs with the same seed,
+                                    // so a successful retry is
+                                    // bit-identical to a clean run
+                                    if matches!(fault, WorkFault::Transient(_))
+                                        && attempts < max_retries
+                                    {
+                                        attempts += 1;
+                                        faults.record_retry();
+                                        continue;
+                                    }
+                                    faults.record_failed(1);
+                                    break Err(match fault {
+                                        WorkFault::Transient(last) => {
+                                            BatchError::TransientExhausted {
+                                                batch_id: id,
+                                                attempts,
+                                                last,
+                                            }
+                                        }
+                                        WorkFault::Permanent(reason) => {
+                                            BatchError::Permanent { batch_id: id, reason }
+                                        }
+                                    });
+                                }
+                                Err(panic) => {
+                                    let n = restarts.fetch_add(1, Ordering::SeqCst) + 1;
+                                    faults.record_restart();
+                                    faults.record_failed(1);
+                                    if n > max_restarts as u64 {
+                                        // budget spent: deliver the named
+                                        // loss, then die for real (join /
+                                        // next re-raise this payload)
+                                        let _ = tx.send(Err(BatchError::WorkerLost {
+                                            batch_id: id,
+                                            restarts: n,
+                                        }));
+                                        std::panic::resume_unwind(panic);
+                                    }
+                                    // logical respawn: the panicked batch
+                                    // may have left the arenas
+                                    // mid-`mem::take` — rebuild, back off
+                                    pool = ScratchPool::for_vertices(
+                                        graph.num_vertices(),
+                                        shards,
+                                    );
+                                    std::thread::sleep(
+                                        backoff.delay((n - 1).min(u32::MAX as u64) as u32),
+                                    );
+                                    break Err(BatchError::WorkerLost {
+                                        batch_id: id,
+                                        restarts: n,
+                                    });
+                                }
+                            }
                         }
-                        None => (Vec::new(), GatheredLabels::None),
+                    } else {
+                        match produce_batch(
+                            &graph, &sampler, seeds, deliver_seeds, id, seed, shards, &plane,
+                            &perm, &timers, &mut pool,
+                        ) {
+                            Ok(b) => Ok(b),
+                            // Propagate: promote the fault to the worker
+                            // panic the pre-supervision contract specified
+                            Err(fault) => panic!("pipeline batch {id} failed: {fault}"),
+                        }
                     };
-                    // Delivery boundary: everything above ran in the
-                    // graph's (possibly relabeled) id space — the gather
-                    // in particular must, so the prefix cache and the
-                    // permuted feature rows line up. From here on the
-                    // consumer sees only original ids. The map-back is
-                    // accounted as its own stage so relabeled runs don't
-                    // under-report worker wall time.
-                    if let Some(p) = &perm {
-                        let t_map = Instant::now();
-                        mfg.map_ids(|v| p.to_old(v));
-                        timers.record_map(t_map.elapsed());
-                    }
-                    let seeds = deliver_batches[id as usize].clone();
                     // count the batch before sending it: once the consumer
                     // has received N batches, N sample/gather recordings
                     // are guaranteed visible (the trailing queue-wait of
                     // an in-flight batch may lag — it is only known after
                     // the send unblocks)
-                    timers.record_batch();
+                    if item.is_ok() {
+                        timers.record_batch();
+                    }
                     let t_queue = Instant::now();
-                    let sent =
-                        tx.send(SampledBatch { batch_id: id, seeds, mfg, feats, labels });
-                    if sent.is_err() {
+                    if tx.send(item).is_err() {
                         return; // consumer dropped
                     }
                     timers.record_queue_wait(t_queue.elapsed());
@@ -292,6 +373,7 @@ impl SamplingPipeline {
             num_batches: cfg.num_batches,
             workers,
             timers,
+            faults,
             data_plane: cfg.data_plane,
         }
     }
@@ -308,49 +390,69 @@ impl SamplingPipeline {
         self.data_plane.as_ref()
     }
 
-    /// Join all workers; re-raises the first worker panic, if any.
+    /// Robustness counters so far: retries, named batch failures, worker
+    /// restarts. All zero under [`FailurePolicy::Propagate`] with no
+    /// failpoints armed.
+    pub fn fault_metrics(&self) -> FaultSnapshot {
+        self.faults.snapshot()
+    }
+
+    /// Join all workers, then re-raise the first worker panic, if any.
+    /// Every worker is joined *before* the re-raise — a panic in one
+    /// worker never leaks the others' threads.
     pub fn join(self) {
         let Self { rx, workers, .. } = self;
         // close the channel first so blocked senders unblock and exit
         drop(rx);
+        let mut first_panic = None;
         for w in workers {
             if let Err(payload) = w.join() {
-                std::panic::resume_unwind(payload);
+                first_panic.get_or_insert(payload);
             }
+        }
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
         }
     }
 
-    /// Join every finished worker and re-raise the first panic payload.
-    /// Called when the channel closed (all workers exited) or on
-    /// [`join`](Self::join) — never blocks on a still-running worker
-    /// except behind a closed channel.
+    /// Join every finished worker, then re-raise the first panic payload
+    /// (after all joins — no abandoned threads). Called when the channel
+    /// closed (all workers exited) or on [`join`](Self::join) — never
+    /// blocks on a still-running worker except behind a closed channel.
     fn propagate_worker_panics(&mut self) {
+        let mut first_panic = None;
         for w in std::mem::take(&mut self.workers) {
             if let Err(payload) = w.join() {
-                std::panic::resume_unwind(payload);
+                first_panic.get_or_insert(payload);
             }
         }
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
+        }
     }
-}
 
-impl Iterator for SamplingPipeline {
-    type Item = SampledBatch;
-
-    /// Next batch in order; `None` when the configured batch count is
-    /// exhausted. If a worker panicked mid-epoch, the panic is re-raised
-    /// here instead of quietly delivering a short epoch.
-    fn next(&mut self) -> Option<SampledBatch> {
+    /// Next batch in order, faults included: `Some(Err(..))` is a batch
+    /// that failed under [`FailurePolicy::Supervise`] while its peers kept
+    /// flowing — the consumer decides whether to skip, retrain, or abort.
+    /// `None` when the configured batch count is exhausted. This is the
+    /// supervised consumption API; the [`Iterator`] implementation panics
+    /// on failed batches instead.
+    pub fn next_result(&mut self) -> Option<Result<SampledBatch, BatchError>> {
         if self.next_id >= self.num_batches {
             return None;
         }
         loop {
-            if let Some(b) = self.reorder.remove(&self.next_id) {
+            if let Some(item) = self.reorder.remove(&self.next_id) {
                 self.next_id += 1;
-                return Some(b);
+                return Some(item);
             }
             match self.rx.recv() {
-                Ok(b) => {
-                    self.reorder.insert(b.batch_id, b);
+                Ok(item) => {
+                    let key = match &item {
+                        Ok(b) => b.batch_id,
+                        Err(e) => e.batch_id(),
+                    };
+                    self.reorder.insert(key, item);
                 }
                 Err(_) => {
                     // All senders are gone. A clean run delivers every
@@ -362,6 +464,83 @@ impl Iterator for SamplingPipeline {
             }
         }
     }
+}
+
+impl Iterator for SamplingPipeline {
+    type Item = SampledBatch;
+
+    /// Next batch in order; `None` when the configured batch count is
+    /// exhausted. If a worker panicked mid-epoch, the panic is re-raised
+    /// here instead of quietly delivering a short epoch; a batch that
+    /// failed under supervision panics with its named [`BatchError`]
+    /// (iterate via [`SamplingPipeline::next_result`] to handle it).
+    fn next(&mut self) -> Option<SampledBatch> {
+        match self.next_result()? {
+            Ok(b) => Some(b),
+            Err(e) => panic!("pipeline delivered a failed batch: {e}"),
+        }
+    }
+}
+
+/// One batch, end to end: the `sample_flush` failpoint, the sampler pass,
+/// the in-pipeline gather (the traffic LABOR shrinks — fetched here so
+/// the consumer never touches the dataset; bytes depend only on the MFG,
+/// never on cache policy or scheduling), and the map back to original
+/// ids at the delivery boundary. Fully deterministic in `(id, seed)`, so
+/// a retry after a transient fault reproduces the exact batch a
+/// never-failed run would have delivered.
+#[allow(clippy::too_many_arguments)]
+fn produce_batch(
+    graph: &CscGraph,
+    sampler: &MultiLayerSampler,
+    seeds: &Arc<Vec<u32>>,
+    deliver_seeds: &Arc<Vec<u32>>,
+    id: u64,
+    seed: u64,
+    shards: usize,
+    plane: &Option<DataPlaneConfig>,
+    perm: &Option<Arc<VertexPerm>>,
+    timers: &StageTimers,
+    pool: &mut ScratchPool,
+) -> Result<SampledBatch, WorkFault> {
+    failpoint::hit("sample_flush").map_err(WorkFault::from)?;
+    let t_sample = Instant::now();
+    let mut mfg = if shards > 1 {
+        sampler.sample_sharded(graph, seeds, seed ^ id, shards, pool)
+    } else {
+        sampler.sample(graph, seeds, seed ^ id, pool.main_mut())
+    };
+    timers.record_sample(t_sample.elapsed());
+    let (feats, labels) = match plane {
+        Some(p) => {
+            let t_gather = Instant::now();
+            // gather straight into the delivered payload: `gather`
+            // reserves the exact row count up front, so this is one
+            // allocation + one copy per batch — the payload is handed to
+            // the consumer, so a reusable staging buffer would only add a
+            // second full memcpy
+            let mut feats = Vec::new();
+            p.store.try_gather(mfg.feature_vertices(), &mut feats).map_err(WorkFault::from)?;
+            let labels = match &p.labels {
+                Some(ls) => ls.gather(seeds),
+                None => GatheredLabels::None,
+            };
+            timers.record_gather(t_gather.elapsed());
+            (feats, labels)
+        }
+        None => (Vec::new(), GatheredLabels::None),
+    };
+    // Delivery boundary: everything above ran in the graph's (possibly
+    // relabeled) id space — the gather in particular must, so the prefix
+    // cache and the permuted feature rows line up. From here on the
+    // consumer sees only original ids. The map-back is accounted as its
+    // own stage so relabeled runs don't under-report worker wall time.
+    if let Some(p) = perm {
+        let t_map = Instant::now();
+        mfg.map_ids(|v| p.to_old(v));
+        timers.record_map(t_map.elapsed());
+    }
+    Ok(SampledBatch { batch_id: id, seeds: deliver_seeds.clone(), mfg, feats, labels })
 }
 
 #[cfg(test)]
@@ -427,6 +606,7 @@ mod tests {
                 intra_batch_threads: shards,
                 data_plane: None,
                 output_perm: None,
+                failure_policy: FailurePolicy::Propagate,
             });
             let mut out = Vec::new();
             for b in &mut p {
@@ -483,6 +663,7 @@ mod tests {
                 intra_batch_threads: 1,
                 data_plane: Some(plane),
                 output_perm: None,
+                failure_policy: FailurePolicy::Propagate,
             },
         );
         let mut rows = 0u64;
@@ -605,6 +786,7 @@ mod tests {
                 intra_batch_threads: 1,
                 data_plane: Some(DataPlaneConfig { store, labels: None }),
                 output_perm: None,
+                failure_policy: FailurePolicy::Propagate,
             },
         );
         while p.next().is_some() {}
@@ -632,6 +814,57 @@ mod tests {
         );
         let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.join()));
         assert!(err.is_err(), "join must re-raise the worker panic");
+    }
+
+    #[test]
+    fn supervised_worker_survives_panics_and_names_lost_batches() {
+        // every batch panics (out-of-range seeds); under supervision the
+        // worker restarts each time, each batch fails with the *named*
+        // WorkerLost, the counters add up, and join() does NOT re-raise —
+        // the worker survived its panics
+        let g = Arc::new(crate::sampler::testutil::test_graph()); // |V| = 500
+        let sampler = Arc::new(MultiLayerSampler::new(SamplerKind::Neighbor, &[4]));
+        let ids: Arc<Vec<u32>> = Arc::new(vec![9_999; 128]); // out of range
+        let mut p = SamplingPipeline::spawn(
+            g,
+            sampler,
+            ids,
+            PipelineConfig {
+                num_workers: 1,
+                queue_depth: 2,
+                batch_size: 32,
+                num_batches: 3,
+                seed: 0,
+                failure_policy: FailurePolicy::Supervise {
+                    max_restarts: 10,
+                    max_retries: 2,
+                    backoff: Backoff {
+                        base: std::time::Duration::from_micros(50),
+                        cap: std::time::Duration::from_millis(1),
+                        seed: 0,
+                    },
+                },
+                ..PipelineConfig::default()
+            },
+        );
+        let mut lost = 0u64;
+        while let Some(item) = p.next_result() {
+            match item {
+                Ok(b) => panic!("batch {} must have failed", b.batch_id),
+                Err(BatchError::WorkerLost { batch_id, restarts }) => {
+                    assert_eq!(batch_id, lost, "losses must arrive in order");
+                    assert_eq!(restarts, lost + 1);
+                    lost += 1;
+                }
+                Err(other) => panic!("expected WorkerLost, got {other}"),
+            }
+        }
+        assert_eq!(lost, 3);
+        let faults = p.fault_metrics();
+        assert_eq!(faults.restarts, 3);
+        assert_eq!(faults.failed, 3);
+        assert_eq!(faults.retried, 0, "panics are restarts, not retries");
+        p.join(); // must not re-raise: the worker was supervised back up
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!
 //! 1. **Queue** — requests enter a bounded MPSC queue (backpressure: a
 //!    full queue blocks the submitter, same discipline as the training
-//!    pipeline's bounded channel), each carrying a deadline.
+//!    pipeline's bounded channel), each carrying a deadline. Callers that
+//!    would rather shed than block use [`ServeHandle::try_submit`], which
+//!    fails a full queue immediately with [`ServeError::Overloaded`].
 //! 2. **Coalesce** — a window opens when the first request lands and the
 //!    batch flushes when the window closes *or* `max_batch` requests
 //!    accumulate, whichever is first. An idle server never flushes —
@@ -39,19 +41,49 @@
 //! responses. `bytes_gathered / bytes_returned < 1` *is* the dedup win,
 //! measured per batch.
 //!
-//! Failure semantics match the pipeline: a panicking worker disconnects
-//! every pending response (waiters observe [`ServeError::Shutdown`]) and
-//! the panic is re-raised on the thread that calls
-//! [`ServingFrontEnd::shutdown`].
+//! # Failure semantics
+//!
+//! Under the default [`FailurePolicy::Propagate`], a panicking worker
+//! disconnects every pending response — waiters observe
+//! [`ServeError::WorkerDied`] (a dead worker is *named*, never dressed up
+//! as a graceful [`ServeError::Shutdown`]) — and the panic is re-raised
+//! on the thread that calls [`ServingFrontEnd::shutdown`].
+//!
+//! Under [`FailurePolicy::Supervise`] the worker survives: a panicked
+//! flush fails only its own batch (each waiter gets
+//! `ServeError::WorkerDied { restarts }`), the coalescer respawns with
+//! fresh scratch state after a deterministic [`Backoff`], and *transient*
+//! faults (injected failpoint errors, gather hiccups — see
+//! [`crate::util::failpoint`]) are retried in place up to `max_retries`
+//! times before the batch fails with [`ServeError::Failed`]. Every
+//! submitted request still receives exactly one terminal event.
+//!
+//! # Graceful degradation
+//!
+//! LABOR's fanout is a *quality* budget (paper Table 2: near-identical
+//! accuracy from far smaller fanouts), which makes it the natural
+//! overload lever. With [`ServingConfig::degrade`] set, a
+//! [`DegradeController`] watches each flush for pressure (deadline
+//! misses, thin headroom, a deep queue) and steps the sampler's fanout
+//! cap down the configured ladder — serving *cheaper* answers instead of
+//! missing deadlines — then back up once flushes run clean. Degraded
+//! responses are labeled ([`ServeResponse::degraded`]) and counted
+//! ([`FaultSnapshot::degraded`]).
+//!
+//! [`FailurePolicy::Propagate`]: super::supervise::FailurePolicy::Propagate
+//! [`FailurePolicy::Supervise`]: super::supervise::FailurePolicy::Supervise
+//! [`FaultSnapshot::degraded`]: super::metrics::FaultSnapshot
 
 use super::feature_store::GatheredLabels;
-use super::metrics::{HistogramSnapshot, LatencyHistogram};
+use super::metrics::{FaultCounters, FaultSnapshot, HistogramSnapshot, LatencyHistogram};
 use super::pipeline::DataPlaneConfig;
+use super::supervise::{Backoff, DegradeController, FailurePolicy, WorkFault};
 use crate::graph::compact::VertexPerm;
 use crate::graph::CscGraph;
 use crate::rng::mix2;
 use crate::sampler::{EpochMap, Mfg, MfgSeedView, MultiLayerSampler, ScratchPool};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::failpoint;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -65,7 +97,8 @@ pub struct ServingConfig {
     pub window: Duration,
     /// flush early once this many requests accumulate
     pub max_batch: usize,
-    /// bounded request-queue depth (submitters block beyond this)
+    /// bounded request-queue depth (submitters block beyond this;
+    /// [`ServeHandle::try_submit`] sheds instead)
     pub queue_depth: usize,
     /// deadline for [`ServeHandle::submit`]; requests past their deadline
     /// at flush time fail with [`ServeError::DeadlineExpired`]
@@ -83,6 +116,13 @@ pub struct ServingConfig {
     /// **original** ids; sampling and gathering run relabeled (keeping the
     /// cache's `id < k` prefix fast path), exactly as in the pipeline
     pub output_perm: Option<Arc<VertexPerm>>,
+    /// what the coalescer does when a flush faults: fail fast
+    /// (deterministic default) or restart/retry (see the
+    /// [module docs](self#failure-semantics))
+    pub failure_policy: FailurePolicy,
+    /// overload degradation ladder; `None` (default) never degrades —
+    /// bit-identical to pre-degradation serving
+    pub degrade: Option<super::supervise::DegradeConfig>,
 }
 
 impl Default for ServingConfig {
@@ -96,11 +136,13 @@ impl Default for ServingConfig {
             intra_batch_threads: 1,
             data_plane: None,
             output_perm: None,
+            failure_policy: FailurePolicy::Propagate,
+            degrade: None,
         }
     }
 }
 
-/// Why a request failed. Deadline misses are *named*, never silent: the
+/// Why a request failed. Every failure is *named*, never silent: the
 /// caller always receives exactly one terminal event per submission.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
@@ -111,7 +153,18 @@ pub enum ServeError {
     /// out-of-range behavior is a panic that would kill the shared
     /// worker and every coalesced peer request)
     InvalidSeed { seed: u32, num_vertices: usize },
-    /// the front end shut down (or its worker died) before responding
+    /// the request queue was full at [`ServeHandle::try_submit`] time —
+    /// load was shed at admission, nothing was enqueued
+    Overloaded { queue_depth: usize },
+    /// the coalescer worker panicked while this request was in flight;
+    /// `restarts` is the front end's respawn count so far (0 under
+    /// [`FailurePolicy::Propagate`], where the worker stays down)
+    WorkerDied { restarts: u64 },
+    /// the flush serving this request faulted (transient retries
+    /// exhausted, or a permanent fault) under
+    /// [`FailurePolicy::Supervise`]; the worker kept running
+    Failed { seed: u32, reason: String },
+    /// the front end shut down before responding
     Shutdown,
 }
 
@@ -123,6 +176,15 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::InvalidSeed { seed, num_vertices } => {
                 write!(f, "seed {seed} is out of range (graph has {num_vertices} vertices)")
+            }
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "request shed: serving queue full ({queue_depth} deep)")
+            }
+            ServeError::WorkerDied { restarts } => {
+                write!(f, "serving worker died (restarts so far: {restarts})")
+            }
+            ServeError::Failed { seed, reason } => {
+                write!(f, "request for seed {seed} failed: {reason}")
             }
             ServeError::Shutdown => write!(f, "serving front end shut down"),
         }
@@ -154,6 +216,9 @@ pub struct ServeResponse {
     /// unique feature bytes the shared pass gathered for the whole batch —
     /// `bytes_gathered / Σ bytes_returned` < 1 is the dedup win
     pub batch_bytes_gathered: u64,
+    /// `Some(cap)` when the degradation controller sampled this batch
+    /// under a reduced fanout budget; `None` is full configured quality
+    pub degraded: Option<u32>,
 }
 
 struct ServeRequest {
@@ -163,6 +228,30 @@ struct ServeRequest {
     tx: mpsc::Sender<Result<ServeResponse, ServeError>>,
 }
 
+/// Liveness state shared by the worker, every [`ServeHandle`], and every
+/// [`PendingResponse`] — how a disconnected response channel is told
+/// apart: a dead worker yields [`ServeError::WorkerDied`], a closed front
+/// end yields [`ServeError::Shutdown`].
+#[derive(Default)]
+struct ServingShared {
+    worker_dead: AtomicBool,
+    /// submitted-but-not-yet-flushed requests (the degradation
+    /// controller's queue-depth pressure signal)
+    queue_len: AtomicUsize,
+    /// worker respawns so far (the payload of [`ServeError::WorkerDied`])
+    restarts: AtomicU64,
+}
+
+impl ServingShared {
+    fn disconnect_error(&self) -> ServeError {
+        if self.worker_dead.load(Ordering::SeqCst) {
+            ServeError::WorkerDied { restarts: self.restarts.load(Ordering::Relaxed) }
+        } else {
+            ServeError::Shutdown
+        }
+    }
+}
+
 /// Cloneable submission handle. Dropping every handle (plus the front
 /// end's own sender via [`ServingFrontEnd::shutdown`]) is what lets the
 /// worker drain and exit.
@@ -170,6 +259,9 @@ struct ServeRequest {
 pub struct ServeHandle {
     tx: mpsc::SyncSender<ServeRequest>,
     default_deadline: Duration,
+    queue_depth: usize,
+    shared: Arc<ServingShared>,
+    metrics: Arc<ServingMetrics>,
 }
 
 impl ServeHandle {
@@ -184,23 +276,67 @@ impl ServeHandle {
         let now = Instant::now();
         let (tx, rx) = mpsc::channel();
         let req = ServeRequest { seed, deadline: now + budget, enqueued: now, tx };
-        // a dead worker means the request (and its response sender) is
-        // dropped here, which surfaces as `Shutdown` on wait()
-        let _ = self.tx.send(req);
-        PendingResponse { rx }
+        // count before sending — the worker decrements on receive, so the
+        // reverse order could transiently underflow the gauge. A dead
+        // worker means the request (and its response sender) is dropped
+        // here, which surfaces as `WorkerDied` on wait().
+        self.shared.queue_len.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(req).is_err() {
+            self.shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+        }
+        PendingResponse { rx, shared: self.shared.clone() }
+    }
+
+    /// Non-blocking admission: like [`submit`](Self::submit), but a full
+    /// queue sheds the request immediately with
+    /// [`ServeError::Overloaded`] instead of blocking the caller — the
+    /// overload posture for clients that can fail over or retry later.
+    pub fn try_submit(&self, seed: u32) -> Result<PendingResponse, ServeError> {
+        self.try_submit_with_deadline(seed, self.default_deadline)
+    }
+
+    /// [`try_submit`](Self::try_submit) with an explicit deadline budget.
+    pub fn try_submit_with_deadline(
+        &self,
+        seed: u32,
+        budget: Duration,
+    ) -> Result<PendingResponse, ServeError> {
+        let now = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let req = ServeRequest { seed, deadline: now + budget, enqueued: now, tx };
+        self.shared.queue_len.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(PendingResponse { rx, shared: self.shared.clone() }),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.faults.record_shed();
+                Err(ServeError::Overloaded { queue_depth: self.queue_depth })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+                Err(self.shared.disconnect_error())
+            }
+        }
     }
 }
 
 /// The caller's side of one submitted request: exactly one terminal event
-/// arrives — a response, a named deadline error, or `Shutdown`.
+/// arrives — a response or a named [`ServeError`].
 pub struct PendingResponse {
     rx: mpsc::Receiver<Result<ServeResponse, ServeError>>,
+    shared: Arc<ServingShared>,
 }
 
 impl PendingResponse {
-    /// Block until this request resolves.
+    /// Block until this request resolves. A disconnect without a terminal
+    /// event is classified, not conflated: [`ServeError::WorkerDied`] if
+    /// the worker panicked, [`ServeError::Shutdown`] if the front end
+    /// closed gracefully.
     pub fn wait(self) -> Result<ServeResponse, ServeError> {
-        self.rx.recv().unwrap_or(Err(ServeError::Shutdown))
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(self.shared.disconnect_error()),
+        }
     }
 
     /// Non-blocking poll; `None` while the request is still in flight.
@@ -208,7 +344,7 @@ impl PendingResponse {
         match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServeError::Shutdown)),
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(self.shared.disconnect_error())),
         }
     }
 }
@@ -225,6 +361,7 @@ struct ServingMetrics {
     bytes_gathered: AtomicU64,
     bytes_returned: AtomicU64,
     latency: LatencyHistogram,
+    faults: FaultCounters,
 }
 
 impl ServingMetrics {
@@ -240,13 +377,15 @@ impl ServingMetrics {
             bytes_gathered: self.bytes_gathered.load(Ordering::Relaxed),
             bytes_returned: self.bytes_returned.load(Ordering::Relaxed),
             latency: self.latency.snapshot(),
+            faults: self.faults.snapshot(),
         }
     }
 }
 
 /// Point-in-time serving statistics: request/response/timeout counts, the
-/// coalescing factor, row/byte dedup accounting, and the response-time
-/// distribution (p50/p99 via [`HistogramSnapshot`]).
+/// coalescing factor, row/byte dedup accounting, fault/degradation
+/// counters, and the response-time distribution (p50/p99 via
+/// [`HistogramSnapshot`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ServingSnapshot {
     /// requests pulled off the queue so far
@@ -269,6 +408,10 @@ pub struct ServingSnapshot {
     pub bytes_returned: u64,
     /// submit → response latency distribution, one sample per response
     pub latency: HistogramSnapshot,
+    /// robustness counters: retries, named batch failures, worker
+    /// restarts, shed requests, degraded responses — all zero under
+    /// [`FailurePolicy::Propagate`] with no failpoints armed
+    pub faults: FaultSnapshot,
 }
 
 impl ServingSnapshot {
@@ -314,7 +457,9 @@ pub struct ServingFrontEnd {
     tx: Option<mpsc::SyncSender<ServeRequest>>,
     worker: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<ServingMetrics>,
+    shared: Arc<ServingShared>,
     default_deadline: Duration,
+    queue_depth: usize,
 }
 
 impl ServingFrontEnd {
@@ -325,14 +470,26 @@ impl ServingFrontEnd {
         cfg: ServingConfig,
     ) -> Self {
         assert!(sampler.num_layers() > 0, "serving needs a sampler with >= 1 layer");
-        let (tx, rx) = mpsc::sync_channel::<ServeRequest>(cfg.queue_depth.max(1));
+        let queue_depth = cfg.queue_depth.max(1);
+        let (tx, rx) = mpsc::sync_channel::<ServeRequest>(queue_depth);
         let metrics = Arc::new(ServingMetrics::default());
+        let shared = Arc::new(ServingShared::default());
         let default_deadline = cfg.default_deadline;
         let worker_metrics = metrics.clone();
+        let worker_shared = shared.clone();
         let worker = std::thread::spawn(move || {
-            coalescer_loop(&graph, &sampler, &cfg, &worker_metrics, &rx);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                coalescer_loop(&graph, &sampler, &cfg, &worker_metrics, &worker_shared, &rx);
+            }));
+            if let Err(panic) = result {
+                // mark *before* the rx drop implied by unwinding, so every
+                // waiter that observes the disconnect also observes the
+                // death flag
+                worker_shared.worker_dead.store(true, Ordering::SeqCst);
+                std::panic::resume_unwind(panic);
+            }
         });
-        Self { tx: Some(tx), worker: Some(worker), metrics, default_deadline }
+        Self { tx: Some(tx), worker: Some(worker), metrics, shared, default_deadline, queue_depth }
     }
 
     /// A cloneable submission handle.
@@ -340,6 +497,9 @@ impl ServingFrontEnd {
         ServeHandle {
             tx: self.tx.clone().expect("front end already shut down"),
             default_deadline: self.default_deadline,
+            queue_depth: self.queue_depth,
+            shared: self.shared.clone(),
+            metrics: self.metrics.clone(),
         }
     }
 
@@ -419,21 +579,40 @@ pub fn replay_open_loop(
 /// `max_batch` is reached, or the queue disconnects. `recv` returning
 /// `Disconnected` implies the queue is closed *and empty*, so shutdown
 /// naturally drains every queued request before the loop exits.
+///
+/// Under [`FailurePolicy::Supervise`] each flush runs inside
+/// `catch_unwind`: a panic fails only its own batch (waiters get
+/// [`ServeError::WorkerDied`] with the respawn count), and the coalescer
+/// "respawns" logically — fresh scratch arenas, deterministic backoff —
+/// until the restart budget is spent, at which point the panic propagates
+/// after all. `batch_id` advances on panicked flushes too, so a replayed
+/// chaos schedule samples the exact same per-batch seeds.
 fn coalescer_loop(
     graph: &CscGraph,
     sampler: &MultiLayerSampler,
     cfg: &ServingConfig,
     metrics: &ServingMetrics,
+    shared: &ServingShared,
     rx: &mpsc::Receiver<ServeRequest>,
 ) {
     let shards = cfg.intra_batch_threads.max(1);
     let max_batch = cfg.max_batch.max(1);
     let mut pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
     let mut demux_map = EpochMap::default();
+    let mut controller = cfg.degrade.clone().map(DegradeController::new);
+    let (supervised, max_restarts, max_retries, backoff) = match cfg.failure_policy {
+        FailurePolicy::Propagate => (false, 0u32, 0u32, Backoff::default()),
+        FailurePolicy::Supervise { max_restarts, max_retries, backoff } => {
+            (true, max_restarts, max_retries, backoff)
+        }
+    };
     let mut batch_id = 0u64;
     loop {
         let first = match rx.recv() {
-            Ok(r) => r,
+            Ok(r) => {
+                shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+                r
+            }
             Err(_) => return,
         };
         let mut batch = vec![first];
@@ -445,7 +624,10 @@ fn coalescer_loop(
                 break;
             }
             match rx.recv_timeout(flush_at - now) {
-                Ok(r) => batch.push(r),
+                Ok(r) => {
+                    shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+                    batch.push(r);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     disconnected = true;
@@ -453,7 +635,46 @@ fn coalescer_loop(
                 }
             }
         }
-        serve_batch(graph, sampler, cfg, metrics, batch_id, batch, &mut pool, &mut demux_map);
+        // pre-clone the response senders: if the flush panics they are the
+        // only route left to the waiters — an *explicit* WorkerDied event,
+        // not a racy channel disconnect (the unwinding flush drops its
+        // request senders before any handler up-stack could run). Requests
+        // already served before the panic simply ignore the second event
+        // (the first message in a response channel wins).
+        let txs: Vec<mpsc::Sender<Result<ServeResponse, ServeError>>> =
+            batch.iter().map(|r| r.tx.clone()).collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_batch(
+                graph, sampler, cfg, metrics, shared, batch_id, batch, &mut pool, &mut demux_map,
+                &mut controller, max_retries, supervised,
+            );
+        }));
+        if let Err(panic) = result {
+            if !supervised {
+                // fail fast, but classified: flag the death and notify the
+                // doomed batch before re-raising toward shutdown()
+                shared.worker_dead.store(true, Ordering::SeqCst);
+                for tx in txs {
+                    let _ = tx.send(Err(ServeError::WorkerDied { restarts: 0 }));
+                }
+                std::panic::resume_unwind(panic);
+            }
+            let restarts = shared.restarts.fetch_add(1, Ordering::SeqCst) + 1;
+            metrics.faults.record_restart();
+            for tx in txs {
+                let _ = tx.send(Err(ServeError::WorkerDied { restarts }));
+            }
+            if restarts > max_restarts as u64 {
+                shared.worker_dead.store(true, Ordering::SeqCst);
+                std::panic::resume_unwind(panic);
+            }
+            // logical respawn: the panicked flush may have left the
+            // arenas mid-`mem::take` — discard and rebuild, then back
+            // off on the deterministic schedule
+            pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
+            demux_map = EpochMap::default();
+            std::thread::sleep(backoff.delay((restarts - 1).min(u32::MAX as u64) as u32));
+        }
         batch_id += 1;
         if disconnected {
             return;
@@ -461,18 +682,93 @@ fn coalescer_loop(
     }
 }
 
+/// Everything a successful flush produced before demux: the shared MFG
+/// (sampling id space) and the batch-wide gather results.
+struct BatchPayload {
+    mfg: Mfg,
+    feats: Vec<f32>,
+    labels: GatheredLabels,
+    dim: usize,
+    row_bytes: u64,
+}
+
+/// The fallible core of a flush: sample (optionally under a degraded
+/// fanout cap) and gather. Fully deterministic in its inputs, so a retry
+/// after a transient fault reproduces the exact batch a never-failed run
+/// would have served.
+fn flush_payload(
+    graph: &CscGraph,
+    sampler: &MultiLayerSampler,
+    cfg: &ServingConfig,
+    sample_seeds: &[u32],
+    batch_seed: u64,
+    fanout_cap: Option<u32>,
+    pool: &mut ScratchPool,
+) -> Result<BatchPayload, WorkFault> {
+    failpoint::hit("sample_flush").map_err(WorkFault::from)?;
+    let shards = cfg.intra_batch_threads.max(1);
+    let mfg = if shards > 1 {
+        sampler.sample_sharded_with_cap(graph, sample_seeds, batch_seed, fanout_cap, shards, pool)
+    } else {
+        sampler.sample_with_cap(graph, sample_seeds, batch_seed, fanout_cap, pool.main_mut())
+    };
+    let mut feats = Vec::new();
+    let mut labels = GatheredLabels::None;
+    let mut dim = 0usize;
+    let mut row_bytes = 0u64;
+    if let Some(plane) = &cfg.data_plane {
+        plane.store.try_gather(mfg.feature_vertices(), &mut feats).map_err(WorkFault::from)?;
+        if let Some(ls) = &plane.labels {
+            labels = ls.gather(sample_seeds);
+        }
+        dim = plane.store.dim();
+        row_bytes = plane.store.row_bytes();
+    }
+    Ok(BatchPayload { mfg, feats, labels, dim, row_bytes })
+}
+
+/// Feed one flush outcome to the degradation controller (if configured):
+/// a flush is *pressured* when something expired, when any live request's
+/// deadline headroom was below the configured floor, or when the queue was
+/// deep at flush time.
+fn observe_flush(
+    controller: &mut Option<DegradeController>,
+    expired_here: u64,
+    min_headroom: Option<Duration>,
+    queue_len: usize,
+) {
+    if let Some(c) = controller {
+        let deg = c.config();
+        let tight = deg.headroom > Duration::ZERO
+            && match min_headroom {
+                Some(h) => h < deg.headroom,
+                None => true,
+            };
+        let deep = deg.queue_high > 0 && queue_len >= deg.queue_high;
+        let pressured = expired_here > 0 || tight || deep;
+        c.observe(pressured);
+    }
+}
+
 /// One coalesced pass: expire, dedupe, sample, gather, demux, respond.
+/// `supervised` selects the fault posture: retry/fail-the-batch (with
+/// `max_retries` in-place attempts for transient faults) vs panic.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     graph: &CscGraph,
     sampler: &MultiLayerSampler,
     cfg: &ServingConfig,
     metrics: &ServingMetrics,
+    shared: &ServingShared,
     batch_id: u64,
     batch: Vec<ServeRequest>,
     pool: &mut ScratchPool,
     demux_map: &mut EpochMap,
+    controller: &mut Option<DegradeController>,
+    max_retries: u32,
+    supervised: bool,
 ) {
+    let queue_len_at_flush = shared.queue_len.load(Ordering::Relaxed);
     metrics.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
     // 1. admission checks at flush time: expired requests and out-of-range
     //    seeds fail with named errors. Seed validity is checked against
@@ -485,9 +781,12 @@ fn serve_batch(
     let now = Instant::now();
     let nv = graph.num_vertices();
     let mut live = Vec::with_capacity(batch.len());
+    let mut expired_here = 0u64;
+    let mut min_headroom: Option<Duration> = None;
     for req in batch {
         if now > req.deadline {
             let late_by = now - req.deadline;
+            expired_here += 1;
             metrics.expired.fetch_add(1, Ordering::Relaxed);
             let _ = req
                 .tx
@@ -498,11 +797,15 @@ fn serve_batch(
                 .tx
                 .send(Err(ServeError::InvalidSeed { seed: req.seed, num_vertices: nv }));
         } else {
+            let headroom = req.deadline.saturating_duration_since(now);
+            min_headroom = Some(min_headroom.map_or(headroom, |m| m.min(headroom)));
             live.push(req);
         }
     }
     if live.is_empty() {
-        // a fully-expired flush performs no sampler pass
+        // a fully-expired flush performs no sampler pass, but it still
+        // counts as a (pressured) observation for the controller
+        observe_flush(controller, expired_here, None, queue_len_at_flush);
         return;
     }
     // 2. dedupe (first-seen order) in the request id space, then translate
@@ -513,27 +816,47 @@ fn serve_batch(
         Some(perm) => unique.iter().map(|&v| perm.to_new(v)).collect(),
         None => unique,
     };
-    // 3. one shared sampler pass (bit-identical across shard counts)
+    // 3 + 4. one shared sampler pass + one shared gather, under the
+    //    controller's current fanout budget, with bounded in-place retries
+    //    for transient faults when supervised
     let batch_seed = mix2(cfg.seed, batch_id);
-    let shards = cfg.intra_batch_threads.max(1);
-    let mut mfg = if shards > 1 {
-        sampler.sample_sharded(graph, &sample_seeds, batch_seed, shards, pool)
-    } else {
-        sampler.sample(graph, &sample_seeds, batch_seed, pool.main_mut())
-    };
-    // 4. one shared gather (relabeled space, same as the pipeline)
-    let mut batch_feats = Vec::new();
-    let mut batch_labels = GatheredLabels::None;
-    let mut dim = 0usize;
-    let mut row_bytes = 0u64;
-    if let Some(plane) = &cfg.data_plane {
-        plane.store.gather(mfg.feature_vertices(), &mut batch_feats);
-        if let Some(ls) = &plane.labels {
-            batch_labels = ls.gather(&sample_seeds);
+    let budget = controller.as_ref().and_then(|c| c.budget());
+    let mut attempts = 0u32;
+    let flushed = loop {
+        match flush_payload(graph, sampler, cfg, &sample_seeds, batch_seed, budget, pool) {
+            Ok(p) => break Ok(p),
+            Err(fault) => {
+                if !supervised {
+                    // Propagate: promote the fault to the worker panic the
+                    // pre-supervision contract specified
+                    panic!("serving flush for batch {batch_id} failed: {fault}");
+                }
+                if matches!(fault, WorkFault::Transient(_)) && attempts < max_retries {
+                    attempts += 1;
+                    metrics.faults.record_retry();
+                    continue;
+                }
+                break Err(fault);
+            }
         }
-        dim = plane.store.dim();
-        row_bytes = plane.store.row_bytes();
-    }
+    };
+    let payload = match flushed {
+        Ok(p) => p,
+        Err(fault) => {
+            // fail only this batch, with the fault spelled out per request
+            metrics.faults.record_failed(live.len() as u64);
+            let reason = fault.to_string();
+            for req in live {
+                let _ = req
+                    .tx
+                    .send(Err(ServeError::Failed { seed: req.seed, reason: reason.clone() }));
+            }
+            observe_flush(controller, expired_here, min_headroom, queue_len_at_flush);
+            return;
+        }
+    };
+    let BatchPayload { mut mfg, feats: batch_feats, labels: batch_labels, dim, row_bytes } =
+        payload;
     let batch_rows = mfg.feature_vertices().len() as u64;
     let batch_bytes = batch_rows * row_bytes;
     // 5. back to original ids *before* demux — extraction is positional,
@@ -548,6 +871,16 @@ fn serve_batch(
     metrics.unique_rows.fetch_add(batch_rows, Ordering::Relaxed);
     metrics.bytes_gathered.fetch_add(batch_bytes, Ordering::Relaxed);
     for (ri, req) in live.into_iter().enumerate() {
+        if let Err(inj) = failpoint::hit("serve_demux") {
+            if supervised {
+                metrics.faults.record_failed(1);
+                let _ = req
+                    .tx
+                    .send(Err(ServeError::Failed { seed: req.seed, reason: inj.to_string() }));
+                continue;
+            }
+            panic!("serving demux for batch {batch_id} failed: {inj}");
+        }
         let ex = view.extract_with(pos[ri] as usize, demux_map);
         let mut feats = Vec::new();
         if dim > 0 {
@@ -560,6 +893,9 @@ fn serve_batch(
         metrics.served.fetch_add(1, Ordering::Relaxed);
         metrics.returned_rows.fetch_add(rows, Ordering::Relaxed);
         metrics.bytes_returned.fetch_add(bytes_returned, Ordering::Relaxed);
+        if budget.is_some() {
+            metrics.faults.record_degraded(1);
+        }
         let latency = req.enqueued.elapsed();
         metrics.latency.record(latency);
         // a dropped PendingResponse is the client's choice, not an error
@@ -572,8 +908,10 @@ fn serve_batch(
             batch_size,
             bytes_returned,
             batch_bytes_gathered: batch_bytes,
+            degraded: budget,
         }));
     }
+    observe_flush(controller, expired_here, min_headroom, queue_len_at_flush);
 }
 
 /// One request's row of a batch-gathered label block.
@@ -635,9 +973,10 @@ mod tests {
             }
             assert!(r.batch_size >= 1 && r.batch_size <= 8);
             assert!(r.latency > Duration::ZERO);
-            // no data plane configured
+            // no data plane configured, no degradation configured
             assert!(r.feats.is_empty());
             assert_eq!(r.label, GatheredLabels::None);
+            assert_eq!(r.degraded, None);
         }
         let snap = front.shutdown();
         assert_eq!(snap.served, 8);
@@ -647,6 +986,8 @@ mod tests {
         assert!(snap.coalescing_factor() >= 1.0);
         // sub-ego-nets overlap, so returned rows can only exceed unique
         assert!(snap.returned_rows >= snap.unique_rows);
+        // no faults, no degradation, no sheds under the default policy
+        assert_eq!(snap.faults, FaultSnapshot::default());
     }
 
     #[test]
@@ -665,5 +1006,16 @@ mod tests {
             p.wait().unwrap();
         }
         assert_eq!(front.shutdown().served, 5);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_shutdown_not_worker_died() {
+        let g = Arc::new(testutil::test_graph());
+        let front = ServingFrontEnd::spawn(g, labor0(&[3]), ServingConfig::default());
+        let h = front.handle();
+        front.shutdown();
+        // the worker exited cleanly: a late submit observes Shutdown
+        assert!(matches!(h.submit(1).wait(), Err(ServeError::Shutdown)));
+        assert!(matches!(h.try_submit(1), Err(ServeError::Shutdown)));
     }
 }

@@ -1,0 +1,413 @@
+//! Failure policy, deterministic backoff, batch-level fault taxonomy, and
+//! the overload degradation controller.
+//!
+//! The training pipeline and the serving front end share one failure
+//! model, configured by [`FailurePolicy`]:
+//!
+//! * [`FailurePolicy::Propagate`] — the default, and the deterministic
+//!   contract every bit-identity suite runs under: a worker panic is
+//!   re-raised on the consuming thread ([`SamplingPipeline::join`] /
+//!   [`ServingFrontEnd::shutdown`]), nothing is retried, nothing is
+//!   restarted.
+//! * [`FailurePolicy::Supervise`] — production posture: a panicked worker
+//!   is respawned (fresh scratch state) after a deterministic jittered
+//!   exponential [`Backoff`], only the in-flight batch fails — with a
+//!   *named* error ([`BatchError::WorkerLost`] /
+//!   `ServeError::WorkerDied`) — and *transient* faults (injected
+//!   failpoint errors, gather hiccups) get bounded in-place retries
+//!   instead of killing the worker's coalesced peers.
+//!
+//! Transient vs. permanent is the [`WorkFault`] split: a transient fault
+//! is expected to succeed on retry with the *same inputs* (the retry
+//! re-runs the deterministic sampler, so a successful retry is
+//! bit-identical to a never-failed run); a permanent fault (out-of-range
+//! id, corrupt store) would fail every retry and is surfaced immediately.
+//!
+//! [`DegradeController`] is the overload half (see
+//! `coordinator::serving`): LABOR's fanout is a *quality* budget — the
+//! paper's Table 2 shows the same estimator quality from far fewer
+//! sampled vertices — so under sustained deadline pressure the serving
+//! flush steps its fanout cap down a configured ladder (e.g. `10→7→4`)
+//! instead of shedding or missing deadlines, and steps back up once
+//! flushes run clean.
+//!
+//! [`SamplingPipeline::join`]: super::pipeline::SamplingPipeline::join
+//! [`ServingFrontEnd::shutdown`]: super::serving::ServingFrontEnd::shutdown
+
+use crate::rng::HashRng;
+use crate::util::failpoint::Injected;
+use std::time::Duration;
+
+/// What a worker does when a batch faults. See the [module docs](self).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum FailurePolicy {
+    /// fail fast: panics re-raise on the consumer, errors panic the
+    /// worker — the deterministic default every identity suite runs under
+    #[default]
+    Propagate,
+    /// restart panicked workers and retry transient faults
+    Supervise {
+        /// total worker respawns allowed (pipeline-wide / per front end)
+        /// before the panic propagates after all
+        max_restarts: u32,
+        /// in-place retries per batch for *transient* faults before the
+        /// batch fails with [`BatchError::TransientExhausted`]
+        max_retries: u32,
+        /// delay schedule between restarts and between retries
+        backoff: Backoff,
+    },
+}
+
+impl FailurePolicy {
+    /// Supervision with sane defaults: 3 restarts, 3 retries, 1 ms → 100 ms
+    /// backoff.
+    pub fn supervise() -> Self {
+        FailurePolicy::Supervise { max_restarts: 3, max_retries: 3, backoff: Backoff::default() }
+    }
+
+    pub fn is_supervised(&self) -> bool {
+        matches!(self, FailurePolicy::Supervise { .. })
+    }
+}
+
+/// Deterministic jittered exponential backoff: attempt `a` sleeps
+/// `min(base · 2^a, cap)` scaled by a jitter factor in `[0.5, 1.0)` drawn
+/// from `HashRng(seed)` keyed on the attempt index — so a replayed chaos
+/// run sleeps the exact same schedule (no wall-clock or thread-id
+/// entropy), while distinct seeds decorrelate restart stampedes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Backoff {
+    pub base: Duration,
+    pub cap: Duration,
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self { base: Duration::from_millis(1), cap: Duration::from_millis(100), seed: 0 }
+    }
+}
+
+impl Backoff {
+    /// The delay before retry/restart attempt `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let base_ns = self.base.as_nanos().min(u128::from(u64::MAX)) as f64;
+        let cap_ns = self.cap.as_nanos().min(u128::from(u64::MAX)) as f64;
+        let exp = base_ns * 2f64.powi(attempt.min(63) as i32);
+        let jitter = 0.5 + 0.5 * HashRng::new(self.seed).uniform(attempt as u64);
+        Duration::from_nanos((exp * jitter).min(cap_ns) as u64)
+    }
+}
+
+/// Why one batch failed under [`FailurePolicy::Supervise`] while its
+/// peers kept flowing. Every variant names the batch — supervision never
+/// silently drops work.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BatchError {
+    /// the worker sampling this batch panicked; the worker was respawned
+    /// (`restarts` is the pipeline-wide respawn count so far) and only
+    /// this batch is lost
+    WorkerLost { batch_id: u64, restarts: u64 },
+    /// a transient fault outlived its retry budget
+    TransientExhausted { batch_id: u64, attempts: u32, last: String },
+    /// a permanent fault (retry could not have helped — e.g. an
+    /// out-of-range vertex id against the feature store)
+    Permanent { batch_id: u64, reason: String },
+}
+
+impl BatchError {
+    pub fn batch_id(&self) -> u64 {
+        match self {
+            BatchError::WorkerLost { batch_id, .. }
+            | BatchError::TransientExhausted { batch_id, .. }
+            | BatchError::Permanent { batch_id, .. } => *batch_id,
+        }
+    }
+}
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchError::WorkerLost { batch_id, restarts } => write!(
+                f,
+                "batch {batch_id} lost to a worker panic (restart #{restarts})"
+            ),
+            BatchError::TransientExhausted { batch_id, attempts, last } => write!(
+                f,
+                "batch {batch_id} failed after {attempts} transient attempts (last: {last})"
+            ),
+            BatchError::Permanent { batch_id, reason } => {
+                write!(f, "batch {batch_id} failed permanently: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BatchError {}
+
+/// The transient/permanent split of a batch fault, decided at the fault
+/// site (the site knows whether a retry can help).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkFault {
+    /// retry with the same inputs may succeed (injected failpoint errors,
+    /// interrupted fetches)
+    Transient(String),
+    /// retry cannot help (invalid ids, corrupt data)
+    Permanent(String),
+}
+
+impl std::fmt::Display for WorkFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkFault::Transient(m) => write!(f, "transient fault: {m}"),
+            WorkFault::Permanent(m) => write!(f, "permanent fault: {m}"),
+        }
+    }
+}
+
+impl From<Injected> for WorkFault {
+    /// Failpoint injections model transient infrastructure faults.
+    fn from(e: Injected) -> Self {
+        WorkFault::Transient(e.to_string())
+    }
+}
+
+impl From<super::feature_store::GatherError> for WorkFault {
+    /// Injected gather faults are transient; an out-of-range id is
+    /// permanent — no retry can grow the store.
+    fn from(e: super::feature_store::GatherError) -> Self {
+        use super::feature_store::GatherError;
+        match e {
+            GatherError::Injected(i) => WorkFault::Transient(i.to_string()),
+            e @ GatherError::OutOfRange { .. } => WorkFault::Permanent(e.to_string()),
+        }
+    }
+}
+
+/// Degradation-ladder configuration for overloaded serving. `ladder[0]`
+/// is full quality (no fanout cap); deeper rungs cap the per-layer fanout
+/// at the given budget. See [`DegradeController`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradeConfig {
+    /// fanout budgets, full-quality first, e.g. `[10, 7, 4]`; the
+    /// controller never leaves this ladder
+    pub ladder: Vec<u32>,
+    /// consecutive *pressured* flushes (deadline misses, thin headroom,
+    /// deep queue) before stepping one rung down
+    pub down_after: u32,
+    /// consecutive clean flushes before stepping one rung back up —
+    /// deliberately larger than `down_after`: degrade fast, recover
+    /// cautiously
+    pub up_after: u32,
+    /// a flush counts as pressured when any request's remaining deadline
+    /// headroom is below this (even if nothing expired yet)
+    pub headroom: Duration,
+    /// queue length at flush time that counts as pressure (0 disables the
+    /// queue signal)
+    pub queue_high: usize,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        Self {
+            ladder: vec![10, 7, 4],
+            down_after: 2,
+            up_after: 8,
+            headroom: Duration::ZERO,
+            queue_high: 0,
+        }
+    }
+}
+
+/// Stepwise overload controller: hysteresis over a fanout-budget ladder.
+///
+/// One instance lives on the serving coalescer thread (no locking — it
+/// observes each flush after serving it and its budget applies from the
+/// next flush). `observe(pressured)` implements the two streaks:
+/// `down_after` consecutive pressured flushes step one rung down,
+/// `up_after` consecutive clean flushes step one rung up; any
+/// contradiction resets the opposing streak, so a single miss never
+/// degrades and a single clean flush never recovers.
+#[derive(Clone, Debug)]
+pub struct DegradeController {
+    cfg: DegradeConfig,
+    level: usize,
+    down_streak: u32,
+    up_streak: u32,
+}
+
+impl DegradeController {
+    pub fn new(cfg: DegradeConfig) -> Self {
+        assert!(!cfg.ladder.is_empty(), "degradation ladder must have >= 1 rung");
+        Self { cfg, level: 0, down_streak: 0, up_streak: 0 }
+    }
+
+    /// Current rung (0 = full quality).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    pub fn config(&self) -> &DegradeConfig {
+        &self.cfg
+    }
+
+    /// The fanout cap to sample the *next* flush with: `None` at the top
+    /// rung (bit-identical to an uncontrolled run), `Some(budget)` below.
+    pub fn budget(&self) -> Option<u32> {
+        if self.level == 0 {
+            None
+        } else {
+            Some(self.cfg.ladder[self.level])
+        }
+    }
+
+    /// Record one flush outcome; may move one rung, never more, never off
+    /// the ladder.
+    pub fn observe(&mut self, pressured: bool) {
+        if pressured {
+            self.up_streak = 0;
+            self.down_streak += 1;
+            if self.down_streak >= self.cfg.down_after.max(1) {
+                self.down_streak = 0;
+                if self.level + 1 < self.cfg.ladder.len() {
+                    self.level += 1;
+                }
+            }
+        } else {
+            self.down_streak = 0;
+            self.up_streak += 1;
+            if self.up_streak >= self.cfg.up_after.max(1) {
+                self.up_streak = 0;
+                self.level = self.level.saturating_sub(1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_propagate() {
+        assert_eq!(FailurePolicy::default(), FailurePolicy::Propagate);
+        assert!(!FailurePolicy::default().is_supervised());
+        assert!(FailurePolicy::supervise().is_supervised());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_exponential_and_capped() {
+        let b = Backoff { base: Duration::from_millis(1), cap: Duration::from_millis(50), seed: 9 };
+        let again = b;
+        for a in 0..20 {
+            let d = b.delay(a);
+            assert_eq!(d, again.delay(a), "attempt {a} must replay identically");
+            assert!(d <= Duration::from_millis(50), "attempt {a}: {d:?} over cap");
+            // jitter floor: at least half the uncapped exponential, up to the cap
+            let floor = Duration::from_nanos(
+                ((500_000u128 << a.min(30)).min(50_000_000)) as u64,
+            );
+            assert!(d >= floor, "attempt {a}: {d:?} under jitter floor {floor:?}");
+        }
+        // grows (on average, and with this seed) before the cap bites
+        assert!(b.delay(5) > b.delay(0));
+    }
+
+    #[test]
+    fn batch_errors_name_their_batch() {
+        let errs = [
+            BatchError::WorkerLost { batch_id: 7, restarts: 2 },
+            BatchError::TransientExhausted { batch_id: 7, attempts: 4, last: "x".into() },
+            BatchError::Permanent { batch_id: 7, reason: "bad id".into() },
+        ];
+        for e in errs {
+            assert_eq!(e.batch_id(), 7);
+            assert!(e.to_string().contains('7'), "{e}");
+        }
+    }
+
+    #[test]
+    fn controller_steps_down_only_on_sustained_pressure() {
+        let mut c = DegradeController::new(DegradeConfig {
+            ladder: vec![10, 7, 4],
+            down_after: 2,
+            up_after: 3,
+            ..DegradeConfig::default()
+        });
+        assert_eq!(c.budget(), None);
+        // isolated misses interleaved with clean flushes never degrade
+        for _ in 0..10 {
+            c.observe(true);
+            c.observe(false);
+        }
+        assert_eq!(c.level(), 0, "alternating pressure must not step down");
+        // two consecutive misses step exactly one rung
+        c.observe(true);
+        c.observe(true);
+        assert_eq!(c.level(), 1);
+        assert_eq!(c.budget(), Some(7));
+        // two more: next rung
+        c.observe(true);
+        c.observe(true);
+        assert_eq!(c.budget(), Some(4));
+    }
+
+    #[test]
+    fn controller_recovers_and_never_leaves_the_ladder() {
+        let mut c = DegradeController::new(DegradeConfig {
+            ladder: vec![10, 7, 4],
+            down_after: 1,
+            up_after: 2,
+            ..DegradeConfig::default()
+        });
+        // sustained pressure saturates at the last rung
+        for _ in 0..50 {
+            c.observe(true);
+        }
+        assert_eq!(c.level(), 2, "must clamp at the deepest rung");
+        assert_eq!(c.budget(), Some(4));
+        // recovery: 2 clean flushes per rung, back to full quality
+        c.observe(false);
+        c.observe(false);
+        assert_eq!(c.budget(), Some(7));
+        c.observe(false);
+        c.observe(false);
+        assert_eq!(c.budget(), None);
+        // and clean flushes at the top stay at the top
+        for _ in 0..10 {
+            c.observe(false);
+        }
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn one_clean_flush_does_not_recover() {
+        let mut c = DegradeController::new(DegradeConfig {
+            ladder: vec![8, 4],
+            down_after: 1,
+            up_after: 3,
+            ..DegradeConfig::default()
+        });
+        c.observe(true);
+        assert_eq!(c.budget(), Some(4));
+        // clean, miss, clean, miss .. never accumulates up_after
+        for _ in 0..6 {
+            c.observe(false);
+            c.observe(true);
+        }
+        assert_eq!(c.budget(), Some(4), "interrupted recovery must not step up");
+    }
+
+    #[test]
+    fn injected_faults_classify_transient() {
+        let f: WorkFault =
+            Injected { point: "gather".into(), hit: 3 }.into();
+        assert!(matches!(f, WorkFault::Transient(_)));
+    }
+
+    #[test]
+    #[should_panic(expected = "ladder")]
+    fn empty_ladder_is_rejected() {
+        DegradeController::new(DegradeConfig { ladder: vec![], ..DegradeConfig::default() });
+    }
+}

@@ -194,6 +194,10 @@ pub fn save_graph<P: AsRef<Path>>(path: P, g: &CscGraph) -> io::Result<()> {
 }
 
 pub fn load_graph<P: AsRef<Path>>(path: P) -> io::Result<CscGraph> {
+    // chaos hook: lets the fault-injection suite exercise loader error
+    // paths without a corrupt fixture on disk (see `util::failpoint`)
+    crate::util::failpoint::hit("lgx_read")
+        .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
     let f = File::open(path)?;
     // sanity-bound the reader at the file's true size: no declared length
     // can pull (or allocate toward) more bytes than the file holds
@@ -917,6 +921,10 @@ pub fn mmap_enabled() -> bool {
 /// corruption errors do NOT fall back: a corrupt file is corrupt through
 /// either loader, and retrying would only mask the named error.
 pub fn load_lgx<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    // chaos hook: injected faults surface as the loader's own named I/O
+    // error, exactly as a failing disk would (see `util::failpoint`)
+    crate::util::failpoint::hit("lgx_read")
+        .map_err(|e| LgxError::Io(io::Error::new(io::ErrorKind::Other, e.to_string())))?;
     let path = path.as_ref();
     if mmap_enabled() {
         if let Ok(f) = File::open(path) {

@@ -17,7 +17,10 @@
 //! repro graph pack --dataset flickr-sim [--scale 0.1] [--layout degree|original] [--out file.lgx]
 //! repro serve   --dataset flickr-sim [--method labor-0 --rate 2000 --window-us 1000
 //!                --max-batch 64 --deadline-ms 250 --skew 1.0 --requests 2000
-//!                --layout degree|original --cache-rows 0 --threads 1] [--smoke]
+//!                --layout degree|original --cache-rows 0 --threads 1
+//!                --policy propagate|supervise --max-restarts 3 --max-retries 3
+//!                --max-queue 256 --degrade-ladder 10,7,4
+//!                --chaos 'sample_flush=panic@every100' --chaos-seed 0] [--smoke]
 //! ```
 //!
 //! `graph pack` writes the dataset's graph in the zero-copy `.lgx` binary
@@ -35,6 +38,16 @@
 //! `id < k` prefix fast path. Note: bare boolean flags (`--smoke`) must
 //! come last — the strict `--key value` parser otherwise swallows the
 //! next flag as their value.
+//!
+//! `serve` robustness knobs (see `docs/` and `util::failpoint`):
+//! `--policy supervise` respawns a panicked serving worker instead of
+//! propagating; `--max-queue` switches admission to bounded non-blocking
+//! `try_submit` (overload sheds instead of blocking); `--degrade-ladder`
+//! arms the LABOR-native graceful-degradation controller, which steps the
+//! fanout budget down the ladder under sustained deadline pressure;
+//! `--chaos` arms deterministic failpoints from a
+//! `point=action@trigger[;...]` spec (same grammar as the
+//! `LABOR_FAILPOINTS` env var, which is honored by every subcommand).
 //!
 //! `--method` takes any [`SamplerKind::parse`] name: `ns`, `labor-<i>`,
 //! `labor-*`, `labor-<i>-seq`, `ladies`, `pladies`, or budgeted layer
@@ -213,12 +226,13 @@ fn run_graph(argv: &[String]) -> Result<()> {
 fn run_serve(a: &Args) -> Result<()> {
     use labor_gnn::coordinator::serving::replay_open_loop;
     use labor_gnn::coordinator::{
-        DataPlaneConfig, DegreeOrderedCache, FeatureCache, NullCache, ServeError,
-        ServingConfig, ServingFrontEnd, TierModel,
+        Backoff, DataPlaneConfig, DegradeConfig, DegreeOrderedCache, FailurePolicy,
+        FeatureCache, NullCache, ServeError, ServingConfig, ServingFrontEnd, TierModel,
     };
     use labor_gnn::graph::compact::degree_order;
     use labor_gnn::graph::gen::{zipf_requests, ZipfRequestConfig};
     use labor_gnn::sampler::MultiLayerSampler;
+    use labor_gnn::util::failpoint;
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -243,6 +257,54 @@ fn run_serve(a: &Args) -> Result<()> {
     let tier_name = a.str_or("tier", "local");
     let tier =
         TierModel::parse(&tier_name).ok_or_else(|| anyhow!("unknown tier '{tier_name}'"))?;
+
+    // --- robustness knobs ------------------------------------------------
+    // bounded admission: an explicit --max-queue switches the replay to
+    // non-blocking try_submit, so overload sheds instead of blocking
+    let shed = a.get("max-queue").is_some();
+    let queue_depth = a.usize_or("max-queue", 4096)?;
+    anyhow::ensure!(queue_depth > 0, "--max-queue must be positive");
+    let policy_name = a.str_or("policy", "propagate");
+    let failure_policy = match policy_name.as_str() {
+        "propagate" => FailurePolicy::Propagate,
+        "supervise" => FailurePolicy::Supervise {
+            max_restarts: a.usize_or("max-restarts", 3)? as u32,
+            max_retries: a.usize_or("max-retries", 3)? as u32,
+            backoff: Backoff::default(),
+        },
+        other => return Err(anyhow!("--policy expects propagate|supervise, got '{other}'")),
+    };
+    let supervised = failure_policy.is_supervised();
+    let degrade = match a.get("degrade-ladder") {
+        None => None,
+        Some(spec) => {
+            let ladder: Vec<u32> = spec
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().map_err(|_| {
+                        anyhow!("--degrade-ladder expects comma-separated fanouts, got '{spec}'")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(!ladder.is_empty(), "--degrade-ladder needs at least one rung");
+            Some(DegradeConfig {
+                ladder,
+                // pressure signals scale with the configured QoS envelope
+                headroom: deadline / 4,
+                queue_high: queue_depth / 2,
+                ..DegradeConfig::default()
+            })
+        }
+    };
+    let chaos_seed = a.u64_or("chaos-seed", 0)?;
+    let chaos_points = match a.get("chaos") {
+        None => 0,
+        Some(spec) => {
+            let n = failpoint::arm_spec(spec, chaos_seed).map_err(|e| anyhow!("--chaos: {e}"))?;
+            println!("chaos: armed {n} failpoint(s) from '{spec}' (seed {chaos_seed})");
+            n
+        }
+    };
 
     let ds = labor_gnn::data::Dataset::load_or_generate(&dataset, scale)?;
     let (ds, perm) = match layout.as_str() {
@@ -292,24 +354,60 @@ fn run_serve(a: &Args) -> Result<()> {
         ServingConfig {
             window,
             max_batch,
-            queue_depth: 4096,
+            queue_depth,
             default_deadline: deadline,
             seed,
             intra_batch_threads: threads,
             data_plane: Some(plane),
             output_perm: perm,
+            failure_policy,
+            degrade,
         },
     );
     let handle = front.handle();
     let t0 = Instant::now();
-    let pending = replay_open_loop(&handle, &seeds, &stream.gaps);
+    let mut shed_count = 0u64;
+    let pending = if shed {
+        // bounded-admission replay: same absolute schedule as
+        // replay_open_loop, but through try_submit so a full queue sheds
+        let start = Instant::now();
+        let mut due = Duration::ZERO;
+        let mut out = Vec::with_capacity(seeds.len());
+        for (i, &s) in seeds.iter().enumerate() {
+            due += stream.gaps.get(i).copied().unwrap_or(Duration::ZERO);
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+            match handle.try_submit(s) {
+                Ok(p) => out.push(p),
+                Err(ServeError::Overloaded { .. }) => shed_count += 1,
+                Err(e) => return Err(anyhow!("submission failed: {e}")),
+            }
+        }
+        out
+    } else {
+        replay_open_loop(&handle, &seeds, &stream.gaps)
+    };
     drop(handle);
     let mut served = 0u64;
     let mut missed = 0u64;
+    let mut invalid = 0u64;
+    let mut failed = 0u64;
+    let mut died = 0u64;
+    let mut degraded_served = 0u64;
     for p in pending {
         match p.wait() {
-            Ok(_) => served += 1,
+            Ok(r) => {
+                served += 1;
+                if r.degraded.is_some() {
+                    degraded_served += 1;
+                }
+            }
             Err(ServeError::DeadlineExpired { .. }) => missed += 1,
+            Err(ServeError::InvalidSeed { .. }) => invalid += 1,
+            Err(ServeError::Failed { .. }) => failed += 1,
+            Err(ServeError::WorkerDied { .. }) => died += 1,
             Err(e) => return Err(anyhow!("serving failed: {e}")),
         }
     }
@@ -338,20 +436,48 @@ fn run_serve(a: &Args) -> Result<()> {
         snap.bytes_returned_per_request(),
         store.hit_rate()
     );
+    let f = snap.faults;
+    if chaos_points > 0 || supervised || shed || degraded_served > 0 || f != Default::default() {
+        println!(
+            "  robustness ({policy_name}): restarts {}, retried {}, failed {failed} \
+             ({} batch-level), shed {shed_count}, degraded responses {degraded_served}, \
+             worker-lost {died}, invalid {invalid}",
+            f.restarts, f.retried, f.failed
+        );
+    }
     if smoke {
+        // conservation: every submitted request must be accounted for by
+        // exactly one terminal outcome — chaos may fail requests, but it
+        // must never silently drop one
         anyhow::ensure!(
-            served + missed == requests as u64,
-            "lost responses: {served} served + {missed} missed != {requests}"
+            served + missed + invalid + failed + died + shed_count == requests as u64,
+            "lost responses: {served} served + {missed} missed + {invalid} invalid \
+             + {failed} failed + {died} worker-lost + {shed_count} shed != {requests}"
         );
         anyhow::ensure!(snap.batches >= 1, "no batches flushed");
         anyhow::ensure!(snap.latency.count == served, "latency samples != served");
         anyhow::ensure!(snap.served == served, "metrics/served mismatch");
+        anyhow::ensure!(f.shed == shed_count, "shed metric {} != local count {shed_count}", f.shed);
+        anyhow::ensure!(f.degraded == degraded_served, "degraded metric mismatch");
+        if chaos_points > 0 {
+            anyhow::ensure!(
+                failpoint::any_armed(),
+                "chaos points were disarmed mid-run"
+            );
+        }
         println!("serve smoke OK");
     }
     Ok(())
 }
 
 fn main() -> Result<()> {
+    // honor LABOR_FAILPOINTS / LABOR_FAILPOINT_SEED for every subcommand:
+    // chaos schedules armed here replay bit-identically across runs
+    let armed = labor_gnn::util::failpoint::arm_from_env()
+        .map_err(|e| anyhow!("LABOR_FAILPOINTS: {e}"))?;
+    if armed > 0 {
+        eprintln!("chaos: armed {armed} failpoint(s) from LABOR_FAILPOINTS");
+    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         eprintln!(

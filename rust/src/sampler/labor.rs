@@ -729,7 +729,7 @@ impl LayerSampler for LaborSampler {
         ctx: SampleCtx,
         scratch: &mut SamplerScratch,
     ) -> SampledLayer {
-        let k = self.fanouts[ctx.layer];
+        let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
         let mut st = LaborLayerState::new_in(g, seeds, k, scratch);
         st.optimize(self.iterations);
         // layer-dependent mode shares r_t across layers of a batch
@@ -752,7 +752,7 @@ impl LayerSampler for LaborSampler {
         if shards <= 1 {
             return self.sample_layer(g, seeds, ctx, pool.main_mut());
         }
-        let k = self.fanouts[ctx.layer];
+        let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
         let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
 
         // phase 1: candidate discovery (sharded) + order-preserving merge
@@ -819,7 +819,7 @@ mod tests {
     use crate::util::prop::{for_cases, vec_in};
 
     fn ctx(b: u64) -> SampleCtx {
-        SampleCtx { batch_seed: b, layer: 0 }
+        SampleCtx::new(b, 0)
     }
 
     #[test]
@@ -1107,8 +1107,8 @@ mod tests {
             layer_dependent: true,
             sequential: false,
         };
-        let a = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 0 });
-        let b = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 1 });
+        let a = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 0));
+        let b = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 1));
         // same seeds, same r_t stream => identical picks
         assert_eq!(a.edge_src, b.edge_src);
         // the independent mode must differ across layers
@@ -1118,8 +1118,8 @@ mod tests {
             layer_dependent: false,
             sequential: false,
         };
-        let c = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 0 });
-        let d = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx { batch_seed: 4, layer: 1 });
+        let c = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 0));
+        let d = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 1));
         assert_ne!(c.edge_src, d.edge_src);
     }
 

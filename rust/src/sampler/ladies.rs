@@ -306,7 +306,7 @@ mod tests {
     use crate::sampler::testutil::{skewed_graph, test_graph};
 
     fn ctx(b: u64) -> SampleCtx {
-        SampleCtx { batch_seed: b, layer: 0 }
+        SampleCtx::new(b, 0)
     }
 
     #[test]

@@ -119,6 +119,34 @@ impl SampledLayer {
 pub struct SampleCtx {
     pub batch_seed: u64,
     pub layer: usize,
+    /// Overload-degradation override (serving's budget knob, see
+    /// `coordinator::supervise::DegradeController`): when set, the
+    /// fanout-based samplers (NS, LABOR) sample
+    /// `min(fanouts[layer], cap)` neighbors per seed — the paper's
+    /// quality/budget tradeoff (Table 2) as a runtime lever. `None` (the
+    /// default, and what [`SampleCtx::new`] builds) is full configured
+    /// quality; the budget-based samplers (LADIES/PLADIES) ignore the cap
+    /// (their budget is already the knob).
+    pub fanout_cap: Option<u32>,
+}
+
+impl SampleCtx {
+    /// A full-quality context (no fanout cap).
+    pub fn new(batch_seed: u64, layer: usize) -> Self {
+        Self { batch_seed, layer, fanout_cap: None }
+    }
+
+    /// The per-seed fanout to sample under this context: the layer's
+    /// configured fanout `k`, clamped to the degradation cap if one is
+    /// set. Uncapped contexts return `k` unchanged (bit-identity with
+    /// pre-cap sampling).
+    #[inline]
+    pub fn cap_fanout(&self, k: usize) -> usize {
+        match self.fanout_cap {
+            Some(c) => k.min(c as usize),
+            None => k,
+        }
+    }
 }
 
 /// A single-layer sampler.
@@ -413,10 +441,26 @@ impl MultiLayerSampler {
         batch_seed: u64,
         scratch: &mut SamplerScratch,
     ) -> Mfg {
+        self.sample_with_cap(g, seeds, batch_seed, None, scratch)
+    }
+
+    /// [`sample`](Self::sample) under a degraded fanout budget: every
+    /// layer samples `min(fanouts[layer], cap)` neighbors per seed (see
+    /// [`SampleCtx::cap_fanout`]). `cap = None` is exactly `sample` —
+    /// the serving degradation controller passes its ladder rung here.
+    pub fn sample_with_cap(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        batch_seed: u64,
+        fanout_cap: Option<u32>,
+        scratch: &mut SamplerScratch,
+    ) -> Mfg {
         let mut layers = Vec::with_capacity(self.num_layers());
         let mut cur: Vec<u32> = seeds.to_vec();
         for layer in 0..self.num_layers() {
-            let sl = self.sampler.sample_layer(g, &cur, SampleCtx { batch_seed, layer }, scratch);
+            let ctx = SampleCtx { batch_seed, layer, fanout_cap };
+            let sl = self.sampler.sample_layer(g, &cur, ctx, scratch);
             cur.clear();
             cur.extend_from_slice(&sl.inputs);
             layers.push(sl);
@@ -446,10 +490,26 @@ impl MultiLayerSampler {
         num_shards: usize,
         pool: &mut ScratchPool,
     ) -> Mfg {
+        self.sample_sharded_with_cap(g, seeds, batch_seed, None, num_shards, pool)
+    }
+
+    /// [`sample_sharded`](Self::sample_sharded) under a degraded fanout
+    /// budget; `cap = None` is exactly `sample_sharded`. The shard
+    /// bit-identity contract holds at every cap (the cap only changes
+    /// `k`, never the shard merge).
+    pub fn sample_sharded_with_cap(
+        &self,
+        g: &CscGraph,
+        seeds: &[u32],
+        batch_seed: u64,
+        fanout_cap: Option<u32>,
+        num_shards: usize,
+        pool: &mut ScratchPool,
+    ) -> Mfg {
         let mut layers = Vec::with_capacity(self.num_layers());
         let mut cur: Vec<u32> = seeds.to_vec();
         for layer in 0..self.num_layers() {
-            let ctx = SampleCtx { batch_seed, layer };
+            let ctx = SampleCtx { batch_seed, layer, fanout_cap };
             let sl = self.sampler.sample_layer_sharded(g, &cur, ctx, num_shards, pool);
             cur.clear();
             cur.extend_from_slice(&sl.inputs);

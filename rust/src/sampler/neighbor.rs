@@ -110,7 +110,7 @@ impl LayerSampler for NeighborSampler {
         ctx: SampleCtx,
         scratch: &mut SamplerScratch,
     ) -> SampledLayer {
-        let k = self.fanouts[ctx.layer];
+        let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
         let mut edge_src = std::mem::take(&mut scratch.edge_src);
         let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
         let mut edge_weight = std::mem::take(&mut scratch.wbuf);
@@ -188,7 +188,7 @@ impl LayerSampler for NeighborSampler {
         if shards <= 1 {
             return self.sample_layer(g, seeds, ctx, pool.main_mut());
         }
-        let k = self.fanouts[ctx.layer];
+        let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
         let PoolParts { main, workers, ranges, .. } = pool.parts(shards);
         run_shards(&mut *workers, |i, scratch| {
             sample_ns_shard(g, &seeds[ranges[i].clone()], k, ctx, scratch);
@@ -207,7 +207,7 @@ mod tests {
     use crate::sampler::testutil::{skewed_graph, test_graph};
 
     fn ctx(b: u64) -> SampleCtx {
-        SampleCtx { batch_seed: b, layer: 0 }
+        SampleCtx::new(b, 0)
     }
 
     #[test]

@@ -140,7 +140,7 @@ mod tests {
         let reps = 400;
         let mut total = 0usize;
         for b in 0..reps {
-            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(b, 0));
             sl.validate(&g).unwrap();
             total += sample_vertices(&sl);
         }
@@ -160,10 +160,10 @@ mod tests {
         let mut lg = 0usize;
         for b in 0..100 {
             sm += sample_vertices(
-                &small.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
+                &small.sample_layer_fresh(&g, &seeds, SampleCtx::new(b, 0)),
             );
             lg += sample_vertices(
-                &large.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 }),
+                &large.sample_layer_fresh(&g, &seeds, SampleCtx::new(b, 0)),
             );
         }
         assert!(lg > sm);
@@ -188,7 +188,7 @@ mod tests {
         let mut est = vec![0.0f64; seeds.len()];
         let mut cnt = vec![0usize; seeds.len()];
         for b in 0..reps {
-            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(b, 0));
             let mut got: Vec<f64> = vec![0.0; seeds.len()];
             let mut has: Vec<bool> = vec![false; seeds.len()];
             for e in 0..sl.num_edges() {
@@ -218,8 +218,8 @@ mod tests {
         let g = test_graph();
         let seeds: Vec<u32> = (0..50).collect();
         let s = PladiesSampler { budgets: vec![40] };
-        let a = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
-        let b = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: 9, layer: 0 });
+        let a = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(9, 0));
+        let b = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(9, 0));
         assert_eq!(a.edge_src, b.edge_src);
         assert_eq!(a.edge_weight, b.edge_weight);
     }

@@ -158,7 +158,7 @@ impl LayerSampler for WeightedLaborSampler {
         ctx: SampleCtx,
         scratch: &mut SamplerScratch,
     ) -> SampledLayer {
-        let k = self.fanouts[ctx.layer];
+        let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
         assert!(g.weights.is_some(), "WeightedLaborSampler requires an edge-weighted graph");
 
         // Flat CSR-like layout over the seed neighborhoods (§Perf: the old
@@ -313,7 +313,7 @@ impl LayerSampler for WeightedLaborSampler {
         if shards <= 1 {
             return self.sample_layer(g, seeds, ctx, pool.main_mut());
         }
-        let k = self.fanouts[ctx.layer];
+        let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
         assert!(g.weights.is_some(), "WeightedLaborSampler requires an edge-weighted graph");
         let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
 
@@ -434,7 +434,7 @@ mod tests {
         let g = weighted_graph(3);
         let seeds: Vec<u32> = (0..40).collect();
         let s = WeightedLaborSampler { fanouts: vec![5], iterations: IterSpec::Fixed(1) };
-        let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: 1, layer: 0 });
+        let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(1, 0));
         sl.validate(&g).unwrap();
 
         // statistical: estimator of weighted mean aggregation ≈ exact
@@ -454,7 +454,7 @@ mod tests {
         let mut est = vec![0.0f64; seeds.len()];
         let mut cnt = vec![0usize; seeds.len()];
         for b in 0..reps {
-            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(b, 0));
             let mut got = vec![0.0f64; seeds.len()];
             let mut has = vec![false; seeds.len()];
             for e in 0..sl.num_edges() {
@@ -506,7 +506,7 @@ mod tests {
         let reps = 1500;
         let mut deg = vec![0.0f64; seeds.len()];
         for b in 0..reps {
-            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx { batch_seed: b, layer: 0 });
+            let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(b, 0));
             for (si, d) in sl.sampled_degrees().iter().enumerate() {
                 deg[si] += *d as f64;
             }

@@ -1,0 +1,484 @@
+//! Deterministic fault injection: named failpoints in the serving and
+//! pipeline hot paths, armed with replayable schedules.
+//!
+//! A *failpoint* is a named hook (`failpoint::hit("gather")`) compiled
+//! into a hot path. Unarmed — the production state — a hit is one relaxed
+//! atomic load and a predicted-not-taken branch; nothing is counted,
+//! nothing is locked. Armed with a [`FailPlan`], the hit can inject an
+//! **error** (the callee returns a named [`Injected`] error), a **panic**
+//! (exercises the supervision/restart path), or a **delay** (exercises
+//! deadline and overload paths), on a schedule that is a pure function of
+//! the plan:
+//!
+//! * [`Trigger::Nth`] — fire exactly on the n-th hit,
+//! * [`Trigger::EveryNth`] — fire on every n-th hit,
+//! * [`Trigger::Prob`] — fire with probability `p`, decided by a seeded
+//!   [`HashRng`] keyed on `(plan.seed, point name, hit index)` — so a
+//!   "1% of flushes panic" chaos run replays **bit-identically** under
+//!   the same seed,
+//! * [`Trigger::Always`] — fire on every hit.
+//!
+//! The registered points are:
+//!
+//! | point          | hot path                                              |
+//! |----------------|-------------------------------------------------------|
+//! | `gather`       | `FeatureStore::try_gather` (pipeline + serving data plane) |
+//! | `sample_flush` | the sampler pass of a serving flush / pipeline batch  |
+//! | `serve_demux`  | per-response demux of a coalesced serving batch       |
+//! | `worker_spawn` | pipeline worker start (each supervised incarnation)   |
+//! | `lgx_read`     | `.lgx` graph load (`load_lgx` / `load_graph`)         |
+//!
+//! Schedules are armed programmatically ([`arm`]), from a spec string
+//! ([`arm_spec`] — the `repro serve --chaos` syntax), or from the
+//! `LABOR_FAILPOINTS` environment variable ([`arm_from_env`]). The spec
+//! grammar, entries separated by `;`:
+//!
+//! ```text
+//! point=action@trigger
+//!   action  := error | panic | delay:<n><us|ms|s>
+//!   trigger := always | n<k> | every<k> | p<float>
+//! e.g.  sample_flush=panic@every100;gather=error@n5;lgx_read=delay:2ms@always
+//! ```
+//!
+//! Determinism caveat: hit indices are counted per point, so a schedule
+//! replays bit-identically when the point is hit from one thread (the
+//! serving coalescer, a 1-worker pipeline). Multi-worker pipelines
+//! interleave hit counts nondeterministically — triggers still fire at
+//! the same *rate*, but not necessarily on the same batches.
+
+use crate::rng::{mix2, HashRng};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Environment variable holding a failpoint spec (see [`arm_spec`]).
+pub const ENV_SPEC: &str = "LABOR_FAILPOINTS";
+/// Environment variable holding the schedule seed for [`arm_from_env`].
+pub const ENV_SEED: &str = "LABOR_FAILPOINT_SEED";
+
+/// What an armed failpoint injects when its trigger fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// the hit returns `Err(Injected { .. })` — a *transient* fault the
+    /// supervision layer retries
+    Error,
+    /// the hit panics — exercises worker death and restart
+    Panic,
+    /// the hit sleeps, then succeeds — exercises deadline misses and
+    /// queue buildup
+    Delay(Duration),
+}
+
+/// When an armed failpoint fires. Hit indices are 1-based.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// fire exactly on hit `n` (once)
+    Nth(u64),
+    /// fire on hits `n, 2n, 3n, ..`
+    EveryNth(u64),
+    /// fire with probability `p` per hit, decided deterministically from
+    /// `(seed, point, hit index)` — same seed, same fire pattern
+    Prob(f64),
+    /// fire on every hit
+    Always,
+}
+
+/// A complete schedule for one failpoint: when to fire and what to inject.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailPlan {
+    pub trigger: Trigger,
+    pub action: FailAction,
+    /// seed for [`Trigger::Prob`] decisions (ignored by the counting
+    /// triggers); two runs with equal plans replay identically
+    pub seed: u64,
+}
+
+/// The named error an [`FailAction::Error`] injection returns. Carries
+/// the point name and the (1-based) hit index that fired, so a chaos log
+/// reads back to the exact schedule position. Classified *transient* by
+/// the supervision layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Injected {
+    pub point: String,
+    pub hit: u64,
+}
+
+impl std::fmt::Display for Injected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault at failpoint '{}' (hit {})", self.point, self.hit)
+    }
+}
+
+impl std::error::Error for Injected {}
+
+struct PointState {
+    plan: FailPlan,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// Number of armed points — the whole cost of an unarmed hit is loading
+/// this once.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> &'static Mutex<HashMap<String, Arc<PointState>>> {
+    static REG: OnceLock<Mutex<HashMap<String, Arc<PointState>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Stable 64-bit key of a point name (decorrelates [`Trigger::Prob`]
+/// streams of different points under one seed).
+fn name_key(point: &str) -> u64 {
+    point.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| mix2(h, b as u64))
+}
+
+/// Arm `point` with `plan`, resetting its hit counters. Arming an
+/// already-armed point replaces its schedule.
+pub fn arm(point: &str, plan: FailPlan) {
+    let mut reg = registry().lock().unwrap();
+    let state = Arc::new(PointState { plan, hits: AtomicU64::new(0), fired: AtomicU64::new(0) });
+    if reg.insert(point.to_string(), state).is_none() {
+        ARMED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Disarm one point (no-op if it was not armed).
+pub fn disarm(point: &str) {
+    let mut reg = registry().lock().unwrap();
+    if reg.remove(point).is_some() {
+        ARMED.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Disarm every point — restores the zero-cost production state. Chaos
+/// tests call this on exit so later tests see a clean slate.
+pub fn disarm_all() {
+    let mut reg = registry().lock().unwrap();
+    let n = reg.len();
+    reg.clear();
+    ARMED.fetch_sub(n, Ordering::Relaxed);
+}
+
+/// True if any failpoint is armed.
+pub fn any_armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+/// Hits recorded at `point` since it was (re-)armed; 0 if unarmed.
+pub fn hits(point: &str) -> u64 {
+    let reg = registry().lock().unwrap();
+    reg.get(point).map_or(0, |s| s.hits.load(Ordering::Relaxed))
+}
+
+/// Times `point`'s trigger fired since it was (re-)armed; 0 if unarmed.
+pub fn fired(point: &str) -> u64 {
+    let reg = registry().lock().unwrap();
+    reg.get(point).map_or(0, |s| s.fired.load(Ordering::Relaxed))
+}
+
+/// The failpoint hook. Call at the top of a hot path:
+///
+/// ```ignore
+/// crate::util::failpoint::hit("gather")?;  // in a Result-returning path
+/// ```
+///
+/// Unarmed (the default), this is one relaxed load and returns `Ok(())`.
+/// Armed, it counts the hit and — if the trigger fires — returns the
+/// named [`Injected`] error, panics, or sleeps, per the plan's
+/// [`FailAction`].
+#[inline]
+pub fn hit(point: &'static str) -> Result<(), Injected> {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return Ok(());
+    }
+    hit_armed(point)
+}
+
+#[cold]
+fn hit_armed(point: &str) -> Result<(), Injected> {
+    // clone the state Arc out of the lock so a Delay never sleeps while
+    // holding the registry mutex
+    let state = {
+        let reg = registry().lock().unwrap();
+        match reg.get(point) {
+            Some(s) => s.clone(),
+            None => return Ok(()),
+        }
+    };
+    let n = state.hits.fetch_add(1, Ordering::Relaxed) + 1;
+    let fire = match state.plan.trigger {
+        Trigger::Nth(k) => n == k,
+        Trigger::EveryNth(k) => k > 0 && n % k == 0,
+        Trigger::Prob(p) => {
+            HashRng::new(state.plan.seed ^ name_key(point)).uniform(n) < p
+        }
+        Trigger::Always => true,
+    };
+    if !fire {
+        return Ok(());
+    }
+    state.fired.fetch_add(1, Ordering::Relaxed);
+    match state.plan.action {
+        FailAction::Error => Err(Injected { point: point.to_string(), hit: n }),
+        FailAction::Panic => panic!("failpoint '{point}' injected panic (hit {n})"),
+        FailAction::Delay(d) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+/// Parse and arm a chaos spec (see the [module docs](self) for the
+/// grammar). Returns the number of points armed; on a malformed spec,
+/// arms nothing and returns a description of the first bad entry.
+pub fn arm_spec(spec: &str, seed: u64) -> Result<usize, String> {
+    let plans = parse_spec(spec, seed)?;
+    let n = plans.len();
+    for (point, plan) in plans {
+        arm(&point, plan);
+    }
+    Ok(n)
+}
+
+/// Arm from `LABOR_FAILPOINTS` (+ optional `LABOR_FAILPOINT_SEED`).
+/// Returns the number of points armed (0 when the variable is unset).
+pub fn arm_from_env() -> Result<usize, String> {
+    let spec = match std::env::var(ENV_SPEC) {
+        Ok(s) if !s.is_empty() => s,
+        _ => return Ok(0),
+    };
+    let seed = match std::env::var(ENV_SEED) {
+        Ok(s) => s
+            .parse::<u64>()
+            .map_err(|_| format!("{ENV_SEED} must be a u64, got '{s}'"))?,
+        Err(_) => 0,
+    };
+    arm_spec(&spec, seed)
+}
+
+/// Pure parse half of [`arm_spec`], so malformed specs arm nothing.
+fn parse_spec(spec: &str, seed: u64) -> Result<Vec<(String, FailPlan)>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let (point, rest) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("'{entry}': expected point=action@trigger"))?;
+        let (action_s, trigger_s) = rest
+            .split_once('@')
+            .ok_or_else(|| format!("'{entry}': expected action@trigger after '='"))?;
+        let action = parse_action(action_s.trim())
+            .map_err(|e| format!("'{entry}': {e}"))?;
+        let trigger = parse_trigger(trigger_s.trim())
+            .map_err(|e| format!("'{entry}': {e}"))?;
+        out.push((point.trim().to_string(), FailPlan { trigger, action, seed }));
+    }
+    Ok(out)
+}
+
+fn parse_action(s: &str) -> Result<FailAction, String> {
+    match s {
+        "error" => Ok(FailAction::Error),
+        "panic" => Ok(FailAction::Panic),
+        _ => match s.strip_prefix("delay:") {
+            Some(dur) => Ok(FailAction::Delay(parse_duration(dur)?)),
+            None => Err(format!("unknown action '{s}' (error|panic|delay:<dur>)")),
+        },
+    }
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger, String> {
+    if s == "always" {
+        return Ok(Trigger::Always);
+    }
+    if let Some(k) = s.strip_prefix("every") {
+        let k: u64 = k.parse().map_err(|_| format!("bad every-count '{s}'"))?;
+        if k == 0 {
+            return Err("every0 never fires; use a positive period".into());
+        }
+        return Ok(Trigger::EveryNth(k));
+    }
+    // order matters: check the prob prefix before the nth prefix would be
+    // ambiguous only if a point used "pN" for nth — it doesn't
+    if let Some(p) = s.strip_prefix('p') {
+        let p: f64 = p.parse().map_err(|_| format!("bad probability '{s}'"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("probability {p} outside [0,1]"));
+        }
+        return Ok(Trigger::Prob(p));
+    }
+    if let Some(n) = s.strip_prefix('n') {
+        let n: u64 = n.parse().map_err(|_| format!("bad hit index '{s}'"))?;
+        if n == 0 {
+            return Err("hit indices are 1-based; n0 never fires".into());
+        }
+        return Ok(Trigger::Nth(n));
+    }
+    Err(format!("unknown trigger '{s}' (always|n<k>|every<k>|p<float>)"))
+}
+
+fn parse_duration(s: &str) -> Result<Duration, String> {
+    let (num, mul_us) = if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000)
+    } else {
+        return Err(format!("duration '{s}' needs a us/ms/s suffix"));
+    };
+    let v: u64 = num.parse().map_err(|_| format!("bad duration '{s}'"))?;
+    Ok(Duration::from_micros(v * mul_us))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test arms its own uniquely-named points (the registry is
+    // process-global and libtest runs tests concurrently); real point
+    // names are only armed from tests/chaos.rs, a separate process.
+
+    #[test]
+    fn unarmed_hit_is_ok_and_counts_nothing() {
+        assert_eq!(hit("fp_test_unarmed"), Ok(()));
+        assert_eq!(hits("fp_test_unarmed"), 0);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        arm(
+            "fp_test_nth",
+            FailPlan { trigger: Trigger::Nth(3), action: FailAction::Error, seed: 0 },
+        );
+        let results: Vec<bool> =
+            (0..6).map(|_| hit("fp_test_nth").is_err()).collect();
+        assert_eq!(results, vec![false, false, true, false, false, false]);
+        assert_eq!(hits("fp_test_nth"), 6);
+        assert_eq!(fired("fp_test_nth"), 1);
+        let err = {
+            arm(
+                "fp_test_nth",
+                FailPlan { trigger: Trigger::Nth(1), action: FailAction::Error, seed: 0 },
+            );
+            hit("fp_test_nth").unwrap_err()
+        };
+        assert_eq!(err, Injected { point: "fp_test_nth".into(), hit: 1 });
+        assert!(err.to_string().contains("fp_test_nth"));
+        disarm("fp_test_nth");
+        assert_eq!(hit("fp_test_nth"), Ok(()));
+    }
+
+    #[test]
+    fn every_nth_fires_periodically() {
+        arm(
+            "fp_test_every",
+            FailPlan { trigger: Trigger::EveryNth(4), action: FailAction::Error, seed: 0 },
+        );
+        let fires: Vec<u64> =
+            (1..=12u64).filter(|_| hit("fp_test_every").is_err()).collect();
+        assert_eq!(fires, vec![4, 8, 12]);
+        assert_eq!(fired("fp_test_every"), 3);
+        disarm("fp_test_every");
+    }
+
+    #[test]
+    fn prob_schedule_replays_bit_identically() {
+        let run = |seed: u64| -> Vec<bool> {
+            arm(
+                "fp_test_prob",
+                FailPlan { trigger: Trigger::Prob(0.3), action: FailAction::Error, seed },
+            );
+            let r = (0..200).map(|_| hit("fp_test_prob").is_err()).collect();
+            disarm("fp_test_prob");
+            r
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed must replay the same fire pattern");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!(
+            (30..=90).contains(&fires),
+            "p=0.3 over 200 hits fired {fires} times"
+        );
+        assert_ne!(a, run(43), "a different seed must give a different pattern");
+    }
+
+    #[test]
+    fn delay_sleeps_then_succeeds() {
+        arm(
+            "fp_test_delay",
+            FailPlan {
+                trigger: Trigger::Always,
+                action: FailAction::Delay(Duration::from_millis(5)),
+                seed: 0,
+            },
+        );
+        let t = std::time::Instant::now();
+        assert_eq!(hit("fp_test_delay"), Ok(()));
+        assert!(t.elapsed() >= Duration::from_millis(5));
+        disarm("fp_test_delay");
+    }
+
+    #[test]
+    #[should_panic(expected = "failpoint 'fp_test_panic' injected panic")]
+    fn panic_action_panics_with_the_point_name() {
+        arm(
+            "fp_test_panic",
+            FailPlan { trigger: Trigger::Always, action: FailAction::Panic, seed: 0 },
+        );
+        // the panic unwinds before disarm; tests/chaos.rs (separate
+        // process) covers cleanup via disarm_all
+        let _ = hit("fp_test_panic");
+    }
+
+    #[test]
+    fn spec_round_trip() {
+        let plans = parse_spec(
+            "fp_test_a=error@n5; fp_test_b=panic@p0.01;fp_test_c=delay:2ms@every10",
+            7,
+        )
+        .unwrap();
+        assert_eq!(plans.len(), 3);
+        assert_eq!(
+            plans[0].1,
+            FailPlan { trigger: Trigger::Nth(5), action: FailAction::Error, seed: 7 }
+        );
+        assert_eq!(
+            plans[1].1,
+            FailPlan { trigger: Trigger::Prob(0.01), action: FailAction::Panic, seed: 7 }
+        );
+        assert_eq!(
+            plans[2].1,
+            FailPlan {
+                trigger: Trigger::EveryNth(10),
+                action: FailAction::Delay(Duration::from_millis(2)),
+                seed: 7
+            }
+        );
+        assert_eq!(parse_spec("", 0).unwrap(), vec![]);
+        assert_eq!(
+            parse_duration("250us").unwrap(),
+            Duration::from_micros(250)
+        );
+        assert_eq!(parse_duration("1s").unwrap(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn malformed_specs_arm_nothing() {
+        for bad in [
+            "no_equals",
+            "x=error",          // missing trigger
+            "x=explode@always", // unknown action
+            "x=error@sometimes",
+            "x=error@p1.5",
+            "x=error@n0",
+            "x=error@every0",
+            "x=delay:2@always", // missing duration unit
+        ] {
+            let before = ARMED.load(Ordering::Relaxed);
+            assert!(arm_spec(bad, 0).is_err(), "spec '{bad}' should be rejected");
+            assert_eq!(ARMED.load(Ordering::Relaxed), before, "'{bad}' armed something");
+        }
+    }
+}

@@ -8,6 +8,9 @@
 //!   replacement (graph generators, LADIES).
 //! * [`csv`] — buffered CSV writer with a fixed header, backing the
 //!   `results/` series behind every table and figure.
+//! * [`failpoint`] — deterministic fault injection: named failpoints in
+//!   the serving/pipeline hot paths, armed with seeded replayable
+//!   schedules (error / panic / delay).
 //! * [`json`] — a dependency-free JSON value type with emitter and parser;
 //!   used for the AOT artifact manifest and experiment outputs.
 //! * [`mmap`] — minimal read-only `mmap(2)` wrapper (no external crates)
@@ -22,6 +25,7 @@
 
 pub mod alias;
 pub mod csv;
+pub mod failpoint;
 pub mod json;
 pub mod mmap;
 pub mod prop;

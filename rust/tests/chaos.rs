@@ -1,0 +1,604 @@
+//! Chaos suite: deterministic fault injection against the serving front
+//! end and the sampling pipeline (see `util::failpoint` and
+//! `coordinator::supervise`).
+//!
+//! * **Zero silent drops** — a 1 000-request Zipf stream under a chaos
+//!   schedule (periodic flush panics, transient gather errors, delayed
+//!   demux) completes with every request accounted for by exactly one
+//!   terminal outcome, and supervised restarts keep the worker serving.
+//! * **Bit-identical replay** — the same chaos schedule, replayed with the
+//!   same seed, produces the same per-request outcomes and counters.
+//! * **Graceful degradation** — sustained deadline pressure steps the
+//!   LABOR fanout budget down the configured ladder, responses are
+//!   labeled, and clean flushes step it back up.
+//! * **Supervised pipeline** — a panicked batch fails alone (named
+//!   `WorkerLost`), transient faults retry to a bit-identical batch, and
+//!   spawn failures are retried under supervision.
+//!
+//! Failpoints are process-global, so every test takes `chaos_lock()` —
+//! the real point names are never armed concurrently. The guard disarms
+//! everything on drop (including on panic), so a failing test cannot
+//! poison its successors' schedules.
+
+use labor_gnn::coordinator::feature_store::{FeatureStore, TierModel};
+use labor_gnn::coordinator::pipeline::{DataPlaneConfig, PipelineConfig, SamplingPipeline};
+use labor_gnn::coordinator::serving::{
+    replay_open_loop, ServeError, ServeResponse, ServingConfig, ServingFrontEnd,
+    ServingSnapshot,
+};
+use labor_gnn::coordinator::supervise::{Backoff, BatchError, DegradeConfig, FailurePolicy};
+use labor_gnn::coordinator::FaultSnapshot;
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::gen::{dc_sbm, zipf_requests, DcSbmConfig, ZipfRequestConfig};
+use labor_gnn::graph::io as graph_io;
+use labor_gnn::graph::CscGraph;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind};
+use labor_gnn::util::failpoint::{self, FailAction, FailPlan, Trigger};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serializes the chaos tests (the failpoint registry is process-global)
+/// and guarantees a clean slate on entry and on exit — even when the test
+/// body panics, the `Drop` disarms every point.
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        failpoint::disarm_all();
+    }
+}
+
+fn chaos_lock() -> ChaosGuard {
+    static LOCK: Mutex<()> = Mutex::new(());
+    // a previous test panicking inside the lock poisons it; the registry
+    // is re-cleared below, so the poison carries no state worth refusing
+    let g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::disarm_all();
+    ChaosGuard(g)
+}
+
+/// Same construction as `testutil::test_graph()`: dense, deterministic,
+/// 500 vertices, avg in-degree ≈ 60.
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+fn labor0(fanouts: &[usize]) -> Arc<MultiLayerSampler> {
+    Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        fanouts,
+    ))
+}
+
+fn fast_backoff() -> Backoff {
+    Backoff { base: Duration::from_micros(50), cap: Duration::from_millis(2), seed: 0 }
+}
+
+fn store_plane(g: &CscGraph, dim: usize) -> DataPlaneConfig {
+    let nv = g.num_vertices();
+    let feats: Vec<f32> = (0..nv * dim).map(|x| x as f32).collect();
+    DataPlaneConfig {
+        store: Arc::new(FeatureStore::new(feats, dim, TierModel::local())),
+        labels: None,
+    }
+}
+
+fn zipf_seeds(n: usize, seed: u64) -> Vec<u32> {
+    zipf_requests(&ZipfRequestConfig {
+        num_ids: 500,
+        exponent: 1.0,
+        num_requests: n,
+        rate_hz: 1e6,
+        seed,
+    })
+    .seeds
+}
+
+/// The headline acceptance run: 1 000 Zipf requests through a supervised
+/// front end while a chaos schedule panics every 100th flush, injects a
+/// transient gather error every 40th gather, and delays every 150th
+/// demux. Every request must resolve to exactly one named outcome — chaos
+/// may fail requests, never lose them — and the worker must restart its
+/// way through all of it.
+#[test]
+fn chaos_stream_completes_with_zero_silent_drops() {
+    let _guard = chaos_lock();
+    failpoint::arm_spec(
+        "sample_flush=panic@every100;gather=error@every40;serve_demux=delay:200us@every150",
+        0,
+    )
+    .unwrap();
+
+    let g = Arc::new(dense_graph());
+    let plane = store_plane(&g, 8);
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[10, 10]),
+        ServingConfig {
+            // zero window => every flush serves exactly one request, so a
+            // panicked flush kills exactly one request and the schedule is
+            // independent of submit timing
+            window: Duration::ZERO,
+            max_batch: 4,
+            default_deadline: Duration::from_secs(30),
+            data_plane: Some(plane),
+            failure_policy: FailurePolicy::Supervise {
+                max_restarts: 100,
+                max_retries: 3,
+                backoff: fast_backoff(),
+            },
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let pending = replay_open_loop(&h, &zipf_seeds(1000, 7), &[]);
+    drop(h);
+
+    let (mut served, mut died, mut other) = (0u64, 0u64, 0u64);
+    for p in pending {
+        match p.wait() {
+            Ok(_) => served += 1,
+            Err(ServeError::WorkerDied { .. }) => died += 1,
+            Err(e) => {
+                other += 1;
+                eprintln!("unexpected outcome: {e}");
+            }
+        }
+    }
+    let snap = front.shutdown();
+    assert_eq!(other, 0, "only served/worker-died outcomes are expected here");
+    assert_eq!(served + died, 1000, "a request was silently dropped");
+    assert_eq!(snap.requests, 1000);
+    assert_eq!(snap.served, served);
+    assert_eq!(snap.expired, 0);
+    assert!(
+        snap.faults.restarts >= 2,
+        "the every-100 panic schedule must force restarts, got {}",
+        snap.faults.restarts
+    );
+    assert_eq!(
+        snap.faults.restarts, died,
+        "one single-request flush dies per restart"
+    );
+    assert!(snap.faults.retried >= 1, "every-40 gather errors must be retried");
+    assert_eq!(snap.faults.failed, 0, "retries always succeed on the next hit");
+    assert_eq!(snap.faults.shed, 0);
+    assert_eq!(snap.faults.degraded, 0);
+}
+
+/// Replay determinism: the same chaos spec armed with the same seed over
+/// the same request stream yields the same per-request outcomes and the
+/// same stable counters, run to run.
+#[test]
+fn chaos_schedule_replays_bit_identically() {
+    let _guard = chaos_lock();
+    let run = || -> (Vec<String>, ServingSnapshot) {
+        failpoint::disarm_all();
+        failpoint::arm_spec("sample_flush=panic@every50;gather=error@every30", 9).unwrap();
+        let g = Arc::new(dense_graph());
+        let plane = store_plane(&g, 4);
+        let front = ServingFrontEnd::spawn(
+            g,
+            labor0(&[10, 10]),
+            ServingConfig {
+                window: Duration::ZERO,
+                max_batch: 4,
+                default_deadline: Duration::from_secs(30),
+                data_plane: Some(plane),
+                failure_policy: FailurePolicy::Supervise {
+                    max_restarts: 100,
+                    max_retries: 3,
+                    backoff: fast_backoff(),
+                },
+                ..ServingConfig::default()
+            },
+        );
+        let h = front.handle();
+        let pending = replay_open_loop(&h, &zipf_seeds(300, 21), &[]);
+        drop(h);
+        let outcomes: Vec<String> = pending
+            .into_iter()
+            .map(|p| match p.wait() {
+                Ok(r) => format!(
+                    "ok:{}:{}:{}:{:?}",
+                    r.seed,
+                    r.mfg.layers.iter().map(|l| l.edge_src.len()).sum::<usize>(),
+                    r.feats.len(),
+                    r.degraded
+                ),
+                Err(e) => format!("err:{e}"),
+            })
+            .collect();
+        (outcomes, front.shutdown())
+    };
+    let (out_a, snap_a) = run();
+    let (out_b, snap_b) = run();
+    assert_eq!(out_a, out_b, "per-request outcomes must replay bit-identically");
+    // compare every counter except the wall-clock latency distribution
+    let stable = |s: &ServingSnapshot| {
+        (
+            s.requests,
+            s.served,
+            s.expired,
+            s.invalid,
+            s.batches,
+            s.unique_rows,
+            s.returned_rows,
+            s.bytes_gathered,
+            s.bytes_returned,
+            s.faults,
+        )
+    };
+    assert_eq!(stable(&snap_a), stable(&snap_b));
+    assert!(snap_a.faults.restarts >= 2, "the schedule must actually bite");
+}
+
+/// Bounded admission: with a slow worker (delayed flushes) and a shallow
+/// queue, `try_submit` sheds at admission with the named `Overloaded`
+/// error — and every shed is counted, never silently lost.
+#[test]
+fn try_submit_sheds_on_overload_and_counts_it() {
+    let _guard = chaos_lock();
+    failpoint::arm(
+        "sample_flush",
+        FailPlan {
+            trigger: Trigger::Always,
+            action: FailAction::Delay(Duration::from_millis(20)),
+            seed: 0,
+        },
+    );
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[4]),
+        ServingConfig {
+            window: Duration::ZERO,
+            max_batch: 1,
+            queue_depth: 2,
+            default_deadline: Duration::from_secs(30),
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for s in 0..30u32 {
+        match h.try_submit(s % 500) {
+            Ok(p) => pending.push(p),
+            Err(ServeError::Overloaded { queue_depth }) => {
+                assert_eq!(queue_depth, 2);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    drop(h);
+    let mut served = 0u64;
+    for p in pending {
+        p.wait().unwrap();
+        served += 1;
+    }
+    let snap = front.shutdown();
+    assert!(shed >= 1, "a 20 ms/flush worker behind a depth-2 queue must shed");
+    assert!(served >= 1, "admission must accept while the queue has room");
+    assert_eq!(served + shed, 30, "a request fell through admission accounting");
+    assert_eq!(snap.faults.shed, shed);
+    assert_eq!(snap.served, served);
+}
+
+/// The LABOR-native overload lever: sustained thin-headroom flushes step
+/// the fanout budget down the ladder (responses labeled with the budget
+/// they were sampled under), and sustained clean flushes step it back up.
+#[test]
+fn degradation_steps_down_the_ladder_and_recovers() {
+    let _guard = chaos_lock();
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[10, 10]),
+        ServingConfig {
+            window: Duration::ZERO,
+            max_batch: 1,
+            default_deadline: Duration::from_secs(30),
+            degrade: Some(DegradeConfig {
+                ladder: vec![10, 7, 4],
+                down_after: 2,
+                up_after: 2,
+                // any flush whose request has < 10 s of deadline headroom
+                // counts as pressured — deterministic, no timing races
+                headroom: Duration::from_secs(10),
+                queue_high: 0,
+            }),
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    // serialize flushes: submit → wait, one request per flush, so the
+    // controller sees one observation per response in a known order
+    let serve_one = |seed: u32, deadline: Duration| -> ServeResponse {
+        h.submit_with_deadline(seed, deadline).wait().unwrap()
+    };
+    // phase 1 — pressure: 200 ms headroom < the 10 s floor on every flush
+    let pressured: Vec<Option<u32>> =
+        (0..6).map(|s| serve_one(s, Duration::from_millis(200)).degraded).collect();
+    assert_eq!(
+        pressured,
+        vec![None, None, Some(7), Some(7), Some(4), Some(4)],
+        "two pressured flushes per rung, one rung at a time"
+    );
+    // phase 2 — recovery: 30 s headroom > the floor, flushes run clean
+    let clean: Vec<Option<u32>> =
+        (0..6).map(|s| serve_one(s, Duration::from_secs(30)).degraded).collect();
+    assert_eq!(
+        clean,
+        vec![Some(4), Some(4), Some(7), Some(7), None, None],
+        "two clean flushes per rung on the way back up"
+    );
+    drop(h);
+    let snap = front.shutdown();
+    assert_eq!(snap.served, 12);
+    assert_eq!(snap.faults.degraded, 8, "every capped response must be counted");
+    for d in pressured.iter().chain(&clean).flatten() {
+        assert!([7u32, 4].contains(d), "budget {d} is off the ladder");
+    }
+}
+
+/// Supervised demux faults fail only the affected request: its coalesced
+/// peers in the same flush are still served.
+#[test]
+fn demux_fault_fails_one_request_not_its_peers() {
+    let _guard = chaos_lock();
+    failpoint::arm(
+        "serve_demux",
+        FailPlan { trigger: Trigger::Nth(2), action: FailAction::Error, seed: 0 },
+    );
+    let g = Arc::new(dense_graph());
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[4, 4]),
+        ServingConfig {
+            window: Duration::from_millis(500),
+            max_batch: 4,
+            failure_policy: FailurePolicy::supervise(),
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    // exactly max_batch requests: the flush fires on the count, so all
+    // four share one batch and demux in submission order
+    let pending: Vec<_> = [10u32, 11, 12, 13].iter().map(|&s| h.submit(s)).collect();
+    drop(h);
+    let outcomes: Vec<Result<u32, ServeError>> =
+        pending.into_iter().map(|p| p.wait().map(|r| r.seed)).collect();
+    assert_eq!(outcomes[0], Ok(10));
+    match &outcomes[1] {
+        Err(ServeError::Failed { seed: 11, reason }) => {
+            assert!(reason.contains("serve_demux"), "unnamed demux fault: {reason}");
+        }
+        other => panic!("expected a named demux failure, got {other:?}"),
+    }
+    assert_eq!(outcomes[2], Ok(12));
+    assert_eq!(outcomes[3], Ok(13));
+    let snap = front.shutdown();
+    assert_eq!(snap.served, 3);
+    assert_eq!(snap.faults.failed, 1);
+    assert_eq!(snap.faults.restarts, 0, "a demux fault must not restart the worker");
+}
+
+fn pipeline(cfg_policy: FailurePolicy, num_batches: u64) -> SamplingPipeline {
+    let g = Arc::new(dense_graph());
+    let sampler = labor0(&[5, 5]);
+    let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
+    SamplingPipeline::spawn(
+        g,
+        sampler,
+        ids,
+        PipelineConfig {
+            num_workers: 1, // single worker => deterministic failpoint hit order
+            queue_depth: 2,
+            batch_size: 64,
+            num_batches,
+            seed: 11,
+            failure_policy: cfg_policy,
+            ..PipelineConfig::default()
+        },
+    )
+}
+
+fn mfg_edges(p: &mut SamplingPipeline) -> Vec<Vec<(Vec<u32>, Vec<u32>)>> {
+    let mut out = Vec::new();
+    while let Some(item) = p.next_result() {
+        let b = item.expect("all batches must be delivered");
+        out.push(
+            b.mfg
+                .layers
+                .iter()
+                .map(|l| (l.edge_src.clone(), l.edge_dst.clone()))
+                .collect(),
+        );
+    }
+    out
+}
+
+/// A transient fault retried under supervision reproduces the exact batch
+/// a never-failed run delivers — the retry re-runs the deterministic
+/// sampler with the same seed.
+#[test]
+fn pipeline_transient_fault_retries_to_bit_identical_batch() {
+    let _guard = chaos_lock();
+    // baseline: no failpoints, default policy
+    let mut clean = pipeline(FailurePolicy::Propagate, 4);
+    let baseline = mfg_edges(&mut clean);
+    clean.join();
+    // chaos: the 2nd sampler pass errors once, then the retry succeeds
+    failpoint::arm(
+        "sample_flush",
+        FailPlan { trigger: Trigger::Nth(2), action: FailAction::Error, seed: 0 },
+    );
+    let mut p = pipeline(
+        FailurePolicy::Supervise { max_restarts: 3, max_retries: 2, backoff: fast_backoff() },
+        4,
+    );
+    let chaotic = mfg_edges(&mut p);
+    assert_eq!(baseline, chaotic, "a retried batch must be bit-identical");
+    let faults = p.fault_metrics();
+    assert_eq!(faults.retried, 1);
+    assert_eq!(faults.failed, 0);
+    assert_eq!(faults.restarts, 0, "a transient error must not restart the worker");
+    p.join();
+}
+
+/// A panicked batch under supervision is lost *alone* — named, in order —
+/// while its peers keep flowing, and join() does not re-raise.
+#[test]
+fn pipeline_panic_loses_one_batch_but_peers_flow() {
+    let _guard = chaos_lock();
+    failpoint::arm(
+        "sample_flush",
+        FailPlan { trigger: Trigger::Nth(2), action: FailAction::Panic, seed: 0 },
+    );
+    let mut p = pipeline(
+        FailurePolicy::Supervise { max_restarts: 3, max_retries: 2, backoff: fast_backoff() },
+        4,
+    );
+    let mut delivered = Vec::new();
+    while let Some(item) = p.next_result() {
+        match item {
+            Ok(b) => delivered.push(Ok(b.batch_id)),
+            Err(e) => delivered.push(Err(e)),
+        }
+    }
+    assert_eq!(delivered.len(), 4);
+    assert_eq!(delivered[0], Ok(0));
+    assert_eq!(
+        delivered[1],
+        Err(BatchError::WorkerLost { batch_id: 1, restarts: 1 })
+    );
+    assert_eq!(delivered[2], Ok(2));
+    assert_eq!(delivered[3], Ok(3));
+    let faults = p.fault_metrics();
+    assert_eq!(faults.restarts, 1);
+    assert_eq!(faults.failed, 1);
+    p.join(); // must not re-raise: the worker was supervised back up
+}
+
+/// Worker spawn failures: supervised workers retry the spawn with backoff;
+/// under Propagate the spawn failure is a worker panic that join re-raises.
+#[test]
+fn worker_spawn_faults_retry_supervised_and_propagate_otherwise() {
+    let _guard = chaos_lock();
+    failpoint::arm(
+        "worker_spawn",
+        FailPlan { trigger: Trigger::Nth(1), action: FailAction::Error, seed: 0 },
+    );
+    let mut p = pipeline(
+        FailurePolicy::Supervise { max_restarts: 3, max_retries: 2, backoff: fast_backoff() },
+        3,
+    );
+    let batches = mfg_edges(&mut p);
+    assert_eq!(batches.len(), 3, "the retried spawn must deliver the full epoch");
+    assert!(p.fault_metrics().retried >= 1, "the spawn retry must be counted");
+    p.join();
+
+    // Propagate: the same injection kills the worker before it claims work
+    failpoint::arm(
+        "worker_spawn",
+        FailPlan { trigger: Trigger::Always, action: FailAction::Error, seed: 0 },
+    );
+    let mut p = pipeline(FailurePolicy::Propagate, 2);
+    let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        while p.next().is_some() {}
+    }));
+    let msg = match died {
+        Ok(_) => panic!("a spawn-failed propagate worker must surface its panic"),
+        Err(payload) => payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string payload>".into()),
+    };
+    assert!(msg.contains("failed to spawn"), "unnamed spawn panic: {msg}");
+}
+
+/// The `lgx_read` failpoint surfaces as each loader's own named I/O error
+/// — exactly what a failing disk would produce — and a disarmed reload of
+/// the same file succeeds.
+#[test]
+fn lgx_read_failpoint_yields_named_loader_errors() {
+    let _guard = chaos_lock();
+    let mut b = CscBuilder::new(6);
+    b.edge(0, 1);
+    b.edge(2, 1);
+    b.edge(4, 3);
+    let g = b.build().unwrap();
+    let dir = std::env::temp_dir();
+    let lgx = dir.join(format!("labor_chaos_{}.lgx", std::process::id()));
+    let legacy = dir.join(format!("labor_chaos_{}.legacy", std::process::id()));
+    graph_io::save_lgx(&lgx, &g, None).unwrap();
+    graph_io::save_graph(&legacy, &g).unwrap();
+
+    failpoint::arm(
+        "lgx_read",
+        FailPlan { trigger: Trigger::Nth(1), action: FailAction::Error, seed: 0 },
+    );
+    let err = graph_io::load_lgx(&lgx).unwrap_err();
+    assert!(err.to_string().contains("lgx_read"), "unnamed injection: {err}");
+    // hit 2 does not fire: the same armed process can load the file
+    let (back, perm) = graph_io::load_lgx(&lgx).unwrap();
+    assert_eq!(back, g);
+    assert!(perm.is_none());
+
+    failpoint::arm(
+        "lgx_read",
+        FailPlan { trigger: Trigger::Nth(1), action: FailAction::Error, seed: 0 },
+    );
+    let err = graph_io::load_graph(&legacy).unwrap_err();
+    assert!(err.to_string().contains("lgx_read"), "unnamed injection: {err}");
+    failpoint::disarm_all();
+    assert_eq!(graph_io::load_graph(&legacy).unwrap(), g);
+    std::fs::remove_file(&lgx).ok();
+    std::fs::remove_file(&legacy).ok();
+}
+
+/// The control: unarmed failpoints under the default Propagate policy
+/// leave every fault counter at zero — the robustness layer is invisible
+/// until something actually goes wrong.
+#[test]
+fn unarmed_propagate_run_keeps_fault_counters_at_zero() {
+    let _guard = chaos_lock();
+    assert!(!failpoint::any_armed());
+    let g = Arc::new(dense_graph());
+    let plane = store_plane(&g, 4);
+    let front = ServingFrontEnd::spawn(
+        g,
+        labor0(&[10, 10]),
+        ServingConfig {
+            window: Duration::from_millis(1),
+            max_batch: 8,
+            data_plane: Some(plane),
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    let pending = replay_open_loop(&h, &zipf_seeds(40, 3), &[]);
+    drop(h);
+    for p in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.degraded, None);
+    }
+    let snap = front.shutdown();
+    assert_eq!(snap.served, 40);
+    assert_eq!(snap.faults, FaultSnapshot::default());
+
+    let mut p = pipeline(FailurePolicy::Propagate, 3);
+    while p.next().is_some() {}
+    assert_eq!(p.fault_metrics(), FaultSnapshot::default());
+    p.join();
+}

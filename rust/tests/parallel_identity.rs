@@ -153,7 +153,7 @@ fn sharded_weighted_labor_is_bit_identical() {
         for &shards in &SHARD_COUNTS {
             for batch in 0..8u64 {
                 let seeds: Vec<u32> = (0..(20 + (batch as u32 * 13) % 90)).collect();
-                let ctx = SampleCtx { batch_seed: batch, layer: 0 };
+                let ctx = SampleCtx::new(batch, 0);
                 let seq = s.sample_layer(&g, &seeds, ctx, &mut SamplerScratch::new());
                 let par = s.sample_layer_sharded(&g, &seeds, ctx, shards, &mut pool);
                 let what = format!("w-labor {iterations:?} shards={shards} batch {batch}");

@@ -41,6 +41,7 @@ fn pipeline_feeds_trainer_end_to_end() {
             intra_batch_threads: 1,
             data_plane: Some(plane),
             output_perm: None,
+            ..PipelineConfig::default()
         },
     );
     let mut losses = Vec::new();
@@ -80,6 +81,7 @@ fn feature_store_traffic_tracks_sampler_efficiency() {
                 intra_batch_threads: 2,
                 data_plane: Some(plane),
                 output_perm: None,
+                ..PipelineConfig::default()
             },
         );
         for b in &mut p {
@@ -123,6 +125,7 @@ fn degree_cache_cuts_slow_tier_traffic_in_the_pipeline() {
                 intra_batch_threads: 1,
                 data_plane: Some(plane),
                 output_perm: None,
+                ..PipelineConfig::default()
             },
         );
         let mut first_feats = Vec::new();

@@ -107,7 +107,7 @@ fn warm_scratch_is_bit_identical_for_weighted_labor() {
         let mut scratch = SamplerScratch::new();
         for batch in 0..20u64 {
             let seeds: Vec<u32> = (0..(20 + (batch as u32 * 7) % 60)).collect();
-            let ctx = SampleCtx { batch_seed: batch, layer: 0 };
+            let ctx = SampleCtx::new(batch, 0);
             let warm = s.sample_layer(&g, &seeds, ctx, &mut scratch);
             let fresh = s.sample_layer_fresh(&g, &seeds, ctx);
             assert_eq!(warm.inputs, fresh.inputs, "iter {iterations:?} batch {batch}");

@@ -11,8 +11,10 @@
 //!   misses and out-of-range seeds are named errors (never silent drops,
 //!   never a worker panic), an idle server flushes
 //!   nothing, a fully-expired flush runs no sampler pass, shutdown drains
-//!   the queue, and a worker panic reaches both the waiters (as
-//!   `Shutdown`) and the thread that joins.
+//!   the queue, and a worker panic reaches both the waiters (as the named
+//!   `WorkerDied` — never dressed up as a graceful `Shutdown`) and the
+//!   thread that joins. Chaos-schedule fault injection and supervised
+//!   recovery live in `tests/chaos.rs`.
 //! * **Workload model** — Zipf request streams are seed-deterministic,
 //!   and on a degree-relabeled graph the [`DegreeOrderedCache`] hit rate
 //!   grows with the request skew exponent (the serving premise: hot seeds
@@ -345,10 +347,11 @@ fn invalid_seed_is_rejected_and_peers_survive() {
 }
 
 /// A genuine worker panic still surfaces twice, matching the pipeline
-/// contract: pending waiters observe `Shutdown`, and `shutdown()`
-/// re-raises the panic. (The trigger here is a feature store smaller
-/// than the graph — a deployment bug, unlike a bad request seed, which
-/// admission now rejects without killing the worker.)
+/// contract: pending waiters observe the *named* `WorkerDied` error —
+/// a dead worker must never masquerade as a graceful `Shutdown` — and
+/// `shutdown()` re-raises the panic. (The trigger here is a feature store
+/// smaller than the graph — a deployment bug, unlike a bad request seed,
+/// which admission rejects without killing the worker.)
 #[test]
 fn worker_panic_reaches_waiters_and_shutdown() {
     let g = Arc::new(dense_graph()); // 500 vertices
@@ -367,7 +370,7 @@ fn worker_panic_reaches_waiters_and_shutdown() {
     let h = front.handle();
     let doomed = h.submit(499); // valid seed; its feature row does not exist
     drop(h);
-    assert!(matches!(doomed.wait(), Err(ServeError::Shutdown)));
+    assert!(matches!(doomed.wait(), Err(ServeError::WorkerDied { restarts: 0 })));
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
         front.shutdown();
     }));
