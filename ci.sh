@@ -41,6 +41,18 @@ echo "== chaos suite: fault injection, supervised recovery, degradation"
 # named errors, and the fanout-degradation ladder steps down and recovers
 cargo test -q --test chaos
 
+echo "== execution-engine identity suite: pool, plan, memo"
+# the hot-path machinery is acceleration only: pooled shards ≡ scoped
+# spawns ≡ sequential, plan-enabled ≡ plan-less, memoized ≡ fresh — all
+# to the bit — and supervised respawn chaos must not leak pool threads
+cargo test -q --test hotpath_identity --test parallel_identity
+
+echo "== spawn-fallback pass: full test suite with the shard pool forced off"
+# LABOR_NO_POOL=1 routes every sharded sample through freshly scoped
+# spawn-per-call threads (the pre-pool engine); the suite — including the
+# bit-identity tests — must stay green on both execution modes
+LABOR_NO_POOL=1 cargo test -q
+
 if [ "$MODE" != "fast" ]; then
   echo "== graph-pack smoke: .lgx pack + verified reload via the repro CLI"
   # packs the tiny dataset into the zero-copy format (degree-ordered
@@ -58,9 +70,14 @@ if [ "$MODE" != "fast" ]; then
   # stale perf records first so the existence checks below can't pass on
   # them
   rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json BENCH_serving.json \
-    BENCH_chaos.json
+    BENCH_chaos.json BENCH_hotpath.json
   cargo bench --bench pipeline -- --smoke
   cargo bench --bench samplers -- --smoke
+  # execution-engine micro-bench: persistent-pool vs spawn-per-call shard
+  # latency, static-π plan vs live weighted solver, and the hot-vertex
+  # memo hit rate under a Zipf stream — each identity-checked before it
+  # is timed
+  cargo bench --bench hotpath -- --smoke
   # serving QoS sweep: coalesced-LABOR vs one-at-a-time NS across arrival
   # rates × window sizes; the bench asserts the headline (coalesced
   # LABOR-0 gathers fewer feature bytes per request than solo NS under
@@ -77,6 +94,17 @@ if [ "$MODE" != "fast" ]; then
   test -f BENCH_graph.json || { echo "BENCH_graph.json missing"; exit 1; }
   test -f BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
   test -f BENCH_chaos.json || { echo "BENCH_chaos.json missing"; exit 1; }
+  test -f BENCH_hotpath.json || { echo "BENCH_hotpath.json missing"; exit 1; }
+  # this PR's execution-engine records: pool and plan speedups plus the
+  # memoized-serving hit rates (micro-bench and serving-level)
+  grep -q '"pool_speedup"' BENCH_hotpath.json \
+    || { echo "BENCH_hotpath.json is missing the pool-speedup record"; exit 1; }
+  grep -q '"plan_speedup"' BENCH_hotpath.json \
+    || { echo "BENCH_hotpath.json is missing the plan-speedup record"; exit 1; }
+  grep -q '"memo_hit_rate"' BENCH_hotpath.json \
+    || { echo "BENCH_hotpath.json is missing the memo-hit-rate record"; exit 1; }
+  grep -q '"serving_memo_hit_rate"' BENCH_serving.json \
+    || { echo "BENCH_serving.json is missing the memoized-serving record"; exit 1; }
   # this PR's memory-system records must be present: the mmap-vs-buffered
   # .lgx load series and the SIMD-vs-scalar gather micro-bench
   grep -q '"lgx_mmap_load_s"' BENCH_graph.json \
@@ -99,25 +127,32 @@ if [ "$MODE" != "fast" ]; then
   cat BENCH_serving.json
   echo "== BENCH_chaos.json:"
   cat BENCH_chaos.json
+  echo "== BENCH_hotpath.json:"
+  cat BENCH_hotpath.json
 
   echo "== serve smoke: online coalescing front end via the repro CLI"
   # a short Zipf request stream through `repro serve` (deadline-window
-  # coalescing + demux); the command asserts its own bookkeeping
-  # (served + missed == requests, per-response accounting) and prints the
-  # QoS summary. NOTE: bare boolean flags like --smoke must come last.
+  # coalescing + demux) with the execution engine fully on: a 2-thread
+  # shard pool, the static-π plan cache (default), and full-graph sample
+  # memoization; the command asserts its own bookkeeping (served +
+  # missed == requests, per-response accounting, plan enabled, memo
+  # counters moved, pool threads live) and prints the QoS summary
   ./target/release/repro serve --dataset flickr-sim --scale 0.1 \
-    --method labor-0 --rate 4000 --window-us 1000 --smoke
+    --method labor-0 --rate 4000 --window-us 1000 \
+    --pool-threads 2 --sample-memo-rows 1000000 --smoke
 
   echo "== chaos serve smoke: supervised recovery + degradation via the CLI"
   # same front end under an armed failpoint schedule: flush panics every
   # 40th hit and transient gather errors every 25th, a supervised worker,
-  # bounded admission, and the 10,7,4 degradation ladder; the command
-  # asserts outcome conservation (served + missed + invalid + failed +
-  # died + shed == requests) and that chaos stayed armed end to end
+  # bounded admission, the 10,7,4 degradation ladder, and the plan cache
+  # disabled (the --no-plan-cache escape hatch must keep working); the
+  # command asserts outcome conservation (served + missed + invalid +
+  # failed + died + shed == requests) and that chaos stayed armed end to
+  # end
   ./target/release/repro serve --dataset flickr-sim --scale 0.1 \
     --method labor-0 --rate 4000 --window-us 1000 \
     --policy supervise --max-restarts 50 --max-queue 256 \
-    --degrade-ladder 10,7,4 \
+    --degrade-ladder 10,7,4 --no-plan-cache \
     --chaos 'sample_flush=panic@every40;gather=error@every25' --smoke
 fi
 

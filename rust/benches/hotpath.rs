@@ -1,0 +1,237 @@
+//! Execution-engine microbenchmarks: what the hot-path machinery buys.
+//!
+//! Three sections, one headline number each, all identity-checked against
+//! the path they replace before any timing is trusted:
+//!
+//! 1. `pool_speedup` — sharded LABOR-0 sampling through the persistent
+//!    worker pool (`sampler::pool`) vs the same shards on freshly scoped
+//!    spawn-per-call threads (`LABOR_NO_POOL` mode). Same shard plan,
+//!    same bits; the delta is pure thread-creation overhead.
+//! 2. `plan_speedup` — weighted LABOR (A.7) with precomputed static-π
+//!    `c*` tables (`sampler::plan`) vs the live per-batch solver. The
+//!    plan build itself is timed separately (`plan_build_ms`) — it is
+//!    paid once, off the sampling path.
+//! 3. `memo_hit_rate` — a Zipf request stream (popularity = degree rank)
+//!    through the hot-vertex sample memo (`sampler::memo`) within one
+//!    variate epoch, plus the warm-over-live speedup.
+//!
+//! Results go to `BENCH_hotpath.json` (asserted + printed by ci.sh).
+//!
+//! `cargo bench --bench hotpath` — full run.
+//! `cargo bench --bench hotpath -- --smoke` — tiny sizes.
+
+use labor_gnn::data::Dataset;
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::compact::degree_order;
+use labor_gnn::graph::gen::{zipf_requests, ZipfRequestConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::pool::set_pool_enabled;
+use labor_gnn::sampler::weighted::WeightedLaborSampler;
+use labor_gnn::sampler::{
+    IterSpec, LayerSampler, Mfg, MultiLayerSampler, SampleCtx, SampleMemo, SamplePlan,
+    SamplerKind, SamplerScratch, ScratchPool,
+};
+use labor_gnn::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn assert_mfg_eq(a: &Mfg, b: &Mfg, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.inputs, lb.inputs, "{what} layer {l}: inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l}: edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l}: edge_dst");
+        let wa: Vec<u32> = la.edge_weight.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = lb.edge_weight.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "{what} layer {l}: edge_weight bits");
+    }
+}
+
+fn batches(nv: u32, count: usize, size: u32, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = StreamRng::new(seed);
+    (0..count)
+        .map(|_| {
+            let start = rng.below(nv as u64) as u32;
+            let mut s: Vec<u32> = (0..size).map(|i| (start + i * 3) % nv).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        })
+        .collect()
+}
+
+fn weighted_graph(nv: u32, seed: u64) -> CscGraph {
+    let mut rng = StreamRng::new(seed);
+    let mut b = CscBuilder::new(nv as usize);
+    for s in 0..nv {
+        let deg = 3 + rng.below(25) as usize;
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..deg {
+            let t = rng.below(nv as u64) as u32;
+            if t != s && used.insert(t) {
+                b.weighted_edge(t, s, 0.1 + rng.next_f32() * 2.0);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // == 1. persistent pool vs scoped spawns ==
+    let ds = Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset");
+    let g = &ds.graph;
+    let nv = g.num_vertices() as u32;
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[10, 10],
+    );
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    let (rounds, nbatch, bsize) = if smoke { (2, 4, 256) } else { (5, 20, 1024) };
+    let pool_batches = batches(nv, nbatch, bsize, 0xB00);
+    let mut pool = ScratchPool::new();
+
+    // identity first: pooled ≡ spawned on the first batch
+    set_pool_enabled(true);
+    let a = sampler.sample_sharded(g, &pool_batches[0], 1, shards, &mut pool);
+    set_pool_enabled(false);
+    let b = sampler.sample_sharded(g, &pool_batches[0], 1, shards, &mut pool);
+    assert_mfg_eq(&a, &b, "pool vs spawn");
+
+    let mut time_mode = |pooled: bool| {
+        set_pool_enabled(pooled);
+        // warm up thread state + arenas outside the timed region
+        sampler.sample_sharded(g, &pool_batches[0], 0, shards, &mut pool);
+        let t0 = Instant::now();
+        for r in 0..rounds {
+            for (i, seeds) in pool_batches.iter().enumerate() {
+                sampler.sample_sharded(g, seeds, (r * nbatch + i) as u64, shards, &mut pool);
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let t_spawn = time_mode(false);
+    let t_pool = time_mode(true);
+    set_pool_enabled(true);
+    let pool_speedup = t_spawn / t_pool;
+    let per_batch_us = |t: f64| t / (rounds * nbatch) as f64 * 1e6;
+    println!(
+        "pool:  {shards} shards, {} batches x {} seeds: spawn {:.1} us/batch, \
+         pool {:.1} us/batch, speedup {pool_speedup:.2}x",
+        rounds * nbatch,
+        bsize,
+        per_batch_us(t_spawn),
+        per_batch_us(t_pool),
+    );
+
+    // == 2. static-π plan vs live weighted solver ==
+    let wg = weighted_graph(if smoke { 2_000 } else { 20_000 }, 0xA7);
+    let wnv = wg.num_vertices() as u32;
+    let t0 = Instant::now();
+    let plan = Arc::new(SamplePlan::build(&wg, &[10]));
+    let plan_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let live = WeightedLaborSampler { fanouts: vec![10], iterations: IterSpec::Fixed(0), plan: None };
+    let planned = WeightedLaborSampler {
+        fanouts: vec![10],
+        iterations: IterSpec::Fixed(0),
+        plan: Some(plan),
+    };
+    let plan_batches = batches(wnv, nbatch, bsize, 0x914);
+    let mut s1 = SamplerScratch::new();
+    let mut s2 = SamplerScratch::new();
+    let ctx0 = SampleCtx::new(1, 0);
+    let a = live.sample_layer(&wg, &plan_batches[0], ctx0, &mut s1);
+    let b = planned.sample_layer(&wg, &plan_batches[0], ctx0, &mut s2);
+    assert_eq!(a.edge_src, b.edge_src, "plan vs live: edge_src");
+    let wa: Vec<u32> = a.edge_weight.iter().map(|w| w.to_bits()).collect();
+    let wb: Vec<u32> = b.edge_weight.iter().map(|w| w.to_bits()).collect();
+    assert_eq!(wa, wb, "plan vs live: weight bits");
+
+    let time_sampler = |s: &WeightedLaborSampler, scratch: &mut SamplerScratch| {
+        let t0 = Instant::now();
+        for r in 0..rounds {
+            for (i, seeds) in plan_batches.iter().enumerate() {
+                let ctx = SampleCtx::new((r * nbatch + i) as u64, 0);
+                s.sample_layer(&wg, seeds, ctx, scratch);
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let t_live = time_sampler(&live, &mut s1);
+    let t_planned = time_sampler(&planned, &mut s2);
+    let plan_speedup = t_live / t_planned;
+    println!(
+        "plan:  weighted labor-0 on {wnv} vertices: live {:.1} us/batch, \
+         planned {:.1} us/batch, speedup {plan_speedup:.2}x (build {plan_build_ms:.1} ms, once)",
+        per_batch_us(t_live),
+        per_batch_us(t_planned),
+    );
+
+    // == 3. hot-vertex memo under a Zipf stream ==
+    let order = degree_order(g);
+    let stream = zipf_requests(&ZipfRequestConfig {
+        num_ids: g.num_vertices(),
+        exponent: 1.0,
+        num_requests: if smoke { 1_024 } else { 16_384 },
+        rate_hz: 1.0,
+        seed: 42,
+    });
+    let fanouts = [10usize, 10];
+    let memo_bsize = 256;
+    let memo_batches: Vec<Vec<u32>> = stream
+        .seeds
+        .chunks(memo_bsize)
+        .map(|c| {
+            let mut s: Vec<u32> = c.iter().map(|&r| order[r as usize]).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        })
+        .collect();
+    let mut memo = SampleMemo::new(g.num_vertices());
+    let mut scratch = SamplerScratch::new();
+    let epoch = 0xE0;
+    // identity against the live multi-layer sampler, then a timed warm
+    // replay of the whole stream within the same variate epoch
+    for seeds in &memo_batches {
+        let want = sampler.sample_with_cap(g, seeds, epoch, None, &mut s1);
+        let got = memo.sample(g, &fanouts, None, seeds, epoch, &mut scratch);
+        assert_mfg_eq(&got, &want, "memo vs live");
+    }
+    memo.take_counters();
+    let t0 = Instant::now();
+    for seeds in &memo_batches {
+        memo.sample(g, &fanouts, None, seeds, epoch, &mut scratch);
+    }
+    let t_memo = t0.elapsed().as_secs_f64();
+    let (hits, misses) = memo.take_counters();
+    let memo_hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    let t0 = Instant::now();
+    for seeds in &memo_batches {
+        sampler.sample_with_cap(g, seeds, epoch, None, &mut s1);
+    }
+    let t_fresh = t0.elapsed().as_secs_f64();
+    let memo_speedup = t_fresh / t_memo;
+    assert!(memo_hit_rate > 0.5, "warm same-epoch replay must mostly hit, got {memo_hit_rate}");
+    println!(
+        "memo:  zipf(1.0) x {} requests, warm epoch: hit rate {memo_hit_rate:.3} \
+         ({hits} hits / {misses} misses), warm-vs-live speedup {memo_speedup:.2}x",
+        stream.seeds.len(),
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("shards", Json::Num(shards as f64)),
+        ("pool_speedup", Json::Num(pool_speedup)),
+        ("plan_speedup", Json::Num(plan_speedup)),
+        ("plan_build_ms", Json::Num(plan_build_ms)),
+        ("memo_hit_rate", Json::Num(memo_hit_rate)),
+        ("memo_speedup", Json::Num(memo_speedup)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", format!("{report}\n"))
+        .expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
+}

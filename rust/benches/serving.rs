@@ -53,6 +53,7 @@ fn run_serving(
     gaps: &[Duration],
     window: Duration,
     max_batch: usize,
+    memo_rows: usize,
 ) -> ServingSnapshot {
     let store = FeatureStore::new(ds.features.clone(), ds.num_features(), TierModel::local())
         .with_cache(Arc::new(NullCache));
@@ -68,6 +69,7 @@ fn run_serving(
             default_deadline: Duration::from_secs(10),
             seed: 7,
             intra_batch_threads: 1,
+            sample_memo_rows: memo_rows,
             data_plane: Some(DataPlaneConfig { store: Arc::new(store), labels: None }),
             output_perm: None,
             failure_policy: FailurePolicy::Propagate,
@@ -135,6 +137,7 @@ fn run_chaos(
             default_deadline: Duration::from_millis(20),
             seed: 7,
             intra_batch_threads: 1,
+            sample_memo_rows: 0,
             data_plane: Some(DataPlaneConfig { store: Arc::new(store), labels: None }),
             output_perm: None,
             failure_policy: FailurePolicy::Supervise {
@@ -239,12 +242,15 @@ fn main() {
             ("bytes_gathered_per_request", Json::Num(snap.bytes_gathered_per_request())),
             ("bytes_returned_per_request", Json::Num(snap.bytes_returned_per_request())),
             ("dedup_ratio", Json::Num(snap.dedup_ratio())),
+            ("memo_hits", Json::Num(snap.memo_hits as f64)),
+            ("memo_hit_rate", Json::Num(snap.memo_hit_rate())),
         ]));
     };
 
     // headline comparison, filled in during the sweep
     let mut coalesced_best: Option<f64> = None;
     let mut solo_at_max_rate: Option<f64> = None;
+    let mut memo_hit_rate_at_max_rate: Option<f64> = None;
 
     for &rate in &rates {
         // the two serving modes share one request stream per rate: same
@@ -268,6 +274,7 @@ fn main() {
                 &stream.gaps,
                 Duration::from_micros(window_us),
                 max_batch,
+                0,
             );
             if rate == rates[rates.len() - 1] && window_us == windows_us[windows_us.len() - 1]
             {
@@ -275,6 +282,31 @@ fn main() {
             }
             record("coalesced-labor0", rate, window_us, &snap);
         }
+
+        // memoized variant of the widest-window series: hot-vertex LABOR-0
+        // blocks reused across flushes within one variate epoch
+        // (`sample_memo_rows` spanning the whole graph; the Zipf skew is
+        // what makes the hit rate interesting)
+        let memo_window = windows_us[windows_us.len() - 1];
+        let snap = run_serving(
+            &graph,
+            &ds,
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &fanouts,
+            &seeds,
+            &stream.gaps,
+            Duration::from_micros(memo_window),
+            max_batch,
+            graph.num_vertices(),
+        );
+        if rate == rates[rates.len() - 1] {
+            assert!(
+                snap.memo_hit_rate() > 0.0,
+                "a Zipf stream over a full-graph memo must reuse blocks"
+            );
+            memo_hit_rate_at_max_rate = Some(snap.memo_hit_rate());
+        }
+        record("coalesced-memo", rate, memo_window, &snap);
 
         let snap = run_serving(
             &graph,
@@ -285,6 +317,7 @@ fn main() {
             &stream.gaps,
             Duration::ZERO,
             1,
+            0,
         );
         if rate == rates[rates.len() - 1] {
             solo_at_max_rate = Some(snap.bytes_gathered_per_request());
@@ -315,6 +348,9 @@ fn main() {
         ("requests_per_series", Json::Num(requests as f64)),
         ("zipf_exponent", Json::Num(skew)),
         ("max_batch", Json::Num(max_batch as f64)),
+        // memoized-serving headline: fraction of per-seed LABOR-0 blocks
+        // reused across flushes at the highest arrival rate
+        ("serving_memo_hit_rate", Json::Num(memo_hit_rate_at_max_rate.unwrap_or(0.0))),
         ("series", Json::Arr(series)),
     ]);
     std::fs::write("BENCH_serving.json", format!("{report}\n"))

@@ -30,6 +30,10 @@ pub struct RunOpts {
     pub eval_max: usize,
     pub lr: f32,
     pub seed: u64,
+    /// precompute static-π `c*` plan tables for the run's (graph, fanout)
+    /// pairs (`sampler::plan`); output is bit-identical with or without —
+    /// `false` is the `--no-plan-cache` escape hatch
+    pub plan_cache: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -70,7 +74,7 @@ pub fn run_training(
             kind.label()
         );
     }
-    let sampler = MultiLayerSampler::new(kind.clone(), &o.fanouts);
+    let mut sampler = MultiLayerSampler::new(kind.clone(), &o.fanouts);
     anyhow::ensure!(
         sampler.num_layers() == model.cfg.num_layers(),
         "method '{}' samples {} layers but artifact '{}' is {}-layer — \
@@ -80,6 +84,11 @@ pub fn run_training(
         o.artifact,
         model.cfg.num_layers()
     );
+    if o.plan_cache {
+        // static-π c* tables for the LABOR kinds; other kinds decline and
+        // sample exactly as before
+        sampler.enable_plan(&ds.graph, &[]);
+    }
     let mut trainer = Trainer::new(model, o.seed)?;
     trainer.lr = o.lr;
     let mut batcher = EpochBatcher::new(&ds.splits.train, bs, o.seed ^ 0xF16);

@@ -81,7 +81,7 @@ use super::supervise::{Backoff, DegradeController, FailurePolicy, WorkFault};
 use crate::graph::compact::VertexPerm;
 use crate::graph::CscGraph;
 use crate::rng::mix2;
-use crate::sampler::{EpochMap, Mfg, MfgSeedView, MultiLayerSampler, ScratchPool};
+use crate::sampler::{EpochMap, Mfg, MfgSeedView, MultiLayerSampler, SampleMemo, ScratchPool};
 use crate::util::failpoint;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -103,11 +103,23 @@ pub struct ServingConfig {
     /// deadline for [`ServeHandle::submit`]; requests past their deadline
     /// at flush time fail with [`ServeError::DeadlineExpired`]
     pub default_deadline: Duration,
-    /// base RNG seed; batch `b` samples with `mix2(seed, b)`
+    /// base RNG seed; batch `b` samples with `mix2(seed, b)` — except in
+    /// memoized mode (below), where every batch of a variate epoch `e`
+    /// samples with `mix2(seed, (1 << 63) | e)` so the epoch's variates
+    /// are shared across flushes
     pub seed: u64,
     /// intra-batch shard parallelism for the coalesced sampler pass
     /// (1 = sequential; output is bit-identical either way)
     pub intra_batch_threads: usize,
+    /// hot-vertex sample memoization ([`SampleMemo`]): cache per-seed
+    /// LABOR-0 blocks for vertices with id below this row count, reused
+    /// across flushes within a variate epoch (bump with
+    /// [`ServingFrontEnd::bump_variate_epoch`]). `0` (default) disables
+    /// the memo and keeps the exact per-batch-seed behavior above; a
+    /// nonzero value only takes effect when the sampler kind passes
+    /// [`SampleMemo::supports`]. Memoized flushes sample sequentially
+    /// (the memo supersedes `intra_batch_threads` for the sampler pass).
+    pub sample_memo_rows: usize,
     /// when set, responses carry pre-gathered deepest-layer feature rows
     /// and the seed's label
     pub data_plane: Option<DataPlaneConfig>,
@@ -134,6 +146,7 @@ impl Default for ServingConfig {
             default_deadline: Duration::from_millis(250),
             seed: 0,
             intra_batch_threads: 1,
+            sample_memo_rows: 0,
             data_plane: None,
             output_perm: None,
             failure_policy: FailurePolicy::Propagate,
@@ -240,6 +253,10 @@ struct ServingShared {
     queue_len: AtomicUsize,
     /// worker respawns so far (the payload of [`ServeError::WorkerDied`])
     restarts: AtomicU64,
+    /// current variate epoch for memoized serving: all flushes observing
+    /// the same value share one set of LABOR variates (and memoized
+    /// blocks); bumping refreshes every variate
+    variate_epoch: AtomicU64,
 }
 
 impl ServingShared {
@@ -360,6 +377,8 @@ struct ServingMetrics {
     returned_rows: AtomicU64,
     bytes_gathered: AtomicU64,
     bytes_returned: AtomicU64,
+    memo_hits: AtomicU64,
+    memo_misses: AtomicU64,
     latency: LatencyHistogram,
     faults: FaultCounters,
 }
@@ -376,6 +395,8 @@ impl ServingMetrics {
             returned_rows: self.returned_rows.load(Ordering::Relaxed),
             bytes_gathered: self.bytes_gathered.load(Ordering::Relaxed),
             bytes_returned: self.bytes_returned.load(Ordering::Relaxed),
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            memo_misses: self.memo_misses.load(Ordering::Relaxed),
             latency: self.latency.snapshot(),
             faults: self.faults.snapshot(),
         }
@@ -406,6 +427,13 @@ pub struct ServingSnapshot {
     pub returned_rows: u64,
     pub bytes_gathered: u64,
     pub bytes_returned: u64,
+    /// memoized per-seed sample blocks reused across flushes (0 unless
+    /// [`ServingConfig::sample_memo_rows`] is set and the sampler kind is
+    /// memoizable)
+    pub memo_hits: u64,
+    /// live per-seed block computations on the memoized path (first-touch
+    /// hot vertices plus every beyond-`rows` vertex)
+    pub memo_misses: u64,
     /// submit → response latency distribution, one sample per response
     pub latency: HistogramSnapshot,
     /// robustness counters: retries, named batch failures, worker
@@ -448,6 +476,18 @@ impl ServingSnapshot {
             0.0
         } else {
             self.bytes_returned as f64 / self.served as f64
+        }
+    }
+
+    /// `memo_hits / (memo_hits + memo_misses)` — the fraction of per-seed
+    /// sample blocks served from the memo instead of recomputed; 0.0 when
+    /// the memo is disabled or untouched.
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.memo_hits as f64 / total as f64
         }
     }
 }
@@ -506,6 +546,17 @@ impl ServingFrontEnd {
     /// Serving statistics so far; valid mid-stream and after shutdown.
     pub fn metrics(&self) -> ServingSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Advance the variate epoch (returns the new epoch). Only meaningful
+    /// with [`ServingConfig::sample_memo_rows`] set: memoized serving
+    /// shares one set of LABOR variates `r_t` across every flush of an
+    /// epoch, so repeated requests for the same seed get the *same*
+    /// neighborhood until the epoch is bumped — at which point every
+    /// cached block is dropped and fresh variates are drawn. Without a
+    /// memo this is a no-op (each batch already draws per-batch variates).
+    pub fn bump_variate_epoch(&self) -> u64 {
+        self.shared.variate_epoch.fetch_add(1, Ordering::SeqCst) + 1
     }
 
     /// Graceful stop: close the front end's sender, wait for the worker
@@ -600,6 +651,14 @@ fn coalescer_loop(
     let mut pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
     let mut demux_map = EpochMap::default();
     let mut controller = cfg.degrade.clone().map(DegradeController::new);
+    // hot-vertex memo: only when configured AND the sampler kind is pure
+    // per (layer, fanout, vertex) — anything else silently keeps the
+    // exact per-batch-seed path
+    let mut memo = if cfg.sample_memo_rows > 0 && SampleMemo::supports(&sampler.kind) {
+        Some(SampleMemo::new(cfg.sample_memo_rows))
+    } else {
+        None
+    };
     let (supervised, max_restarts, max_retries, backoff) = match cfg.failure_policy {
         FailurePolicy::Propagate => (false, 0u32, 0u32, Backoff::default()),
         FailurePolicy::Supervise { max_restarts, max_retries, backoff } => {
@@ -646,7 +705,7 @@ fn coalescer_loop(
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             serve_batch(
                 graph, sampler, cfg, metrics, shared, batch_id, batch, &mut pool, &mut demux_map,
-                &mut controller, max_retries, supervised,
+                &mut memo, &mut controller, max_retries, supervised,
             );
         }));
         if let Err(panic) = result {
@@ -669,10 +728,12 @@ fn coalescer_loop(
                 std::panic::resume_unwind(panic);
             }
             // logical respawn: the panicked flush may have left the
-            // arenas mid-`mem::take` — discard and rebuild, then back
-            // off on the deterministic schedule
+            // arenas mid-`mem::take` — discard and rebuild (the memo too:
+            // a respawned worker starts from a cold, deterministic cache),
+            // then back off on the deterministic schedule
             pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
             demux_map = EpochMap::default();
+            memo = memo.as_ref().map(|m| SampleMemo::new(m.rows()));
             std::thread::sleep(backoff.delay((restarts - 1).min(u32::MAX as u64) as u32));
         }
         batch_id += 1;
@@ -696,6 +757,7 @@ struct BatchPayload {
 /// fanout cap) and gather. Fully deterministic in its inputs, so a retry
 /// after a transient fault reproduces the exact batch a never-failed run
 /// would have served.
+#[allow(clippy::too_many_arguments)]
 fn flush_payload(
     graph: &CscGraph,
     sampler: &MultiLayerSampler,
@@ -704,10 +766,16 @@ fn flush_payload(
     batch_seed: u64,
     fanout_cap: Option<u32>,
     pool: &mut ScratchPool,
+    memo: &mut Option<SampleMemo>,
 ) -> Result<BatchPayload, WorkFault> {
     failpoint::hit("sample_flush").map_err(WorkFault::from)?;
     let shards = cfg.intra_batch_threads.max(1);
-    let mfg = if shards > 1 {
+    let mfg = if let Some(memo) = memo.as_mut() {
+        // memoized path: sequential by construction (block reuse is the
+        // win here, not shard parallelism); `batch_seed` is the epoch
+        // seed, so warm blocks splice in bit-identically
+        memo.sample(graph, &sampler.fanouts, fanout_cap, sample_seeds, batch_seed, pool.main_mut())
+    } else if shards > 1 {
         sampler.sample_sharded_with_cap(graph, sample_seeds, batch_seed, fanout_cap, shards, pool)
     } else {
         sampler.sample_with_cap(graph, sample_seeds, batch_seed, fanout_cap, pool.main_mut())
@@ -764,6 +832,7 @@ fn serve_batch(
     batch: Vec<ServeRequest>,
     pool: &mut ScratchPool,
     demux_map: &mut EpochMap,
+    memo: &mut Option<SampleMemo>,
     controller: &mut Option<DegradeController>,
     max_retries: u32,
     supervised: bool,
@@ -819,11 +888,21 @@ fn serve_batch(
     // 3 + 4. one shared sampler pass + one shared gather, under the
     //    controller's current fanout budget, with bounded in-place retries
     //    for transient faults when supervised
-    let batch_seed = mix2(cfg.seed, batch_id);
+    // memoized serving pins the seed to the variate *epoch* (high bit set
+    // so epoch seeds never collide with per-batch seeds) — every flush of
+    // an epoch shares its variates, which is what makes blocks reusable;
+    // without a memo, each batch draws fresh per-batch variates as before
+    let batch_seed = match memo {
+        Some(_) => {
+            let epoch = shared.variate_epoch.load(Ordering::SeqCst);
+            mix2(cfg.seed, (1u64 << 63) | epoch)
+        }
+        None => mix2(cfg.seed, batch_id),
+    };
     let budget = controller.as_ref().and_then(|c| c.budget());
     let mut attempts = 0u32;
     let flushed = loop {
-        match flush_payload(graph, sampler, cfg, &sample_seeds, batch_seed, budget, pool) {
+        match flush_payload(graph, sampler, cfg, &sample_seeds, batch_seed, budget, pool, memo) {
             Ok(p) => break Ok(p),
             Err(fault) => {
                 if !supervised {
@@ -840,6 +919,13 @@ fn serve_batch(
             }
         }
     };
+    // drain regardless of outcome: a fault after sampling (e.g. a gather
+    // hiccup) already moved the counters
+    if let Some(m) = memo.as_mut() {
+        let (h, mi) = m.take_counters();
+        metrics.memo_hits.fetch_add(h, Ordering::Relaxed);
+        metrics.memo_misses.fetch_add(mi, Ordering::Relaxed);
+    }
     let payload = match flushed {
         Ok(p) => p,
         Err(fault) => {
@@ -1006,6 +1092,51 @@ mod tests {
             p.wait().unwrap();
         }
         assert_eq!(front.shutdown().served, 5);
+    }
+
+    #[test]
+    fn memoized_serving_reuses_blocks_within_an_epoch() {
+        let g = Arc::new(testutil::test_graph());
+        let nv = g.num_vertices();
+        let front = ServingFrontEnd::spawn(
+            g,
+            labor0(&[4, 4]),
+            ServingConfig {
+                window: Duration::from_millis(1),
+                sample_memo_rows: nv,
+                ..ServingConfig::default()
+            },
+        );
+        let h = front.handle();
+        // same seed across separate flushes: identical neighborhoods
+        // within one variate epoch (submit-then-wait serializes flushes)
+        let a = h.submit(3).wait().unwrap();
+        let hits_after_cold = front.metrics().memo_hits;
+        let b = h.submit(3).wait().unwrap();
+        for (la, lb) in a.mfg.layers.iter().zip(&b.mfg.layers) {
+            assert_eq!(la.edge_src, lb.edge_src, "same epoch must reuse picks");
+            assert_eq!(la.inputs, lb.inputs);
+        }
+        let snap = front.metrics();
+        assert!(
+            snap.memo_hits > hits_after_cold,
+            "warm flush must hit the memo (hits {} -> {})",
+            hits_after_cold,
+            snap.memo_hits
+        );
+        assert!(snap.memo_hit_rate() > 0.0);
+        // epoch bump: the memo drops its blocks and redraws variates
+        let epoch = front.bump_variate_epoch();
+        assert_eq!(epoch, 1);
+        let misses_before = front.metrics().memo_misses;
+        let c = h.submit(3).wait().unwrap();
+        assert_eq!(c.seed, 3);
+        assert!(
+            front.metrics().memo_misses > misses_before,
+            "bumped epoch must recompute, not reuse stale variates"
+        );
+        drop(h);
+        front.shutdown();
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! repro serve   --dataset flickr-sim [--method labor-0 --rate 2000 --window-us 1000
 //!                --max-batch 64 --deadline-ms 250 --skew 1.0 --requests 2000
 //!                --layout degree|original --cache-rows 0 --threads 1
+//!                --pool-threads 0 --sample-memo-rows 0 --no-plan-cache
 //!                --policy propagate|supervise --max-restarts 3 --max-retries 3
 //!                --max-queue 256 --degrade-ladder 10,7,4
 //!                --chaos 'sample_flush=panic@every100' --chaos-seed 0] [--smoke]
@@ -35,9 +36,9 @@
 //! within a deadline window, and the report shows p50/p99 response
 //! latency, the coalescing factor, and bytes/request. Popularity follows
 //! degree rank, so `--layout degree --cache-rows k` exercises the cache's
-//! `id < k` prefix fast path. Note: bare boolean flags (`--smoke`) must
-//! come last — the strict `--key value` parser otherwise swallows the
-//! next flag as their value.
+//! `id < k` prefix fast path. Bare boolean flags (`--smoke`,
+//! `--no-plan-cache`) may appear anywhere — a token followed by another
+//! `--flag` (or by nothing) parses as a flag with no value.
 //!
 //! `serve` robustness knobs (see `docs/` and `util::failpoint`):
 //! `--policy supervise` respawns a panicked serving worker instead of
@@ -48,6 +49,13 @@
 //! `--chaos` arms deterministic failpoints from a
 //! `point=action@trigger[;...]` spec (same grammar as the
 //! `LABOR_FAILPOINTS` env var, which is honored by every subcommand).
+//!
+//! Execution-engine knobs (`serve` and `train`, see `sampler::pool` /
+//! `sampler::plan` / `sampler::memo`): `--pool-threads n` pre-spawns the
+//! persistent shard pool's workers; `--no-plan-cache` skips the static-π
+//! sample-plan precompute (output is bit-identical with or without it);
+//! `--sample-memo-rows n` (serve only) memoizes hot-vertex LABOR-0 sample
+//! blocks across flushes within a variate epoch.
 //!
 //! `--method` takes any [`SamplerKind::parse`] name: `ns`, `labor-<i>`,
 //! `labor-*`, `labor-<i>-seq`, `ladies`, `pladies`, or budgeted layer
@@ -78,10 +86,22 @@ impl Args {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?
                 .to_string();
-            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            // a following token that is itself a --flag (or nothing at
+            // all) makes this a bare boolean flag — `--smoke --rate 100`
+            // no longer swallows `--rate` as smoke's value. Negative
+            // numbers (single dash) still parse as values.
+            let val = match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    i += 2;
+                    v.clone()
+                }
+                _ => {
+                    i += 1;
+                    String::new()
+                }
+            };
             multi.entry(key.clone()).or_default().push(val.clone());
             flags.insert(key, val);
-            i += 2;
         }
         Ok(Self { flags, multi })
     }
@@ -130,6 +150,7 @@ fn run_opts(a: &Args, dataset: &str) -> Result<bench::figs::RunOpts> {
         eval_max: a.usize_or("eval-max", 2048)?,
         lr: a.f64_or("lr", 1e-3)? as f32,
         seed: a.u64_or("seed", 0)?,
+        plan_cache: a.get("no-plan-cache").is_none(),
     })
 }
 
@@ -231,7 +252,9 @@ fn run_serve(a: &Args) -> Result<()> {
     };
     use labor_gnn::graph::compact::degree_order;
     use labor_gnn::graph::gen::{zipf_requests, ZipfRequestConfig};
-    use labor_gnn::sampler::MultiLayerSampler;
+    use labor_gnn::sampler::{
+        configure_pool_threads, pool_live_threads, MultiLayerSampler, SampleMemo,
+    };
     use labor_gnn::util::failpoint;
     use std::sync::Arc;
     use std::time::Duration;
@@ -252,6 +275,10 @@ fn run_serve(a: &Args) -> Result<()> {
     let skew = a.f64_or("skew", 1.0)?;
     let threads = a.usize_or("threads", 1)?;
     let cache_rows = a.usize_or("cache-rows", 0)?;
+    // execution-engine knobs (sampler::pool / sampler::plan / sampler::memo)
+    let pool_threads = a.usize_or("pool-threads", 0)?;
+    let memo_rows = a.usize_or("sample-memo-rows", 0)?;
+    let plan_cache = a.get("no-plan-cache").is_none();
     let layout = a.str_or("layout", "original");
     let seed = a.u64_or("seed", 0)?;
     let tier_name = a.str_or("tier", "local");
@@ -316,11 +343,27 @@ fn run_serve(a: &Args) -> Result<()> {
         other => return Err(anyhow!("--layout expects degree|original, got '{other}'")),
     };
     let graph = Arc::new(ds.graph.clone());
-    let sampler = Arc::new(MultiLayerSampler::new(kind, &vec![fanout; layers]));
+    let mut sampler = MultiLayerSampler::new(kind.clone(), &vec![fanout; layers]);
     anyhow::ensure!(
         sampler.num_layers() > 0,
         "method '{method}' needs explicit budgets for serving (e.g. pladies-60,40)"
     );
+    // static-π plan: precompute c* tables for the configured fanout AND
+    // every degrade-ladder rung — the effective per-layer fanout is
+    // always min(fanout, rung), so those two sets cover every capped k
+    let planned = if plan_cache {
+        let rungs: Vec<usize> = degrade
+            .as_ref()
+            .map(|d| d.ladder.iter().map(|&r| r as usize).collect())
+            .unwrap_or_default();
+        sampler.enable_plan(&ds.graph, &rungs)
+    } else {
+        false
+    };
+    if pool_threads > 0 {
+        configure_pool_threads(pool_threads);
+    }
+    let sampler = Arc::new(sampler);
     let cache: Arc<dyn FeatureCache> = if cache_rows > 0 {
         Arc::new(DegreeOrderedCache::new(&graph, cache_rows))
     } else {
@@ -358,6 +401,7 @@ fn run_serve(a: &Args) -> Result<()> {
             default_deadline: deadline,
             seed,
             intra_batch_threads: threads,
+            sample_memo_rows: memo_rows,
             data_plane: Some(plane),
             output_perm: perm,
             failure_policy,
@@ -425,6 +469,16 @@ fn run_serve(a: &Args) -> Result<()> {
         snap.coalescing_factor(),
         snap.dedup_ratio()
     );
+    if planned || pool_threads > 0 || snap.memo_hits + snap.memo_misses > 0 {
+        println!(
+            "  engine: plan cache {}, pool threads {}, memo hit rate {:.3} ({} hits / {} misses)",
+            if planned { "on" } else { "off" },
+            pool_live_threads(),
+            snap.memo_hit_rate(),
+            snap.memo_hits,
+            snap.memo_misses
+        );
+    }
     let l = snap.latency;
     println!(
         "  latency: p50 {:.2?} p90 {:.2?} p99 {:.2?} max {:.2?} (mean {:.2?})",
@@ -463,6 +517,34 @@ fn run_serve(a: &Args) -> Result<()> {
             anyhow::ensure!(
                 failpoint::any_armed(),
                 "chaos points were disarmed mid-run"
+            );
+        }
+        // execution-engine self-checks
+        if plan_cache
+            && matches!(
+                kind,
+                SamplerKind::Labor { .. } | SamplerKind::LaborSequential { .. }
+            )
+        {
+            anyhow::ensure!(planned, "plan cache requested for a LABOR kind but not built");
+        }
+        if memo_rows > 0 && SampleMemo::supports(&kind) && served > 0 {
+            anyhow::ensure!(
+                snap.memo_hits + snap.memo_misses > 0,
+                "memo configured but the serving path never touched it"
+            );
+        } else {
+            anyhow::ensure!(
+                snap.memo_hits == 0 && snap.memo_misses == 0,
+                "memo counters moved while the memo was disabled"
+            );
+        }
+        if pool_threads > 0 {
+            let want = pool_threads.min(labor_gnn::sampler::pool::MAX_POOL_THREADS);
+            anyhow::ensure!(
+                pool_live_threads() >= want,
+                "--pool-threads {pool_threads}: only {} pool workers live",
+                pool_live_threads()
             );
         }
         println!("serve smoke OK");
@@ -599,6 +681,44 @@ fn main() -> Result<()> {
                     SamplerKind::Ladies { .. } => SamplerKind::Ladies { budgets },
                     _ => SamplerKind::Pladies { budgets },
                 };
+            }
+            let pool_threads = a.usize_or("pool-threads", 0)?;
+            if pool_threads > 0 {
+                labor_gnn::sampler::configure_pool_threads(pool_threads);
+            }
+            if a.get("smoke").is_some() {
+                // plan-cache identity spot check: a planned sampler must be
+                // bit-identical to a plan-less one before we train with it
+                use labor_gnn::sampler::MultiLayerSampler;
+                let seeds: Vec<u32> = ds.splits.train.iter().copied().take(256).collect();
+                let base = MultiLayerSampler::new(kind.clone(), &o.fanouts);
+                let mut with_plan = MultiLayerSampler::new(kind.clone(), &o.fanouts);
+                let built = with_plan.enable_plan(&ds.graph, &[]);
+                let want = base.sample_fresh(&ds.graph, &seeds, 0xC0FFEE);
+                let got = with_plan.sample_fresh(&ds.graph, &seeds, 0xC0FFEE);
+                for (l, (x, y)) in want.layers.iter().zip(&got.layers).enumerate() {
+                    anyhow::ensure!(
+                        x.inputs == y.inputs
+                            && x.edge_src == y.edge_src
+                            && x.edge_dst == y.edge_dst,
+                        "plan cache changed layer {l} structure"
+                    );
+                    let xb: Vec<u32> = x.edge_weight.iter().map(|w| w.to_bits()).collect();
+                    let yb: Vec<u32> = y.edge_weight.iter().map(|w| w.to_bits()).collect();
+                    anyhow::ensure!(xb == yb, "plan cache changed layer {l} weight bits");
+                }
+                if pool_threads > 0 {
+                    let want_live =
+                        pool_threads.min(labor_gnn::sampler::pool::MAX_POOL_THREADS);
+                    anyhow::ensure!(
+                        labor_gnn::sampler::pool_live_threads() >= want_live,
+                        "--pool-threads {pool_threads}: workers not live"
+                    );
+                }
+                println!(
+                    "train smoke OK (plan identity {})",
+                    if built { "verified" } else { "n/a for this method" }
+                );
             }
             let engine = labor_gnn::runtime::Engine::cpu()?;
             let man = labor_gnn::runtime::Manifest::load("artifacts")?;

@@ -15,6 +15,7 @@ use super::par::{
     concat_and_finalize, discover_shard, merge_candidates, merge_max, run_shards, PoolParts,
     ScratchPool,
 };
+use super::plan::SamplePlan;
 use super::poisson::sequential_poisson_pick_into;
 use super::{
     finalize_inputs_in, hajek_normalize_in, hajek_normalize_into, IterSpec, LayerSampler,
@@ -22,6 +23,7 @@ use super::{
 };
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
+use std::sync::Arc;
 
 /// The LABOR-i / LABOR-\* layer sampler.
 pub struct LaborSampler {
@@ -35,6 +37,11 @@ pub struct LaborSampler {
     /// round `E[d̃_s] = min(k,d_s)` to exactly that count via sequential
     /// Poisson sampling (Appendix A.3)
     pub sequential: bool,
+    /// optional precomputed `c*` tables ([`SamplePlan`]): when the plan
+    /// matches the graph and covers a layer's fanout, the initial
+    /// uniform-π `c_s` solve becomes a table lookup (bit-identical values;
+    /// see `sampler::plan`). `None` ⇒ live solves, the historical path.
+    pub plan: Option<Arc<SamplePlan>>,
 }
 
 /// Solve Eq. (14): find `c ≥ 0` with `Σ_t 1/min(1, c·π_t) = d²/k`,
@@ -102,14 +109,28 @@ pub fn solve_cs_sorted_with(
 /// monotonically from below in at most `d` steps. Kept alongside the exact
 /// sorted solver both as documentation of the paper's algorithm and as a
 /// cross-check (they agree to 1e-9; see tests).
+///
+/// Total over its whole domain: callers special-case `k ≥ d` themselves
+/// (`c = max 1/π_t`), but if that regime reaches this function anyway
+/// (the guard is a `debug_assert` in the callers, compiled out in release
+/// builds), every π saturates — Eq. 14's target `d²/k ≤ d` is met with
+/// `min(1, c·π_t) = 1` for all `t` — and the update would divide by
+/// `target − v = 0`, yielding NaN/inf. The saturation case is detected
+/// and answered with the exact closed form instead.
 pub fn solve_cs_iterative(pi: &[f64], k: usize) -> f64 {
     let d = pi.len();
-    debug_assert!(k < d && k > 0);
+    debug_assert!(k > 0 && d > 0);
     let target = (d as f64) * (d as f64) / (k as f64);
     let sum_recip: f64 = pi.iter().map(|p| 1.0 / p).sum();
     let mut c = sum_recip / target; // Eq. (15): c^(0) = (k/d²)·Σ 1/π
     let mut v = 0.0f64; // v^(i): number of saturated terms
     for _ in 0..d + 1 {
+        if target - v <= 0.0 {
+            // v ≥ target saturated terms (possible only for k ≥ d, where
+            // target ≤ d): the unique solution is the smallest c that
+            // saturates every term
+            return pi.iter().fold(0.0f64, |m, &p| m.max(1.0 / p));
+        }
         // Eq. (16)
         let sum_cur: f64 = pi.iter().map(|&p| 1.0 / (c * p).min(1.0)).sum();
         let c_next = c / (target - v) * (sum_cur - v);
@@ -169,6 +190,9 @@ pub struct LaborLayerState<'a> {
     /// true while π is still the uniform initialization (enables the
     /// closed-form `c_s` fast path of LABOR-0)
     pi_uniform: bool,
+    /// precomputed per-vertex `c*` row for this fanout (valid only while
+    /// `pi_uniform`; values are bit-identical to the closed form)
+    plan_c0: Option<&'a [f64]>,
 }
 
 impl<'a> LaborLayerState<'a> {
@@ -186,6 +210,21 @@ impl<'a> LaborLayerState<'a> {
         seeds: &'a [u32],
         k: usize,
         scratch: &mut SamplerScratch,
+    ) -> Self {
+        Self::new_in_planned(g, seeds, k, scratch, None)
+    }
+
+    /// [`new_in`](Self::new_in) with an optional precomputed `c*` row
+    /// (`SamplePlan::uniform_row` for this graph and fanout): the initial
+    /// uniform-π `c_s` pass reads `plan_c0[seed]` instead of evaluating
+    /// the closed form — same bits, no division. The row must index by
+    /// global vertex id on `g`.
+    pub fn new_in_planned(
+        g: &'a CscGraph,
+        seeds: &'a [u32],
+        k: usize,
+        scratch: &mut SamplerScratch,
+        plan_c0: Option<&'a [f64]>,
     ) -> Self {
         let mut candidates = std::mem::take(&mut scratch.candidates);
         let mut nbr_local = std::mem::take(&mut scratch.nbr_local);
@@ -254,6 +293,7 @@ impl<'a> LaborLayerState<'a> {
             r,
             r_key: None,
             pi_uniform: true,
+            plan_c0,
         };
         st.recompute_c();
         st
@@ -290,6 +330,11 @@ impl<'a> LaborLayerState<'a> {
                 continue;
             }
             if self.pi_uniform {
+                if let Some(c0) = self.plan_c0 {
+                    // precomputed table: same value as the closed form below
+                    self.c[si] = c0[self.seeds[si] as usize];
+                    continue;
+                }
                 // uniform π = 1: closed form, c·π = min(1, k/d)
                 self.c[si] = if self.k >= d { 1.0 } else { self.k as f64 / d as f64 };
                 continue;
@@ -537,13 +582,17 @@ impl<'a> LaborLayerState<'a> {
 
 /// Per-shard `c_s` recompute: `LaborLayerState::recompute_c` verbatim,
 /// reading the global π through the shard's local→global candidate
-/// translation.
+/// translation. `c0` (with the shard's global seed ids in `shard_seeds`)
+/// substitutes the uniform-π closed form with a precomputed-plan lookup —
+/// same values to the bit.
 fn recompute_c_shard(
     k: usize,
     scratch: &mut SamplerScratch,
     xlat: &[u32],
     pi: &[f64],
     pi_uniform: bool,
+    c0: Option<&[f64]>,
+    shard_seeds: &[u32],
 ) {
     let nseeds = scratch.nbr_off.len() - 1;
     let mut c = std::mem::take(&mut scratch.c);
@@ -558,6 +607,10 @@ fn recompute_c_shard(
             continue;
         }
         if pi_uniform {
+            if let Some(c0) = c0 {
+                c[si] = c0[shard_seeds[si] as usize];
+                continue;
+            }
             // uniform π = 1: closed form, c·π = min(1, k/d)
             c[si] = if k >= d { 1.0 } else { k as f64 / d as f64 };
             continue;
@@ -604,15 +657,21 @@ fn refresh_maxc_shards(
     merge_max(&mut main.maxc, main.candidates.len(), &*workers, xlat);
 }
 
-/// Sharded `recompute_c` over all shards.
+/// Sharded `recompute_c` over all shards. `c0`/`seeds`/`ranges` carry the
+/// optional plan row plus the global seed slice per shard.
 fn recompute_c_shards(
     k: usize,
     workers: &mut [SamplerScratch],
     xlat: &[Vec<u32>],
     pi: &[f64],
     pi_uniform: bool,
+    c0: Option<&[f64]>,
+    seeds: &[u32],
+    ranges: &[std::ops::Range<usize>],
 ) {
-    run_shards(workers, |i, s| recompute_c_shard(k, s, &xlat[i], pi, pi_uniform));
+    run_shards(workers, |i, s| {
+        recompute_c_shard(k, s, &xlat[i], pi, pi_uniform, c0, &seeds[ranges[i].clone()])
+    });
 }
 
 /// Objective (12) over the global candidate order — the same summation
@@ -630,13 +689,16 @@ fn fixed_point_step_shards(
     workers: &mut [SamplerScratch],
     xlat: &[Vec<u32>],
     pi_uniform: &mut bool,
+    seeds: &[u32],
+    ranges: &[std::ops::Range<usize>],
 ) -> f64 {
     refresh_maxc_shards(main, workers, xlat);
     for (t, p) in main.pi.iter_mut().enumerate() {
         *p *= main.maxc[t].max(f64::MIN_POSITIVE);
     }
     *pi_uniform = false;
-    recompute_c_shards(k, workers, xlat, &main.pi, *pi_uniform);
+    // π is no longer uniform, so no plan row applies past this point
+    recompute_c_shards(k, workers, xlat, &main.pi, *pi_uniform, None, seeds, ranges);
     refresh_maxc_shards(main, workers, xlat);
     objective_from(&main.pi, &main.maxc)
 }
@@ -730,7 +792,8 @@ impl LayerSampler for LaborSampler {
         scratch: &mut SamplerScratch,
     ) -> SampledLayer {
         let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
-        let mut st = LaborLayerState::new_in(g, seeds, k, scratch);
+        let plan_c0 = self.plan.as_deref().and_then(|p| p.uniform_row(g, k));
+        let mut st = LaborLayerState::new_in_planned(g, seeds, k, scratch, plan_c0);
         st.optimize(self.iterations);
         // layer-dependent mode shares r_t across layers of a batch
         let stream = if self.layer_dependent { u64::MAX } else { ctx.layer as u64 };
@@ -753,6 +816,7 @@ impl LayerSampler for LaborSampler {
             return self.sample_layer(g, seeds, ctx, pool.main_mut());
         }
         let k = ctx.cap_fanout(self.fanouts[ctx.layer]);
+        let plan_c0 = self.plan.as_deref().and_then(|p| p.uniform_row(g, k));
         let PoolParts { main, workers, xlat, ranges } = pool.parts(shards);
 
         // phase 1: candidate discovery (sharded) + order-preserving merge
@@ -767,18 +831,20 @@ impl LayerSampler for LaborSampler {
         main.pi.clear();
         main.pi.resize(ncand, 1.0);
         let mut pi_uniform = true;
-        recompute_c_shards(k, workers, xlat, &main.pi, pi_uniform);
+        recompute_c_shards(k, workers, xlat, &main.pi, pi_uniform, plan_c0, seeds, ranges);
         match self.iterations {
             IterSpec::Fixed(n) => {
                 for _ in 0..n {
-                    fixed_point_step_shards(k, main, workers, xlat, &mut pi_uniform);
+                    fixed_point_step_shards(k, main, workers, xlat, &mut pi_uniform, seeds, ranges);
                 }
             }
             IterSpec::Converge => {
                 refresh_maxc_shards(main, workers, xlat);
                 let mut prev = objective_from(&main.pi, &main.maxc);
                 for _ in 1..=50 {
-                    let cur = fixed_point_step_shards(k, main, workers, xlat, &mut pi_uniform);
+                    let cur = fixed_point_step_shards(
+                        k, main, workers, xlat, &mut pi_uniform, seeds, ranges,
+                    );
                     if (prev - cur).abs() <= 1e-4 * prev.max(1.0) {
                         break;
                     }
@@ -885,6 +951,35 @@ mod tests {
                 (lhs - target).abs() < 1e-6 * target,
                 "iterative solve violates Eq. 14: lhs {lhs} target {target}"
             );
+        }
+    }
+
+    #[test]
+    fn iterative_solver_survives_full_saturation() {
+        // regression: k ≥ d used to slip past the (debug-only) caller
+        // contract in release builds and divide by target − v = 0 once
+        // every π saturated, yielding NaN/inf. The solver must instead
+        // return the closed-form c = max_t 1/π_t exactly.
+        let cases: Vec<(Vec<f64>, usize)> = vec![
+            (vec![1.0, 1.0], 2),                               // k == d, uniform
+            (vec![0.5, 2.0], 2),                               // k == d, spread π
+            (vec![1.0; 8], 20),                                // k > d
+            ((1..=10).map(|i| i as f64 / 10.0).collect(), 10), // ramp, k == d
+            (vec![3.0], 1),                                    // d == 1
+        ];
+        for (pi, k) in cases {
+            let c = solve_cs_iterative(&pi, k);
+            assert!(c.is_finite(), "d={}, k={k}: c={c}", pi.len());
+            let want = pi.iter().fold(0.0f64, |m, &p| m.max(1.0 / p));
+            assert!(
+                (c - want).abs() <= 1e-9 * want.max(1.0),
+                "d={}, k={k}: c={c}, want closed-form {want}",
+                pi.len()
+            );
+            // the solved c saturates every inclusion probability
+            for &p in &pi {
+                assert!((c * p).min(1.0) >= 1.0 - 1e-12, "d={}, k={k}", pi.len());
+            }
         }
     }
 
@@ -1037,6 +1132,7 @@ mod tests {
             iterations: IterSpec::Fixed(0),
             layer_dependent: false,
             sequential: false,
+            plan: None,
         };
         let ns = NeighborSampler { fanouts: vec![10] };
         let mut labor_v = 0usize;
@@ -1073,6 +1169,7 @@ mod tests {
             iterations: IterSpec::Fixed(0),
             layer_dependent: false,
             sequential: true,
+            plan: None,
         };
         let seeds: Vec<u32> = (0..60).collect();
         let sl = s.sample_layer_fresh(&g, &seeds, ctx(5));
@@ -1106,6 +1203,7 @@ mod tests {
             iterations: IterSpec::Fixed(0),
             layer_dependent: true,
             sequential: false,
+            plan: None,
         };
         let a = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 0));
         let b = s.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 1));
@@ -1117,6 +1215,7 @@ mod tests {
             iterations: IterSpec::Fixed(0),
             layer_dependent: false,
             sequential: false,
+            plan: None,
         };
         let c = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 0));
         let d = s2.sample_layer_fresh(&g, &[1, 2, 3], SampleCtx::new(4, 1));

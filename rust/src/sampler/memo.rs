@@ -1,0 +1,358 @@
+//! Hot-vertex sample memoization for serving (tentpole part 3).
+//!
+//! Within a serving *variate epoch* — a span of flushes that share one
+//! `batch_seed`, hence one set of LABOR variates `r_t` (the `HashRng` is
+//! keyed by `mix2(batch_seed, layer)` and then by vertex id) — a seed's
+//! LABOR-0 block is a **pure function** of `(layer, fanout, vertex)`:
+//!
+//! * `c_s` is the closed form `min(1, k/d_s)` (π stays uniform with zero
+//!   fixed-point iterations),
+//! * each neighbor's variate is `rng.uniform(t)` — global-vertex-keyed,
+//!   independent of which batch the seed appears in,
+//! * the Hajek weights normalize within the seed's own block.
+//!
+//! [`SampleMemo`] caches those blocks for the hottest vertices (vertex id
+//! `< rows` — on a degree-ordered layout, exactly the high-degree prefix
+//! the `DegreeOrderedCache` keeps resident), so repeated flushes that
+//! touch the same hot vertices — the defining shape of Zipf-distributed
+//! serving traffic — reuse picks instead of recomputing them. The
+//! assembled [`Mfg`] is **bit-identical** to
+//! `MultiLayerSampler::sample_with_cap` for the supported sampler kind
+//! (pinned by `tests/hotpath_identity.rs`): per-seed blocks concatenate
+//! in seed order, exactly as the live per-seed loop emits them, and the
+//! input finalization is the shared [`finalize_inputs_in`].
+//!
+//! Epoch discipline: callers pick the epoch seed (serving derives it from
+//! an explicit epoch counter so a bump refreshes every variate); a
+//! [`begin_epoch`](SampleMemo::begin_epoch) with a new seed drops every
+//! cached block. Training paths draw a fresh `batch_seed` per batch and
+//! must NOT use the memo — that is why it is a separate entry point
+//! rather than a layer inside the samplers.
+
+use super::{finalize_inputs_in, IterSpec, Mfg, SampledLayer, SamplerKind, SamplerScratch};
+use crate::graph::CscGraph;
+use crate::rng::{mix2, HashRng};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+/// One memoized per-seed LABOR-0 block: the picked in-neighbors (global
+/// ids, adjacency order) and their Hajek-normalized weights.
+struct MemoEntry {
+    edge_src: Vec<u32>,
+    weights: Vec<f32>,
+}
+
+/// Bounded memo cache over hot-vertex LABOR-0 sample blocks. See the
+/// module docs for the purity argument and the epoch contract.
+pub struct SampleMemo {
+    /// vertices with id `< rows` are memoized; the rest compute live
+    rows: usize,
+    /// epoch seed the cached blocks were drawn under
+    epoch_seed: Option<u64>,
+    /// per-layer block cache, keyed by (effective fanout, vertex)
+    layers: Vec<HashMap<(usize, u32), MemoEntry>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl SampleMemo {
+    /// A memo covering the `rows` lowest vertex ids (0 disables caching —
+    /// every block computes live, which is still bit-identical).
+    pub fn new(rows: usize) -> Self {
+        Self { rows, epoch_seed: None, layers: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    /// Whether the memo's purity argument holds for `kind`: plain LABOR
+    /// with zero fixed-point iterations and per-layer variate streams.
+    /// Importance iterations make `c_s` batch-dependent (π couples seeds),
+    /// sequential rounding ranks within the batch, layer-dependent
+    /// variates share one stream across layers of differing fanout, and
+    /// the other samplers have batch-level collective state — none of
+    /// those are pure per (layer, fanout, vertex).
+    pub fn supports(kind: &SamplerKind) -> bool {
+        matches!(
+            kind,
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }
+        )
+    }
+
+    /// Number of memoizable vertex rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Enter the epoch keyed by `epoch_seed`: a change drops every cached
+    /// block (their variates are stale); re-entering the current epoch is
+    /// free. Called implicitly by [`sample`](Self::sample).
+    pub fn begin_epoch(&mut self, epoch_seed: u64) {
+        if self.epoch_seed != Some(epoch_seed) {
+            for m in &mut self.layers {
+                m.clear();
+            }
+            self.epoch_seed = Some(epoch_seed);
+        }
+    }
+
+    /// `(hits, misses)` since construction or the last
+    /// [`take_counters`](Self::take_counters). A "miss" is any live
+    /// block computation (first-touch of a hot vertex or a beyond-`rows`
+    /// vertex); hit rate = hits / (hits + misses).
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Read and reset the hit/miss counters.
+    pub fn take_counters(&mut self) -> (u64, u64) {
+        let out = (self.hits, self.misses);
+        self.hits = 0;
+        self.misses = 0;
+        out
+    }
+
+    /// Sample the full MFG for `seeds` under this epoch — bit-identical
+    /// to `MultiLayerSampler::sample_with_cap(g, seeds, epoch_seed,
+    /// fanout_cap, scratch)` with the supported LABOR-0 kind, but reusing
+    /// memoized blocks for hot vertices. `fanouts` is the per-layer
+    /// fanout vector; `fanout_cap` is serving's degradation rung.
+    pub fn sample(
+        &mut self,
+        g: &CscGraph,
+        fanouts: &[usize],
+        fanout_cap: Option<u32>,
+        seeds: &[u32],
+        epoch_seed: u64,
+        scratch: &mut SamplerScratch,
+    ) -> Mfg {
+        self.begin_epoch(epoch_seed);
+        let mut layers = Vec::with_capacity(fanouts.len());
+        let mut cur: Vec<u32> = seeds.to_vec();
+        for layer in 0..fanouts.len() {
+            // SampleCtx::cap_fanout, verbatim
+            let k = match fanout_cap {
+                Some(c) => fanouts[layer].min(c as usize),
+                None => fanouts[layer],
+            };
+            let sl = self.sample_layer(g, &cur, layer, k, epoch_seed, scratch);
+            cur.clear();
+            cur.extend_from_slice(&sl.inputs);
+            layers.push(sl);
+        }
+        Mfg { layers }
+    }
+
+    /// One LABOR-0 layer assembled from memoized + live per-seed blocks.
+    fn sample_layer(
+        &mut self,
+        g: &CscGraph,
+        seeds: &[u32],
+        layer: usize,
+        k: usize,
+        epoch_seed: u64,
+        scratch: &mut SamplerScratch,
+    ) -> SampledLayer {
+        // the live path's per-layer stream: mix2(batch_seed, layer)
+        let rng = HashRng::new(mix2(epoch_seed, layer as u64));
+        let mut edge_src = std::mem::take(&mut scratch.edge_src);
+        let mut edge_dst = std::mem::take(&mut scratch.edge_dst);
+        let mut raw = std::mem::take(&mut scratch.raw);
+        edge_src.clear();
+        edge_dst.clear();
+        let mut edge_weight: Vec<f32> = Vec::with_capacity(seeds.len() * k);
+        while self.layers.len() <= layer {
+            self.layers.push(HashMap::new());
+        }
+        let rows = self.rows;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let map = &mut self.layers[layer];
+        for (si, &s) in seeds.iter().enumerate() {
+            if (s as usize) < rows {
+                let entry = match map.entry((k, s)) {
+                    Entry::Occupied(e) => {
+                        hits += 1;
+                        e.into_mut()
+                    }
+                    Entry::Vacant(v) => {
+                        misses += 1;
+                        v.insert(compute_block(g, s, k, &rng, &mut raw))
+                    }
+                };
+                for &t in &entry.edge_src {
+                    edge_src.push(t);
+                    edge_dst.push(si as u32);
+                }
+                edge_weight.extend_from_slice(&entry.weights);
+            } else {
+                // beyond the memo rows: compute straight into the output
+                misses += 1;
+                raw.clear();
+                let nbrs = g.in_neighbors(s);
+                let d = nbrs.len();
+                if d == 0 {
+                    continue;
+                }
+                let cs = if k >= d { 1.0 } else { k as f64 / d as f64 };
+                for &t in nbrs {
+                    let p = (cs * 1.0).min(1.0);
+                    if rng.uniform(t as u64) <= p {
+                        edge_src.push(t);
+                        edge_dst.push(si as u32);
+                        raw.push(1.0 / p);
+                    }
+                }
+                let sum: f64 = raw.iter().sum();
+                edge_weight.extend(raw.iter().map(|&r| (r / sum) as f32));
+            }
+        }
+        self.hits += hits;
+        self.misses += misses;
+        let inputs = finalize_inputs_in(
+            &mut scratch.map,
+            &mut scratch.inputs_fill,
+            g.num_vertices(),
+            seeds,
+            &mut edge_src,
+        );
+        let out = SampledLayer {
+            seeds: seeds.to_vec(),
+            inputs,
+            edge_src: edge_src.clone(),
+            edge_dst: edge_dst.clone(),
+            edge_weight,
+        };
+        scratch.edge_src = edge_src;
+        scratch.edge_dst = edge_dst;
+        scratch.raw = raw;
+        out
+    }
+}
+
+/// One seed's LABOR-0 block: the live per-seed loop of
+/// `LaborLayerState::sample_in` (uniform π, closed-form `c_s`) with the
+/// seed-local Hajek normalization — identical arithmetic in identical
+/// order, so the bits match the batch path.
+fn compute_block(g: &CscGraph, s: u32, k: usize, rng: &HashRng, raw: &mut Vec<f64>) -> MemoEntry {
+    raw.clear();
+    let nbrs = g.in_neighbors(s);
+    let d = nbrs.len();
+    let mut edge_src = Vec::new();
+    if d == 0 {
+        return MemoEntry { edge_src, weights: Vec::new() };
+    }
+    let cs = if k >= d { 1.0 } else { k as f64 / d as f64 };
+    for &t in nbrs {
+        let p = (cs * 1.0).min(1.0);
+        if rng.uniform(t as u64) <= p {
+            edge_src.push(t);
+            raw.push(1.0 / p);
+        }
+    }
+    let sum: f64 = raw.iter().sum();
+    let weights = raw.iter().map(|&r| (r / sum) as f32).collect();
+    MemoEntry { edge_src, weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::testutil::{skewed_graph, test_graph};
+    use crate::sampler::MultiLayerSampler;
+
+    fn labor0() -> SamplerKind {
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }
+    }
+
+    fn assert_mfg_eq(a: &Mfg, b: &Mfg, what: &str) {
+        assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+        for (l, (x, y)) in a.layers.iter().zip(&b.layers).enumerate() {
+            assert_eq!(x.seeds, y.seeds, "{what}: layer {l} seeds");
+            assert_eq!(x.inputs, y.inputs, "{what}: layer {l} inputs");
+            assert_eq!(x.edge_src, y.edge_src, "{what}: layer {l} edge_src");
+            assert_eq!(x.edge_dst, y.edge_dst, "{what}: layer {l} edge_dst");
+            let xw: Vec<u32> = x.edge_weight.iter().map(|w| w.to_bits()).collect();
+            let yw: Vec<u32> = y.edge_weight.iter().map(|w| w.to_bits()).collect();
+            assert_eq!(xw, yw, "{what}: layer {l} edge_weight bits");
+        }
+    }
+
+    #[test]
+    fn supports_only_pure_labor0() {
+        assert!(SampleMemo::supports(&labor0()));
+        assert!(!SampleMemo::supports(&SamplerKind::Labor {
+            iterations: IterSpec::Fixed(1),
+            layer_dependent: false
+        }));
+        assert!(!SampleMemo::supports(&SamplerKind::Labor {
+            iterations: IterSpec::Fixed(0),
+            layer_dependent: true
+        }));
+        assert!(!SampleMemo::supports(&SamplerKind::LaborSequential {
+            iterations: IterSpec::Fixed(0),
+            layer_dependent: false
+        }));
+        assert!(!SampleMemo::supports(&SamplerKind::Neighbor));
+    }
+
+    #[test]
+    fn memoized_equals_live_sampler_bitwise() {
+        for g in [test_graph(), skewed_graph()] {
+            let fanouts = [5usize, 3];
+            let live = MultiLayerSampler::new(labor0(), &fanouts);
+            let mut memo = SampleMemo::new(g.num_vertices() / 2);
+            let mut scratch = SamplerScratch::new();
+            let seeds: Vec<u32> = (0..80u32).collect();
+            for cap in [None, Some(2u32)] {
+                for epoch in [7u64, 8] {
+                    let want = live.sample_with_cap(&g, &seeds, epoch, cap, &mut scratch);
+                    // cold + warm memo passes must both match
+                    let a = memo.sample(&g, &fanouts, cap, &seeds, epoch, &mut scratch);
+                    let b = memo.sample(&g, &fanouts, cap, &seeds, epoch, &mut scratch);
+                    assert_mfg_eq(&a, &want, "cold memo vs live");
+                    assert_mfg_eq(&b, &want, "warm memo vs live");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_pass_hits_and_epoch_bump_invalidates() {
+        let g = test_graph();
+        let fanouts = [5usize];
+        let mut memo = SampleMemo::new(g.num_vertices());
+        let mut scratch = SamplerScratch::new();
+        let seeds: Vec<u32> = (0..50u32).collect();
+        let a = memo.sample(&g, &fanouts, None, &seeds, 1, &mut scratch);
+        let (h0, m0) = memo.take_counters();
+        assert_eq!(h0, 0, "cold pass cannot hit");
+        assert!(m0 >= seeds.len() as u64);
+        let b = memo.sample(&g, &fanouts, None, &seeds, 1, &mut scratch);
+        let (h1, m1) = memo.take_counters();
+        assert_eq!(m1, 0, "warm same-epoch pass must be all hits");
+        assert_eq!(h1, seeds.len() as u64);
+        assert_mfg_eq(&a, &b, "same epoch replay");
+        // epoch bump: everything recomputes, and picks actually change
+        let c = memo.sample(&g, &fanouts, None, &seeds, 2, &mut scratch);
+        let (h2, m2) = memo.take_counters();
+        assert_eq!(h2, 0, "bumped epoch must not reuse stale variates");
+        assert!(m2 >= seeds.len() as u64);
+        assert_ne!(
+            a.layers[0].edge_src, c.layers[0].edge_src,
+            "fresh variates must change picks"
+        );
+    }
+
+    #[test]
+    fn zero_rows_disables_caching_but_stays_identical() {
+        let g = test_graph();
+        let fanouts = [4usize, 4];
+        let live = MultiLayerSampler::new(labor0(), &fanouts);
+        let mut memo = SampleMemo::new(0);
+        let mut scratch = SamplerScratch::new();
+        let seeds: Vec<u32> = (10..60u32).collect();
+        let want = live.sample_with_cap(&g, &seeds, 5, None, &mut scratch);
+        let got = memo.sample(&g, &fanouts, None, &seeds, 5, &mut scratch);
+        assert_mfg_eq(&got, &want, "rows=0 vs live");
+        let (h, _) = memo.counters();
+        assert_eq!(h, 0);
+    }
+}

@@ -11,15 +11,21 @@
 
 pub mod labor;
 pub mod ladies;
+pub mod memo;
 pub mod neighbor;
 pub mod par;
 pub mod pladies;
+pub mod plan;
 pub mod poisson;
+pub mod pool;
 pub mod scratch;
 pub mod view;
 pub mod weighted;
 
+pub use memo::SampleMemo;
 pub use par::{partition_seeds, ScratchPool};
+pub use plan::SamplePlan;
+pub use pool::{configure_pool_threads, pool_live_threads};
 pub use scratch::{EpochMap, SamplerScratch};
 pub use view::{ExtractedSeed, MfgSeedView};
 
@@ -402,6 +408,7 @@ impl MultiLayerSampler {
                     iterations: *iterations,
                     layer_dependent: *layer_dependent,
                     sequential: false,
+                    plan: None,
                 })
             }
             SamplerKind::LaborSequential { iterations, layer_dependent } => {
@@ -410,6 +417,7 @@ impl MultiLayerSampler {
                     iterations: *iterations,
                     layer_dependent: *layer_dependent,
                     sequential: true,
+                    plan: None,
                 })
             }
             SamplerKind::Ladies { budgets } => {
@@ -420,6 +428,41 @@ impl MultiLayerSampler {
             }
         };
         Self { kind, fanouts: fanouts.to_vec(), sampler }
+    }
+
+    /// Precompute a [`SamplePlan`] for `g` covering this sampler's layer
+    /// fanouts plus `extra_fanouts` (e.g. the serving degradation ladder's
+    /// rungs) and attach it to the layer sampler, so the initial uniform-π
+    /// `c_s` solve of every layer becomes a table lookup. Only the LABOR
+    /// kinds consult plans (their initial π is graph-static); for every
+    /// other kind this returns `false` and leaves the sampler untouched.
+    /// Output with a plan is **bit-identical** to output without one
+    /// (`tests/hotpath_identity.rs`); a plan built here never outlives its
+    /// validity — lookups re-check the graph fingerprint per layer and
+    /// fall back to the live solve on any mismatch.
+    pub fn enable_plan(&mut self, g: &CscGraph, extra_fanouts: &[usize]) -> bool {
+        let (iterations, layer_dependent, sequential) = match &self.kind {
+            SamplerKind::Labor { iterations, layer_dependent } => {
+                (*iterations, *layer_dependent, false)
+            }
+            SamplerKind::LaborSequential { iterations, layer_dependent } => {
+                (*iterations, *layer_dependent, true)
+            }
+            _ => return false,
+        };
+        let mut ks = self.fanouts.clone();
+        ks.extend_from_slice(extra_fanouts);
+        // the unweighted LABOR kinds use uniform π regardless of graph
+        // weights, so the plan is always built in uniform (degree) mode
+        let plan = std::sync::Arc::new(SamplePlan::build_uniform(g, &ks));
+        self.sampler = Box::new(labor::LaborSampler {
+            fanouts: self.fanouts.clone(),
+            iterations,
+            layer_dependent,
+            sequential,
+            plan: Some(plan),
+        });
+        true
     }
 
     /// Number of layers sampled per batch.

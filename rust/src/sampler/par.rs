@@ -46,11 +46,16 @@
 //!   `finalize_inputs_in` pass as sequential sampling. Hajek row sums are
 //!   per-seed and therefore shard-local.
 //!
-//! The worker pool is a scoped `std::thread` fan-out ([`run_shards`]): no
-//! external dependencies (the workspace is offline), no `'static` bounds,
-//! and shard 0 always runs on the calling thread. Phases that must see
-//! each other's results (discovery → merge → fixed point → sampling) are
-//! separate fan-outs with sequential merge steps in between.
+//! Shard execution ([`run_shards`]) routes through the persistent
+//! [`ShardPool`](super::pool::ShardPool) by default — long-lived workers
+//! fed through an injector queue, so steady-state sampling spawns no
+//! threads at all — with a scoped `std::thread` fan-out as the
+//! `LABOR_NO_POOL=1` fallback (no external dependencies, no `'static`
+//! bounds). Either way shard 0 runs on the calling thread, every shard
+//! joins before the call returns, and output is bit-identical. Phases
+//! that must see each other's results (discovery → merge → fixed point →
+//! sampling) are separate fan-outs with sequential merge steps in
+//! between.
 
 use super::scratch::SamplerScratch;
 use super::{finalize_inputs_in, SampledLayer};
@@ -193,10 +198,13 @@ impl ScratchPool {
     }
 }
 
-/// Run `f(shard_index, worker_scratch)` for every shard on a scoped
-/// thread pool: shards `1..n` are spawned, shard 0 runs on the calling
-/// thread, and the scope joins everything before returning. With a single
-/// worker this degenerates to a plain call (no thread traffic at all).
+/// Run `f(shard_index, worker_scratch)` for every shard: shards `1..n`
+/// execute on the persistent [`ShardPool`](super::pool::ShardPool) (or on
+/// freshly scoped threads when the pool is disabled via `LABOR_NO_POOL`),
+/// shard 0 runs on the calling thread, and every shard joins before this
+/// returns. With a single worker this degenerates to a plain call (no
+/// thread traffic at all). Bit-identical across all three execution
+/// modes — see the module docs and `tests/hotpath_identity.rs`.
 pub(crate) fn run_shards<F>(workers: &mut [SamplerScratch], f: F)
 where
     F: Fn(usize, &mut SamplerScratch) + Sync,
@@ -205,6 +213,10 @@ where
         if let Some(w) = workers.first_mut() {
             f(0, w);
         }
+        return;
+    }
+    if super::pool::pool_enabled() {
+        super::pool::global().run(workers, f);
         return;
     }
     std::thread::scope(|scope| {

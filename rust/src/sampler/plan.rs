@@ -1,0 +1,402 @@
+//! Static sampling plans: once-per-(graph, fanout) precompute of LABOR's
+//! per-seed `c_s` solves.
+//!
+//! For unweighted LABOR the initial importance distribution is uniform
+//! (`π⁰ = 1`), and for weighted LABOR it is the static adjacency weights
+//! (`π⁰ = A`, Eq. 25) — in both cases π⁰ depends only on the **graph**,
+//! not the batch. The first `c_s` solve of every layer (the *only* solve
+//! for LABOR-0 / W-LABOR-0, the dominant serving configurations) is
+//! therefore a pure function of `(vertex, fanout)`, yet the live path
+//! re-derives it per seed per batch — for weighted LABOR that is an
+//! O(d log d) sort + saturation scan per seed per flush
+//! ([`solve_cs_weighted`]).
+//!
+//! A [`SamplePlan`] hoists that work out of the hot path:
+//!
+//! * `c0[fanout][vertex]` — the solved `c*` itself for every configured
+//!   fanout, built by running the **exact** live formulas (the closed-form
+//!   `min(1, k/d)` of `LaborLayerState::recompute_c`, and
+//!   [`solve_cs_weighted`] on the adjacency-order weight slices), so a
+//!   table lookup is bit-identical to the live solve;
+//! * for weighted graphs, the per-vertex sorted-π / reciprocal-suffix
+//!   state ([`SamplePlan::solve_for_fanout`]) so `c*` for **any** fanout —
+//!   e.g. a degradation-ladder rung added after plan build — is a linear
+//!   saturation scan with no sort, agreeing with the live solver to
+//!   ≤ 1e-12 (in fact bit-identically: the stored sums replicate the live
+//!   accumulation order).
+//!
+//! Tables are indexed by vertex id, so on a degree-ordered layout
+//! (`VertexPerm::degree_ordered`) the hot rows form a contiguous prefix —
+//! the same prefix the `DegreeOrderedCache` keeps resident — and the plan
+//! composes with relabeled graphs with no extra translation.
+//!
+//! Plans validate against the graph they serve via a cheap fingerprint
+//! (vertex count, edge count, weightedness): a row lookup on a
+//! non-matching graph or an unplanned fanout returns `None` and the
+//! samplers fall back to the live solve, so enabling a plan can never
+//! change output — only skip recomputation (`tests/hotpath_identity.rs`
+//! pins plan-on ≡ plan-off to the bit).
+
+use super::weighted::solve_cs_weighted;
+use crate::graph::CscGraph;
+
+/// Precomputed per-(graph, fanout) solver state. Build once per graph via
+/// [`build`](Self::build), share behind an `Arc`, and attach to samplers
+/// with `MultiLayerSampler::enable_plan` (or the `plan` field on
+/// `LaborSampler` / `WeightedLaborSampler`).
+pub struct SamplePlan {
+    num_vertices: usize,
+    num_edges: u64,
+    weighted: bool,
+    /// planned fanouts, sorted and deduplicated
+    fanouts: Vec<usize>,
+    /// in-degree per vertex (closed-form uniform solves + range checks)
+    degree: Vec<u32>,
+    /// solved `c*`, fanout-major: `c0[fi * num_vertices + v]`
+    c0: Vec<f64>,
+    /// CSR offsets into the per-vertex sorted arrays below (weighted only)
+    sorted_off: Vec<usize>,
+    /// π values per vertex, π-descending (weighted only; π = A here)
+    sorted_pi: Vec<f64>,
+    /// suffix sums `Σ_{j≥m} a_j²/π_j` in sorted order (weighted only)
+    suffix: Vec<f64>,
+    /// prefix sums `Σ_{j<m} a_j²` in sorted order (weighted only)
+    prefix_a2: Vec<f64>,
+    /// `Σ a` / `Σ a²` per vertex, adjacency accumulation order
+    sum_a: Vec<f64>,
+    sum_a2: Vec<f64>,
+}
+
+impl SamplePlan {
+    /// Precompute solver state for `g` at the given fanouts (zero fanouts
+    /// are dropped; duplicates collapse). Weightedness is taken from the
+    /// graph. O(|E|) for unweighted graphs, O(|E| log d_max + F·|V|·d̄)
+    /// for weighted ones — paid once, off the sampling path.
+    pub fn build(g: &CscGraph, fanouts: &[usize]) -> Self {
+        Self::build_mode(g, fanouts, g.weights.is_some())
+    }
+
+    /// [`build`](Self::build) forcing **uniform** (degree-only) tables
+    /// even when `g` carries edge weights — for the unweighted LABOR
+    /// kinds, which ignore weights, on weight-bearing graphs.
+    pub fn build_uniform(g: &CscGraph, fanouts: &[usize]) -> Self {
+        Self::build_mode(g, fanouts, false)
+    }
+
+    fn build_mode(g: &CscGraph, fanouts: &[usize], weighted: bool) -> Self {
+        let nv = g.num_vertices();
+        let mut fs: Vec<usize> = fanouts.iter().copied().filter(|&k| k > 0).collect();
+        fs.sort_unstable();
+        fs.dedup();
+        let degree: Vec<u32> = (0..nv as u32).map(|v| g.in_degree(v) as u32).collect();
+
+        let mut plan = Self {
+            num_vertices: nv,
+            num_edges: g.num_edges(),
+            weighted,
+            fanouts: fs,
+            degree,
+            c0: Vec::new(),
+            sorted_off: vec![0],
+            sorted_pi: Vec::new(),
+            suffix: Vec::new(),
+            prefix_a2: Vec::new(),
+            sum_a: Vec::new(),
+            sum_a2: Vec::new(),
+        };
+
+        if weighted {
+            // replicate solve_cs_weighted's internals per vertex, in its
+            // accumulation order, so the stored state reproduces the live
+            // solver bit-for-bit (π⁰ = A: pi and a are the same slice)
+            let mut w64: Vec<f64> = Vec::new();
+            let mut a2: Vec<f64> = Vec::new();
+            let mut order: Vec<usize> = Vec::new();
+            let mut suf: Vec<f64> = Vec::new();
+            for v in 0..nv as u32 {
+                let ws = g.in_weights(v).expect("weighted plan needs edge weights");
+                let d = ws.len();
+                w64.clear();
+                w64.extend(ws.iter().map(|&w| w as f64));
+                a2.clear();
+                a2.extend(w64.iter().map(|x| x * x));
+                plan.sum_a.push(w64.iter().sum::<f64>());
+                plan.sum_a2.push(a2.iter().sum::<f64>());
+                order.clear();
+                order.extend(0..d);
+                order.sort_unstable_by(|&i, &j| w64[j].partial_cmp(&w64[i]).unwrap());
+                suf.clear();
+                suf.resize(d + 1, 0.0);
+                for m in (0..d).rev() {
+                    let i = order[m];
+                    suf[m] = suf[m + 1] + a2[i] / w64[i];
+                }
+                let mut pre = 0.0f64;
+                for m in 0..d {
+                    let i = order[m];
+                    plan.sorted_pi.push(w64[i]);
+                    plan.suffix.push(suf[m]);
+                    plan.prefix_a2.push(pre);
+                    pre += a2[i];
+                }
+                plan.sorted_off.push(plan.sorted_pi.len());
+            }
+        }
+
+        let mut c0 = Vec::with_capacity(plan.fanouts.len() * nv);
+        for fi in 0..plan.fanouts.len() {
+            let k = plan.fanouts[fi];
+            for v in 0..nv {
+                c0.push(if weighted {
+                    plan.solve_weighted(v, k)
+                } else {
+                    plan.solve_uniform(v, k)
+                });
+            }
+        }
+        plan.c0 = c0;
+        plan
+    }
+
+    /// Whether this plan was built for (a graph indistinguishable from)
+    /// `g`: vertex and edge counts must agree. Weighted plans carry the
+    /// graph's weights in their state, so they additionally require the
+    /// graph to be weighted; uniform plans use only degrees and are valid
+    /// on any matching graph (a LABOR sampler ignores weights anyway).
+    pub fn matches(&self, g: &CscGraph) -> bool {
+        self.num_vertices == g.num_vertices()
+            && self.num_edges == g.num_edges()
+            && (!self.weighted || g.weights.is_some())
+    }
+
+    /// The planned fanouts (sorted, deduplicated).
+    pub fn fanouts(&self) -> &[usize] {
+        &self.fanouts
+    }
+
+    /// Whether the plan carries weighted solver state.
+    pub fn is_weighted(&self) -> bool {
+        self.weighted
+    }
+
+    fn fanout_index(&self, k: usize) -> Option<usize> {
+        self.fanouts.binary_search(&k).ok()
+    }
+
+    /// The per-vertex `c*` row for fanout `k` on an **unweighted** graph,
+    /// or `None` when the plan is weighted, was built for a different
+    /// graph, or does not cover `k` (callers then fall back to the live
+    /// closed form — same values, just recomputed).
+    pub fn uniform_row(&self, g: &CscGraph, k: usize) -> Option<&[f64]> {
+        if self.weighted || !self.matches(g) {
+            return None;
+        }
+        self.row(k)
+    }
+
+    /// The per-vertex `c*` row for fanout `k` on a **weighted** graph;
+    /// `None` under the same conditions as [`uniform_row`](Self::uniform_row).
+    pub fn weighted_row(&self, g: &CscGraph, k: usize) -> Option<&[f64]> {
+        if !self.weighted || !self.matches(g) {
+            return None;
+        }
+        self.row(k)
+    }
+
+    fn row(&self, k: usize) -> Option<&[f64]> {
+        let fi = self.fanout_index(k)?;
+        Some(&self.c0[fi * self.num_vertices..(fi + 1) * self.num_vertices])
+    }
+
+    /// Solve `c*` for vertex `v` at an **arbitrary** fanout `k` from the
+    /// precomputed state — no sort, no table requirement. For weighted
+    /// plans this is a linear saturation scan over the stored sorted-π
+    /// state; for unweighted plans it is the closed form. Agrees with
+    /// [`solve_cs_weighted`] / the samplers' uniform fast path
+    /// bit-for-bit (pinned to 1e-12 by `tests/hotpath_identity.rs`).
+    pub fn solve_for_fanout(&self, v: u32, k: usize) -> f64 {
+        debug_assert!(k > 0);
+        let vi = v as usize;
+        if self.weighted {
+            self.solve_weighted(vi, k)
+        } else {
+            self.solve_uniform(vi, k)
+        }
+    }
+
+    /// `LaborLayerState::recompute_c`'s uniform-π closed form.
+    fn solve_uniform(&self, v: usize, k: usize) -> f64 {
+        let d = self.degree[v] as usize;
+        if d == 0 {
+            0.0
+        } else if k >= d {
+            1.0
+        } else {
+            k as f64 / d as f64
+        }
+    }
+
+    /// [`solve_cs_weighted`] replayed over the stored per-vertex state:
+    /// identical branch structure and accumulation order, minus the sort
+    /// and suffix-sum passes it pays per call.
+    fn solve_weighted(&self, v: usize, k: usize) -> f64 {
+        let (lo, hi) = (self.sorted_off[v], self.sorted_off[v + 1]);
+        let d = hi - lo;
+        if d == 0 {
+            return 0.0;
+        }
+        let vv = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
+        let spi = &self.sorted_pi[lo..hi];
+        if vv <= 0.0 {
+            // live path: fold of max(1/π) over adjacency order; rounding
+            // of 1/x is monotone, so 1/min(π) is the same bit pattern
+            return 1.0 / spi[d - 1];
+        }
+        let sa = self.sum_a[v];
+        let rhs = self.sum_a2[v] + vv * sa * sa;
+        let suffix = &self.suffix[lo..hi];
+        let prefix = &self.prefix_a2[lo..hi];
+        for m in 0..d {
+            let denom = rhs - prefix[m];
+            if denom <= 0.0 {
+                break;
+            }
+            let c = suffix[m] / denom;
+            let upper_ok = m == 0 || c * spi[m - 1] >= 1.0 - 1e-12;
+            let lower_ok = c * spi[m] < 1.0 + 1e-12;
+            if upper_ok && lower_ok {
+                return c;
+            }
+        }
+        suffix[0] / rhs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::labor::solve_cs_sorted;
+    use super::*;
+    use crate::graph::builder::CscBuilder;
+    use crate::rng::StreamRng;
+    use crate::sampler::testutil::test_graph;
+
+    fn weighted_graph(seed: u64) -> CscGraph {
+        let mut rng = StreamRng::new(seed);
+        let n = 120u32;
+        let mut b = CscBuilder::new(n as usize);
+        for s in 0..n {
+            let deg = 2 + rng.below(20) as usize;
+            let mut used = std::collections::HashSet::new();
+            for _ in 0..deg {
+                let t = rng.below(n as u64) as u32;
+                if t != s && used.insert(t) {
+                    b.weighted_edge(t, s, 0.1 + rng.next_f32() * 2.0);
+                }
+            }
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn uniform_table_matches_closed_form_and_sorted_solver() {
+        let g = test_graph();
+        let fanouts = [2usize, 5, 8];
+        let plan = SamplePlan::build(&g, &fanouts);
+        assert!(plan.matches(&g));
+        assert!(!plan.is_weighted());
+        for &k in &fanouts {
+            let row = plan.uniform_row(&g, k).unwrap();
+            for v in 0..g.num_vertices() as u32 {
+                let d = g.in_degree(v);
+                let live = if d == 0 {
+                    0.0
+                } else if k >= d {
+                    1.0
+                } else {
+                    k as f64 / d as f64
+                };
+                assert_eq!(row[v as usize].to_bits(), live.to_bits(), "v={v} k={k}");
+                if d > k {
+                    // and the table agrees with the exact sorted solve on
+                    // uniform π to well under the 1e-12 contract
+                    let exact = solve_cs_sorted(&vec![1.0; d], k);
+                    assert!(
+                        (row[v as usize] - exact).abs() <= 1e-12 * exact.max(1.0),
+                        "v={v} k={k}: table {} vs sorted {exact}",
+                        row[v as usize]
+                    );
+                }
+            }
+        }
+        // unplanned fanout and wrong-mode lookups miss
+        assert!(plan.uniform_row(&g, 3).is_none());
+        assert!(plan.weighted_row(&g, 5).is_none());
+    }
+
+    #[test]
+    fn weighted_table_is_bit_identical_to_live_solver() {
+        let g = weighted_graph(11);
+        let fanouts = [3usize, 6];
+        let plan = SamplePlan::build(&g, &fanouts);
+        assert!(plan.matches(&g));
+        assert!(plan.is_weighted());
+        for &k in &fanouts {
+            let row = plan.weighted_row(&g, k).unwrap();
+            for v in 0..g.num_vertices() as u32 {
+                let ws = g.in_weights(v).unwrap();
+                let d = ws.len();
+                let live = if d == 0 {
+                    0.0
+                } else {
+                    let w64: Vec<f64> = ws.iter().map(|&w| w as f64).collect();
+                    let vv = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
+                    solve_cs_weighted(&w64, &w64, vv)
+                };
+                assert_eq!(row[v as usize].to_bits(), live.to_bits(), "v={v} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_for_fanout_covers_unplanned_fanouts() {
+        let g = weighted_graph(23);
+        // plan only covers k=5; ask for the degradation-ladder rungs too
+        let plan = SamplePlan::build(&g, &[5]);
+        for k in [1usize, 2, 4, 5, 7, 10, 64] {
+            for v in 0..g.num_vertices() as u32 {
+                let ws = g.in_weights(v).unwrap();
+                let d = ws.len();
+                let live = if d == 0 {
+                    0.0
+                } else {
+                    let w64: Vec<f64> = ws.iter().map(|&w| w as f64).collect();
+                    let vv = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
+                    solve_cs_weighted(&w64, &w64, vv)
+                };
+                let got = plan.solve_for_fanout(v, k);
+                assert!(
+                    (got - live).abs() <= 1e-12 * live.abs().max(1.0),
+                    "v={v} k={k}: plan {got} vs live {live}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_rejects_other_graphs() {
+        let g = test_graph();
+        let plan = SamplePlan::build(&g, &[5]);
+        let other = weighted_graph(3);
+        assert!(!plan.matches(&other));
+        assert!(plan.uniform_row(&other, 5).is_none());
+        let wplan = SamplePlan::build(&other, &[5]);
+        assert!(wplan.weighted_row(&g, 5).is_none(), "weighted plan must reject unweighted g");
+    }
+
+    #[test]
+    fn fanouts_are_sorted_and_deduped() {
+        let g = test_graph();
+        let plan = SamplePlan::build(&g, &[8, 2, 8, 0, 5, 2]);
+        assert_eq!(plan.fanouts(), &[2, 5, 8]);
+    }
+}

@@ -1,0 +1,550 @@
+//! Persistent shard-worker pool: long-lived threads behind
+//! [`run_shards`](super::par::run_shards), replacing the per-call scoped
+//! `std::thread` fan-out.
+//!
+//! The scoped fan-out pays a thread spawn + join for every layer of every
+//! batch. Training amortizes that over large batches, but the serving
+//! front end flushes small coalesced batches on sub-millisecond deadline
+//! windows — there the spawn cost is a real fraction of the layer budget.
+//! This pool spawns shard workers once and feeds them work through a
+//! shared injector queue, so steady-state sharded sampling performs no
+//! thread creation at all.
+//!
+//! ## Determinism contract
+//!
+//! The pool changes *where* shard closures run, never *what* they compute
+//! or in what order results are combined:
+//!
+//! * shard `i` still runs `f(i, &mut workers[i])` exactly once, on its own
+//!   arena — the same disjoint-borrow structure as the scoped fan-out;
+//! * shard 0 still runs on the calling thread (tasks are queued only for
+//!   shards `1..n`);
+//! * [`ShardPool::run`] blocks until **every** submitted shard has
+//!   finished before returning, so the caller's merge phases observe all
+//!   shard results exactly as they would after a scope join.
+//!
+//! Sampling output is therefore bit-identical with the pool on or off —
+//! `tests/hotpath_identity.rs` pins pooled ≡ spawned ≡ sequential for
+//! every sampler kind, shard count, and graph layout. `LABOR_NO_POOL=1`
+//! (or [`set_pool_enabled`]`(false)`) routes `run_shards` back through the
+//! scoped fan-out.
+//!
+//! ## Panic contract (mirrors PR 8's join rules)
+//!
+//! A panicking shard closure must not leak threads or strand siblings:
+//!
+//! * workers catch task panics, report them to the task's group, and keep
+//!   serving — a panic in one batch's shard never kills a pool thread;
+//! * [`ShardPool::run`] *always* waits for all its shards (even when
+//!   shard 0 panicked on the calling thread), then re-raises the first
+//!   panic: shard 0's first, else the lowest-queued one observed. Waiting
+//!   unconditionally is also what keeps the raw closure/arena pointers
+//!   inside queued tasks valid for the tasks' whole lifetime;
+//! * [`ShardPool::shutdown`] joins **all** worker handles before
+//!   returning, collecting (and then re-raising) at most one panic — no
+//!   orphaned shard workers survive, which is what keeps
+//!   `FailurePolicy::Supervise` restart loops from accumulating threads.
+
+use super::scratch::SamplerScratch;
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Hard cap on pool threads; `ensure_threads` clamps to this. Shard
+/// counts come from `intra_batch_threads`-style knobs, so anything near
+/// this bound indicates a misconfiguration, not a real workload.
+pub const MAX_POOL_THREADS: usize = 256;
+
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+/// Completion tracker for one `run` call's queued shards.
+struct GroupState {
+    remaining: usize,
+    panic: Option<PanicPayload>,
+}
+
+struct TaskGroup {
+    state: Mutex<GroupState>,
+    done: Condvar,
+}
+
+impl TaskGroup {
+    fn new(remaining: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(GroupState { remaining, panic: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    /// Record one finished shard (with its panic payload, if it had one;
+    /// the first reported panic wins) and wake the waiter when all shards
+    /// are done.
+    fn complete(&self, panic: Option<PanicPayload>) {
+        let mut st = self.state.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every shard in the group has completed; returns the
+    /// first panic payload observed, if any.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// One queued shard execution. The closure and arena pointers are raw
+/// because tasks outlive the borrow checker's view of `run`'s stack frame;
+/// soundness comes from `run` waiting on the task's group before
+/// returning (see the module docs). The pointed-to arenas are disjoint
+/// `&mut` borrows of distinct slice elements, so shards never alias.
+struct Task {
+    call: unsafe fn(*const (), usize, *mut SamplerScratch),
+    f: *const (),
+    index: usize,
+    scratch: *mut SamplerScratch,
+    group: Arc<TaskGroup>,
+}
+
+// Safety: `f` points at a `Sync` closure (bound enforced by `run`), and
+// `scratch` is an exclusive borrow handed off to exactly one worker.
+unsafe impl Send for Task {}
+
+/// Monomorphized trampoline: recovers the concrete closure type erased in
+/// [`Task::f`].
+///
+/// # Safety
+/// `f` must point at a live `F` and `scratch` at a live, exclusively
+/// borrowed `SamplerScratch` for the duration of the call.
+unsafe fn call_shard<F>(f: *const (), index: usize, scratch: *mut SamplerScratch)
+where
+    F: Fn(usize, &mut SamplerScratch) + Sync,
+{
+    (*(f as *const F))(index, &mut *scratch);
+}
+
+struct InjectorState {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+/// Shared work queue: callers push tasks, workers pop them. A worker
+/// drains remaining tasks before honoring the shutdown flag, so every
+/// queued shard completes (and its group waiter wakes) even during
+/// shutdown.
+struct Injector {
+    queue: Mutex<InjectorState>,
+    available: Condvar,
+}
+
+/// Decrements the live-thread counter when a worker exits, panic or not.
+struct LiveGuard(Arc<AtomicUsize>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn worker_loop(injector: Arc<Injector>, live: Arc<AtomicUsize>) {
+    let _guard = LiveGuard(live);
+    loop {
+        let task = {
+            let mut q = injector.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = injector.available.wait(q).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        // catch task panics so pool threads never die mid-service; the
+        // panic is surfaced to the submitting `run` call via the group
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (task.call)(task.f, task.index, task.scratch)
+        }));
+        task.group.complete(result.err());
+    }
+}
+
+/// A persistent pool of shard workers. One global instance backs
+/// [`run_shards`](super::par::run_shards) (see [`global`]); tests build
+/// private instances.
+pub struct ShardPool {
+    injector: Arc<Injector>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    live: Arc<AtomicUsize>,
+}
+
+impl Default for ShardPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardPool {
+    /// An empty pool; worker threads are spawned lazily by
+    /// [`run`](Self::run) / [`ensure_threads`](Self::ensure_threads).
+    pub fn new() -> Self {
+        Self {
+            injector: Arc::new(Injector {
+                queue: Mutex::new(InjectorState { tasks: VecDeque::new(), shutdown: false }),
+                available: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            live: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Grow the pool to at least `n` worker threads (clamped to
+    /// [`MAX_POOL_THREADS`]); never shrinks. No-op after
+    /// [`shutdown`](Self::shutdown).
+    pub fn ensure_threads(&self, n: usize) {
+        let n = n.min(MAX_POOL_THREADS);
+        let mut handles = self.handles.lock().unwrap();
+        if self.injector.queue.lock().unwrap().shutdown {
+            return;
+        }
+        while handles.len() < n {
+            let idx = handles.len();
+            let injector = Arc::clone(&self.injector);
+            let live = Arc::clone(&self.live);
+            live.fetch_add(1, Ordering::SeqCst);
+            let handle = std::thread::Builder::new()
+                .name(format!("labor-shard-{idx}"))
+                .spawn(move || worker_loop(injector, live))
+                .expect("failed to spawn shard pool worker");
+            handles.push(handle);
+        }
+    }
+
+    /// Number of worker threads currently alive (spawned and not yet
+    /// exited). After [`shutdown`](Self::shutdown) returns this is 0 —
+    /// the leaked-thread guard the supervise tests pin.
+    pub fn live_threads(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Pool-backed equivalent of the scoped fan-out in
+    /// [`run_shards`](super::par::run_shards): run
+    /// `f(i, &mut workers[i])` for every shard, shards `1..n` on pool
+    /// workers and shard 0 on the calling thread, and return only when
+    /// all shards have finished. Panic semantics per the module docs.
+    pub fn run<F>(&self, workers: &mut [SamplerScratch], f: F)
+    where
+        F: Fn(usize, &mut SamplerScratch) + Sync,
+    {
+        let n = workers.len();
+        if n <= 1 {
+            if let Some(w) = workers.first_mut() {
+                f(0, w);
+            }
+            return;
+        }
+        self.ensure_threads(n - 1);
+        let f_ptr = &f as *const F as *const ();
+        let group = TaskGroup::new(n - 1);
+        let mut iter = workers.iter_mut();
+        let first = iter.next().expect("n > 1 implies a first worker");
+        {
+            let mut q = self.injector.queue.lock().unwrap();
+            if q.shutdown {
+                // a shut-down pool has no workers to drain the queue; run
+                // every shard inline instead of deadlocking the group wait
+                drop(q);
+                drop(group);
+                f(0, first);
+                for (j, w) in iter.enumerate() {
+                    f(j + 1, w);
+                }
+                return;
+            }
+            for (j, w) in iter.enumerate() {
+                q.tasks.push_back(Task {
+                    call: call_shard::<F>,
+                    f: f_ptr,
+                    index: j + 1,
+                    scratch: w as *mut SamplerScratch,
+                    group: Arc::clone(&group),
+                });
+            }
+        }
+        self.injector.available.notify_all();
+        let shard0 = catch_unwind(AssertUnwindSafe(|| f(0, first)));
+        // ALWAYS wait, even when shard 0 panicked: the queued tasks hold
+        // raw pointers into this stack frame, and the bit-identity merge
+        // contract requires a full join before the caller proceeds
+        let queued_panic = group.wait();
+        if let Err(p) = shard0 {
+            resume_unwind(p);
+        }
+        if let Some(p) = queued_panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// Stop accepting work, drain the queue, and join **all** worker
+    /// threads — even when some worker observed a panic — then re-raise
+    /// the first join panic, if any. Idempotent.
+    pub fn shutdown(&self) {
+        if let Some(p) = self.shutdown_inner() {
+            resume_unwind(p);
+        }
+    }
+
+    fn shutdown_inner(&self) -> Option<PanicPayload> {
+        {
+            let mut q = self.injector.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.injector.available.notify_all();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        let mut first_panic = None;
+        for h in handles {
+            if let Err(p) = h.join() {
+                if first_panic.is_none() {
+                    first_panic = Some(p);
+                }
+            }
+        }
+        first_panic
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // join everything on drop too (instance pools in tests), but never
+        // re-raise from a destructor
+        let _ = self.shutdown_inner();
+    }
+}
+
+static GLOBAL: OnceLock<ShardPool> = OnceLock::new();
+
+/// The process-global shard pool used by
+/// [`run_shards`](super::par::run_shards) when [`pool_enabled`] is true.
+/// Never shut down; its threads are reused by every pipeline/serving
+/// worker for the life of the process.
+pub fn global() -> &'static ShardPool {
+    GLOBAL.get_or_init(ShardPool::new)
+}
+
+/// Pre-spawn workers in the global pool for an expected shard count (the
+/// `--pool-threads` CLI knob), so the first sharded layer doesn't pay the
+/// spawn cost either.
+pub fn configure_pool_threads(n: usize) {
+    global().ensure_threads(n);
+}
+
+/// Live worker count of the global pool (0 until the first sharded call
+/// or [`configure_pool_threads`]).
+pub fn pool_live_threads() -> usize {
+    global().live_threads()
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_POOL: u8 = 1;
+const MODE_SPAWN: u8 = 2;
+
+/// Routing decision for `run_shards`, resolved once from `LABOR_NO_POOL`
+/// (same lazy-env pattern as `util::simd`).
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Whether sharded sampling routes through the persistent pool. Defaults
+/// to true; `LABOR_NO_POOL=1` (any value but `0`) selects the scoped
+/// spawn-per-call fan-out instead. Output is bit-identical either way.
+pub fn pool_enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_POOL => true,
+        MODE_SPAWN => false,
+        _ => {
+            let off = std::env::var_os("LABOR_NO_POOL").is_some_and(|v| v != "0");
+            MODE.store(if off { MODE_SPAWN } else { MODE_POOL }, Ordering::Relaxed);
+            !off
+        }
+    }
+}
+
+/// Force pool routing on or off, overriding the environment (benches and
+/// the identity tests flip this to compare both paths in-process).
+pub fn set_pool_enabled(on: bool) {
+    MODE.store(if on { MODE_POOL } else { MODE_SPAWN }, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // unit tests use private pool instances: the global pool + mode
+    // toggle are process-wide, and `cargo test` runs lib tests in
+    // parallel (the global-toggle coverage lives in
+    // tests/hotpath_identity.rs behind a serializing mutex)
+
+    fn arenas(n: usize) -> Vec<SamplerScratch> {
+        (0..n).map(|_| SamplerScratch::new()).collect()
+    }
+
+    #[test]
+    fn runs_every_shard_exactly_once() {
+        let pool = ShardPool::new();
+        for n in [1usize, 2, 3, 8] {
+            let mut workers = arenas(n);
+            pool.run(&mut workers, |i, w| {
+                w.picks.push(i as u64);
+            });
+            for (i, w) in workers.iter().enumerate() {
+                assert_eq!(w.picks, vec![i as u64], "n={n} worker {i}");
+            }
+        }
+        pool.shutdown();
+        assert_eq!(pool.live_threads(), 0);
+    }
+
+    #[test]
+    fn reuses_threads_across_runs() {
+        let pool = ShardPool::new();
+        let mut workers = arenas(4);
+        pool.run(&mut workers, |i, w| w.picks.push(i as u64));
+        let after_first = pool.live_threads();
+        assert_eq!(after_first, 3, "shards 1..4 ran on pool workers");
+        for _ in 0..10 {
+            for w in &mut workers {
+                w.picks.clear();
+            }
+            pool.run(&mut workers, |i, w| w.picks.push(i as u64));
+        }
+        assert_eq!(pool.live_threads(), after_first, "no per-run thread churn");
+    }
+
+    #[test]
+    fn queued_shard_panic_propagates_and_pool_survives() {
+        let pool = ShardPool::new();
+        let mut workers = arenas(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut workers, |i, _w| {
+                if i == 2 {
+                    panic!("shard two failed");
+                }
+            });
+        }));
+        let payload = caught.expect_err("shard panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "shard two failed");
+        // every non-panicking shard still ran (the group joined fully)...
+        let mut workers2 = arenas(4);
+        pool.run(&mut workers2, |i, w| w.picks.push(i as u64));
+        for (i, w) in workers2.iter().enumerate() {
+            assert_eq!(w.picks, vec![i as u64], "pool unusable after panic: worker {i}");
+        }
+        // ...and no pool thread died
+        assert_eq!(pool.live_threads(), 3);
+        pool.shutdown();
+        assert_eq!(pool.live_threads(), 0);
+    }
+
+    #[test]
+    fn shard_zero_panic_wins_over_queued_panics() {
+        let pool = ShardPool::new();
+        let mut workers = arenas(3);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut workers, |i, _w| {
+                if i == 0 {
+                    panic!("zero");
+                }
+                panic!("other");
+            });
+        }));
+        let payload = caught.expect_err("panics must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "zero", "calling-thread panic takes precedence");
+        pool.shutdown();
+        assert_eq!(pool.live_threads(), 0, "shutdown joins all workers after panics");
+    }
+
+    #[test]
+    fn all_shards_complete_even_when_one_panics() {
+        let pool = ShardPool::new();
+        let mut workers = arenas(5);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut workers, |i, w| {
+                if i == 1 {
+                    panic!("boom");
+                }
+                w.picks.push(i as u64);
+            });
+        }));
+        for (i, w) in workers.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            assert_eq!(w.picks, vec![i as u64], "shard {i} must have run to completion");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_run_falls_back_inline() {
+        let pool = ShardPool::new();
+        let mut workers = arenas(3);
+        pool.run(&mut workers, |i, w| w.picks.push(i as u64));
+        pool.shutdown();
+        pool.shutdown();
+        assert_eq!(pool.live_threads(), 0);
+        // a shut-down pool still computes correct results (inline)
+        let mut workers = arenas(3);
+        pool.run(&mut workers, |i, w| w.picks.push(i as u64));
+        for (i, w) in workers.iter().enumerate() {
+            assert_eq!(w.picks, vec![i as u64], "inline fallback worker {i}");
+        }
+        assert_eq!(pool.live_threads(), 0, "fallback must not respawn workers");
+    }
+
+    #[test]
+    fn concurrent_runs_share_one_pool() {
+        let pool = ShardPool::new();
+        std::thread::scope(|scope| {
+            let pool = &pool;
+            for _ in 0..4 {
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let mut workers = arenas(4);
+                        pool.run(&mut workers, |i, w| w.picks.push(i as u64 * 7));
+                        for (i, w) in workers.iter().enumerate() {
+                            assert_eq!(w.picks, vec![i as u64 * 7]);
+                        }
+                    }
+                });
+            }
+        });
+        pool.shutdown();
+        assert_eq!(pool.live_threads(), 0);
+    }
+
+    #[test]
+    fn ensure_threads_clamps_and_never_shrinks() {
+        let pool = ShardPool::new();
+        pool.ensure_threads(2);
+        assert_eq!(pool.live_threads(), 2);
+        pool.ensure_threads(1);
+        assert_eq!(pool.live_threads(), 2, "never shrinks");
+        pool.ensure_threads(4);
+        assert_eq!(pool.live_threads(), 4);
+        pool.shutdown();
+        assert_eq!(pool.live_threads(), 0);
+    }
+}

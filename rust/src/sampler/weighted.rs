@@ -11,17 +11,26 @@ use super::par::{
     concat_and_finalize, discover_shard, merge_candidates, merge_max, run_shards, PoolParts,
     ScratchPool,
 };
+use super::plan::SamplePlan;
 use super::{
     finalize_inputs_in, hajek_normalize_in, hajek_normalize_into, IterSpec, LayerSampler,
     SampleCtx, SampledLayer, SamplerScratch,
 };
 use crate::graph::CscGraph;
 use crate::rng::{mix2, HashRng};
+use std::sync::Arc;
 
 /// Weighted LABOR layer sampler (graphs must carry edge weights).
 pub struct WeightedLaborSampler {
     pub fanouts: Vec<usize>,
     pub iterations: IterSpec,
+    /// optional precomputed `c*` tables ([`SamplePlan`]): π⁰ = A depends
+    /// only on the graph, so the **first** `c_s` solve of every layer —
+    /// the only solve for W-LABOR-0 — can read `SamplePlan::weighted_row`
+    /// instead of sorting + scanning per seed. Values are bit-identical
+    /// (the plan runs [`solve_cs_weighted`] itself at build time); later
+    /// fixed-point iterations always re-solve against the updated π.
+    pub plan: Option<Arc<SamplePlan>>,
 }
 
 /// Solve Eq. (23) for `c`: `Σ_t a_t² / min(1, c·π_t) = Σ_t a_t² + v·(Σ a_t)²`
@@ -66,8 +75,16 @@ pub fn solve_cs_weighted(pi: &[f64], a: &[f64], v: f64) -> f64 {
 }
 
 /// Per-shard weighted `c_s` recompute (Eq. 23): the per-seed solve reads
-/// only the seed's own edge slices, which live in the shard's arena.
-fn recompute_c_weighted_shard(k: usize, scratch: &mut SamplerScratch) {
+/// only the seed's own edge slices, which live in the shard's arena. `c0`
+/// (indexed by the global seed ids in `shard_seeds`) substitutes the
+/// solve with a precomputed-plan lookup — valid only while π = π⁰ = A,
+/// i.e. on the first recompute of a layer; values are bit-identical.
+fn recompute_c_weighted_shard(
+    k: usize,
+    scratch: &mut SamplerScratch,
+    c0: Option<&[f64]>,
+    shard_seeds: &[u32],
+) {
     let nseeds = scratch.nbr_off.len() - 1;
     let mut c = std::mem::take(&mut scratch.c);
     c.clear();
@@ -77,6 +94,10 @@ fn recompute_c_weighted_shard(k: usize, scratch: &mut SamplerScratch) {
         let d = hi - lo;
         if d == 0 {
             c[si] = 0.0;
+            continue;
+        }
+        if let Some(c0) = c0 {
+            c[si] = c0[shard_seeds[si] as usize];
             continue;
         }
         let v = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
@@ -208,12 +229,19 @@ impl LayerSampler for WeightedLaborSampler {
         c.clear();
         c.resize(seeds.len(), 0.0);
         let mut maxv = std::mem::take(&mut scratch.maxc);
-        let recompute_c = |c: &mut [f64], pi_edge: &[f64], a_edge: &[f64]| {
+        // a matching plan substitutes the first (π = A) recompute with a
+        // table lookup; every later pass re-solves against the updated π
+        let plan_c0 = self.plan.as_deref().and_then(|p| p.weighted_row(g, k));
+        let recompute_c = |c: &mut [f64], pi_edge: &[f64], a_edge: &[f64], c0: Option<&[f64]>| {
             for si in 0..seeds.len() {
                 let (lo, hi) = (nbr_off[si], nbr_off[si + 1]);
                 let d = hi - lo;
                 if d == 0 {
                     c[si] = 0.0;
+                    continue;
+                }
+                if let Some(c0) = c0 {
+                    c[si] = c0[seeds[si] as usize];
                     continue;
                 }
                 let v = if k >= d { 0.0 } else { 1.0 / k as f64 - 1.0 / d as f64 };
@@ -222,7 +250,7 @@ impl LayerSampler for WeightedLaborSampler {
         };
         let mut last_obj = f64::INFINITY;
         for it in 0..=iters {
-            recompute_c(&mut c, &pi_edge, &a_edge);
+            recompute_c(&mut c, &pi_edge, &a_edge, if it == 0 { plan_c0 } else { None });
             if it == iters {
                 break;
             }
@@ -246,7 +274,7 @@ impl LayerSampler for WeightedLaborSampler {
                 let obj: f64 = maxv.iter().map(|&m| m.min(1.0)).sum();
                 if (last_obj - obj).abs() <= 1e-4 * last_obj.max(1.0) {
                     // finish: recompute c for the final π and break
-                    recompute_c(&mut c, &pi_edge, &a_edge);
+                    recompute_c(&mut c, &pi_edge, &a_edge, None);
                     break;
                 }
                 last_obj = obj;
@@ -332,9 +360,14 @@ impl LayerSampler for WeightedLaborSampler {
             IterSpec::Fixed(n) => n,
             IterSpec::Converge => 50,
         };
+        let plan_c0 = self.plan.as_deref().and_then(|p| p.weighted_row(g, k));
         let mut last_obj = f64::INFINITY;
         for it in 0..=iters {
-            run_shards(&mut *workers, |_, s| recompute_c_weighted_shard(k, s));
+            // the plan row is only valid for the first solve (π = π⁰ = A)
+            let c0 = if it == 0 { plan_c0 } else { None };
+            run_shards(&mut *workers, |i, s| {
+                recompute_c_weighted_shard(k, s, c0, &seeds[ranges[i].clone()])
+            });
             if it == iters {
                 break;
             }
@@ -345,7 +378,9 @@ impl LayerSampler for WeightedLaborSampler {
             if matches!(self.iterations, IterSpec::Converge) {
                 let obj: f64 = maxv.iter().map(|&m| m.min(1.0)).sum();
                 if (last_obj - obj).abs() <= 1e-4 * last_obj.max(1.0) {
-                    run_shards(&mut *workers, |_, s| recompute_c_weighted_shard(k, s));
+                    run_shards(&mut *workers, |i, s| {
+                        recompute_c_weighted_shard(k, s, None, &seeds[ranges[i].clone()])
+                    });
                     break;
                 }
                 last_obj = obj;
@@ -433,7 +468,7 @@ mod tests {
     fn sampled_layer_valid_and_weighted_estimator_consistent() {
         let g = weighted_graph(3);
         let seeds: Vec<u32> = (0..40).collect();
-        let s = WeightedLaborSampler { fanouts: vec![5], iterations: IterSpec::Fixed(1) };
+        let s = WeightedLaborSampler { fanouts: vec![5], iterations: IterSpec::Fixed(1), plan: None };
         let sl = s.sample_layer_fresh(&g, &seeds, SampleCtx::new(1, 0));
         sl.validate(&g).unwrap();
 
@@ -502,7 +537,7 @@ mod tests {
         let g = uniformish_weighted_graph(7);
         let seeds: Vec<u32> = (0..60).collect();
         let k = 4;
-        let s = WeightedLaborSampler { fanouts: vec![k], iterations: IterSpec::Fixed(0) };
+        let s = WeightedLaborSampler { fanouts: vec![k], iterations: IterSpec::Fixed(0), plan: None };
         let reps = 1500;
         let mut deg = vec![0.0f64; seeds.len()];
         for b in 0..reps {

@@ -1,0 +1,448 @@
+//! Execution-engine identity contract: the hot-path machinery added for
+//! serving-grade sampling — the persistent shard pool (`sampler::pool`),
+//! the static-π plan precompute (`sampler::plan`), and the hot-vertex
+//! sample memo (`sampler::memo`) — are *accelerations only*. Every result
+//! they produce must be **bit-identical** to the path they replace:
+//!
+//! * pooled shard execution ≡ scoped spawn-per-call ≡ sequential, for
+//!   every sampler kind × shard count × graph layout;
+//! * a plan-enabled sampler ≡ a plan-less one, sequential and sharded,
+//!   capped and uncapped, on unweighted and weighted graphs;
+//! * memoized serving ≡ fresh sampling within a variate epoch, and an
+//!   epoch bump actually redraws the variates;
+//! * supervised worker restarts reuse the pool's threads — chaos respawn
+//!   loops must not leak a single worker thread.
+//!
+//! The pool routing mode and the failpoint registry are process-global,
+//! so tests that flip either serialize on one mutex and restore the
+//! entry state before releasing it (same discipline as
+//! `tests/simd_identity.rs` / `tests/chaos.rs`).
+
+use labor_gnn::coordinator::serving::{ServingConfig, ServingFrontEnd};
+use labor_gnn::coordinator::supervise::{Backoff, FailurePolicy};
+use labor_gnn::coordinator::ServeError;
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::compact::VertexPerm;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::CscGraph;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::pool::{pool_enabled, set_pool_enabled};
+use labor_gnn::sampler::weighted::WeightedLaborSampler;
+use labor_gnn::sampler::{
+    pool_live_threads, IterSpec, LayerSampler, Mfg, MultiLayerSampler, SampleCtx, SampleMemo,
+    SamplePlan, SamplerKind, SamplerScratch, ScratchPool,
+};
+use labor_gnn::util::failpoint;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Serializes every test that flips the process-global pool routing mode
+/// or arms failpoints; restores the entry routing mode on drop.
+static POOL_TOGGLE: Mutex<()> = Mutex::new(());
+
+struct PoolGuard {
+    #[allow(dead_code)]
+    lock: std::sync::MutexGuard<'static, ()>,
+    was_enabled: bool,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        set_pool_enabled(self.was_enabled);
+        failpoint::disarm_all();
+    }
+}
+
+fn pool_lock() -> PoolGuard {
+    let lock = POOL_TOGGLE.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::disarm_all();
+    PoolGuard { lock, was_enabled: pool_enabled() }
+}
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+/// Star + chain + clique mixture: wildly skewed in-degrees, the shape the
+/// degree-aware shard partitioner and the hot-vertex memo both target.
+fn skewed_graph() -> CscGraph {
+    let n = 200u32;
+    let mut b = CscBuilder::new(n as usize);
+    for t in 1..n {
+        b.edge(t, 0);
+        b.edge(0, t);
+    }
+    for t in 1..n - 1 {
+        b.edge(t, t + 1);
+    }
+    for u in 10..20u32 {
+        for v in 10..20u32 {
+            if u != v {
+                b.edge(u, v);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+fn weighted_graph(seed: u64) -> CscGraph {
+    let mut rng = StreamRng::new(seed);
+    let n = 150u32;
+    let mut b = CscBuilder::new(n as usize);
+    for s in 0..n {
+        let deg = 3 + rng.below(25) as usize;
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..deg {
+            let t = rng.below(n as u64) as u32;
+            if t != s && used.insert(t) {
+                b.weighted_edge(t, s, 0.1 + rng.next_f32() * 2.0);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+/// Every `SamplerKind` variant, with budgets for the layer samplers.
+fn all_kinds() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: true },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::LaborSequential { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Ladies { budgets: vec![120, 200] },
+        SamplerKind::Pladies { budgets: vec![120, 200] },
+    ]
+}
+
+/// The LABOR kinds `MultiLayerSampler::enable_plan` accepts.
+fn labor_kinds() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: true },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::LaborSequential { iterations: IterSpec::Converge, layer_dependent: false },
+    ]
+}
+
+fn assert_mfg_eq(a: &Mfg, b: &Mfg, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.seeds, lb.seeds, "{what} layer {l}: seeds");
+        assert_eq!(la.inputs, lb.inputs, "{what} layer {l}: inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l}: edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l}: edge_dst");
+        let wa: Vec<u32> = la.edge_weight.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = lb.edge_weight.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "{what} layer {l}: edge_weight bits");
+    }
+}
+
+fn seeds_for(rng: &mut StreamRng, nv: u32) -> Vec<u32> {
+    let bs = 16 + rng.below(100) as u32;
+    let start = rng.below(nv as u64) as u32;
+    let mut seeds: Vec<u32> = (0..bs).map(|i| (start + i * 3) % nv).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    seeds
+}
+
+/// Tentpole part 1 acceptance: pooled ≡ spawned ≡ sequential, bit for
+/// bit, for every kind × shard count × layout (original, skewed, and the
+/// degree-ordered relabeling the serving cache uses).
+#[test]
+fn pooled_shards_are_bit_identical_to_spawned_and_sequential() {
+    let _guard = pool_lock();
+    let skewed = skewed_graph();
+    let degree_ordered = VertexPerm::degree_ordered(&skewed).apply_to_graph(&skewed);
+    let graphs =
+        [("dense", dense_graph()), ("skewed", skewed), ("degree-ordered", degree_ordered)];
+    let mut pool = ScratchPool::new();
+    let mut rng = StreamRng::new(0x9001);
+    for (gname, g) in &graphs {
+        let nv = g.num_vertices() as u32;
+        for kind in all_kinds() {
+            let label = kind.label();
+            let sampler = MultiLayerSampler::new(kind, &[5, 7]);
+            for &shards in &[1usize, 2, 3, 8] {
+                for batch in 0..3u64 {
+                    let seeds = seeds_for(&mut rng, nv);
+                    let what = format!("{gname}/{label} shards={shards} batch {batch}");
+                    set_pool_enabled(true);
+                    let pooled = sampler.sample_sharded(g, &seeds, batch, shards, &mut pool);
+                    set_pool_enabled(false);
+                    let spawned = sampler.sample_sharded(g, &seeds, batch, shards, &mut pool);
+                    set_pool_enabled(true);
+                    let seq = sampler.sample_fresh(g, &seeds, batch);
+                    assert_mfg_eq(&pooled, &spawned, &format!("{what}: pool vs spawn"));
+                    assert_mfg_eq(&pooled, &seq, &format!("{what}: pool vs sequential"));
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole part 2 acceptance (uniform kinds): a plan-enabled sampler is
+/// bit-identical to a plan-less one — sequential and sharded, uncapped
+/// and under degradation caps (planned rungs AND unplanned fanouts), on
+/// an unweighted graph and on a weight-carrying graph (where the
+/// unweighted kinds must still get uniform degree-mode tables).
+#[test]
+fn plan_enabled_sampling_is_bit_identical_for_every_labor_kind() {
+    let _guard = pool_lock();
+    set_pool_enabled(true);
+    let graphs = [("dense", dense_graph()), ("weighted", weighted_graph(0xBEE))];
+    let mut pool = ScratchPool::new();
+    let mut rng = StreamRng::new(0x9002);
+    for (gname, g) in &graphs {
+        let nv = g.num_vertices() as u32;
+        for kind in labor_kinds() {
+            let label = kind.label();
+            let base = MultiLayerSampler::new(kind.clone(), &[5, 7]);
+            let mut planned = MultiLayerSampler::new(kind, &[5, 7]);
+            assert!(
+                planned.enable_plan(g, &[4, 2]),
+                "{gname}/{label}: enable_plan must accept LABOR kinds"
+            );
+            // cap 4 and 2 hit planned rungs; cap 3 exercises the
+            // unplanned-fanout fallback (uniform_row -> None -> closed form)
+            for cap in [None, Some(4u32), Some(3), Some(2)] {
+                for batch in 0..3u64 {
+                    let seeds = seeds_for(&mut rng, nv);
+                    let what = format!("{gname}/{label} cap {cap:?} batch {batch}");
+                    let mut s1 = SamplerScratch::new();
+                    let mut s2 = SamplerScratch::new();
+                    let want = base.sample_with_cap(g, &seeds, batch, cap, &mut s1);
+                    let got = planned.sample_with_cap(g, &seeds, batch, cap, &mut s2);
+                    assert_mfg_eq(&got, &want, &format!("{what}: sequential"));
+                    let got_sh =
+                        planned.sample_sharded_with_cap(g, &seeds, batch, cap, 3, &mut pool);
+                    assert_mfg_eq(&got_sh, &want, &format!("{what}: sharded"));
+                }
+            }
+        }
+        // non-LABOR kinds must decline the plan and stay untouched
+        let mut ns = MultiLayerSampler::new(SamplerKind::Neighbor, &[5, 7]);
+        assert!(!ns.enable_plan(g, &[]), "{gname}: NS must decline a LABOR plan");
+    }
+}
+
+/// Tentpole part 2 acceptance (weighted A.7 sampler): a `SamplePlan`
+/// built in weighted mode substitutes the iteration-0 `c` solve and stays
+/// bit-identical — including under caps that fall outside the planned
+/// fanout set (the table declines and the live solver runs).
+#[test]
+fn planned_weighted_labor_is_bit_identical() {
+    let _guard = pool_lock();
+    set_pool_enabled(true);
+    let g = weighted_graph(0xA7);
+    let plan = Arc::new(SamplePlan::build(&g, &[5, 3]));
+    assert!(plan.is_weighted(), "weight-carrying graph must yield a weighted plan");
+    let mut pool = ScratchPool::new();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(2), IterSpec::Converge] {
+        let base = WeightedLaborSampler { fanouts: vec![5], iterations, plan: None };
+        let planned =
+            WeightedLaborSampler { fanouts: vec![5], iterations, plan: Some(plan.clone()) };
+        // cap 3 is planned, cap 4 is not — both must match the plan-less path
+        for cap in [None, Some(3u32), Some(4)] {
+            for batch in 0..4u64 {
+                let seeds: Vec<u32> = (0..(20 + (batch as u32 * 13) % 90)).collect();
+                let ctx = SampleCtx { batch_seed: batch, layer: 0, fanout_cap: cap };
+                let what = format!("w-labor {iterations:?} cap {cap:?} batch {batch}");
+                let want = base.sample_layer(&g, &seeds, ctx, &mut SamplerScratch::new());
+                let got = planned.sample_layer(&g, &seeds, ctx, &mut SamplerScratch::new());
+                assert_eq!(got.inputs, want.inputs, "{what}: inputs");
+                assert_eq!(got.edge_src, want.edge_src, "{what}: edge_src");
+                assert_eq!(got.edge_dst, want.edge_dst, "{what}: edge_dst");
+                let wa: Vec<u32> = got.edge_weight.iter().map(|w| w.to_bits()).collect();
+                let wb: Vec<u32> = want.edge_weight.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(wa, wb, "{what}: weight bits");
+                let got_sh = planned.sample_layer_sharded(&g, &seeds, ctx, 3, &mut pool);
+                assert_eq!(got_sh.edge_src, want.edge_src, "{what}: sharded edge_src");
+                let wsh: Vec<u32> = got_sh.edge_weight.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(wsh, wb, "{what}: sharded weight bits");
+            }
+        }
+    }
+}
+
+/// Plan bookkeeping through the public API: fanouts sort/dedup, the
+/// (|V|, |E|) fingerprint, and row lookups declining unplanned fanouts.
+#[test]
+fn plan_tables_expose_fanouts_and_reject_foreign_graphs() {
+    let g = dense_graph();
+    let plan = SamplePlan::build(&g, &[8, 2, 8, 0, 5, 2]);
+    assert_eq!(plan.fanouts(), &[2, 5, 8], "fanouts must sort, dedup, and drop zero");
+    assert!(plan.matches(&g));
+    assert!(plan.uniform_row(&g, 5).is_some());
+    assert!(plan.uniform_row(&g, 4).is_none(), "unplanned fanout must decline");
+    let other = skewed_graph();
+    assert!(!plan.matches(&other), "fingerprint must reject a different graph");
+    assert!(plan.uniform_row(&other, 5).is_none());
+}
+
+/// Tentpole part 3 acceptance: memoized sampling ≡ the live sampler, cold
+/// and warm, capped and uncapped; warm passes actually hit; an epoch bump
+/// drops every cached block and redraws the variates.
+#[test]
+fn memoized_sampling_is_bit_identical_until_the_epoch_bumps() {
+    for g in [dense_graph(), skewed_graph()] {
+        let fanouts = [5usize, 3];
+        let live = MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &fanouts,
+        );
+        let mut memo = SampleMemo::new(g.num_vertices() / 2);
+        let mut scratch = SamplerScratch::new();
+        let seeds: Vec<u32> = (0..100u32.min(g.num_vertices() as u32)).collect();
+        for cap in [None, Some(2u32)] {
+            for epoch in [11u64, 12] {
+                let want = live.sample_with_cap(&g, &seeds, epoch, cap, &mut scratch);
+                let cold = memo.sample(&g, &fanouts, cap, &seeds, epoch, &mut scratch);
+                let warm = memo.sample(&g, &fanouts, cap, &seeds, epoch, &mut scratch);
+                assert_mfg_eq(&cold, &want, "cold memo vs live");
+                assert_mfg_eq(&warm, &want, "warm memo vs live");
+            }
+        }
+        // warm replay hits; a bumped epoch misses and changes picks. The
+        // cap loop above left only capped (k=2) blocks cached, so prime
+        // the uncapped keys first, then count.
+        let a = memo.sample(&g, &fanouts, None, &seeds, 12, &mut scratch);
+        memo.take_counters();
+        let a2 = memo.sample(&g, &fanouts, None, &seeds, 12, &mut scratch);
+        let (h, _) = memo.take_counters();
+        assert!(h > 0, "same-epoch replay must hit the memo");
+        assert_mfg_eq(&a2, &a, "same-epoch replay");
+        let b = memo.sample(&g, &fanouts, None, &seeds, 13, &mut scratch);
+        let (h2, m2) = memo.take_counters();
+        assert_eq!(h2, 0, "a bumped epoch must not reuse stale variates");
+        assert!(m2 > 0);
+        assert_ne!(a.layers[0].edge_src, b.layers[0].edge_src, "fresh variates, fresh picks");
+    }
+}
+
+/// Serving-level memo contract through the public front end: the same
+/// seed served across separate flushes returns the identical neighborhood
+/// within a variate epoch, and `bump_variate_epoch` refreshes it.
+#[test]
+fn serving_memo_is_stable_within_an_epoch_and_refreshes_on_bump() {
+    let g = Arc::new(dense_graph());
+    let nv = g.num_vertices();
+    let sampler = Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[4, 4],
+    ));
+    let front = ServingFrontEnd::spawn(
+        g,
+        sampler,
+        ServingConfig {
+            window: Duration::from_millis(1),
+            sample_memo_rows: nv,
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    // submit-then-wait serializes flushes: every request is its own batch
+    let a = h.submit(7).wait().unwrap();
+    let b = h.submit(7).wait().unwrap();
+    for (la, lb) in a.mfg.layers.iter().zip(&b.mfg.layers) {
+        assert_eq!(la.edge_src, lb.edge_src, "one epoch, one neighborhood");
+        assert_eq!(la.inputs, lb.inputs);
+        let wa: Vec<u32> = la.edge_weight.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = lb.edge_weight.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "one epoch, one weight vector");
+    }
+    let mid = front.metrics();
+    assert!(mid.memo_hits > 0, "the second flush must reuse memoized blocks");
+    front.bump_variate_epoch();
+    let c = h.submit(7).wait().unwrap();
+    assert_eq!(c.seed, 7);
+    let end = front.metrics();
+    assert!(
+        end.memo_misses > mid.memo_misses,
+        "a bumped epoch must recompute ({} -> {} misses)",
+        mid.memo_misses,
+        end.memo_misses
+    );
+    drop(h);
+    front.shutdown();
+}
+
+/// Leaked-thread guard: a supervised serving worker that panics and
+/// respawns its way through a chaos schedule must keep reusing the global
+/// pool's shard workers — the live-thread count after dozens of restart
+/// cycles equals the count after the first sharded flush.
+#[test]
+fn supervised_restarts_do_not_leak_pool_threads() {
+    let _guard = pool_lock();
+    set_pool_enabled(true);
+    let g = Arc::new(dense_graph());
+    let sampler = Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[6, 6],
+    ));
+    // settle the pool's worker count deterministically with one 4-shard
+    // pass (serving clamps shards to the batch size, so a lone-seed flush
+    // wouldn't grow it)
+    let mut scratch_pool = ScratchPool::new();
+    let warm_seeds: Vec<u32> = (0..64).collect();
+    sampler.sample_sharded(&g, &warm_seeds, 0, 4, &mut scratch_pool);
+    let live_baseline = pool_live_threads();
+    assert!(live_baseline >= 3, "a 4-shard pass must populate the pool");
+    failpoint::arm_spec("sample_flush=panic@every5", 0).unwrap();
+    let front = ServingFrontEnd::spawn(
+        g,
+        sampler,
+        ServingConfig {
+            window: Duration::ZERO,
+            intra_batch_threads: 4,
+            default_deadline: Duration::from_secs(30),
+            failure_policy: FailurePolicy::Supervise {
+                max_restarts: 100,
+                max_retries: 0,
+                backoff: Backoff {
+                    base: Duration::from_micros(50),
+                    cap: Duration::from_millis(2),
+                    seed: 0,
+                },
+            },
+            ..ServingConfig::default()
+        },
+    );
+    let h = front.handle();
+    // bursts of 4: each burst takes 1..=4 flushes (≥ 15 flush hits over
+    // 15 bursts), so the every-5 panic schedule forces ≥ 3 respawn
+    // cycles, and multi-seed flushes route shards through the pool from
+    // freshly respawned workers
+    let (mut served, mut died) = (0u64, 0u64);
+    for burst in 0..15u32 {
+        let pending: Vec<_> = (0..4u32).map(|i| h.submit(burst * 4 + i)).collect();
+        for p in pending {
+            match p.wait() {
+                Ok(_) => served += 1,
+                Err(ServeError::WorkerDied { .. }) => died += 1,
+                Err(e) => panic!("unexpected outcome: {e}"),
+            }
+        }
+    }
+    drop(h);
+    let snap = front.shutdown();
+    assert_eq!(served + died, 60, "a request was silently dropped");
+    assert!(snap.faults.restarts >= 3, "the every-5 schedule must force restarts");
+    assert_eq!(
+        pool_live_threads(),
+        live_baseline,
+        "{} restarts leaked pool threads",
+        snap.faults.restarts
+    );
+}

@@ -149,7 +149,7 @@ fn sharded_weighted_labor_is_bit_identical() {
     let g = weighted_graph(0xA7);
     let mut pool = ScratchPool::new();
     for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(2), IterSpec::Converge] {
-        let s = WeightedLaborSampler { fanouts: vec![5], iterations };
+        let s = WeightedLaborSampler { fanouts: vec![5], iterations, plan: None };
         for &shards in &SHARD_COUNTS {
             for batch in 0..8u64 {
                 let seeds: Vec<u32> = (0..(20 + (batch as u32 * 13) % 90)).collect();

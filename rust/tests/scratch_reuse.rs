@@ -103,7 +103,7 @@ fn warm_scratch_is_bit_identical_for_weighted_labor() {
     }
     let g = b.build().unwrap();
     for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(2), IterSpec::Converge] {
-        let s = WeightedLaborSampler { fanouts: vec![5], iterations };
+        let s = WeightedLaborSampler { fanouts: vec![5], iterations, plan: None };
         let mut scratch = SamplerScratch::new();
         for batch in 0..20u64 {
             let seeds: Vec<u32> = (0..(20 + (batch as u32 * 7) % 60)).collect();
