@@ -47,6 +47,14 @@ echo "== execution-engine identity suite: pool, plan, memo"
 # to the bit — and supervised respawn chaos must not leak pool threads
 cargo test -q --test hotpath_identity --test parallel_identity
 
+echo "== partition identity suite: partition-aware sampling + split-store gathers"
+# a partition-major relabel plus an attached partition map may only move
+# accounting: sharded sampling and split-store gathers must stay
+# bit-identical to the unpartitioned path for every kind × shard count ×
+# K — on the pooled engine AND the spawn-per-call fallback
+cargo test -q --test partition_identity
+LABOR_NO_POOL=1 cargo test -q --test partition_identity
+
 echo "== spawn-fallback pass: full test suite with the shard pool forced off"
 # LABOR_NO_POOL=1 routes every sharded sample through freshly scoped
 # spawn-per-call threads (the pre-pool engine); the suite — including the
@@ -62,6 +70,14 @@ if [ "$MODE" != "fast" ]; then
     --out "${TMPDIR:-/tmp}/labor_ci_tiny.lgx"
   rm -f "${TMPDIR:-/tmp}/labor_ci_tiny.lgx"
 
+  echo "== partition-pack smoke: LDG layout + parts section via the repro CLI"
+  # partition-major relabel (LDG, K=4) with the PartitionMap stored in the
+  # .lgx parts section; the command reloads through both loaders and exits
+  # nonzero on any graph/perm/parts mismatch
+  ./target/release/repro graph pack --dataset tiny --scale 0.2 \
+    --layout partition:4 --out "${TMPDIR:-/tmp}/labor_ci_parts.lgx"
+  rm -f "${TMPDIR:-/tmp}/labor_ci_parts.lgx"
+
   echo "== bench-smoke: build all bench targets, run pipeline + samplers tiny"
   cargo build --release --benches
   # --smoke: tiny iteration counts; proves the throughput sections, the
@@ -70,9 +86,14 @@ if [ "$MODE" != "fast" ]; then
   # stale perf records first so the existence checks below can't pass on
   # them
   rm -f BENCH_pipeline.json BENCH_datapipe.json BENCH_graph.json BENCH_serving.json \
-    BENCH_chaos.json BENCH_hotpath.json
+    BENCH_chaos.json BENCH_hotpath.json BENCH_partition.json
   cargo bench --bench pipeline -- --smoke
   cargo bench --bench samplers -- --smoke
+  # partition engine: LDG vs random vs contiguous edge-cut quality, the
+  # local-hit fraction of split-store gathers (the bench asserts LDG beats
+  # random), remote-tier priced gathers, and the NS-over-LABOR-0
+  # remote-byte amplification — identity-checked before timing
+  cargo bench --bench partition -- --smoke
   # execution-engine micro-bench: persistent-pool vs spawn-per-call shard
   # latency, static-π plan vs live weighted solver, and the hot-vertex
   # memo hit rate under a Zipf stream — each identity-checked before it
@@ -95,6 +116,17 @@ if [ "$MODE" != "fast" ]; then
   test -f BENCH_serving.json || { echo "BENCH_serving.json missing"; exit 1; }
   test -f BENCH_chaos.json || { echo "BENCH_chaos.json missing"; exit 1; }
   test -f BENCH_hotpath.json || { echo "BENCH_hotpath.json missing"; exit 1; }
+  test -f BENCH_partition.json || { echo "BENCH_partition.json missing"; exit 1; }
+  # this PR's partition-engine records: cut quality, gather locality, and
+  # the frontier-as-traffic amplification headline
+  grep -q '"cut_fraction_ldg"' BENCH_partition.json \
+    || { echo "BENCH_partition.json is missing the cut-quality record"; exit 1; }
+  grep -q '"local_hit_ldg"' BENCH_partition.json \
+    || { echo "BENCH_partition.json is missing the local-hit record"; exit 1; }
+  grep -q '"priced_gather_us_unpartitioned"' BENCH_partition.json \
+    || { echo "BENCH_partition.json is missing the priced-gather record"; exit 1; }
+  grep -q '"remote_amplification_ns_over_labor0"' BENCH_partition.json \
+    || { echo "BENCH_partition.json is missing the amplification record"; exit 1; }
   # this PR's execution-engine records: pool and plan speedups plus the
   # memoized-serving hit rates (micro-bench and serving-level)
   grep -q '"pool_speedup"' BENCH_hotpath.json \
@@ -129,6 +161,8 @@ if [ "$MODE" != "fast" ]; then
   cat BENCH_chaos.json
   echo "== BENCH_hotpath.json:"
   cat BENCH_hotpath.json
+  echo "== BENCH_partition.json:"
+  cat BENCH_partition.json
 
   echo "== serve smoke: online coalescing front end via the repro CLI"
   # a short Zipf request stream through `repro serve` (deadline-window
@@ -154,6 +188,15 @@ if [ "$MODE" != "fast" ]; then
     --policy supervise --max-restarts 50 --max-queue 256 \
     --degrade-ladder 10,7,4 --no-plan-cache \
     --chaos 'sample_flush=panic@every40;gather=error@every25' --smoke
+
+  echo "== partitioned serve smoke: split-store gathers behind the front end"
+  # the same front end serving from a partition-major relabeled graph
+  # whose features are split across 4 per-partition stores: the command
+  # asserts the partitioned store saw every gather and prints the
+  # local-hit fraction and remote-hop pricing
+  ./target/release/repro serve --dataset flickr-sim --scale 0.1 \
+    --method labor-0 --rate 4000 --window-us 1000 \
+    --partitions 4 --smoke
 fi
 
 echo "== cargo doc --no-deps (rustdoc must be warning-free)"

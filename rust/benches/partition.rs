@@ -1,0 +1,239 @@
+//! Partition-engine benchmarks: what locality-ordered shards buy.
+//!
+//! Four sections, one headline number each, all identity-checked against
+//! the unpartitioned path before any timing is trusted:
+//!
+//! 1. `cut_fraction_*` — edge-cut quality of the greedy LDG streaming
+//!    partitioner vs the degree-balanced contiguous fallback vs random
+//!    assignment, at the same partition count and balance slack.
+//! 2. `local_hit_*` — fraction of gathered feature rows served from the
+//!    gather's home partition when LABOR-0 mini-batch frontiers are
+//!    routed through the partition-split store ([`PartitionedStore`]).
+//!    Asserted in-bench: LDG must beat random — that gap *is* the value
+//!    of locality-aware placement.
+//! 3. `priced_gather_*` — the same gathers priced under the remote tier
+//!    (per-hop latency + bandwidth on cross-partition rows): LDG vs
+//!    random placement vs the unpartitioned baseline where every row
+//!    lives behind the remote tier (one parameter server).
+//! 4. `remote_amplification_ns_over_labor0` — NS remote bytes per batch
+//!    over LABOR-0's, same seeds, same placement. The paper's frontier
+//!    shrinkage (§3.2) measured as cross-partition traffic: the frontier
+//!    *is* the traffic, so smaller unique-vertex sets are fewer remote
+//!    bytes.
+//!
+//! Results go to `BENCH_partition.json` (asserted + printed by ci.sh).
+//!
+//! `cargo bench --bench partition` — full run.
+//! `cargo bench --bench partition -- --smoke` — tiny sizes.
+
+use labor_gnn::coordinator::{FeatureStore, PartitionedStore, TierModel};
+use labor_gnn::data::Dataset;
+use labor_gnn::graph::partition::{
+    contiguous_partition, edge_cut, ldg_partition, partition_layout, random_partition,
+};
+use labor_gnn::graph::PartitionMap;
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::{IterSpec, MultiLayerSampler, SamplerKind, ScratchPool};
+use labor_gnn::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn batches(nv: u32, count: usize, size: u32, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = StreamRng::new(seed);
+    (0..count)
+        .map(|_| {
+            let start = rng.below(nv as u64) as u32;
+            let mut s: Vec<u32> = (0..size).map(|i| (start + i * 7) % nv).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        })
+        .collect()
+}
+
+/// Route every batch's deepest-layer frontier through `ps`, gathering
+/// from the frontier's home partition. Returns wall time; locality lands
+/// in the store's counters.
+fn route_batches(ps: &PartitionedStore, frontiers: &[Vec<u32>], out: &mut Vec<f32>) -> f64 {
+    let t0 = Instant::now();
+    for ids in frontiers {
+        let home = ps.home_for(ids);
+        ps.gather_from(home, ids, out);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Analytic priced time of the unpartitioned baseline: every row sits
+/// behind the remote tier (one parameter server), one hop per gather.
+fn unpartitioned_priced_us(tier: TierModel, gathers: u64, rows: u64, row_bytes: u64) -> f64 {
+    let latency = tier.request_latency.as_secs_f64() * gathers as f64;
+    let transfer = if tier.bandwidth_bps.is_infinite() {
+        0.0
+    } else {
+        (rows * row_bytes) as f64 / tier.bandwidth_bps
+    };
+    (latency + transfer) * 1e6
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ds = Dataset::load_or_generate("flickr-sim", 0.1).expect("dataset");
+    let g = &ds.graph;
+    let nv = g.num_vertices();
+    let k = if smoke { 4 } else { 8 };
+    let slack = 1.05;
+    let (nbatch, bsize) = if smoke { (8, 256) } else { (40, 1024) };
+
+    // == 1. edge-cut quality ==
+    let strategies: Vec<(&str, Vec<u32>)> = vec![
+        ("ldg", ldg_partition(g, k, slack)),
+        ("contiguous", contiguous_partition(g, k)),
+        ("random", random_partition(nv, k, 0xC07)),
+    ];
+    let mut cut_fraction = std::collections::HashMap::new();
+    for (name, assign) in &strategies {
+        let (cut, total) = edge_cut(g, assign);
+        let frac = cut as f64 / total.max(1) as f64;
+        cut_fraction.insert(*name, frac);
+        println!("cut:   {name:<10} K={k}: {cut}/{total} cut ({frac:.3})");
+    }
+    assert!(
+        cut_fraction["ldg"] < cut_fraction["random"],
+        "LDG must cut fewer edges than random placement"
+    );
+
+    // == 2 + 3. locality + priced gathers through the split store ==
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[10, 10],
+    );
+    let tier = TierModel::remote();
+    let mut local_hit = std::collections::HashMap::new();
+    let mut priced_us = std::collections::HashMap::new();
+    let mut labor_frontier_rows = 0u64;
+    for (name, assign) in &strategies {
+        let (perm, map) = partition_layout(assign, k).expect("layout");
+        let pds = ds.relabel_with(&perm);
+        let map = Arc::new(map);
+        let pg = &pds.graph;
+        let dim = pds.num_features();
+        let ps = PartitionedStore::split(&pds.features, dim, map.clone(), tier);
+
+        // frontiers: LABOR-0 deepest-layer inputs on the relabeled graph,
+        // sampled partition-aware (map attached) — identity-checked
+        // against the fresh unpartitioned sampler first
+        let mut pool = ScratchPool::new();
+        pool.set_partition_map(Some(map.clone()));
+        let seed_batches = batches(nv as u32, nbatch, bsize, 0x5EED);
+        let frontiers: Vec<Vec<u32>> = seed_batches
+            .iter()
+            .enumerate()
+            .map(|(i, seeds)| {
+                let mfg = sampler.sample_sharded(pg, seeds, i as u64, 4, &mut pool);
+                if i == 0 {
+                    let fresh = sampler.sample_fresh(pg, seeds, i as u64);
+                    assert_eq!(
+                        mfg.feature_vertices(),
+                        fresh.feature_vertices(),
+                        "{name}: partition-aware sampling drifted from fresh"
+                    );
+                }
+                mfg.feature_vertices().to_vec()
+            })
+            .collect();
+
+        // identity: split-store bytes == flat-store bytes on batch 0
+        let flat = FeatureStore::new(pds.features.clone(), dim, TierModel::local());
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        flat.gather(&frontiers[0], &mut want);
+        ps.gather_from(ps.home_for(&frontiers[0]), &frontiers[0], &mut got);
+        let wb: Vec<u32> = want.iter().map(|f| f.to_bits()).collect();
+        let gb: Vec<u32> = got.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(wb, gb, "{name}: split store changed gathered bytes");
+        ps.reset_counters();
+
+        let mut out = Vec::new();
+        let wall = route_batches(&ps, &frontiers, &mut out);
+        let snap = ps.snapshot();
+        let hit = ps.local_hit_fraction();
+        let priced = ps.priced_time(tier).as_secs_f64() * 1e6;
+        local_hit.insert(*name, hit);
+        priced_us.insert(*name, priced / nbatch as f64);
+        if *name == "ldg" {
+            labor_frontier_rows = snap.local_rows + snap.remote_rows;
+        }
+        println!(
+            "local: {name:<10} K={k}: hit {hit:.3} ({} local / {} remote rows), \
+             priced {:.1} us/batch (wall {:.1} us/batch)",
+            snap.local_rows,
+            snap.remote_rows,
+            priced / nbatch as f64,
+            wall * 1e6 / nbatch as f64,
+        );
+    }
+    assert!(
+        local_hit["ldg"] > local_hit["random"],
+        "LDG local-hit {:.3} must beat random {:.3} — locality placement is the point",
+        local_hit["ldg"],
+        local_hit["random"]
+    );
+    let unpart_us = unpartitioned_priced_us(
+        tier,
+        nbatch as u64,
+        labor_frontier_rows,
+        (ds.num_features() * 4) as u64,
+    ) / nbatch as f64;
+    println!("price: unpartitioned (all rows remote): {unpart_us:.1} us/batch");
+
+    // == 4. NS vs LABOR-0 remote-byte amplification, same LDG placement ==
+    let (perm, map) = partition_layout(&strategies[0].1, k).expect("layout");
+    let pds = ds.relabel_with(&perm);
+    let map: Arc<PartitionMap> = Arc::new(map);
+    let dim = pds.num_features();
+    let mut remote_bytes = std::collections::HashMap::new();
+    for (label, kind) in [
+        ("labor0", SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false }),
+        ("ns", SamplerKind::Neighbor),
+    ] {
+        let s = MultiLayerSampler::new(kind, &[10, 10]);
+        let ps = PartitionedStore::split(&pds.features, dim, map.clone(), tier);
+        let mut pool = ScratchPool::new();
+        pool.set_partition_map(Some(map.clone()));
+        let mut out = Vec::new();
+        for (i, seeds) in batches(nv as u32, nbatch, bsize, 0x5EED).iter().enumerate() {
+            let mfg = s.sample_sharded(&pds.graph, seeds, i as u64, 4, &mut pool);
+            let ids = mfg.feature_vertices();
+            ps.gather_from(ps.home_for(ids), ids, &mut out);
+        }
+        let per_batch = ps.remote_bytes() as f64 / nbatch as f64;
+        remote_bytes.insert(label, per_batch);
+        println!("bytes: {label:<10} remote {:.1} KiB/batch", per_batch / 1024.0);
+    }
+    let amplification = remote_bytes["ns"] / remote_bytes["labor0"].max(1.0);
+    assert!(
+        amplification > 1.0,
+        "NS must move more remote bytes than LABOR-0 (got {amplification:.2}x): \
+         the frontier is the traffic"
+    );
+    println!("bytes: NS/LABOR-0 remote amplification {amplification:.2}x");
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("partition".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("partitions", Json::Num(k as f64)),
+        ("slack", Json::Num(slack)),
+        ("cut_fraction_ldg", Json::Num(cut_fraction["ldg"])),
+        ("cut_fraction_contiguous", Json::Num(cut_fraction["contiguous"])),
+        ("cut_fraction_random", Json::Num(cut_fraction["random"])),
+        ("local_hit_ldg", Json::Num(local_hit["ldg"])),
+        ("local_hit_contiguous", Json::Num(local_hit["contiguous"])),
+        ("local_hit_random", Json::Num(local_hit["random"])),
+        ("priced_gather_us_ldg", Json::Num(priced_us["ldg"])),
+        ("priced_gather_us_random", Json::Num(priced_us["random"])),
+        ("priced_gather_us_unpartitioned", Json::Num(unpart_us)),
+        ("remote_amplification_ns_over_labor0", Json::Num(amplification)),
+    ]);
+    std::fs::write("BENCH_partition.json", format!("{report}\n"))
+        .expect("write BENCH_partition.json");
+    println!("wrote BENCH_partition.json");
+}

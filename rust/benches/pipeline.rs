@@ -222,7 +222,11 @@ fn main() {
                     num_batches: dp_batches,
                     seed: 3,
                     intra_batch_threads: 1,
-                    data_plane: Some(DataPlaneConfig { store: store.clone(), labels: None }),
+                    data_plane: Some(DataPlaneConfig {
+                        store: store.clone(),
+                        labels: None,
+                        partitioned: None,
+                    }),
                     output_perm: None,
                     ..PipelineConfig::default()
                 },

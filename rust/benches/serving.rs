@@ -70,7 +70,11 @@ fn run_serving(
             seed: 7,
             intra_batch_threads: 1,
             sample_memo_rows: memo_rows,
-            data_plane: Some(DataPlaneConfig { store: Arc::new(store), labels: None }),
+            data_plane: Some(DataPlaneConfig {
+                store: Arc::new(store),
+                labels: None,
+                partitioned: None,
+            }),
             output_perm: None,
             failure_policy: FailurePolicy::Propagate,
             degrade: None,
@@ -138,7 +142,11 @@ fn run_chaos(
             seed: 7,
             intra_batch_threads: 1,
             sample_memo_rows: 0,
-            data_plane: Some(DataPlaneConfig { store: Arc::new(store), labels: None }),
+            data_plane: Some(DataPlaneConfig {
+                store: Arc::new(store),
+                labels: None,
+                partitioned: None,
+            }),
             output_perm: None,
             failure_policy: FailurePolicy::Supervise {
                 max_restarts: 10_000,

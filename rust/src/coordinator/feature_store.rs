@@ -48,12 +48,23 @@ impl TierModel {
         Self { request_latency: Duration::from_micros(80), bandwidth_bps: 3.0e9 }
     }
 
-    /// Parse a tier name (`local` | `pcie` | `nvme`) — the CLI/bench knob.
+    /// A remote-partition tier: a cross-machine feature fetch inside one
+    /// datacenter — ~50 µs request latency (RPC round-trip setup), ~1.25
+    /// GB/s sustained (10 GbE). This is what a gather from another
+    /// partition's store costs in a partitioned deployment (see
+    /// [`PartitionedStore`](super::partition_store::PartitionedStore)).
+    pub fn remote() -> Self {
+        Self { request_latency: Duration::from_micros(50), bandwidth_bps: 1.25e9 }
+    }
+
+    /// Parse a tier name (`local` | `pcie` | `nvme` | `remote`) — the
+    /// CLI/bench knob.
     pub fn parse(name: &str) -> Option<Self> {
         match name {
             "local" => Some(Self::local()),
             "pcie" => Some(Self::pcie()),
             "nvme" => Some(Self::nvme()),
+            "remote" => Some(Self::remote()),
             _ => None,
         }
     }

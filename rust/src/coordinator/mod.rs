@@ -9,6 +9,7 @@ pub mod batcher;
 pub mod cache;
 pub mod feature_store;
 pub mod metrics;
+pub mod partition_store;
 pub mod pipeline;
 pub mod serving;
 pub mod supervise;
@@ -16,14 +17,15 @@ pub mod supervise;
 pub use batcher::EpochBatcher;
 pub use cache::{DegreeOrderedCache, FeatureCache, NullCache};
 pub use feature_store::{FeatureStore, GatherError, GatheredLabels, LabelStore, TierModel};
+pub use partition_store::{LocalitySnapshot, PartitionedStore};
 pub use metrics::{
     FaultCounters, FaultSnapshot, HistogramSnapshot, LatencyHistogram, SamplerStats,
     StageSnapshot, StageTimers,
 };
 pub use pipeline::{DataPlaneConfig, PipelineConfig, SampledBatch, SamplingPipeline};
 pub use serving::{
-    coalesce_seeds, replay_open_loop, PendingResponse, ServeError, ServeHandle,
-    ServeResponse, ServingConfig, ServingFrontEnd, ServingSnapshot,
+    coalesce_seeds, coalesce_seeds_into, replay_open_loop, PendingResponse, ServeError,
+    ServeHandle, ServeResponse, ServingConfig, ServingFrontEnd, ServingSnapshot,
 };
 pub use supervise::{
     Backoff, BatchError, DegradeConfig, DegradeController, FailurePolicy, WorkFault,

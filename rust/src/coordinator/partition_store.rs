@@ -1,0 +1,429 @@
+//! Per-partition feature stores behind one gather facade.
+//!
+//! In a partitioned deployment each machine holds the feature rows of its
+//! own partition; a mini-batch gather touches the home partition for free
+//! and pays a network hop for every other partition it reaches into. This
+//! module models that on one machine: the row-major feature table is
+//! **split** into per-partition [`FeatureStore`]s along a
+//! [`PartitionMap`]'s row ranges (same total memory, zero rows
+//! duplicated), and [`PartitionedStore::gather_from`] routes each
+//! requested row to its owning store — counting local vs. remote rows and
+//! bytes, and pricing the remote share under [`TierModel::remote`] the
+//! same analytic way [`FeatureStore::priced_time`] prices tier sweeps.
+//!
+//! The facade is **bit-identical** to a flat store: gathered bytes are a
+//! pure function of the requested ids, the partition structure only
+//! redirects *accounting* (`tests/partition_identity.rs` pins flat vs.
+//! partitioned gathers to the byte). This is the LABOR story again at the
+//! cluster scale: the sampler shrinks the frontier, the frontier is the
+//! cross-partition traffic, so LABOR-0's smaller unique-vertex sets turn
+//! directly into fewer remote bytes than NS (`benches/partition.rs`
+//! measures the amplification).
+
+use super::feature_store::{FeatureStore, GatherError, TierModel};
+use crate::graph::PartitionMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Monotonic locality totals of a [`PartitionedStore`] — diff two
+/// snapshots for per-batch local/remote rows and bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LocalitySnapshot {
+    /// rows served from the gather's home partition
+    pub local_rows: u64,
+    /// rows served from any other partition (paid the remote tier)
+    pub remote_rows: u64,
+    /// gather calls
+    pub requests: u64,
+    /// per-partition fetches that crossed a partition boundary (one per
+    /// non-home partition touched per gather — the "network hops")
+    pub remote_requests: u64,
+}
+
+impl LocalitySnapshot {
+    /// Counter movement since `earlier` (callers snapshot around a batch).
+    pub fn since(&self, earlier: &LocalitySnapshot) -> LocalitySnapshot {
+        LocalitySnapshot {
+            local_rows: self.local_rows - earlier.local_rows,
+            remote_rows: self.remote_rows - earlier.remote_rows,
+            requests: self.requests - earlier.requests,
+            remote_requests: self.remote_requests - earlier.remote_requests,
+        }
+    }
+
+    /// Fraction of gathered rows that stayed on the home partition
+    /// (1.0 when nothing was gathered).
+    pub fn local_fraction(&self) -> f64 {
+        let total = self.local_rows + self.remote_rows;
+        if total == 0 {
+            1.0
+        } else {
+            self.local_rows as f64 / total as f64
+        }
+    }
+}
+
+/// K per-partition [`FeatureStore`]s behind one flat-addressed gather.
+///
+/// Ids are **partition-major global ids** (the graph's vertex ids after
+/// the partition-major relabel); each row is owned by exactly one inner
+/// store and addressed there by `id - bounds[owner]`. All counters are
+/// atomic and every method takes `&self`, so one store behind an `Arc`
+/// serves any number of pipeline workers — the same sharing contract as
+/// [`FeatureStore`].
+pub struct PartitionedStore {
+    map: Arc<PartitionMap>,
+    stores: Vec<FeatureStore>,
+    dim: usize,
+    remote_tier: TierModel,
+    local_rows: AtomicU64,
+    remote_rows: AtomicU64,
+    requests: AtomicU64,
+    remote_requests: AtomicU64,
+}
+
+impl std::fmt::Debug for PartitionedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PartitionedStore")
+            .field("partitions", &self.map.num_partitions())
+            .field("rows", &self.num_rows())
+            .field("dim", &self.dim)
+            .field("remote_tier", &self.remote_tier)
+            .finish()
+    }
+}
+
+impl PartitionedStore {
+    /// Split row-major `features` (`|V| × dim`) into per-partition stores
+    /// along `map`'s row ranges. The inner stores run on
+    /// [`TierModel::local`] (their own tier accounting is not the model
+    /// here); the cross-partition share is priced under `remote_tier` by
+    /// this facade's counters.
+    ///
+    /// # Panics
+    /// When `features` does not hold exactly `map.num_vertices()` rows of
+    /// `dim` floats.
+    pub fn split(
+        features: &[f32],
+        dim: usize,
+        map: Arc<PartitionMap>,
+        remote_tier: TierModel,
+    ) -> Self {
+        assert!(dim > 0, "feature dim must be positive");
+        assert_eq!(
+            features.len(),
+            map.num_vertices() * dim,
+            "feature table of {} floats is not {} rows x {dim}",
+            features.len(),
+            map.num_vertices()
+        );
+        let stores = (0..map.num_partitions())
+            .map(|p| {
+                let r = map.range(p);
+                let rows = features[r.start as usize * dim..r.end as usize * dim].to_vec();
+                FeatureStore::new(rows, dim, TierModel::local())
+            })
+            .collect();
+        Self {
+            map,
+            stores,
+            dim,
+            remote_tier,
+            local_rows: AtomicU64::new(0),
+            remote_rows: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            remote_requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.map.num_vertices()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn row_bytes(&self) -> u64 {
+        (self.dim * 4) as u64
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.map.num_partitions()
+    }
+
+    pub fn partition_map(&self) -> &Arc<PartitionMap> {
+        &self.map
+    }
+
+    pub fn remote_tier(&self) -> TierModel {
+        self.remote_tier
+    }
+
+    /// The partition owning the plurality of `ids` — the natural "home"
+    /// for a batch's gather (deterministic: ties break to the lower
+    /// partition index). Partition 0 for an empty slice.
+    pub fn home_for(&self, ids: &[u32]) -> u32 {
+        let mut counts = vec![0u64; self.map.num_partitions()];
+        for &v in ids {
+            if let Some(p) = self.map.try_owner(v) {
+                counts[p as usize] += 1;
+            }
+        }
+        (0..counts.len()).max_by_key(|&p| (counts[p], std::cmp::Reverse(p))).unwrap_or(0) as u32
+    }
+
+    /// Gather rows `ids` into `out` (cleared and resized to
+    /// `ids.len() * dim`) as seen from partition `home`: rows owned by
+    /// `home` count local, every other row counts remote and prices the
+    /// remote tier. The gathered bytes are identical to a flat
+    /// [`FeatureStore::gather`] of the same ids — partition structure
+    /// never changes the data, only the accounting. Returns the simulated
+    /// remote-fetch duration for this call (zero when fully local).
+    ///
+    /// # Panics
+    /// On an out-of-range vertex id or a `home` beyond the partition
+    /// count, with a named message.
+    pub fn gather_from(&self, home: u32, ids: &[u32], out: &mut Vec<f32>) -> Duration {
+        assert!(
+            (home as usize) < self.map.num_partitions(),
+            "PartitionedStore::gather_from: home partition {home} out of range ({} partitions)",
+            self.map.num_partitions()
+        );
+        let rows = self.num_rows();
+        for &v in ids {
+            assert!(
+                (v as usize) < rows,
+                "PartitionedStore::gather_from: vertex id {v} out of range (store has {rows} rows)"
+            );
+        }
+        out.clear();
+        out.resize(ids.len() * self.dim, 0.0);
+        let k = self.map.num_partitions();
+        let mut local = 0u64;
+        let mut remote = 0u64;
+        let mut hops = 0u64;
+        let mut local_ids: Vec<u32> = Vec::new();
+        let mut positions: Vec<u32> = Vec::new();
+        let mut rows_buf: Vec<f32> = Vec::new();
+        // one pass per partition (K is small): collect the partition's
+        // requested rows in first-seen order, fetch them in ONE request
+        // from the owning store (one network hop per remote partition),
+        // then scatter each row to its position in the flat output
+        for p in 0..k as u32 {
+            let base = self.map.range(p as usize).start;
+            local_ids.clear();
+            positions.clear();
+            for (i, &v) in ids.iter().enumerate() {
+                if self.map.owner(v) == p {
+                    local_ids.push(v - base);
+                    positions.push(i as u32);
+                }
+            }
+            if local_ids.is_empty() {
+                continue;
+            }
+            self.stores[p as usize].gather(&local_ids, &mut rows_buf);
+            for (j, &pos) in positions.iter().enumerate() {
+                let src = &rows_buf[j * self.dim..(j + 1) * self.dim];
+                out[pos as usize * self.dim..(pos as usize + 1) * self.dim]
+                    .copy_from_slice(src);
+            }
+            if p == home {
+                local += local_ids.len() as u64;
+            } else {
+                remote += local_ids.len() as u64;
+                hops += 1;
+            }
+        }
+        self.local_rows.fetch_add(local, Ordering::Relaxed);
+        self.remote_rows.fetch_add(remote, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.remote_requests.fetch_add(hops, Ordering::Relaxed);
+        if hops == 0 {
+            return Duration::ZERO;
+        }
+        self.remote_tier.request_latency.mul_f64(hops as f64)
+            + if self.remote_tier.bandwidth_bps.is_infinite() {
+                Duration::ZERO
+            } else {
+                Duration::from_secs_f64(
+                    (remote * self.row_bytes()) as f64 / self.remote_tier.bandwidth_bps,
+                )
+            }
+    }
+
+    /// The `Result` twin of [`gather_from`](Self::gather_from) and the
+    /// same **`gather` failpoint site** as [`FeatureStore::try_gather`]:
+    /// injected faults and out-of-range ids come back as named
+    /// [`GatherError`]s so supervised serving workers treat a partitioned
+    /// plane exactly like a flat one.
+    pub fn try_gather_from(
+        &self,
+        home: u32,
+        ids: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Result<Duration, GatherError> {
+        crate::util::failpoint::hit("gather").map_err(GatherError::Injected)?;
+        let rows = self.num_rows();
+        if let Some(&v) = ids.iter().find(|&&v| v as usize >= rows) {
+            return Err(GatherError::OutOfRange { id: v, rows });
+        }
+        Ok(self.gather_from(home, ids, out))
+    }
+
+    /// Current locality totals (diff two for a per-batch view).
+    pub fn snapshot(&self) -> LocalitySnapshot {
+        LocalitySnapshot {
+            local_rows: self.local_rows.load(Ordering::Relaxed),
+            remote_rows: self.remote_rows.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            remote_requests: self.remote_requests.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fraction of all gathered rows served from their gather's home
+    /// partition (1.0 before any gather).
+    pub fn local_hit_fraction(&self) -> f64 {
+        self.snapshot().local_fraction()
+    }
+
+    /// Remote bytes moved so far (`remote_rows × row_bytes`).
+    pub fn remote_bytes(&self) -> u64 {
+        self.remote_rows.load(Ordering::Relaxed) * self.row_bytes()
+    }
+
+    /// Analytic price of the recorded cross-partition traffic under
+    /// `tier`: `remote_requests × latency + remote_bytes / bandwidth` —
+    /// the network-hop twin of [`FeatureStore::priced_time`].
+    pub fn priced_time(&self, tier: TierModel) -> Duration {
+        let s = self.snapshot();
+        let latency = tier.request_latency.mul_f64(s.remote_requests as f64);
+        if tier.bandwidth_bps.is_infinite() {
+            return latency;
+        }
+        latency + Duration::from_secs_f64(self.remote_bytes() as f64 / tier.bandwidth_bps)
+    }
+
+    /// Zero every locality counter (storage is untouched). Also resets
+    /// the inner per-partition stores' own counters.
+    pub fn reset_counters(&self) {
+        self.local_rows.store(0, Ordering::Relaxed);
+        self.remote_rows.store(0, Ordering::Relaxed);
+        self.requests.store(0, Ordering::Relaxed);
+        self.remote_requests.store(0, Ordering::Relaxed);
+        for s in &self.stores {
+            s.reset_counters();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(rows: usize, dim: usize) -> Vec<f32> {
+        (0..rows * dim).map(|x| x as f32).collect()
+    }
+
+    fn split3(dim: usize) -> (PartitionedStore, FeatureStore, Vec<f32>) {
+        let feats = table(9, dim);
+        let map = Arc::new(PartitionMap::from_bounds(vec![0, 3, 6, 9]).unwrap());
+        let ps = PartitionedStore::split(&feats, dim, map, TierModel::remote());
+        let flat = FeatureStore::new(feats.clone(), dim, TierModel::local());
+        (ps, flat, feats)
+    }
+
+    #[test]
+    fn partitioned_gather_is_bit_identical_to_flat() {
+        let (ps, flat, _) = split3(4);
+        let ids = [8u32, 0, 4, 1, 8, 2, 6, 3];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for home in 0..3u32 {
+            ps.gather_from(home, &ids, &mut a);
+            flat.gather(&ids, &mut b);
+            assert_eq!(a, b, "home {home}");
+        }
+        // duplicates, empty, single
+        ps.gather_from(0, &[], &mut a);
+        flat.gather(&[], &mut b);
+        assert_eq!(a, b);
+        ps.gather_from(2, &[5, 5, 5], &mut a);
+        flat.gather(&[5, 5, 5], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn locality_counters_split_by_home() {
+        let (ps, _, _) = split3(2);
+        let mut out = Vec::new();
+        // 2 rows in p0, 1 in p1, 1 in p2, viewed from home 0
+        ps.gather_from(0, &[0, 2, 3, 7], &mut out);
+        let s = ps.snapshot();
+        assert_eq!(s.local_rows, 2);
+        assert_eq!(s.remote_rows, 2);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.remote_requests, 2, "two non-home partitions touched");
+        assert!((ps.local_hit_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(ps.remote_bytes(), 2 * 2 * 4);
+        // a fully-local gather pays nothing
+        let before = ps.snapshot();
+        let d = ps.gather_from(1, &[3, 4, 5], &mut out);
+        assert_eq!(d, Duration::ZERO);
+        let delta = ps.snapshot().since(&before);
+        assert_eq!(delta.local_rows, 3);
+        assert_eq!(delta.remote_rows, 0);
+        assert_eq!(delta.remote_requests, 0);
+        assert_eq!(delta.local_fraction(), 1.0);
+    }
+
+    #[test]
+    fn remote_traffic_prices_like_network_hops() {
+        let (ps, _, _) = split3(2);
+        let mut out = Vec::new();
+        let d = ps.gather_from(0, &[0, 3, 6], &mut out);
+        // 2 hops x 50us + 2 rows x 8 B at 1.25 GB/s
+        let tier = TierModel::remote();
+        let expect = tier.request_latency.mul_f64(2.0)
+            + Duration::from_secs_f64(16.0 / tier.bandwidth_bps);
+        assert!(d.abs_diff(expect) < Duration::from_nanos(10), "{d:?} vs {expect:?}");
+        assert!(ps.priced_time(tier).abs_diff(expect) < Duration::from_nanos(10));
+        assert_eq!(ps.priced_time(TierModel::local()), Duration::ZERO);
+        ps.reset_counters();
+        assert_eq!(ps.snapshot(), LocalitySnapshot::default());
+        assert_eq!(ps.local_hit_fraction(), 1.0);
+    }
+
+    #[test]
+    fn home_for_picks_plurality_owner_deterministically() {
+        let (ps, _, _) = split3(1);
+        assert_eq!(ps.home_for(&[0, 1, 7]), 0);
+        assert_eq!(ps.home_for(&[6, 7, 3]), 2);
+        assert_eq!(ps.home_for(&[0, 3]), 0, "tie breaks to the lower partition");
+        assert_eq!(ps.home_for(&[]), 0);
+    }
+
+    #[test]
+    fn try_gather_from_names_bad_ids() {
+        let (ps, _, _) = split3(2);
+        let mut out = Vec::new();
+        assert!(ps.try_gather_from(0, &[1, 8], &mut out).is_ok());
+        let err = ps.try_gather_from(0, &[1, 9], &mut out).unwrap_err();
+        assert_eq!(err, GatherError::OutOfRange { id: 9, rows: 9 });
+        // the failed gather recorded nothing
+        assert_eq!(ps.snapshot().requests, 1);
+    }
+
+    #[test]
+    fn single_partition_store_is_all_local() {
+        let feats = table(5, 3);
+        let map = Arc::new(PartitionMap::single(5));
+        let ps = PartitionedStore::split(&feats, 3, map, TierModel::remote());
+        let mut out = Vec::new();
+        let d = ps.gather_from(0, &[4, 0, 2], &mut out);
+        assert_eq!(d, Duration::ZERO);
+        assert_eq!(ps.local_hit_fraction(), 1.0);
+        assert_eq!(ps.remote_bytes(), 0);
+    }
+}

@@ -60,6 +60,7 @@ use super::batcher::EpochBatcher;
 use super::cache::FeatureCache;
 use super::feature_store::{FeatureStore, GatheredLabels, LabelStore, TierModel};
 use super::metrics::{FaultCounters, FaultSnapshot, StageSnapshot, StageTimers};
+use super::partition_store::PartitionedStore;
 use super::supervise::{Backoff, BatchError, FailurePolicy, WorkFault};
 use crate::data::Dataset;
 use crate::graph::compact::VertexPerm;
@@ -92,6 +93,13 @@ pub struct SampledBatch {
 pub struct DataPlaneConfig {
     pub store: Arc<FeatureStore>,
     pub labels: Option<Arc<LabelStore>>,
+    /// When set, feature gathers route through the partition-split store
+    /// instead of `store`: each batch picks a home partition (plurality
+    /// owner of its deepest-layer vertices) and rows owned elsewhere are
+    /// priced as remote hops. Gathered bytes stay **bit-identical** to
+    /// the flat `store` path — only the locality accounting and the
+    /// priced time differ.
+    pub partitioned: Option<Arc<PartitionedStore>>,
 }
 
 impl std::fmt::Debug for DataPlaneConfig {
@@ -99,6 +107,7 @@ impl std::fmt::Debug for DataPlaneConfig {
         f.debug_struct("DataPlaneConfig")
             .field("store", &self.store)
             .field("labels", &self.labels.as_ref().map(|l| l.num_rows()))
+            .field("partitions", &self.partitioned.as_ref().map(|p| p.num_partitions()))
             .finish()
     }
 }
@@ -113,7 +122,16 @@ impl DataPlaneConfig {
         Self {
             store: Arc::new(store),
             labels: Some(Arc::new(LabelStore::from_dataset(ds))),
+            partitioned: None,
         }
+    }
+
+    /// Route this plane's feature gathers through a partition-split store
+    /// (see [`PartitionedStore`]); the flat `store` keeps serving callers
+    /// that want tier-priced unpartitioned gathers for comparison.
+    pub fn with_partitioned(mut self, ps: Arc<PartitionedStore>) -> Self {
+        self.partitioned = Some(ps);
+        self
     }
 }
 
@@ -262,6 +280,13 @@ impl SamplingPipeline {
                 // delivered batches stay independent of worker count,
                 // shard count, and scheduling.
                 let mut pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
+                // Partitioned data plane: align shard boundaries to the
+                // partition breaks and account per-layer frontier
+                // exchange. Output stays bit-identical — the merge
+                // contract holds for any contiguous shard ranges.
+                if let Some(ps) = plane.as_ref().and_then(|p| p.partitioned.as_ref()) {
+                    pool.set_partition_map(Some(ps.partition_map().clone()));
+                }
                 loop {
                     let id = cursor.fetch_add(1, Ordering::Relaxed);
                     if id >= num_batches {
@@ -328,6 +353,11 @@ impl SamplingPipeline {
                                         graph.num_vertices(),
                                         shards,
                                     );
+                                    if let Some(ps) =
+                                        plane.as_ref().and_then(|p| p.partitioned.as_ref())
+                                    {
+                                        pool.set_partition_map(Some(ps.partition_map().clone()));
+                                    }
                                     std::thread::sleep(
                                         backoff.delay((n - 1).min(u32::MAX as u64) as u32),
                                     );
@@ -520,7 +550,21 @@ fn produce_batch(
             // the consumer, so a reusable staging buffer would only add a
             // second full memcpy
             let mut feats = Vec::new();
-            p.store.try_gather(mfg.feature_vertices(), &mut feats).map_err(WorkFault::from)?;
+            match &p.partitioned {
+                Some(ps) => {
+                    // partition-aware gather: the batch's home partition
+                    // is served locally, every other owner is one priced
+                    // remote hop — same bytes, different accounting
+                    let ids = mfg.feature_vertices();
+                    let home = ps.home_for(ids);
+                    ps.try_gather_from(home, ids, &mut feats).map_err(WorkFault::from)?;
+                }
+                None => {
+                    p.store
+                        .try_gather(mfg.feature_vertices(), &mut feats)
+                        .map_err(WorkFault::from)?;
+                }
+            }
             let labels = match &p.labels {
                 Some(ls) => ls.gather(seeds),
                 None => GatheredLabels::None,
@@ -644,6 +688,7 @@ mod tests {
         let plane = DataPlaneConfig {
             store: store.clone(),
             labels: Some(Arc::new(LabelStore::Single(Arc::new(labels)))),
+            partitioned: None,
         };
         let sampler = Arc::new(MultiLayerSampler::new(
             SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
@@ -784,7 +829,7 @@ mod tests {
                 num_batches: 4,
                 seed: 1,
                 intra_batch_threads: 1,
-                data_plane: Some(DataPlaneConfig { store, labels: None }),
+                data_plane: Some(DataPlaneConfig { store, labels: None, partitioned: None }),
                 output_perm: None,
                 failure_policy: FailurePolicy::Propagate,
             },
@@ -865,6 +910,62 @@ mod tests {
         assert_eq!(faults.failed, 3);
         assert_eq!(faults.retried, 0, "panics are restarts, not retries");
         p.join(); // must not re-raise: the worker was supervised back up
+    }
+
+    #[test]
+    fn partitioned_plane_delivers_identical_features() {
+        // the partition-split store is an accounting overlay: delivered
+        // feature bytes must be bit-identical to the flat store's, for
+        // every worker/shard schedule, while the locality counters fill
+        let g = Arc::new(crate::sampler::testutil::test_graph());
+        let nv = g.num_vertices();
+        let dim = 3usize;
+        let feats: Vec<f32> = (0..nv * dim).map(|x| (x % 97) as f32).collect();
+        let sampler = Arc::new(MultiLayerSampler::new(
+            SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+            &[5, 5],
+        ));
+        let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
+        let collect = |plane: DataPlaneConfig| -> Vec<Vec<f32>> {
+            let mut p = SamplingPipeline::spawn(
+                g.clone(),
+                sampler.clone(),
+                ids.clone(),
+                PipelineConfig {
+                    num_workers: 3,
+                    queue_depth: 2,
+                    batch_size: 64,
+                    num_batches: 6,
+                    seed: 5,
+                    intra_batch_threads: 2,
+                    data_plane: Some(plane),
+                    output_perm: None,
+                    failure_policy: FailurePolicy::Propagate,
+                },
+            );
+            let out: Vec<Vec<f32>> = (&mut p).map(|b| b.feats).collect();
+            p.join();
+            out
+        };
+        let store = Arc::new(FeatureStore::new(feats.clone(), dim, TierModel::local()));
+        let flat =
+            collect(DataPlaneConfig { store: store.clone(), labels: None, partitioned: None });
+        let map =
+            Arc::new(crate::graph::PartitionMap::from_counts(&[200, 200, 100]).unwrap());
+        let ps = Arc::new(PartitionedStore::split(&feats, dim, map, TierModel::remote()));
+        let part = collect(DataPlaneConfig {
+            store,
+            labels: None,
+            partitioned: Some(ps.clone()),
+        });
+        assert_eq!(flat, part, "partition routing must not change gathered bytes");
+        let snap = ps.snapshot();
+        assert_eq!(snap.requests, 6, "one gather per batch");
+        assert!(snap.local_rows > 0, "home partitions must serve some rows locally");
+        assert!(
+            snap.remote_rows > 0,
+            "a 3-partition split of a mixed frontier must cross partitions"
+        );
     }
 
     #[test]

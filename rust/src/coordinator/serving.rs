@@ -590,15 +590,49 @@ impl Drop for ServingFrontEnd {
 pub fn coalesce_seeds(seeds: &[u32]) -> (Vec<u32>, Vec<u32>) {
     let mut unique = Vec::with_capacity(seeds.len());
     let mut pos = Vec::with_capacity(seeds.len());
-    let mut map = std::collections::HashMap::with_capacity(seeds.len());
+    let mut seen = std::collections::HashMap::with_capacity(seeds.len());
+    coalesce_seeds_into(seeds, &mut unique, &mut pos, &mut seen);
+    (unique, pos)
+}
+
+/// [`coalesce_seeds`] into caller-owned buffers (cleared, capacity kept):
+/// the coalescer calls this every flush with warm buffers, so a
+/// steady-state flush dedupes without allocating — see
+/// `tests/scratch_alloc.rs` for the allocation-count pin.
+pub fn coalesce_seeds_into(
+    seeds: &[u32],
+    unique: &mut Vec<u32>,
+    pos: &mut Vec<u32>,
+    seen: &mut std::collections::HashMap<u32, u32>,
+) {
+    unique.clear();
+    pos.clear();
+    seen.clear();
     for &s in seeds {
-        let p = *map.entry(s).or_insert_with(|| {
+        let p = *seen.entry(s).or_insert_with(|| {
             unique.push(s);
             (unique.len() - 1) as u32
         });
         pos.push(p);
     }
-    (unique, pos)
+}
+
+/// The coalescer's per-flush working memory, reused across flushes: the
+/// admission survivor list, the dedup buffers, the sampling-space seed
+/// list, and the shared gather buffer. Everything here is *internal* to a
+/// flush — the per-response payloads that escape into [`ServeResponse`]
+/// are still freshly allocated. After the first few flushes size these to
+/// steady state, a flush's demux/assembly path allocates only its outputs.
+#[derive(Default)]
+struct FlushScratch {
+    live: Vec<ServeRequest>,
+    request_seeds: Vec<u32>,
+    unique: Vec<u32>,
+    pos: Vec<u32>,
+    seen: std::collections::HashMap<u32, u32>,
+    sample_seeds: Vec<u32>,
+    /// the batch-wide gather target (demux copies rows out per response)
+    feats: Vec<f32>,
 }
 
 /// Open-loop workload replay: submit `seeds[i]` after the cumulative
@@ -649,7 +683,13 @@ fn coalescer_loop(
     let shards = cfg.intra_batch_threads.max(1);
     let max_batch = cfg.max_batch.max(1);
     let mut pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
+    // partitioned data plane: shard boundaries snap to partition breaks
+    // and per-flush frontier exchange is accounted (output unchanged)
+    if let Some(ps) = cfg.data_plane.as_ref().and_then(|p| p.partitioned.as_ref()) {
+        pool.set_partition_map(Some(ps.partition_map().clone()));
+    }
     let mut demux_map = EpochMap::default();
+    let mut scratch = FlushScratch::default();
     let mut controller = cfg.degrade.clone().map(DegradeController::new);
     // hot-vertex memo: only when configured AND the sampler kind is pure
     // per (layer, fanout, vertex) — anything else silently keeps the
@@ -666,6 +706,10 @@ fn coalescer_loop(
         }
     };
     let mut batch_id = 0u64;
+    // warm across flushes, like the scratch pool: the request accumulator
+    // and the pre-cloned response senders
+    let mut batch: Vec<ServeRequest> = Vec::new();
+    let mut txs: Vec<mpsc::Sender<Result<ServeResponse, ServeError>>> = Vec::new();
     loop {
         let first = match rx.recv() {
             Ok(r) => {
@@ -674,7 +718,8 @@ fn coalescer_loop(
             }
             Err(_) => return,
         };
-        let mut batch = vec![first];
+        batch.clear();
+        batch.push(first);
         let flush_at = Instant::now() + cfg.window;
         let mut disconnected = false;
         while batch.len() < max_batch {
@@ -700,12 +745,13 @@ fn coalescer_loop(
         // request senders before any handler up-stack could run). Requests
         // already served before the panic simply ignore the second event
         // (the first message in a response channel wins).
-        let txs: Vec<mpsc::Sender<Result<ServeResponse, ServeError>>> =
-            batch.iter().map(|r| r.tx.clone()).collect();
+        txs.clear();
+        txs.extend(batch.iter().map(|r| r.tx.clone()));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             serve_batch(
-                graph, sampler, cfg, metrics, shared, batch_id, batch, &mut pool, &mut demux_map,
-                &mut memo, &mut controller, max_retries, supervised,
+                graph, sampler, cfg, metrics, shared, batch_id, &mut batch, &mut pool,
+                &mut demux_map, &mut scratch, &mut memo, &mut controller, max_retries,
+                supervised,
             );
         }));
         if let Err(panic) = result {
@@ -713,14 +759,14 @@ fn coalescer_loop(
                 // fail fast, but classified: flag the death and notify the
                 // doomed batch before re-raising toward shutdown()
                 shared.worker_dead.store(true, Ordering::SeqCst);
-                for tx in txs {
+                for tx in txs.drain(..) {
                     let _ = tx.send(Err(ServeError::WorkerDied { restarts: 0 }));
                 }
                 std::panic::resume_unwind(panic);
             }
             let restarts = shared.restarts.fetch_add(1, Ordering::SeqCst) + 1;
             metrics.faults.record_restart();
-            for tx in txs {
+            for tx in txs.drain(..) {
                 let _ = tx.send(Err(ServeError::WorkerDied { restarts }));
             }
             if restarts > max_restarts as u64 {
@@ -732,7 +778,11 @@ fn coalescer_loop(
             // a respawned worker starts from a cold, deterministic cache),
             // then back off on the deterministic schedule
             pool = ScratchPool::for_vertices(graph.num_vertices(), shards);
+            if let Some(ps) = cfg.data_plane.as_ref().and_then(|p| p.partitioned.as_ref()) {
+                pool.set_partition_map(Some(ps.partition_map().clone()));
+            }
             demux_map = EpochMap::default();
+            scratch = FlushScratch::default();
             memo = memo.as_ref().map(|m| SampleMemo::new(m.rows()));
             std::thread::sleep(backoff.delay((restarts - 1).min(u32::MAX as u64) as u32));
         }
@@ -744,19 +794,19 @@ fn coalescer_loop(
 }
 
 /// Everything a successful flush produced before demux: the shared MFG
-/// (sampling id space) and the batch-wide gather results.
+/// (sampling id space) and the batch-wide gather results. The gathered
+/// feature rows live in the caller's warm [`FlushScratch::feats`] buffer.
 struct BatchPayload {
     mfg: Mfg,
-    feats: Vec<f32>,
     labels: GatheredLabels,
     dim: usize,
     row_bytes: u64,
 }
 
 /// The fallible core of a flush: sample (optionally under a degraded
-/// fanout cap) and gather. Fully deterministic in its inputs, so a retry
-/// after a transient fault reproduces the exact batch a never-failed run
-/// would have served.
+/// fanout cap) and gather into the caller's warm `feats` buffer. Fully
+/// deterministic in its inputs, so a retry after a transient fault
+/// reproduces the exact batch a never-failed run would have served.
 #[allow(clippy::too_many_arguments)]
 fn flush_payload(
     graph: &CscGraph,
@@ -766,6 +816,7 @@ fn flush_payload(
     batch_seed: u64,
     fanout_cap: Option<u32>,
     pool: &mut ScratchPool,
+    feats: &mut Vec<f32>,
     memo: &mut Option<SampleMemo>,
 ) -> Result<BatchPayload, WorkFault> {
     failpoint::hit("sample_flush").map_err(WorkFault::from)?;
@@ -780,19 +831,32 @@ fn flush_payload(
     } else {
         sampler.sample_with_cap(graph, sample_seeds, batch_seed, fanout_cap, pool.main_mut())
     };
-    let mut feats = Vec::new();
+    feats.clear();
     let mut labels = GatheredLabels::None;
     let mut dim = 0usize;
     let mut row_bytes = 0u64;
     if let Some(plane) = &cfg.data_plane {
-        plane.store.try_gather(mfg.feature_vertices(), &mut feats).map_err(WorkFault::from)?;
+        match &plane.partitioned {
+            Some(ps) => {
+                // partition-aware gather: this flush's home partition is
+                // the plurality owner of the batch frontier; rows owned
+                // elsewhere are priced as remote hops. Bytes are
+                // bit-identical to the flat store path.
+                let ids = mfg.feature_vertices();
+                let home = ps.home_for(ids);
+                ps.try_gather_from(home, ids, feats).map_err(WorkFault::from)?;
+            }
+            None => {
+                plane.store.try_gather(mfg.feature_vertices(), feats).map_err(WorkFault::from)?;
+            }
+        }
         if let Some(ls) = &plane.labels {
             labels = ls.gather(sample_seeds);
         }
         dim = plane.store.dim();
         row_bytes = plane.store.row_bytes();
     }
-    Ok(BatchPayload { mfg, feats, labels, dim, row_bytes })
+    Ok(BatchPayload { mfg, labels, dim, row_bytes })
 }
 
 /// Feed one flush outcome to the degradation controller (if configured):
@@ -821,6 +885,7 @@ fn observe_flush(
 /// One coalesced pass: expire, dedupe, sample, gather, demux, respond.
 /// `supervised` selects the fault posture: retry/fail-the-batch (with
 /// `max_retries` in-place attempts for transient faults) vs panic.
+/// `batch` is drained; `scratch` holds the flush's warm working buffers.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     graph: &CscGraph,
@@ -829,9 +894,10 @@ fn serve_batch(
     metrics: &ServingMetrics,
     shared: &ServingShared,
     batch_id: u64,
-    batch: Vec<ServeRequest>,
+    batch: &mut Vec<ServeRequest>,
     pool: &mut ScratchPool,
     demux_map: &mut EpochMap,
+    scratch: &mut FlushScratch,
     memo: &mut Option<SampleMemo>,
     controller: &mut Option<DegradeController>,
     max_retries: u32,
@@ -849,10 +915,10 @@ fn serve_batch(
     //    still gets its response — admission rejects, it does not abort.)
     let now = Instant::now();
     let nv = graph.num_vertices();
-    let mut live = Vec::with_capacity(batch.len());
+    scratch.live.clear();
     let mut expired_here = 0u64;
     let mut min_headroom: Option<Duration> = None;
-    for req in batch {
+    for req in batch.drain(..) {
         if now > req.deadline {
             let late_by = now - req.deadline;
             expired_here += 1;
@@ -868,23 +934,33 @@ fn serve_batch(
         } else {
             let headroom = req.deadline.saturating_duration_since(now);
             min_headroom = Some(min_headroom.map_or(headroom, |m| m.min(headroom)));
-            live.push(req);
+            scratch.live.push(req);
         }
     }
-    if live.is_empty() {
+    if scratch.live.is_empty() {
         // a fully-expired flush performs no sampler pass, but it still
         // counts as a (pressured) observation for the controller
         observe_flush(controller, expired_here, None, queue_len_at_flush);
         return;
     }
     // 2. dedupe (first-seen order) in the request id space, then translate
-    //    to the sampling id space if the graph is relabeled
-    let request_seeds: Vec<u32> = live.iter().map(|r| r.seed).collect();
-    let (unique, pos) = coalesce_seeds(&request_seeds);
-    let sample_seeds: Vec<u32> = match &cfg.output_perm {
-        Some(perm) => unique.iter().map(|&v| perm.to_new(v)).collect(),
-        None => unique,
-    };
+    //    to the sampling id space if the graph is relabeled — all into
+    //    warm buffers, so a steady-state flush's dedup is allocation-free
+    scratch.request_seeds.clear();
+    scratch.request_seeds.extend(scratch.live.iter().map(|r| r.seed));
+    coalesce_seeds_into(
+        &scratch.request_seeds,
+        &mut scratch.unique,
+        &mut scratch.pos,
+        &mut scratch.seen,
+    );
+    scratch.sample_seeds.clear();
+    match &cfg.output_perm {
+        Some(perm) => {
+            scratch.sample_seeds.extend(scratch.unique.iter().map(|&v| perm.to_new(v)));
+        }
+        None => scratch.sample_seeds.extend_from_slice(&scratch.unique),
+    }
     // 3 + 4. one shared sampler pass + one shared gather, under the
     //    controller's current fanout budget, with bounded in-place retries
     //    for transient faults when supervised
@@ -902,7 +978,17 @@ fn serve_batch(
     let budget = controller.as_ref().and_then(|c| c.budget());
     let mut attempts = 0u32;
     let flushed = loop {
-        match flush_payload(graph, sampler, cfg, &sample_seeds, batch_seed, budget, pool, memo) {
+        match flush_payload(
+            graph,
+            sampler,
+            cfg,
+            &scratch.sample_seeds,
+            batch_seed,
+            budget,
+            pool,
+            &mut scratch.feats,
+            memo,
+        ) {
             Ok(p) => break Ok(p),
             Err(fault) => {
                 if !supervised {
@@ -930,9 +1016,9 @@ fn serve_batch(
         Ok(p) => p,
         Err(fault) => {
             // fail only this batch, with the fault spelled out per request
-            metrics.faults.record_failed(live.len() as u64);
+            metrics.faults.record_failed(scratch.live.len() as u64);
             let reason = fault.to_string();
-            for req in live {
+            for req in scratch.live.drain(..) {
                 let _ = req
                     .tx
                     .send(Err(ServeError::Failed { seed: req.seed, reason: reason.clone() }));
@@ -941,8 +1027,7 @@ fn serve_batch(
             return;
         }
     };
-    let BatchPayload { mut mfg, feats: batch_feats, labels: batch_labels, dim, row_bytes } =
-        payload;
+    let BatchPayload { mut mfg, labels: batch_labels, dim, row_bytes } = payload;
     let batch_rows = mfg.feature_vertices().len() as u64;
     let batch_bytes = batch_rows * row_bytes;
     // 5. back to original ids *before* demux — extraction is positional,
@@ -952,11 +1037,11 @@ fn serve_batch(
     }
     // 6. demux: slice the shared payload into per-request responses
     let view = MfgSeedView::new(&mfg);
-    let batch_size = live.len();
+    let batch_size = scratch.live.len();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.unique_rows.fetch_add(batch_rows, Ordering::Relaxed);
     metrics.bytes_gathered.fetch_add(batch_bytes, Ordering::Relaxed);
-    for (ri, req) in live.into_iter().enumerate() {
+    for (ri, req) in scratch.live.drain(..).enumerate() {
         if let Err(inj) = failpoint::hit("serve_demux") {
             if supervised {
                 metrics.faults.record_failed(1);
@@ -967,13 +1052,15 @@ fn serve_batch(
             }
             panic!("serving demux for batch {batch_id} failed: {inj}");
         }
-        let ex = view.extract_with(pos[ri] as usize, demux_map);
+        let ex = view.extract_with(scratch.pos[ri] as usize, demux_map);
+        // per-response payloads escape into the ServeResponse — these are
+        // the flush's only fresh allocations
         let mut feats = Vec::new();
         if dim > 0 {
             // same SIMD wide-copy row gather as the FeatureStore path
-            crate::util::simd::gather_rows_f32(&batch_feats, dim, &ex.deep_rows, &mut feats);
+            crate::util::simd::gather_rows_f32(&scratch.feats, dim, &ex.deep_rows, &mut feats);
         }
-        let label = label_slice(&batch_labels, pos[ri] as usize);
+        let label = label_slice(&batch_labels, scratch.pos[ri] as usize);
         let rows = ex.deep_rows.len() as u64;
         let bytes_returned = rows * row_bytes;
         metrics.served.fetch_add(1, Ordering::Relaxed);

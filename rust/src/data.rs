@@ -293,6 +293,17 @@ impl Dataset {
     /// (`PipelineConfig::output_perm`).
     pub fn relabel_by_degree(&self) -> (Dataset, VertexPerm) {
         let perm = VertexPerm::degree_ordered(&self.graph);
+        let ds = self.relabel_with(&perm);
+        (ds, perm)
+    }
+
+    /// Rewrite the whole dataset under an arbitrary bijective relabeling
+    /// — the shared primitive behind [`relabel_by_degree`](Self::relabel_by_degree)
+    /// and the partition-major layout of [`crate::graph::partition`]. The
+    /// graph, the feature rows, both label planes, and the split id lists
+    /// all move under the ONE permutation, so every vertex-indexed
+    /// structure stays mutually consistent.
+    pub fn relabel_with(&self, perm: &VertexPerm) -> Dataset {
         let graph = perm.apply_to_graph(&self.graph);
         // every per-vertex plane moves through the one shared primitive
         // (VertexPerm::permute_rows), so they cannot drift apart
@@ -305,7 +316,7 @@ impl Dataset {
         let map_split = |ids: &[u32]| -> Vec<u32> {
             ids.iter().map(|&v| perm.to_new(v)).collect()
         };
-        let ds = Dataset {
+        Dataset {
             spec: self.spec.clone(),
             scale: self.scale,
             graph,
@@ -317,8 +328,7 @@ impl Dataset {
                 val: map_split(&self.splits.val),
                 test: map_split(&self.splits.test),
             },
-        };
-        (ds, perm)
+        }
     }
 
     fn cache_path(name: &str, scale: f64) -> PathBuf {

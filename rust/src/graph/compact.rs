@@ -28,6 +28,38 @@
 
 use super::csc::CscGraph;
 
+/// Why a forward mapping was rejected as a vertex permutation. Every
+/// malformed input — wrong length, out-of-range target, duplicate target —
+/// gets a named error; none of the constructors index-panic on bad data
+/// (the perm section of an `.lgx` file is untrusted input).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PermError {
+    /// the mapping covers a different number of vertices than expected
+    LengthMismatch { expected: usize, got: usize },
+    /// `forward[old] == new` with `new >= n`
+    OutOfRange { old: u32, new: u32, num_vertices: usize },
+    /// `forward[first] == forward[second] == new` — not injective
+    NotBijective { first: u32, second: u32, new: u32 },
+}
+
+impl std::fmt::Display for PermError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PermError::LengthMismatch { expected, got } => {
+                write!(f, "perm covers {got} vertices, expected {expected}")
+            }
+            PermError::OutOfRange { old, new, num_vertices } => {
+                write!(f, "perm maps {old} to {new}, out of range (|V|={num_vertices})")
+            }
+            PermError::NotBijective { first, second, new } => {
+                write!(f, "perm is not a bijection: {first} and {second} both map to {new}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PermError {}
+
 /// Vertex ids of `g` ranked by (in-degree descending, id ascending) — the
 /// ONE definition of the degree order, shared by
 /// [`VertexPerm::degree_ordered`] and
@@ -71,22 +103,34 @@ impl VertexPerm {
 
     /// Reconstruct from a forward mapping (e.g. the perm section of an
     /// `.lgx` file), validating that it is a bijection over `0..n`.
-    pub fn from_forward(forward: Vec<u32>) -> Result<Self, String> {
+    /// Malformed input yields a named [`PermError`], never a panic.
+    pub fn from_forward(forward: Vec<u32>) -> Result<Self, PermError> {
         let n = forward.len();
         let mut inverse = vec![u32::MAX; n];
         for (old, &new) in forward.iter().enumerate() {
             if new as usize >= n {
-                return Err(format!("perm maps {old} to {new}, out of range (|V|={n})"));
+                return Err(PermError::OutOfRange { old: old as u32, new, num_vertices: n });
             }
             if inverse[new as usize] != u32::MAX {
-                return Err(format!(
-                    "perm is not a bijection: {} and {old} both map to {new}",
-                    inverse[new as usize]
-                ));
+                return Err(PermError::NotBijective {
+                    first: inverse[new as usize],
+                    second: old as u32,
+                    new,
+                });
             }
             inverse[new as usize] = old as u32;
         }
         Ok(Self { forward, inverse })
+    }
+
+    /// [`from_forward`](Self::from_forward) with an explicit vertex-count
+    /// contract: a mapping whose length disagrees with the graph it is
+    /// meant to cover is rejected by name before any bijectivity work.
+    pub fn from_forward_for(forward: Vec<u32>, num_vertices: usize) -> Result<Self, PermError> {
+        if forward.len() != num_vertices {
+            return Err(PermError::LengthMismatch { expected: num_vertices, got: forward.len() });
+        }
+        Self::from_forward(forward)
     }
 
     /// Number of vertices covered.
@@ -325,9 +369,31 @@ mod tests {
 
     #[test]
     fn from_forward_rejects_non_bijections() {
-        assert!(VertexPerm::from_forward(vec![0, 0, 1]).is_err()); // duplicate
-        assert!(VertexPerm::from_forward(vec![0, 5, 1]).is_err()); // out of range
+        assert_eq!(
+            VertexPerm::from_forward(vec![0, 0, 1]),
+            Err(PermError::NotBijective { first: 0, second: 1, new: 0 })
+        );
+        assert_eq!(
+            VertexPerm::from_forward(vec![0, 5, 1]),
+            Err(PermError::OutOfRange { old: 1, new: 5, num_vertices: 3 })
+        );
         assert!(VertexPerm::from_forward(vec![2, 0, 1]).is_ok());
+        // the errors render the same diagnostics callers relied on
+        let msg = VertexPerm::from_forward(vec![0, 5, 1]).unwrap_err().to_string();
+        assert_eq!(msg, "perm maps 1 to 5, out of range (|V|=3)");
+        let msg = VertexPerm::from_forward(vec![0, 0, 1]).unwrap_err().to_string();
+        assert_eq!(msg, "perm is not a bijection: 0 and 1 both map to 0");
+    }
+
+    #[test]
+    fn from_forward_for_rejects_length_mismatch_by_name() {
+        assert_eq!(
+            VertexPerm::from_forward_for(vec![0, 1], 3),
+            Err(PermError::LengthMismatch { expected: 3, got: 2 })
+        );
+        assert!(VertexPerm::from_forward_for(vec![2, 0, 1], 3).is_ok());
+        let msg = VertexPerm::from_forward_for(vec![0, 1], 3).unwrap_err().to_string();
+        assert!(msg.contains("expected 3"), "{msg}");
     }
 
     #[test]

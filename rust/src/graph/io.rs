@@ -14,9 +14,12 @@
 //! realloc. The file is versioned and checksummed (FNV-1a over the
 //! payload, plus a header checksum), and corruption surfaces as a named
 //! [`LgxError`], never as a mis-parsed graph. An optional
-//! [`VertexPerm`] section carries the degree-ordered relabeling
+//! [`VertexPerm`] section carries the relabeling
 //! ([`graph::compact`](super::compact)) alongside the graph it produced,
-//! so a packed graph ships with the mapping back to original ids.
+//! so a packed graph ships with the mapping back to original ids; an
+//! optional [`PartitionMap`] section
+//! ([`graph::partition`](super::partition)) records the per-partition row
+//! ranges of a partition-major layout.
 //!
 //! Layout (all little-endian):
 //!
@@ -31,10 +34,14 @@
 //!   indices (|E| × u32)
 //!   weights (|E| × f32, iff flags bit 0)
 //!   perm    (|V| × u32 forward mapping, iff flags bit 2)
+//!   parts   ([K+1 as u32, bounds[0..=K]] — K+2 × u32, iff flags bit 3;
+//!            self-describing length prefix, since header bytes 48..64
+//!            sit outside the header checksum and cannot carry K)
 //! ```
 
 use super::compact::VertexPerm;
 use super::csc::{CscGraph, GraphBuf, IndPtr};
+use super::partition::PartitionMap;
 use crate::util::mmap::Mmap;
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
@@ -310,7 +317,9 @@ const LGX_ALIGN: usize = 64;
 const LGX_FLAG_WEIGHTED: u32 = 1 << 0;
 const LGX_FLAG_WIDE_INDPTR: u32 = 1 << 1;
 const LGX_FLAG_PERM: u32 = 1 << 2;
-const LGX_KNOWN_FLAGS: u32 = LGX_FLAG_WEIGHTED | LGX_FLAG_WIDE_INDPTR | LGX_FLAG_PERM;
+const LGX_FLAG_PARTS: u32 = 1 << 3;
+const LGX_KNOWN_FLAGS: u32 =
+    LGX_FLAG_WEIGHTED | LGX_FLAG_WIDE_INDPTR | LGX_FLAG_PERM | LGX_FLAG_PARTS;
 
 /// Every way an `.lgx` load can fail, as a named error — corruption is
 /// always reported, never mis-parsed into a wrong graph.
@@ -561,10 +570,24 @@ fn skip_padding<R: Read>(r: &mut R, bytes: usize, section: &'static str) -> Resu
 
 /// Serialize `g` (and optionally the [`VertexPerm`] that produced its
 /// layout) in the `.lgx` format. See the module docs for the layout.
+/// Delegates to [`write_lgx_full`] with no partition section.
 pub fn write_lgx<W: Write>(
     w: &mut W,
     g: &CscGraph,
     perm: Option<&VertexPerm>,
+) -> Result<(), LgxError> {
+    write_lgx_full(w, g, perm, None)
+}
+
+/// [`write_lgx`] plus the optional [`PartitionMap`] section: the bounds
+/// of a partition-major layout ride the file behind flag bit 3, prefixed
+/// with their own length (see the module docs for why the count cannot
+/// live in the header).
+pub fn write_lgx_full<W: Write>(
+    w: &mut W,
+    g: &CscGraph,
+    perm: Option<&VertexPerm>,
+    parts: Option<&PartitionMap>,
 ) -> Result<(), LgxError> {
     if let Some(p) = perm {
         if p.len() != g.num_vertices() {
@@ -575,6 +598,22 @@ pub fn write_lgx<W: Write>(
             )));
         }
     }
+    if let Some(pm) = parts {
+        if pm.num_vertices() != g.num_vertices() {
+            return Err(LgxError::Invalid(format!(
+                "partition map covers {} vertices, graph has {}",
+                pm.num_vertices(),
+                g.num_vertices()
+            )));
+        }
+    }
+    // the parts section stream: [len(bounds) as u32, bounds...]
+    let parts_sec: Option<Vec<u32>> = parts.map(|pm| {
+        let mut v = Vec::with_capacity(pm.bounds().len() + 1);
+        v.push(pm.bounds().len() as u32);
+        v.extend_from_slice(pm.bounds());
+        v
+    });
     let mut flags = 0u32;
     if g.weights.is_some() {
         flags |= LGX_FLAG_WEIGHTED;
@@ -584,6 +623,9 @@ pub fn write_lgx<W: Write>(
     }
     if perm.is_some() {
         flags |= LGX_FLAG_PERM;
+    }
+    if parts.is_some() {
+        flags |= LGX_FLAG_PARTS;
     }
 
     // payload checksum over the section byte streams, in order
@@ -598,6 +640,9 @@ pub fn write_lgx<W: Write>(
     }
     if let Some(p) = perm {
         sum = checksum_pod(sum, p.forward());
+    }
+    if let Some(sec) = &parts_sec {
+        sum = checksum_pod(sum, sec);
     }
 
     // header: 64 bytes; bytes 0..40 (everything before the header-checksum
@@ -626,6 +671,10 @@ pub fn write_lgx<W: Write>(
     }
     if let Some(p) = perm {
         let n = write_section(w, p.forward())?;
+        write_padding(w, n)?;
+    }
+    if let Some(sec) = &parts_sec {
+        let n = write_section(w, sec.as_slice())?;
         write_padding(w, n)?;
     }
     Ok(())
@@ -694,6 +743,34 @@ fn parse_lgx_header(header: &[u8; LGX_ALIGN]) -> Result<LgxHeader, LgxError> {
     Ok(LgxHeader { flags, nv: nv as usize, ne, payload_sum })
 }
 
+/// Bound-check the parts-section length prefix before any allocation is
+/// sized from it: a bounds vector has `K + 1` entries with `K >= 1`, and
+/// partitions beyond one per vertex make no sense, so a hostile prefix
+/// fails by name here.
+fn check_parts_len(cnt: u32, nv: usize) -> Result<usize, LgxError> {
+    let cnt = cnt as usize;
+    if !(2..=nv.max(1) + 1).contains(&cnt) {
+        return Err(LgxError::Invalid(format!(
+            "partition section declares {cnt} bounds for {nv} vertices"
+        )));
+    }
+    Ok(cnt)
+}
+
+/// Decode + validate partition bounds against the graph they arrived
+/// with: the [`PartitionMap`] invariants by name, plus coverage of
+/// exactly the file's vertex count.
+fn decode_parts(bounds: Vec<u32>, nv: usize) -> Result<PartitionMap, LgxError> {
+    let pm = PartitionMap::from_bounds(bounds).map_err(|e| LgxError::Invalid(e.to_string()))?;
+    if pm.num_vertices() != nv {
+        return Err(LgxError::Invalid(format!(
+            "partition map covers {} vertices, file has {nv}",
+            pm.num_vertices()
+        )));
+    }
+    Ok(pm)
+}
+
 /// Shared load tail: structural validation after the checksums pass.
 fn validate_loaded(g: &CscGraph, ne: u64) -> Result<(), LgxError> {
     if g.indptr.last() != ne {
@@ -709,7 +786,17 @@ fn validate_loaded(g: &CscGraph, ne: u64) -> Result<(), LgxError> {
 /// verifying checksums and structure. The inverse of [`write_lgx`] — the
 /// buffered (`read_exact`) loader; [`load_lgx`] prefers the zero-copy
 /// mapped path on top of the same header/checksum/validation logic.
+/// Delegates to [`read_lgx_full`] (any partition section is still parsed
+/// and checksummed, then dropped).
 pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let (g, perm, _) = read_lgx_full(r)?;
+    Ok((g, perm))
+}
+
+/// [`read_lgx`] plus the optional [`PartitionMap`] section.
+pub fn read_lgx_full<R: Read>(
+    r: &mut R,
+) -> Result<(CscGraph, Option<VertexPerm>, Option<PartitionMap>), LgxError> {
     let mut header = [0u8; LGX_ALIGN];
     r.read_exact(&mut header).map_err(|e| truncation(e, "header"))?;
     let h = parse_lgx_header(&header)?;
@@ -751,6 +838,18 @@ pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), Lg
     } else {
         None
     };
+    let parts = if h.flags & LGX_FLAG_PARTS != 0 {
+        // self-describing length prefix: [cnt, bounds[0..cnt]]
+        let prefix: Vec<u32> = read_section(r, 1, "parts")?;
+        sum = checksum_pod(sum, &prefix);
+        let cnt = check_parts_len(prefix[0], h.nv)?;
+        let bounds: Vec<u32> = read_section(r, cnt, "parts")?;
+        skip_padding(r, (1 + cnt) * 4, "parts")?;
+        sum = checksum_pod(sum, &bounds);
+        Some(bounds)
+    } else {
+        None
+    };
     if sum != h.payload_sum {
         return Err(LgxError::ChecksumMismatch { expected: h.payload_sum, got: sum });
     }
@@ -758,10 +857,16 @@ pub fn read_lgx<R: Read>(r: &mut R) -> Result<(CscGraph, Option<VertexPerm>), Lg
     let g = CscGraph { indptr, indices: indices.into(), weights: weights.map(Into::into) };
     validate_loaded(&g, h.ne)?;
     let perm = match perm {
-        Some(forward) => Some(VertexPerm::from_forward(forward).map_err(LgxError::Invalid)?),
+        Some(forward) => {
+            Some(VertexPerm::from_forward(forward).map_err(|e| LgxError::Invalid(e.to_string()))?)
+        }
         None => None,
     };
-    Ok((g, perm))
+    let parts = match parts {
+        Some(bounds) => Some(decode_parts(bounds, h.nv)?),
+        None => None,
+    };
+    Ok((g, perm, parts))
 }
 
 /// Advance a byte cursor over one 64-byte-padded section of a mapping of
@@ -790,7 +895,9 @@ fn section_range(
 /// must be computed into owned memory regardless, and it is |V| × u32 —
 /// small next to the payload.) Same header, checksum, and validation
 /// logic as [`read_lgx`], so the two loaders are bit-identical.
-fn parse_lgx_mapped(map: Arc<Mmap>) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+fn parse_lgx_mapped(
+    map: Arc<Mmap>,
+) -> Result<(CscGraph, Option<VertexPerm>, Option<PartitionMap>), LgxError> {
     if cfg!(target_endian = "big") {
         // the on-disk sections are little-endian; a BE build cannot view
         // them in place — load_lgx never routes here on BE targets
@@ -820,6 +927,18 @@ fn parse_lgx_mapped(map: Arc<Mmap>) -> Result<(CscGraph, Option<VertexPerm>), Lg
     } else {
         None
     };
+    let parts_r = if h.flags & LGX_FLAG_PARTS != 0 {
+        // peek the self-describing length prefix, then range over the
+        // whole section (prefix + bounds) so padding and checksum line up
+        let prefix = bytes
+            .get(off..off + 4)
+            .ok_or(LgxError::Truncated("parts"))
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))?;
+        let cnt = check_parts_len(prefix, h.nv)?;
+        Some(section_range(total, &mut off, (1 + cnt) * 4, "parts")?)
+    } else {
+        None
+    };
 
     // payload checksum straight over the mapped section bytes, in order
     let mut sum = fnv1a(FNV_OFFSET, &bytes[indptr_r.clone()]);
@@ -828,6 +947,9 @@ fn parse_lgx_mapped(map: Arc<Mmap>) -> Result<(CscGraph, Option<VertexPerm>), Lg
         sum = fnv1a(sum, &bytes[r.clone()]);
     }
     if let Some(r) = &perm_r {
+        sum = fnv1a(sum, &bytes[r.clone()]);
+    }
+    if let Some(r) = &parts_r {
         sum = fnv1a(sum, &bytes[r.clone()]);
     }
     if sum != h.payload_sum {
@@ -860,13 +982,25 @@ fn parse_lgx_mapped(map: Arc<Mmap>) -> Result<(CscGraph, Option<VertexPerm>), Lg
                 .chunks_exact(4)
                 .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
-            Some(VertexPerm::from_forward(forward).map_err(LgxError::Invalid)?)
+            Some(VertexPerm::from_forward(forward).map_err(|e| LgxError::Invalid(e.to_string()))?)
+        }
+        None => None,
+    };
+    let parts = match &parts_r {
+        Some(r) => {
+            // materialized like the perm: K+1 u32 bounds, tiny next to
+            // the payload (the prefix at r.start..r.start+4 is skipped)
+            let bounds: Vec<u32> = bytes[r.start + 4..r.end]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Some(decode_parts(bounds, h.nv)?)
         }
         None => None,
     };
     let g = CscGraph { indptr, indices, weights };
     validate_loaded(&g, h.ne)?;
-    Ok((g, perm))
+    Ok((g, perm, parts))
 }
 
 /// [`write_lgx`] to a file path (directories created as needed). The
@@ -878,6 +1012,17 @@ pub fn save_lgx<P: AsRef<Path>>(
     g: &CscGraph,
     perm: Option<&VertexPerm>,
 ) -> Result<(), LgxError> {
+    save_lgx_full(path, g, perm, None)
+}
+
+/// [`save_lgx`] plus the optional [`PartitionMap`] section (same atomic
+/// tmp-then-rename discipline).
+pub fn save_lgx_full<P: AsRef<Path>>(
+    path: P,
+    g: &CscGraph,
+    perm: Option<&VertexPerm>,
+    parts: Option<&PartitionMap>,
+) -> Result<(), LgxError> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -887,7 +1032,7 @@ pub fn save_lgx<P: AsRef<Path>>(
     let tmp = std::path::PathBuf::from(tmp);
     let written = (|| -> Result<(), LgxError> {
         let mut w = BufWriter::new(File::create(&tmp)?);
-        write_lgx(&mut w, g, perm)?;
+        write_lgx_full(&mut w, g, perm, parts)?;
         w.flush()?;
         Ok(())
     })();
@@ -921,6 +1066,14 @@ pub fn mmap_enabled() -> bool {
 /// corruption errors do NOT fall back: a corrupt file is corrupt through
 /// either loader, and retrying would only mask the named error.
 pub fn load_lgx<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let (g, perm, _) = load_lgx_full(path)?;
+    Ok((g, perm))
+}
+
+/// [`load_lgx`] plus the optional [`PartitionMap`] section.
+pub fn load_lgx_full<P: AsRef<Path>>(
+    path: P,
+) -> Result<(CscGraph, Option<VertexPerm>, Option<PartitionMap>), LgxError> {
     // chaos hook: injected faults surface as the loader's own named I/O
     // error, exactly as a failing disk would (see `util::failpoint`)
     crate::util::failpoint::hit("lgx_read")
@@ -933,7 +1086,7 @@ pub fn load_lgx<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>
             }
         }
     }
-    load_lgx_buffered(path)
+    load_lgx_buffered_full(path)
 }
 
 /// [`read_lgx`] from a file path through the buffered `read_exact` path —
@@ -942,13 +1095,29 @@ pub fn load_lgx<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>
 pub fn load_lgx_buffered<P: AsRef<Path>>(
     path: P,
 ) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let (g, perm, _) = load_lgx_buffered_full(path)?;
+    Ok((g, perm))
+}
+
+/// [`load_lgx_buffered`] plus the optional [`PartitionMap`] section.
+pub fn load_lgx_buffered_full<P: AsRef<Path>>(
+    path: P,
+) -> Result<(CscGraph, Option<VertexPerm>, Option<PartitionMap>), LgxError> {
     let mut r = BufReader::new(File::open(path)?);
-    read_lgx(&mut r)
+    read_lgx_full(&mut r)
 }
 
 /// Force the zero-copy mapped loader: errors when mapping is unavailable
 /// instead of falling back. Benches and tests use this to pin the path.
 pub fn load_lgx_mmap<P: AsRef<Path>>(path: P) -> Result<(CscGraph, Option<VertexPerm>), LgxError> {
+    let (g, perm, _) = load_lgx_mmap_full(path)?;
+    Ok((g, perm))
+}
+
+/// [`load_lgx_mmap`] plus the optional [`PartitionMap`] section.
+pub fn load_lgx_mmap_full<P: AsRef<Path>>(
+    path: P,
+) -> Result<(CscGraph, Option<VertexPerm>, Option<PartitionMap>), LgxError> {
     let f = File::open(path)?;
     let map = Mmap::map_file(&f)?;
     parse_lgx_mapped(Arc::new(map))
@@ -1051,5 +1220,31 @@ mod tests {
         let (back, perm) = read_lgx(&mut &buf[..]).unwrap();
         assert_eq!(g, back);
         assert!(perm.is_none());
+    }
+
+    #[test]
+    fn lgx_in_memory_parts_roundtrip() {
+        let g = CscBuilder::new(4).edges(&[(0, 2), (1, 2), (0, 3), (2, 3)]).build().unwrap();
+        let pm = PartitionMap::from_bounds(vec![0, 2, 4]).unwrap();
+        let mut buf = Vec::new();
+        write_lgx_full(&mut buf, &g, None, Some(&pm)).unwrap();
+        assert_eq!(buf.len() % 64, 0, "every section is 64-byte padded");
+        let (back, perm, parts) = read_lgx_full(&mut &buf[..]).unwrap();
+        assert_eq!(g, back);
+        assert!(perm.is_none());
+        assert_eq!(parts, Some(pm));
+        // the legacy reader still accepts the file, dropping the section
+        let (back, perm) = read_lgx(&mut &buf[..]).unwrap();
+        assert_eq!(g, back);
+        assert!(perm.is_none());
+    }
+
+    #[test]
+    fn lgx_parts_must_cover_the_graph() {
+        let g = CscBuilder::new(4).edges(&[(0, 2)]).build().unwrap();
+        let pm = PartitionMap::from_bounds(vec![0, 3]).unwrap(); // covers 3 of 4
+        let mut buf = Vec::new();
+        let err = write_lgx_full(&mut buf, &g, None, Some(&pm)).unwrap_err();
+        assert!(err.to_string().contains("partition map covers 3"), "{err}");
     }
 }

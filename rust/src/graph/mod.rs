@@ -12,12 +12,21 @@
 //! ([`io::save_lgx`]/[`io::load_lgx`]) so large-graph loads skip
 //! parse-and-rebuild entirely.
 
+//! Graphs can additionally carry a **partition-major** layout
+//! ([`partition`]): an edge-cut partitioner assigns vertices to `K`
+//! partitions, the induced [`VertexPerm`] renumbers them partition-major,
+//! and the resulting [`PartitionMap`] (contiguous per-partition row
+//! ranges) rides `.lgx` as an optional section — the substrate for
+//! partition-local feature stores and partition-aligned sampling shards.
+
 pub mod builder;
 pub mod compact;
 pub mod csc;
 pub mod gen;
 pub mod io;
+pub mod partition;
 pub mod stats;
 
-pub use compact::VertexPerm;
+pub use compact::{PermError, VertexPerm};
 pub use csc::{CscGraph, GraphBuf, IndPtr};
+pub use partition::{FrontierExchange, PartitionError, PartitionMap};

@@ -1,0 +1,638 @@
+//! Edge-cut graph partitioning and the partition-major vertex layout.
+//!
+//! LABOR shrinks the sampled frontier per batch (paper §3, Table 2), which
+//! is what makes *partitioned* training plausible at all: the cross-machine
+//! traffic of a mini-batch is its frontier, and a smaller frontier crosses
+//! fewer partition boundaries. This module supplies the layout half of that
+//! story, generalizing the degree-ordered relabeling
+//! ([`VertexPerm::degree_ordered`](super::compact::VertexPerm::degree_ordered))
+//! from *one* locality order to a **partition-major** order:
+//!
+//! 1. an **assignment** maps every vertex to one of `K` partitions —
+//!    produced by the streaming LDG partitioner ([`ldg_partition`]), the
+//!    degree-balanced contiguous fallback ([`contiguous_partition`]), or
+//!    the deterministic random baseline ([`random_partition`]);
+//! 2. [`partition_layout`] turns an assignment into a [`VertexPerm`] that
+//!    renumbers vertices partition-major (partition 0 first, old-id order
+//!    preserved within each partition) plus a [`PartitionMap`] recording
+//!    each partition's contiguous new-id row range;
+//! 3. the [`PartitionMap`] rides `.lgx` as an optional section
+//!    ([`graph::io`](super::io)), prices gathers through the per-partition
+//!    feature stores
+//!    ([`PartitionedStore`](crate::coordinator::PartitionedStore)), and
+//!    aligns `sampler::par` shard plans to partition boundaries.
+//!
+//! Because a partition-major relabel is just a [`VertexPerm`], every
+//! existing equivalence carries over: the relabeled graph is isomorphic,
+//! samplers are equivalent in law, and the pipeline maps delivered MFGs
+//! back to original ids at the delivery boundary. The partition-aware
+//! sampling path is bit-identical to the unpartitioned one
+//! (`tests/partition_identity.rs`).
+
+use super::compact::VertexPerm;
+use super::csc::CscGraph;
+use crate::rng::mix2;
+use std::ops::Range;
+
+/// Why a partition structure (or a vertex permutation) was rejected —
+/// every malformed input gets a named error, never an index panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionError {
+    /// an input length does not match the expected vertex/partition count
+    LengthMismatch { what: &'static str, expected: usize, got: usize },
+    /// an assignment entry names a partition `>= num_partitions`
+    OwnerOutOfRange { vertex: u32, owner: u32, num_partitions: usize },
+    /// a permutation entry maps outside `0..n`
+    PermOutOfRange { old: u32, new: u32, num_vertices: usize },
+    /// two permutation entries map to the same new id
+    PermNotBijective { first: u32, second: u32, new: u32 },
+    /// partition bounds must start at 0 and be non-decreasing
+    BadBounds { index: usize, prev: u32, next: u32 },
+    /// a partition map needs at least one partition
+    Empty,
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::LengthMismatch { what, expected, got } => {
+                write!(f, "{what}: expected {expected} entries, got {got}")
+            }
+            PartitionError::OwnerOutOfRange { vertex, owner, num_partitions } => write!(
+                f,
+                "vertex {vertex} assigned to partition {owner}, but only {num_partitions} exist"
+            ),
+            PartitionError::PermOutOfRange { old, new, num_vertices } => {
+                write!(f, "perm maps {old} to {new}, out of range (|V|={num_vertices})")
+            }
+            PartitionError::PermNotBijective { first, second, new } => {
+                write!(f, "perm is not a bijection: {first} and {second} both map to {new}")
+            }
+            PartitionError::BadBounds { index, prev, next } => write!(
+                f,
+                "partition bounds must be non-decreasing from 0: bounds[{index}] = {next} \
+                 after {prev}"
+            ),
+            PartitionError::Empty => write!(f, "a partition map needs at least one partition"),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Contiguous per-partition row ranges over a **partition-major** vertex
+/// numbering: partition `p` owns new ids `bounds[p] .. bounds[p+1]`.
+///
+/// `bounds` has `K + 1` entries, starts at 0, is non-decreasing, and ends
+/// at `|V|` — the invariant every constructor validates (named errors, see
+/// [`PartitionError`]). Ownership lookup is a binary search over the
+/// bounds, O(log K) with K tiny.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionMap {
+    bounds: Vec<u32>,
+}
+
+impl PartitionMap {
+    /// The trivial single-partition map over `num_vertices` (K = 1): the
+    /// unpartitioned engine is exactly this map's special case.
+    pub fn single(num_vertices: usize) -> Self {
+        Self { bounds: vec![0, num_vertices as u32] }
+    }
+
+    /// Build from explicit bounds (`K + 1` entries, `bounds[0] == 0`,
+    /// non-decreasing). This is the `.lgx` section constructor — untrusted
+    /// bytes land here, so every invariant is checked by name.
+    pub fn from_bounds(bounds: Vec<u32>) -> Result<Self, PartitionError> {
+        if bounds.len() < 2 {
+            return Err(PartitionError::Empty);
+        }
+        if bounds[0] != 0 {
+            return Err(PartitionError::BadBounds { index: 0, prev: 0, next: bounds[0] });
+        }
+        for i in 1..bounds.len() {
+            if bounds[i] < bounds[i - 1] {
+                return Err(PartitionError::BadBounds {
+                    index: i,
+                    prev: bounds[i - 1],
+                    next: bounds[i],
+                });
+            }
+        }
+        Ok(Self { bounds })
+    }
+
+    /// Build from per-vertex partition sizes (`counts[p]` vertices in
+    /// partition `p`).
+    pub fn from_counts(counts: &[u32]) -> Result<Self, PartitionError> {
+        if counts.is_empty() {
+            return Err(PartitionError::Empty);
+        }
+        let mut bounds = Vec::with_capacity(counts.len() + 1);
+        let mut cum = 0u32;
+        bounds.push(0);
+        for &c in counts {
+            cum += c;
+            bounds.push(cum);
+        }
+        Ok(Self { bounds })
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        *self.bounds.last().expect("bounds non-empty") as usize
+    }
+
+    /// The partition owning new id `v`. Ids at or beyond `|V|` belong to
+    /// no partition and are reported as the last partition would be — use
+    /// [`try_owner`](Self::try_owner) when the id may be out of range.
+    #[inline]
+    pub fn owner(&self, v: u32) -> u32 {
+        // partition_point returns the count of bounds <= v among
+        // bounds[1..], which is exactly the owning partition index
+        self.bounds[1..].partition_point(|&b| b <= v) as u32
+    }
+
+    /// [`owner`](Self::owner) with an explicit range check.
+    pub fn try_owner(&self, v: u32) -> Option<u32> {
+        if (v as usize) < self.num_vertices() {
+            Some(self.owner(v).min(self.num_partitions() as u32 - 1))
+        } else {
+            None
+        }
+    }
+
+    /// New-id range owned by partition `p`.
+    pub fn range(&self, p: usize) -> Range<u32> {
+        self.bounds[p]..self.bounds[p + 1]
+    }
+
+    /// Vertex count of partition `p`.
+    pub fn len(&self, p: usize) -> usize {
+        (self.bounds[p + 1] - self.bounds[p]) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.num_vertices() == 0
+    }
+
+    /// The raw bounds (`K + 1` entries) — the `.lgx` section payload.
+    pub fn bounds(&self) -> &[u32] {
+        &self.bounds
+    }
+
+    /// Largest partition size over mean partition size — 1.0 is perfectly
+    /// balanced; the partitioners keep this within their slack factor.
+    pub fn balance(&self) -> f64 {
+        let k = self.num_partitions();
+        let nv = self.num_vertices();
+        if nv == 0 || k == 0 {
+            return 1.0;
+        }
+        let largest = (0..k).map(|p| self.len(p)).max().unwrap_or(0);
+        largest as f64 / (nv as f64 / k as f64)
+    }
+}
+
+/// Validate a per-vertex assignment: every owner `< num_partitions`, and
+/// (when `expected_vertices` is known) the length matches.
+fn validate_assignment(
+    assign: &[u32],
+    num_partitions: usize,
+    expected_vertices: Option<usize>,
+) -> Result<(), PartitionError> {
+    if num_partitions == 0 {
+        return Err(PartitionError::Empty);
+    }
+    if let Some(nv) = expected_vertices {
+        if assign.len() != nv {
+            return Err(PartitionError::LengthMismatch {
+                what: "partition assignment",
+                expected: nv,
+                got: assign.len(),
+            });
+        }
+    }
+    if let Some((v, &p)) = assign.iter().enumerate().find(|&(_, &p)| p as usize >= num_partitions)
+    {
+        return Err(PartitionError::OwnerOutOfRange {
+            vertex: v as u32,
+            owner: p,
+            num_partitions,
+        });
+    }
+    Ok(())
+}
+
+/// Turn a per-vertex partition assignment into the partition-major layout:
+/// a [`VertexPerm`] renumbering vertices partition-major (old-id order
+/// preserved within each partition — the relabel is stable, so
+/// partition-local degree structure survives) and the [`PartitionMap`]
+/// of the resulting contiguous row ranges.
+pub fn partition_layout(
+    assign: &[u32],
+    num_partitions: usize,
+) -> Result<(VertexPerm, PartitionMap), PartitionError> {
+    validate_assignment(assign, num_partitions, None)?;
+    let mut counts = vec![0u32; num_partitions];
+    for &p in assign {
+        counts[p as usize] += 1;
+    }
+    let map = PartitionMap::from_counts(&counts)?;
+    // stable counting sort by owner: forward[old] = base[owner] + rank
+    let mut next: Vec<u32> = map.bounds[..num_partitions].to_vec();
+    let mut forward = vec![0u32; assign.len()];
+    for (old, &p) in assign.iter().enumerate() {
+        forward[old] = next[p as usize];
+        next[p as usize] += 1;
+    }
+    let perm = VertexPerm::from_forward(forward).map_err(|e| match e {
+        // from_forward's named errors, re-tagged into this module's enum
+        // (a counting sort over a validated assignment cannot actually
+        // fail, but the conversion keeps the error chain total)
+        super::compact::PermError::OutOfRange { old, new, num_vertices } => {
+            PartitionError::PermOutOfRange { old, new, num_vertices }
+        }
+        super::compact::PermError::NotBijective { first, second, new } => {
+            PartitionError::PermNotBijective { first, second, new }
+        }
+        super::compact::PermError::LengthMismatch { expected, got } => {
+            PartitionError::LengthMismatch { what: "perm forward", expected, got }
+        }
+    })?;
+    Ok((perm, map))
+}
+
+/// Streaming LDG (Linear Deterministic Greedy) edge-cut partitioner
+/// (Stanton & Kliot, KDD'12 — the standard one-pass baseline the
+/// scalable-GNN-training literature starts from).
+///
+/// Vertices stream in **descending in-degree order** (hubs placed first,
+/// while every partition still has room — placing hubs last would leave
+/// them wherever the leftover capacity happens to be) and each vertex goes
+/// to the partition maximizing
+/// `|already-placed neighbors in p| × (1 − size_p / capacity)`,
+/// with capacity `ceil(|V|/K × slack)`. Ties break toward the smaller
+/// partition, then the lower index — fully deterministic. Both edge
+/// directions count as adjacency (edge cut is direction-blind).
+///
+/// Returns the per-vertex assignment (indexed by **old** id); feed it to
+/// [`partition_layout`] for the partition-major relabel.
+pub fn ldg_partition(g: &CscGraph, num_partitions: usize, slack: f64) -> Vec<u32> {
+    let nv = g.num_vertices();
+    let k = num_partitions.max(1);
+    if k == 1 || nv == 0 {
+        return vec![0u32; nv];
+    }
+    let capacity = ((nv as f64 / k as f64) * slack.max(1.0)).ceil().max(1.0);
+    // out-adjacency (CSR transpose of the CSC), built once: the CSC only
+    // gives in-neighbors, and the cut objective is direction-blind
+    let mut out_deg = vec![0u32; nv];
+    for s in 0..nv as u32 {
+        for &t in g.in_neighbors(s) {
+            out_deg[t as usize] += 1;
+        }
+    }
+    let mut out_off = Vec::with_capacity(nv + 1);
+    let mut cum = 0usize;
+    out_off.push(0);
+    for &d in &out_deg {
+        cum += d as usize;
+        out_off.push(cum);
+    }
+    let mut out_nbr = vec![0u32; cum];
+    let mut fill = out_off.clone();
+    for s in 0..nv as u32 {
+        for &t in g.in_neighbors(s) {
+            out_nbr[fill[t as usize]] = s;
+            fill[t as usize] += 1;
+        }
+    }
+    let order = super::compact::degree_order(g);
+    let mut assign = vec![u32::MAX; nv];
+    let mut sizes = vec![0u32; k];
+    let mut gain = vec![0u32; k];
+    for &v in &order {
+        for g in gain.iter_mut() {
+            *g = 0;
+        }
+        for &t in g.in_neighbors(v) {
+            let p = assign[t as usize];
+            if p != u32::MAX {
+                gain[p as usize] += 1;
+            }
+        }
+        for &t in &out_nbr[out_off[v as usize]..out_off[v as usize + 1]] {
+            let p = assign[t as usize];
+            if p != u32::MAX {
+                gain[p as usize] += 1;
+            }
+        }
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..k {
+            let headroom = 1.0 - sizes[p] as f64 / capacity;
+            if headroom <= 0.0 {
+                continue; // partition full under the slack budget
+            }
+            let score = (gain[p] as f64 + 1.0) * headroom;
+            let better = score > best_score
+                || (score == best_score
+                    && (sizes[p] < sizes[best] || (sizes[p] == sizes[best] && p < best)));
+            if better {
+                best = p;
+                best_score = score;
+            }
+        }
+        if best_score == f64::NEG_INFINITY {
+            // every partition at capacity (only possible through rounding
+            // at tiny |V|): fall back to the globally smallest
+            best = (0..k).min_by_key(|&p| (sizes[p], p)).unwrap();
+        }
+        assign[v as usize] = best as u32;
+        sizes[best] += 1;
+    }
+    assign
+}
+
+/// Degree-balanced contiguous fallback: split the **existing** vertex
+/// order `0..|V|` into `K` contiguous blocks of approximately equal work
+/// (`in_degree + 1` per vertex, the same work model as
+/// [`partition_seeds`](crate::sampler::partition_seeds)). The induced
+/// partition-major relabel is the identity, so this layout costs nothing
+/// to apply — the fallback when an LDG pass over the full edge set is not
+/// worth it (or the vertex order already encodes locality, e.g. a
+/// degree-ordered or community-sorted graph).
+pub fn contiguous_partition(g: &CscGraph, num_partitions: usize) -> Vec<u32> {
+    let nv = g.num_vertices();
+    let k = num_partitions.max(1);
+    let mut assign = vec![0u32; nv];
+    if k == 1 || nv == 0 {
+        return assign;
+    }
+    let work = |v: u32| g.in_degree(v) as u64 + 1;
+    let total: u64 = (0..nv as u32).map(work).sum();
+    let mut cum = 0u64;
+    let mut v = 0usize;
+    for p in 0..k as u64 {
+        let target = total * (p + 1) / k as u64;
+        while v < nv && cum < target {
+            cum += work(v as u32);
+            assign[v] = p as u32;
+            v += 1;
+        }
+    }
+    // rounding can leave a tail un-visited only if total work was 0
+    for a in assign[v..].iter_mut() {
+        *a = k as u32 - 1;
+    }
+    assign
+}
+
+/// Deterministic random assignment (hash of the vertex id) — the baseline
+/// the partition bench compares LDG against: same balance in expectation,
+/// no locality at all.
+pub fn random_partition(num_vertices: usize, num_partitions: usize, seed: u64) -> Vec<u32> {
+    let k = num_partitions.max(1) as u64;
+    (0..num_vertices as u32).map(|v| (mix2(seed, v as u64) % k) as u32).collect()
+}
+
+/// Edge-cut quality of an assignment: `(cut_edges, total_edges)` where a
+/// cut edge's endpoints live in different partitions. The fraction
+/// `cut / total` is the standard partitioner score (lower is better).
+pub fn edge_cut(g: &CscGraph, assign: &[u32]) -> (u64, u64) {
+    let mut cut = 0u64;
+    let mut total = 0u64;
+    for s in 0..g.num_vertices() as u32 {
+        let ps = assign[s as usize];
+        for &t in g.in_neighbors(s) {
+            total += 1;
+            if assign[t as usize] != ps {
+                cut += 1;
+            }
+        }
+    }
+    (cut, total)
+}
+
+/// Reusable frontier-exchange buffers: group a layer's candidate frontier
+/// by owning partition (stable within each partition — first-seen order is
+/// preserved), the step a distributed engine performs before discovery so
+/// each partition walks only the adjacency it owns. Here the grouping
+/// drives shard/partition **alignment and accounting** — the frontier
+/// itself is never reordered on the sampling path, which is what keeps
+/// partition-aware sampling bit-identical to the flat run.
+#[derive(Clone, Debug, Default)]
+pub struct FrontierExchange {
+    counts: Vec<u32>,
+    offsets: Vec<u32>,
+    grouped: Vec<u32>,
+    /// scatter cursors (a warm copy of `offsets` consumed during grouping)
+    fill: Vec<u32>,
+}
+
+impl FrontierExchange {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Group `frontier` (partition-major new ids) by owning partition.
+    /// After this call [`counts`](Self::counts) holds the per-partition
+    /// frontier sizes and [`grouped`](Self::grouped) the frontier sorted
+    /// stably by owner. Warm buffers make this allocation-free.
+    pub fn group(&mut self, map: &PartitionMap, frontier: &[u32]) {
+        let k = map.num_partitions();
+        self.counts.clear();
+        self.counts.resize(k, 0);
+        for &v in frontier {
+            self.counts[map.owner(v) as usize] += 1;
+        }
+        self.offsets.clear();
+        let mut cum = 0u32;
+        for &c in &self.counts {
+            self.offsets.push(cum);
+            cum += c;
+        }
+        self.grouped.clear();
+        self.grouped.resize(frontier.len(), 0);
+        self.fill.clear();
+        self.fill.extend_from_slice(&self.offsets);
+        for &v in frontier {
+            let p = map.owner(v) as usize;
+            let at = self.fill[p] as usize;
+            self.grouped[at] = v;
+            self.fill[p] += 1;
+        }
+    }
+
+    /// Per-partition frontier sizes from the last [`group`](Self::group).
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// The frontier grouped by owner (stable within each partition).
+    pub fn grouped(&self) -> &[u32] {
+        &self.grouped
+    }
+
+    /// Start offset of partition `p`'s group.
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Fraction of the last grouped frontier owned by partition `home` —
+    /// the locality score a partition-local worker sees.
+    pub fn local_fraction(&self, home: u32) -> f64 {
+        let total: u64 = self.counts.iter().map(|&c| c as u64).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        self.counts.get(home as usize).copied().unwrap_or(0) as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::CscBuilder;
+    use crate::sampler::testutil::{skewed_graph, test_graph};
+
+    #[test]
+    fn partition_map_constructors_validate_by_name() {
+        assert_eq!(PartitionMap::from_bounds(vec![]), Err(PartitionError::Empty));
+        assert_eq!(PartitionMap::from_bounds(vec![0]), Err(PartitionError::Empty));
+        assert_eq!(
+            PartitionMap::from_bounds(vec![1, 5]),
+            Err(PartitionError::BadBounds { index: 0, prev: 0, next: 1 })
+        );
+        assert_eq!(
+            PartitionMap::from_bounds(vec![0, 5, 3]),
+            Err(PartitionError::BadBounds { index: 2, prev: 5, next: 3 })
+        );
+        assert_eq!(PartitionMap::from_counts(&[]), Err(PartitionError::Empty));
+        let m = PartitionMap::from_bounds(vec![0, 3, 3, 7]).unwrap();
+        assert_eq!(m.num_partitions(), 3);
+        assert_eq!(m.num_vertices(), 7);
+        assert_eq!(m.len(1), 0, "empty partitions are legal");
+        let err = PartitionMap::from_bounds(vec![0, 5, 3]).unwrap_err();
+        assert!(err.to_string().contains("non-decreasing"), "{err}");
+    }
+
+    #[test]
+    fn owner_lookup_matches_ranges() {
+        let m = PartitionMap::from_counts(&[3, 0, 4, 2]).unwrap();
+        for p in 0..m.num_partitions() {
+            for v in m.range(p) {
+                assert_eq!(m.owner(v), p as u32, "vertex {v}");
+                assert_eq!(m.try_owner(v), Some(p as u32));
+            }
+        }
+        assert_eq!(m.try_owner(9), None);
+        assert_eq!(PartitionMap::single(10).owner(7), 0);
+    }
+
+    #[test]
+    fn layout_is_partition_major_and_stable() {
+        let assign = vec![1u32, 0, 1, 0, 2, 0];
+        let (perm, map) = partition_layout(&assign, 3).unwrap();
+        assert_eq!(map.bounds(), &[0, 3, 5, 6]);
+        // partition 0 = old {1, 3, 5} in old-id order
+        assert_eq!(perm.to_new(1), 0);
+        assert_eq!(perm.to_new(3), 1);
+        assert_eq!(perm.to_new(5), 2);
+        // partition 1 = old {0, 2}
+        assert_eq!(perm.to_new(0), 3);
+        assert_eq!(perm.to_new(2), 4);
+        assert_eq!(perm.to_new(4), 5);
+        // every new id's owner agrees with the assignment of its old id
+        for old in 0..assign.len() as u32 {
+            assert_eq!(map.owner(perm.to_new(old)), assign[old as usize]);
+        }
+    }
+
+    #[test]
+    fn layout_rejects_bad_assignments_by_name() {
+        assert_eq!(
+            partition_layout(&[0, 3, 1], 3),
+            Err(PartitionError::OwnerOutOfRange { vertex: 1, owner: 3, num_partitions: 3 })
+        );
+        assert_eq!(partition_layout(&[0, 0], 0), Err(PartitionError::Empty));
+    }
+
+    #[test]
+    fn ldg_is_balanced_and_beats_random_on_communities() {
+        // 4 well-separated communities: LDG should find (nearly) zero cut
+        // while random cuts ~3/4 of all edges
+        let g = test_graph(); // dc_sbm with 4 communities, homophily 0.7
+        let k = 4;
+        let ldg = ldg_partition(&g, k, 1.05);
+        let rnd = random_partition(g.num_vertices(), k, 7);
+        let (ldg_cut, total) = edge_cut(&g, &ldg);
+        let (rnd_cut, rnd_total) = edge_cut(&g, &rnd);
+        assert_eq!(total, rnd_total);
+        assert!(
+            (ldg_cut as f64) < rnd_cut as f64,
+            "LDG cut {ldg_cut} must beat random cut {rnd_cut}"
+        );
+        let (_, map) = partition_layout(&ldg, k).unwrap();
+        assert!(map.balance() <= 1.10, "balance {} exceeds the slack", map.balance());
+        // every vertex is assigned
+        assert!(ldg.iter().all(|&p| (p as usize) < k));
+    }
+
+    #[test]
+    fn contiguous_partition_is_identity_layout() {
+        let g = skewed_graph();
+        let assign = contiguous_partition(&g, 4);
+        let (perm, map) = partition_layout(&assign, 4).unwrap();
+        assert!(perm.is_identity(), "contiguous blocks over 0..|V| relabel to themselves");
+        assert_eq!(map.num_vertices(), g.num_vertices());
+        // owners are non-decreasing over the id order
+        for v in 1..g.num_vertices() {
+            assert!(assign[v] >= assign[v - 1]);
+        }
+        // work-balanced: the hub (vertex 0, in-degree 199) does not drag
+        // everything into partition 0
+        let p0 = assign.iter().filter(|&&p| p == 0).count();
+        assert!(p0 < g.num_vertices() / 2, "partition 0 holds {p0} vertices");
+    }
+
+    #[test]
+    fn single_partition_degenerates_to_flat() {
+        let g = test_graph();
+        for assign in [ldg_partition(&g, 1, 1.1), contiguous_partition(&g, 1)] {
+            assert!(assign.iter().all(|&p| p == 0));
+            let (perm, map) = partition_layout(&assign, 1).unwrap();
+            assert!(perm.is_identity());
+            assert_eq!(map.num_partitions(), 1);
+            let (cut, _) = edge_cut(&g, &assign);
+            assert_eq!(cut, 0);
+        }
+    }
+
+    #[test]
+    fn frontier_exchange_groups_stably() {
+        let map = PartitionMap::from_counts(&[3, 3, 4]).unwrap();
+        let mut ex = FrontierExchange::new();
+        ex.group(&map, &[7, 0, 4, 8, 1, 5]);
+        assert_eq!(ex.counts(), &[2, 2, 2]);
+        // stable within each partition: first-seen order preserved
+        assert_eq!(ex.grouped(), &[0, 1, 4, 5, 7, 8]);
+        assert_eq!(ex.offsets(), &[0, 2, 4]);
+        assert!((ex.local_fraction(0) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(ex.local_fraction(9), 0.0);
+        // empty frontier: fully local by convention
+        ex.group(&map, &[]);
+        assert_eq!(ex.local_fraction(0), 1.0);
+    }
+
+    #[test]
+    fn edge_cut_counts_directed_edges_once() {
+        let g = CscBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3), (3, 0)]).build().unwrap();
+        let (cut, total) = edge_cut(&g, &[0, 0, 1, 1]);
+        assert_eq!(total, 4);
+        assert_eq!(cut, 2); // 1->2 and 3->0 cross
+    }
+}

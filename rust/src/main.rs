@@ -14,10 +14,11 @@
 //! repro fig4    --dataset tiny --target-f1 0.85 [--trials 12 --timeout 30]
 //! repro calibrate-caps --dataset products-sim
 //! repro train   --dataset flickr-sim --method labor-1 [--steps 200 ...]
-//! repro graph pack --dataset flickr-sim [--scale 0.1] [--layout degree|original] [--out file.lgx]
+//! repro graph pack --dataset flickr-sim [--scale 0.1]
+//!                [--layout degree|original|partition:K --slack 1.05] [--out file.lgx]
 //! repro serve   --dataset flickr-sim [--method labor-0 --rate 2000 --window-us 1000
 //!                --max-batch 64 --deadline-ms 250 --skew 1.0 --requests 2000
-//!                --layout degree|original --cache-rows 0 --threads 1
+//!                --layout degree|original --partitions 0 --cache-rows 0 --threads 1
 //!                --pool-threads 0 --sample-memo-rows 0 --no-plan-cache
 //!                --policy propagate|supervise --max-restarts 3 --max-retries 3
 //!                --max-queue 256 --degrade-ladder 10,7,4
@@ -28,7 +29,11 @@
 //! format (by default relabeled into the degree-ordered locality layout,
 //! with the [`VertexPerm`] stored alongside), verifies the file by
 //! reloading it, and reports the load-time advantage over the legacy
-//! parse-and-rebuild format.
+//! parse-and-rebuild format. `--layout partition:K` instead renumbers
+//! partition-major after a greedy LDG edge-cut partitioning
+//! ([`labor_gnn::graph::partition`]) and stores the
+//! [`labor_gnn::graph::PartitionMap`] in the file's parts section;
+//! `--slack` sets the LDG capacity slack factor.
 //!
 //! `serve` replays a Zipf-skewed open-loop request stream through the
 //! online serving front end ([`labor_gnn::coordinator::serving`]):
@@ -36,7 +41,12 @@
 //! within a deadline window, and the report shows p50/p99 response
 //! latency, the coalescing factor, and bytes/request. Popularity follows
 //! degree rank, so `--layout degree --cache-rows k` exercises the cache's
-//! `id < k` prefix fast path. Bare boolean flags (`--smoke`,
+//! `id < k` prefix fast path. `--partitions K` (with `--layout original`)
+//! serves from a partition-major relabeled graph whose features are split
+//! across K per-partition stores behind a
+//! [`labor_gnn::coordinator::PartitionedStore`]; cross-partition rows are
+//! priced as remote-tier hops and the report prints the local-hit
+//! fraction. Bare boolean flags (`--smoke`,
 //! `--no-plan-cache`) may appear anywhere — a token followed by another
 //! `--flag` (or by nothing) parses as a flag with no value.
 //!
@@ -66,6 +76,7 @@ use anyhow::{anyhow, Result};
 use labor_gnn::bench;
 use labor_gnn::graph::compact::VertexPerm;
 use labor_gnn::graph::io as graph_io;
+use labor_gnn::graph::partition;
 use labor_gnn::sampler::SamplerKind;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -164,59 +175,94 @@ fn run_graph(argv: &[String]) -> Result<()> {
             let scale = a.f64_or("scale", 0.1)?;
             let layout = a.str_or("layout", "degree");
             let ds = labor_gnn::data::Dataset::load_or_generate(&dataset, scale)?;
-            let (graph, perm) = match layout.as_str() {
+            let (graph, perm, parts) = match layout.as_str() {
                 "degree" => {
                     let perm = VertexPerm::degree_ordered(&ds.graph);
-                    (perm.apply_to_graph(&ds.graph), Some(perm))
+                    (perm.apply_to_graph(&ds.graph), Some(perm), None)
                 }
-                "original" => (ds.graph.clone(), None),
-                other => return Err(anyhow!("--layout expects degree|original, got '{other}'")),
+                "original" => (ds.graph.clone(), None, None),
+                other => match other.strip_prefix("partition:") {
+                    Some(kstr) => {
+                        let k: usize = kstr.parse().map_err(|_| {
+                            anyhow!("--layout partition:K expects an integer K, got '{kstr}'")
+                        })?;
+                        anyhow::ensure!(k >= 1, "--layout partition:K needs K >= 1");
+                        let slack = a.f64_or("slack", 1.05)?;
+                        let assign = partition::ldg_partition(&ds.graph, k, slack);
+                        let (cut, total) = partition::edge_cut(&ds.graph, &assign);
+                        let (perm, map) = partition::partition_layout(&assign, k)
+                            .map_err(|e| anyhow!("partition layout failed: {e}"))?;
+                        println!(
+                            "  ldg partition into {k}: edge cut {cut}/{total} ({:.3}), \
+                             balance {:.3}",
+                            cut as f64 / (total as f64).max(1.0),
+                            map.balance()
+                        );
+                        (perm.apply_to_graph(&ds.graph), Some(perm), Some(map))
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "--layout expects degree|original|partition:K, got '{other}'"
+                        ))
+                    }
+                },
             };
             let out = a.str_or("out", &format!("data/{dataset}-s{scale:.3}.lgx"));
             let t0 = Instant::now();
-            graph_io::save_lgx(&out, &graph, perm.as_ref())
+            graph_io::save_lgx_full(&out, &graph, perm.as_ref(), parts.as_ref())
                 .map_err(|e| anyhow!("pack failed: {e}"))?;
             let t_save = t0.elapsed();
             let bytes = std::fs::metadata(&out)?.len();
             println!(
                 "packed {dataset} (scale {scale}, layout {layout}): |V|={} |E|={}, \
-                 indptr {}, weights {}, perm {}",
+                 indptr {}, weights {}, perm {}, partitions {}",
                 graph.num_vertices(),
                 graph.num_edges(),
                 if graph.indptr.is_narrow() { "u32" } else { "u64" },
                 if graph.weights.is_some() { "yes" } else { "no" },
                 if perm.is_some() { "yes" } else { "no" },
+                parts.as_ref().map(|p| p.num_partitions()).unwrap_or(1),
             );
             println!("  wrote {out} ({:.1} KiB) in {t_save:.2?}", bytes as f64 / 1024.0);
 
             // reload + verify: the pack is only done when the bytes on
-            // disk provably reproduce the graph (and its permutation)
+            // disk provably reproduce the graph (and its permutation and
+            // partition map)
             let t0 = Instant::now();
-            let (back, back_perm) =
-                graph_io::load_lgx(&out).map_err(|e| anyhow!("reload failed: {e}"))?;
+            let (back, back_perm, back_parts) =
+                graph_io::load_lgx_full(&out).map_err(|e| anyhow!("reload failed: {e}"))?;
             let t_lgx = t0.elapsed();
             anyhow::ensure!(back == graph, "reloaded graph differs from packed graph");
             anyhow::ensure!(
                 back_perm.as_ref() == perm.as_ref(),
                 "reloaded perm differs from packed perm"
             );
+            anyhow::ensure!(
+                back_parts.as_ref() == parts.as_ref(),
+                "reloaded partition map differs from packed map"
+            );
             if layout == "degree" {
                 anyhow::ensure!(back.is_degree_ordered(), "packed graph lost degree order");
             }
             println!(
-                "  reload: {t_lgx:.2?} ({}), graph and perm verified",
+                "  reload: {t_lgx:.2?} ({}), graph, perm and partition map verified",
                 if back.is_mapped() { "mmap, zero-copy" } else { "buffered read" }
             );
 
             // cross-check the two .lgx loaders against each other: the
             // mapped and buffered paths must produce bit-identical graphs
             if back.is_mapped() {
-                let (buffered, buffered_perm) = graph_io::load_lgx_buffered(&out)
-                    .map_err(|e| anyhow!("buffered reload failed: {e}"))?;
+                let (buffered, buffered_perm, buffered_parts) =
+                    graph_io::load_lgx_buffered_full(&out)
+                        .map_err(|e| anyhow!("buffered reload failed: {e}"))?;
                 anyhow::ensure!(buffered == back, "buffered load differs from mapped load");
                 anyhow::ensure!(
                     buffered_perm.as_ref() == back_perm.as_ref(),
                     "buffered perm differs from mapped perm"
+                );
+                anyhow::ensure!(
+                    buffered_parts.as_ref() == back_parts.as_ref(),
+                    "buffered partition map differs from mapped map"
                 );
                 println!("  mmap vs buffered loaders: bit-identical");
             }
@@ -248,7 +294,8 @@ fn run_serve(a: &Args) -> Result<()> {
     use labor_gnn::coordinator::serving::replay_open_loop;
     use labor_gnn::coordinator::{
         Backoff, DataPlaneConfig, DegradeConfig, DegreeOrderedCache, FailurePolicy,
-        FeatureCache, NullCache, ServeError, ServingConfig, ServingFrontEnd, TierModel,
+        FeatureCache, NullCache, PartitionedStore, ServeError, ServingConfig, ServingFrontEnd,
+        TierModel,
     };
     use labor_gnn::graph::compact::degree_order;
     use labor_gnn::graph::gen::{zipf_requests, ZipfRequestConfig};
@@ -333,14 +380,38 @@ fn run_serve(a: &Args) -> Result<()> {
         }
     };
 
+    // --partitions K: partition-major serving — LDG-partition the graph,
+    // relabel the whole dataset partition-major, and split the feature
+    // store per partition so cross-partition gathers are priced as
+    // remote hops. Partition-major is itself a vertex layout, so it
+    // composes with --layout original only.
+    let partitions = a.usize_or("partitions", 0)?;
+    anyhow::ensure!(
+        partitions == 0 || layout == "original",
+        "--partitions requires --layout original (partition-major is itself a layout)"
+    );
     let ds = labor_gnn::data::Dataset::load_or_generate(&dataset, scale)?;
-    let (ds, perm) = match layout.as_str() {
-        "degree" => {
-            let (ds, perm) = ds.relabel_by_degree();
-            (ds, Some(Arc::new(perm)))
+    let (ds, perm, pmap) = if partitions > 0 {
+        let assign = partition::ldg_partition(&ds.graph, partitions, 1.05);
+        let (cut, total) = partition::edge_cut(&ds.graph, &assign);
+        let (pperm, map) = partition::partition_layout(&assign, partitions)
+            .map_err(|e| anyhow!("partition layout failed: {e}"))?;
+        println!(
+            "partitions: {partitions} (ldg), edge cut {cut}/{total} ({:.3}), balance {:.3}",
+            cut as f64 / (total as f64).max(1.0),
+            map.balance()
+        );
+        let ds = ds.relabel_with(&pperm);
+        (ds, Some(Arc::new(pperm)), Some(Arc::new(map)))
+    } else {
+        match layout.as_str() {
+            "degree" => {
+                let (ds, perm) = ds.relabel_by_degree();
+                (ds, Some(Arc::new(perm)), None)
+            }
+            "original" => (ds, None, None),
+            other => return Err(anyhow!("--layout expects degree|original, got '{other}'")),
         }
-        "original" => (ds, None),
-        other => return Err(anyhow!("--layout expects degree|original, got '{other}'")),
     };
     let graph = Arc::new(ds.graph.clone());
     let mut sampler = MultiLayerSampler::new(kind.clone(), &vec![fanout; layers]);
@@ -369,12 +440,21 @@ fn run_serve(a: &Args) -> Result<()> {
     } else {
         Arc::new(NullCache)
     };
-    let plane = DataPlaneConfig::for_dataset(&ds, tier, cache);
+    let mut plane = DataPlaneConfig::for_dataset(&ds, tier, cache);
+    if let Some(map) = &pmap {
+        plane = plane.with_partitioned(Arc::new(PartitionedStore::split(
+            &ds.features,
+            ds.num_features(),
+            map.clone(),
+            TierModel::remote(),
+        )));
+    }
     let store = plane.store.clone();
+    let pstore = plane.partitioned.clone();
 
     // popularity follows degree rank: rank r targets the r-th
-    // highest-degree vertex (identity modulo perm in the degree layout,
-    // which is exactly the DegreeOrderedCache prefix)
+    // highest-degree vertex of the *served* graph (in the degree layout
+    // that is vertex r itself — exactly the DegreeOrderedCache prefix)
     let stream = zipf_requests(&ZipfRequestConfig {
         num_ids: graph.num_vertices(),
         exponent: skew,
@@ -383,12 +463,10 @@ fn run_serve(a: &Args) -> Result<()> {
         seed,
     });
     // requests speak original ids; the front end translates when relabeled
+    let order = degree_order(&graph);
     let seeds: Vec<u32> = match &perm {
-        Some(p) => stream.seeds.iter().map(|&r| p.to_old(r)).collect(),
-        None => {
-            let order = degree_order(&graph);
-            stream.seeds.iter().map(|&r| order[r as usize]).collect()
-        }
+        Some(p) => stream.seeds.iter().map(|&r| p.to_old(order[r as usize])).collect(),
+        None => stream.seeds.iter().map(|&r| order[r as usize]).collect(),
     };
 
     let front = ServingFrontEnd::spawn(
@@ -490,6 +568,19 @@ fn run_serve(a: &Args) -> Result<()> {
         snap.bytes_returned_per_request(),
         store.hit_rate()
     );
+    if let Some(ps) = &pstore {
+        let loc = ps.snapshot();
+        println!(
+            "  partitions: {} stores, local-hit {:.3} ({} local / {} remote rows), \
+             remote {:.1} KiB over {} hops",
+            ps.num_partitions(),
+            ps.local_hit_fraction(),
+            loc.local_rows,
+            loc.remote_rows,
+            ps.remote_bytes() as f64 / 1024.0,
+            loc.remote_requests,
+        );
+    }
     let f = snap.faults;
     if chaos_points > 0 || supervised || shed || degraded_served > 0 || f != Default::default() {
         println!(
@@ -546,6 +637,19 @@ fn run_serve(a: &Args) -> Result<()> {
                 "--pool-threads {pool_threads}: only {} pool workers live",
                 pool_live_threads()
             );
+        }
+        if let Some(ps) = &pstore {
+            if served > 0 {
+                let loc = ps.snapshot();
+                anyhow::ensure!(
+                    loc.requests > 0,
+                    "--partitions set but no gather went through the partitioned store"
+                );
+                anyhow::ensure!(
+                    loc.local_rows + loc.remote_rows > 0,
+                    "partitioned store recorded gathers but no rows"
+                );
+            }
         }
         println!("serve smoke OK");
     }

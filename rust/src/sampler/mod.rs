@@ -23,7 +23,7 @@ pub mod view;
 pub mod weighted;
 
 pub use memo::SampleMemo;
-pub use par::{partition_seeds, ScratchPool};
+pub use par::{partition_seeds, ExchangeStats, ScratchPool};
 pub use plan::SamplePlan;
 pub use pool::{configure_pool_threads, pool_live_threads};
 pub use scratch::{EpochMap, SamplerScratch};

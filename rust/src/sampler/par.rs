@@ -59,8 +59,10 @@
 
 use super::scratch::SamplerScratch;
 use super::{finalize_inputs_in, SampledLayer};
+use crate::graph::partition::{FrontierExchange, PartitionMap};
 use crate::graph::CscGraph;
 use std::ops::Range;
+use std::sync::Arc;
 
 /// Split `seeds` into `num_shards` contiguous ranges of approximately
 /// equal **work**, where a seed's work is `in_degree + 1` (the `+1` keeps
@@ -135,6 +137,77 @@ pub struct ScratchPool {
     workers: Vec<SamplerScratch>,
     xlat: Vec<Vec<u32>>,
     ranges: Vec<Range<usize>>,
+    /// partition-major layout of the graph being sampled, when attached
+    /// via [`set_partition_map`](Self::set_partition_map): [`plan`](Self::plan)
+    /// then groups each layer's frontier by owning partition and snaps
+    /// shard boundaries to partition breaks
+    partition: Option<Arc<PartitionMap>>,
+    /// reusable frontier-exchange buffers for the partition-aware plan
+    exchange: FrontierExchange,
+    plans: u64,
+    frontier_vertices: u64,
+    boundaries_snapped: u64,
+}
+
+/// Cumulative frontier-exchange accounting of a partition-aware
+/// [`ScratchPool`] (all zero until a partition map is attached).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExchangeStats {
+    /// layer plans that ran the frontier exchange
+    pub plans: u64,
+    /// frontier vertices grouped across those plans
+    pub frontier_vertices: u64,
+    /// shard boundaries moved onto a partition break
+    pub boundaries_snapped: u64,
+}
+
+/// Snap each internal shard boundary to the nearest index where the
+/// owning partition changes (a *partition break*), so shards align to
+/// partitions whenever the work balance allows. A boundary only moves
+/// within half an ideal shard width — past that, locality would cost more
+/// imbalance than it saves — and never crosses a neighboring boundary, so
+/// the ranges stay contiguous, non-overlapping, and covering. Any
+/// contiguous ranges produce bit-identical output (see the module docs),
+/// which is what makes this alignment free correctness-wise. Returns the
+/// number of boundaries moved.
+fn align_ranges_to_breaks(
+    seeds: &[u32],
+    map: &PartitionMap,
+    ranges: &mut [Range<usize>],
+) -> u64 {
+    let n = seeds.len();
+    let shards = ranges.len();
+    if n == 0 || shards <= 1 {
+        return 0;
+    }
+    let window = (n / (2 * shards)).max(1);
+    let is_break = |i: usize| map.owner(seeds[i - 1]) != map.owner(seeds[i]);
+    let mut snapped = 0u64;
+    let mut prev = 0usize;
+    for j in 0..shards - 1 {
+        let b = ranges[j].end;
+        let mut best = b;
+        if b > 0 && b < n && !is_break(b) {
+            for d in 1..=window {
+                if b > d && is_break(b - d) {
+                    best = b - d;
+                    break;
+                }
+                if b + d < n && is_break(b + d) {
+                    best = b + d;
+                    break;
+                }
+            }
+        }
+        let nb = best.clamp(prev, n);
+        if nb != b {
+            snapped += 1;
+        }
+        ranges[j] = prev..nb;
+        prev = nb;
+    }
+    ranges[shards - 1] = prev..n;
+    snapped
 }
 
 impl ScratchPool {
@@ -155,7 +228,7 @@ impl ScratchPool {
             main: SamplerScratch::for_vertices(num_vertices),
             workers: (0..n).map(|_| SamplerScratch::for_vertices(num_vertices)).collect(),
             xlat: vec![Vec::new(); n],
-            ranges: Vec::new(),
+            ..Self::default()
         }
     }
 
@@ -165,14 +238,57 @@ impl ScratchPool {
         &mut self.main
     }
 
+    /// Attach (or detach) the graph's partition-major layout. While a map
+    /// is attached, every [`plan`](Self::plan) groups the layer's frontier
+    /// by owning partition (the frontier-exchange step a distributed
+    /// engine performs before discovery — here it drives accounting) and
+    /// snaps shard boundaries to partition breaks. Output stays
+    /// bit-identical to the unpartitioned pool for every sampler and
+    /// shard count (`tests/partition_identity.rs`).
+    pub fn set_partition_map(&mut self, map: Option<Arc<PartitionMap>>) {
+        self.partition = map;
+    }
+
+    /// The attached partition-major layout, if any.
+    pub fn partition_map(&self) -> Option<&Arc<PartitionMap>> {
+        self.partition.as_ref()
+    }
+
+    /// The frontier grouping of the most recent partition-aware
+    /// [`plan`](Self::plan) (empty until a map is attached).
+    pub fn exchange(&self) -> &FrontierExchange {
+        &self.exchange
+    }
+
+    /// Cumulative frontier-exchange accounting.
+    pub fn exchange_stats(&self) -> ExchangeStats {
+        ExchangeStats {
+            plans: self.plans,
+            frontier_vertices: self.frontier_vertices,
+            boundaries_snapped: self.boundaries_snapped,
+        }
+    }
+
     /// Clamp the shard count to the seed count, compute the degree-aware
     /// shard ranges, and make sure enough worker arenas exist. Returns
     /// the effective shard count; `<= 1` means the caller should take the
-    /// sequential path on [`main_mut`](Self::main_mut).
+    /// sequential path on [`main_mut`](Self::main_mut). With a partition
+    /// map attached (see [`set_partition_map`](Self::set_partition_map)),
+    /// the frontier is additionally grouped by owning partition and the
+    /// shard boundaries snap to partition breaks — both reusing warm
+    /// buffers, neither changing the sampled output.
     pub(crate) fn plan(&mut self, g: &CscGraph, seeds: &[u32], num_shards: usize) -> usize {
         let shards = num_shards.max(1).min(seeds.len().max(1));
+        if let Some(map) = &self.partition {
+            self.exchange.group(map, seeds);
+            self.plans += 1;
+            self.frontier_vertices += seeds.len() as u64;
+        }
         if shards > 1 {
             partition_seeds_into(g, seeds, shards, &mut self.ranges);
+            if let Some(map) = &self.partition {
+                self.boundaries_snapped += align_ranges_to_breaks(seeds, map, &mut self.ranges);
+            }
             if self.workers.len() < shards {
                 // size new arenas for the graph up front so their first
                 // use doesn't pay the O(|V|) map allocation mid-phase
@@ -500,6 +616,79 @@ mod tests {
         let ranges = partition_seeds(&g, &seeds, 8);
         let covered: usize = ranges.iter().map(|r| r.len()).sum();
         assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn aligned_ranges_snap_to_partition_breaks_and_stay_contiguous() {
+        let g = test_graph();
+        // partition-major seed order over a 4-partition map of 500
+        // vertices: breaks sit exactly at the bounds
+        let map =
+            Arc::new(crate::graph::PartitionMap::from_bounds(vec![0, 130, 250, 380, 500]).unwrap());
+        let seeds: Vec<u32> = (0..200u32).map(|i| i * 2).collect(); // spans all partitions
+        let mut pool = ScratchPool::new();
+        pool.set_partition_map(Some(map.clone()));
+        for shards in [2usize, 3, 4, 8] {
+            let eff = pool.plan(&g, &seeds, shards);
+            assert_eq!(eff, shards);
+            let parts = pool.parts(eff);
+            // invariant: contiguous, non-overlapping, covering
+            let mut next = 0usize;
+            for r in parts.ranges {
+                assert_eq!(r.start, next, "shards={shards}");
+                next = r.end;
+            }
+            assert_eq!(next, seeds.len(), "shards={shards}");
+            // every internal boundary either sits on a partition break or
+            // had none within its snap window
+            let window = (seeds.len() / (2 * shards)).max(1);
+            for r in &parts.ranges[..shards - 1] {
+                let b = r.end;
+                if b == 0 || b == seeds.len() {
+                    continue;
+                }
+                let on_break = map.owner(seeds[b - 1]) != map.owner(seeds[b]);
+                let break_nearby = (1..=window).any(|d| {
+                    (b > d && map.owner(seeds[b - d - 1]) != map.owner(seeds[b - d]))
+                        || (b + d < seeds.len()
+                            && map.owner(seeds[b + d - 1]) != map.owner(seeds[b + d]))
+                });
+                assert!(on_break || !break_nearby, "shards={shards}, boundary {b}");
+            }
+        }
+        let stats = pool.exchange_stats();
+        assert_eq!(stats.plans, 4);
+        assert_eq!(stats.frontier_vertices, 4 * seeds.len() as u64);
+        // the last plan's frontier grouping covers every seed
+        assert_eq!(pool.exchange().grouped().len(), seeds.len());
+        let counted: u32 = pool.exchange().counts().iter().sum();
+        assert_eq!(counted as usize, seeds.len());
+        // detaching the map turns the machinery back off
+        pool.set_partition_map(None);
+        let before = pool.exchange_stats();
+        pool.plan(&g, &seeds, 4);
+        assert_eq!(pool.exchange_stats(), before);
+    }
+
+    #[test]
+    fn single_partition_map_leaves_balanced_ranges_alone() {
+        // K=1 has no interior breaks: boundaries must NOT collapse to the
+        // ends — the snap window bounds the move, so the degree-balanced
+        // plan survives and K=1 degenerates to the flat engine
+        let g = skewed_graph();
+        let seeds: Vec<u32> = (0..200).collect();
+        let mut flat = ScratchPool::new();
+        let mut single = ScratchPool::new();
+        single.set_partition_map(Some(Arc::new(crate::graph::PartitionMap::single(
+            g.num_vertices(),
+        ))));
+        for shards in [2usize, 4, 8] {
+            let a = flat.plan(&g, &seeds, shards);
+            let b = single.plan(&g, &seeds, shards);
+            assert_eq!(a, b);
+            assert_eq!(flat.parts(a).ranges, single.parts(b).ranges, "shards={shards}");
+        }
+        assert_eq!(single.exchange_stats().boundaries_snapped, 0);
     }
 
     #[test]

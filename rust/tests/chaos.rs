@@ -88,6 +88,7 @@ fn store_plane(g: &CscGraph, dim: usize) -> DataPlaneConfig {
     DataPlaneConfig {
         store: Arc::new(FeatureStore::new(feats, dim, TierModel::local())),
         labels: None,
+        partitioned: None,
     }
 }
 

@@ -10,9 +10,11 @@ use labor_gnn::graph::builder::CscBuilder;
 use labor_gnn::graph::compact::VertexPerm;
 use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
 use labor_gnn::graph::io::{
-    load_lgx, read_lgx, save_lgx, write_lgx, LgxError, LGX_VERSION,
+    load_lgx, load_lgx_buffered_full, load_lgx_full, load_lgx_mmap_full, read_lgx,
+    read_lgx_full, save_lgx, save_lgx_full, write_lgx, write_lgx_full, LgxError, LGX_VERSION,
 };
-use labor_gnn::graph::{CscGraph, IndPtr};
+use labor_gnn::graph::partition::{ldg_partition, partition_layout};
+use labor_gnn::graph::{CscGraph, IndPtr, PartitionMap};
 
 fn dense_graph() -> CscGraph {
     dc_sbm(&DcSbmConfig {
@@ -300,4 +302,142 @@ fn load_errors_on_missing_file_are_io() {
         Err(LgxError::Io(_)) => {}
         other => panic!("expected Io, got {other:?}"),
     }
+}
+
+/// The optional parts section: a partition-major layout's
+/// [`PartitionMap`] rides the file and comes back identical through every
+/// loader — buffered, file, and zero-copy mapped — alongside the perm,
+/// while the legacy two-tuple readers still parse (and drop) it.
+#[test]
+fn parts_section_roundtrips_through_every_loader() {
+    let g = dense_graph();
+    let assign = ldg_partition(&g, 3, 1.05);
+    let (perm, parts) = partition_layout(&assign, 3).unwrap();
+    let rg = perm.apply_to_graph(&g);
+    let path = std::env::temp_dir().join(format!("labor_lgx_parts_{}.lgx", std::process::id()));
+    save_lgx_full(&path, &rg, Some(&perm), Some(&parts)).unwrap();
+    for (loader, got) in [
+        ("load_lgx_full", load_lgx_full(&path).unwrap()),
+        ("load_lgx_buffered_full", load_lgx_buffered_full(&path).unwrap()),
+        ("load_lgx_mmap_full", load_lgx_mmap_full(&path).unwrap()),
+    ] {
+        let (back, back_perm, back_parts) = got;
+        assert_eq!(back, rg, "{loader}: graph");
+        assert_eq!(back_perm.as_ref(), Some(&perm), "{loader}: perm");
+        assert_eq!(back_parts.as_ref(), Some(&parts), "{loader}: parts");
+    }
+    // legacy readers parse the same file and drop the section
+    let (back, back_perm) = load_lgx(&path).unwrap();
+    assert_eq!(back, rg);
+    assert_eq!(back_perm.as_ref(), Some(&perm));
+    std::fs::remove_file(&path).ok();
+    // K=1 (the degenerate single partition) and parts-without-perm both
+    // round-trip through the in-memory path
+    for pm in [PartitionMap::single(rg.num_vertices()), parts.clone()] {
+        let mut buf = Vec::new();
+        write_lgx_full(&mut buf, &rg, None, Some(&pm)).unwrap();
+        let (b, bp, bparts) = read_lgx_full(&mut &buf[..]).unwrap();
+        assert_eq!(b, rg);
+        assert_eq!(bp, None);
+        assert_eq!(bparts.as_ref(), Some(&pm));
+    }
+    // a file written without parts loads as None through the full loaders
+    let mut buf = Vec::new();
+    write_lgx_full(&mut buf, &rg, Some(&perm), None).unwrap();
+    let (_, _, none_parts) = read_lgx_full(&mut &buf[..]).unwrap();
+    assert_eq!(none_parts, None);
+}
+
+/// The writer rejects a partition map that does not cover the graph, by
+/// name, before any bytes hit the stream.
+#[test]
+fn mismatched_parts_are_rejected_at_write_time() {
+    let g = weighted_graph();
+    let wrong = PartitionMap::from_counts(&[2, 2]).unwrap(); // covers 4, graph has 6
+    let mut buf = Vec::new();
+    match write_lgx_full(&mut buf, &g, None, Some(&wrong)) {
+        Err(LgxError::Invalid(msg)) => assert!(msg.contains("partition map covers"), "{msg}"),
+        other => panic!("expected Invalid(coverage), got {other:?}"),
+    }
+    assert!(buf.is_empty(), "a rejected write must emit nothing");
+}
+
+/// Corrupting the parts section is caught by name in both loaders: a
+/// flipped bounds byte fails the payload checksum (or bounds validation),
+/// an absurd length prefix fails the pre-allocation bound, and a cut
+/// inside the section is `Truncated("parts")`.
+#[test]
+fn parts_corruption_is_named() {
+    // layout of this 3-vertex file: header @0, indptr (4 u32) @64,
+    // indices (2 u32) @128, parts [3, 0, 2, 3] (4 u32) @192 — 256 B total
+    let g = CscBuilder::new(3).edges(&[(0, 1), (1, 2)]).build().unwrap();
+    let parts = PartitionMap::from_counts(&[2, 1]).unwrap();
+    let mut buf = Vec::new();
+    write_lgx_full(&mut buf, &g, None, Some(&parts)).unwrap();
+    assert_eq!(buf.len(), 256, "layout drifted; fix the offsets in this test");
+    let parts_off = 192usize;
+
+    // 1. flipped bounds byte → checksum mismatch (never a wrong map)
+    let mut c = buf.clone();
+    c[parts_off + 8] ^= 0x01; // bounds[1]
+    match read_lgx_full(&mut &c[..]) {
+        Err(LgxError::ChecksumMismatch { expected, got }) => assert_ne!(expected, got),
+        other => panic!("expected ChecksumMismatch, got {other:?}"),
+    }
+
+    // 2. absurd length prefix → named bound check, before any allocation
+    //    is sized from it (fires ahead of the checksum pass)
+    let mut c = buf.clone();
+    c[parts_off..parts_off + 4].copy_from_slice(&200u32.to_le_bytes());
+    for (which, res) in [
+        ("buffered", read_lgx_full(&mut &c[..]).map(|_| ())),
+        ("mapped", write_then_mmap(&c).map(|_| ())),
+    ] {
+        match res {
+            Err(LgxError::Invalid(msg)) => {
+                assert!(msg.contains("declares 200 bounds"), "{which}: {msg}")
+            }
+            other => panic!("{which}: expected Invalid(bounds count), got {other:?}"),
+        }
+    }
+
+    // 3. checksums pass but the map does not cover the graph: re-sign the
+    //    payload after forging bounds = [0, 2, 4] on a 3-vertex file
+    let mut c = buf.clone();
+    c[parts_off + 12..parts_off + 16].copy_from_slice(&4u32.to_le_bytes());
+    let mut sum = 0xcbf2_9ce4_8422_2325u64;
+    sum = fnv_continue(sum, &c[64..64 + 16]); // indptr (4 × u32)
+    sum = fnv_continue(sum, &c[128..128 + 8]); // indices (2 × u32)
+    sum = fnv_continue(sum, &c[parts_off..parts_off + 16]); // parts (4 × u32)
+    c[32..40].copy_from_slice(&sum.to_le_bytes());
+    resign_header(&mut c);
+    match read_lgx_full(&mut &c[..]) {
+        Err(LgxError::Invalid(msg)) => {
+            assert!(msg.contains("covers 4 vertices"), "{msg}")
+        }
+        other => panic!("expected Invalid(coverage), got {other:?}"),
+    }
+
+    // 4. a cut inside the section names it
+    let cut = &buf[..parts_off + 6];
+    match read_lgx_full(&mut &cut[..]) {
+        Err(LgxError::Truncated("parts")) => {}
+        other => panic!("expected Truncated(parts), got {other:?}"),
+    }
+}
+
+/// Round a corrupt byte buffer through a real file so the mapped loader
+/// sees the same bytes the buffered loader was fed.
+fn write_then_mmap(
+    bytes: &[u8],
+) -> Result<(CscGraph, Option<VertexPerm>, Option<PartitionMap>), LgxError> {
+    let path = std::env::temp_dir().join(format!(
+        "labor_lgx_corrupt_{}_{}.lgx",
+        std::process::id(),
+        bytes.len()
+    ));
+    std::fs::write(&path, bytes).unwrap();
+    let out = load_lgx_mmap_full(&path);
+    std::fs::remove_file(&path).ok();
+    out
 }

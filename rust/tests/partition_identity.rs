@@ -1,0 +1,280 @@
+//! Partition-aware sampling equivalence: attaching a partition-major
+//! layout to the sharded sampling path (frontier exchange + shard
+//! boundaries snapped to partition breaks, see `sampler::par`) must be
+//! **bit-identical** to the plain unpartitioned run — same vertices, same
+//! edges, same f32 weight bits — for every `SamplerKind` × shard count ×
+//! partitioning strategy × partition count (including the K=1
+//! degeneracy), and the partition-split feature store must deliver the
+//! same bytes as the flat store while its locality counters fill. This is
+//! the safety net under the partition engine: partitioning may only move
+//! *accounting*, never the sample.
+
+use std::sync::Arc;
+
+use labor_gnn::coordinator::{
+    DataPlaneConfig, FailurePolicy, FeatureStore, PartitionedStore, PipelineConfig,
+    SamplingPipeline, TierModel,
+};
+use labor_gnn::graph::builder::CscBuilder;
+use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::partition::{contiguous_partition, ldg_partition, partition_layout};
+use labor_gnn::graph::{CscGraph, PartitionMap};
+use labor_gnn::rng::StreamRng;
+use labor_gnn::sampler::{IterSpec, Mfg, MultiLayerSampler, SamplerKind, ScratchPool};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+const PARTITION_COUNTS: [usize; 4] = [1, 2, 3, 5];
+
+fn dense_graph() -> CscGraph {
+    dc_sbm(&DcSbmConfig {
+        num_vertices: 500,
+        num_arcs: 30_000,
+        num_communities: 4,
+        homophily: 0.7,
+        degree_exponent: 0.4,
+        seed: 42,
+    })
+    .graph
+}
+
+/// Star + chain + clique mixture: wildly skewed in-degrees, so LDG's
+/// descending-degree stream and the boundary snapping both get exercised
+/// away from the balanced case.
+fn skewed_graph() -> CscGraph {
+    let n = 200u32;
+    let mut b = CscBuilder::new(n as usize);
+    for t in 1..n {
+        b.edge(t, 0);
+        b.edge(0, t);
+    }
+    for t in 1..n - 1 {
+        b.edge(t, t + 1);
+    }
+    for u in 10..20u32 {
+        for v in 10..20u32 {
+            if u != v {
+                b.edge(u, v);
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+/// Every `SamplerKind` variant, with budgets for the layer samplers.
+fn all_kinds() -> Vec<SamplerKind> {
+    vec![
+        SamplerKind::Neighbor,
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Fixed(2), layer_dependent: false },
+        SamplerKind::Labor { iterations: IterSpec::Converge, layer_dependent: true },
+        SamplerKind::LaborSequential { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        SamplerKind::LaborSequential { iterations: IterSpec::Converge, layer_dependent: false },
+        SamplerKind::Ladies { budgets: vec![120, 200] },
+        SamplerKind::Pladies { budgets: vec![120, 200] },
+    ]
+}
+
+fn assert_mfg_eq(a: &Mfg, b: &Mfg, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.seeds, lb.seeds, "{what} layer {l}: seeds");
+        assert_eq!(la.inputs, lb.inputs, "{what} layer {l}: inputs");
+        assert_eq!(la.edge_src, lb.edge_src, "{what} layer {l}: edge_src");
+        assert_eq!(la.edge_dst, lb.edge_dst, "{what} layer {l}: edge_dst");
+        // bit-exact weights: compare the raw f32 bits, not approximate
+        let wa: Vec<u32> = la.edge_weight.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = lb.edge_weight.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "{what} layer {l}: edge_weight bits");
+    }
+}
+
+fn seeds_for(rng: &mut StreamRng, nv: u32) -> Vec<u32> {
+    let bs = 16 + rng.below(100) as u32;
+    let start = rng.below(nv as u64) as u32;
+    let mut seeds: Vec<u32> = (0..bs).map(|i| (start + i * 3) % nv).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    seeds
+}
+
+/// Relabel `g` partition-major under `strategy` and return the relabeled
+/// graph plus its `PartitionMap`.
+fn partition_major(g: &CscGraph, strategy: &str, k: usize) -> (CscGraph, Arc<PartitionMap>) {
+    let assign = match strategy {
+        "ldg" => ldg_partition(g, k, 1.05),
+        "contiguous" => contiguous_partition(g, k),
+        other => panic!("unknown strategy {other}"),
+    };
+    let (perm, map) = partition_layout(&assign, k).unwrap();
+    (perm.apply_to_graph(g), Arc::new(map))
+}
+
+/// The acceptance criterion: with a partition map attached to the pool,
+/// sharded sampling on the partition-major graph stays bit-identical to
+/// the fresh sequential run (which knows nothing of partitions) — for
+/// every kind × shard count × strategy × K, one warm pool across all of
+/// it. K=1 must degenerate to a single all-local partition.
+#[test]
+fn partition_aware_sharding_is_bit_identical_for_every_kind() {
+    let graphs = [("dense", dense_graph()), ("skewed", skewed_graph())];
+    let mut rng = StreamRng::new(0x9A27);
+    for (gname, g) in &graphs {
+        for strategy in ["ldg", "contiguous"] {
+            for &k in &PARTITION_COUNTS {
+                let (pg, map) = partition_major(g, strategy, k);
+                let nv = pg.num_vertices() as u32;
+                let mut pool = ScratchPool::new();
+                pool.set_partition_map(Some(map.clone()));
+                for kind in all_kinds() {
+                    let label = kind.label();
+                    let sampler = MultiLayerSampler::new(kind, &[5, 7]);
+                    for &shards in &SHARD_COUNTS {
+                        for batch in 0..2u64 {
+                            let seeds = seeds_for(&mut rng, nv);
+                            let seq = sampler.sample_fresh(&pg, &seeds, batch);
+                            let par = sampler.sample_sharded(&pg, &seeds, batch, shards, &mut pool);
+                            assert_mfg_eq(
+                                &par,
+                                &seq,
+                                &format!("{gname}/{strategy} K={k} {label} shards={shards}"),
+                            );
+                        }
+                    }
+                }
+                let stats = pool.exchange_stats();
+                assert!(stats.plans > 0, "{gname}/{strategy} K={k}: exchange never ran");
+                assert!(stats.frontier_vertices > 0, "{gname}/{strategy} K={k}");
+                if k == 1 {
+                    // single partition: everything is local, nothing to snap
+                    assert_eq!(stats.boundaries_snapped, 0, "{gname}/{strategy}");
+                    assert_eq!(pool.exchange().local_fraction(0), 1.0, "{gname}/{strategy}");
+                }
+            }
+        }
+    }
+}
+
+/// Attaching and detaching the map mid-stream must not leave residue: the
+/// same warm pool with the map detached again samples identically.
+#[test]
+fn detaching_the_partition_map_leaves_no_residue() {
+    let g = dense_graph();
+    let (pg, map) = partition_major(&g, "ldg", 3);
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[5, 5],
+    );
+    let seeds: Vec<u32> = (0..150).collect();
+    let mut pool = ScratchPool::new();
+    let before = sampler.sample_sharded(&pg, &seeds, 3, 4, &mut pool);
+    pool.set_partition_map(Some(map));
+    let with_map = sampler.sample_sharded(&pg, &seeds, 3, 4, &mut pool);
+    pool.set_partition_map(None);
+    let after = sampler.sample_sharded(&pg, &seeds, 3, 4, &mut pool);
+    assert_mfg_eq(&with_map, &before, "map attached");
+    assert_mfg_eq(&after, &before, "map detached");
+}
+
+/// The partition-split store is a pure accounting overlay over the same
+/// rows: gathers through it are bit-identical to the flat store for
+/// arbitrary cross-partition id mixes, and every row lands in exactly one
+/// of the local/remote counters.
+#[test]
+fn partitioned_gather_matches_flat_store_bit_for_bit() {
+    let g = dense_graph();
+    let nv = g.num_vertices();
+    let dim = 5usize;
+    let feats: Vec<f32> = (0..nv * dim).map(|x| (x as f32) * 0.25 - 7.0).collect();
+    let flat = FeatureStore::new(feats.clone(), dim, TierModel::local());
+    let mut rng = StreamRng::new(0xF1A7);
+    for &k in &PARTITION_COUNTS {
+        let assign = ldg_partition(&g, k, 1.05);
+        let (_, map) = partition_layout(&assign, k).unwrap();
+        let map = Arc::new(map);
+        let ps = PartitionedStore::split(&feats, dim, map.clone(), TierModel::remote());
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        for round in 0..6 {
+            let ids = seeds_for(&mut rng, nv as u32);
+            flat.gather(&ids, &mut want);
+            let home = ps.home_for(&ids);
+            assert!((home as usize) < k, "home partition out of range");
+            ps.gather_from(home, &ids, &mut got);
+            let wb: Vec<u32> = want.iter().map(|f| f.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(wb, gb, "K={k} round {round}: partition routing changed bytes");
+        }
+        let snap = ps.snapshot();
+        assert_eq!(snap.requests, 6, "K={k}");
+        assert!(snap.local_rows > 0, "K={k}: home partition served nothing");
+        if k == 1 {
+            assert_eq!(snap.remote_rows, 0, "K=1 must be all-local");
+            assert_eq!(ps.local_hit_fraction(), 1.0, "K=1");
+        } else {
+            assert!(snap.remote_rows > 0, "K={k}: mixed frontiers must cross partitions");
+        }
+    }
+}
+
+/// End-to-end through the pipeline, under **both** failure policies: a
+/// partitioned data plane delivers the same batches (samples and feature
+/// bytes) as the flat plane, regardless of supervision.
+#[test]
+fn partitioned_pipeline_is_policy_invariant_and_matches_flat() {
+    let g = Arc::new(dense_graph());
+    let nv = g.num_vertices();
+    let dim = 3usize;
+    let feats: Vec<f32> = (0..nv * dim).map(|x| (x % 131) as f32).collect();
+    let sampler = Arc::new(MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[5, 5],
+    ));
+    let ids: Arc<Vec<u32>> = Arc::new((0..400).collect());
+    let collect = |plane: DataPlaneConfig, policy: FailurePolicy| -> Vec<(Vec<u32>, Vec<f32>)> {
+        let mut p = SamplingPipeline::spawn(
+            g.clone(),
+            sampler.clone(),
+            ids.clone(),
+            PipelineConfig {
+                num_workers: 3,
+                queue_depth: 2,
+                batch_size: 64,
+                num_batches: 6,
+                seed: 9,
+                intra_batch_threads: 2,
+                data_plane: Some(plane),
+                output_perm: None,
+                failure_policy: policy,
+            },
+        );
+        let mut out: Vec<(u64, Vec<u32>, Vec<f32>)> =
+            (&mut p).map(|b| (b.batch_id, b.mfg.feature_vertices().to_vec(), b.feats)).collect();
+        p.join();
+        // batches may arrive in any worker order; compare by batch id
+        out.sort_by_key(|(id, _, _)| *id);
+        out.into_iter().map(|(_, v, f)| (v, f)).collect()
+    };
+    let store = Arc::new(FeatureStore::new(feats.clone(), dim, TierModel::local()));
+    let flat = collect(
+        DataPlaneConfig { store: store.clone(), labels: None, partitioned: None },
+        FailurePolicy::Propagate,
+    );
+    for policy in [FailurePolicy::Propagate, FailurePolicy::supervise()] {
+        let assign = ldg_partition(&g, 3, 1.05);
+        let (_, map) = partition_layout(&assign, 3).unwrap();
+        let ps = Arc::new(PartitionedStore::split(
+            &feats,
+            dim,
+            Arc::new(map),
+            TierModel::remote(),
+        ));
+        let part = collect(
+            DataPlaneConfig { store: store.clone(), labels: None, partitioned: Some(ps.clone()) },
+            policy.clone(),
+        );
+        assert_eq!(flat, part, "{policy:?}: partitioned plane changed delivered batches");
+        let snap = ps.snapshot();
+        assert_eq!(snap.requests, 6, "{policy:?}: one gather per batch");
+        assert!(snap.local_rows + snap.remote_rows > 0, "{policy:?}");
+    }
+}

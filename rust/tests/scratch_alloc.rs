@@ -175,6 +175,56 @@ fn fresh_scratch_pays_o_v_where_warm_does_not() {
     );
 }
 
+/// The serving coalescer's per-flush dedup runs in warm buffers: after a
+/// first (sizing) pass, re-coalescing a same-shape request stream makes
+/// **zero** allocations — the buffer-reuse contract of `FlushScratch`.
+#[test]
+fn warm_coalesce_buffers_allocate_nothing() {
+    use labor_gnn::coordinator::coalesce_seeds_into;
+    let seeds: Vec<u32> = (0..256u32).map(|i| (i * 7) % 90).collect();
+    let mut unique = Vec::new();
+    let mut pos = Vec::new();
+    let mut seen = std::collections::HashMap::new();
+    // cold pass sizes the buffers (and is *allowed* to allocate)
+    let (cold_allocs, _, ()) =
+        measure(|| coalesce_seeds_into(&seeds, &mut unique, &mut pos, &mut seen));
+    assert!(cold_allocs > 0, "probe broken: cold coalesce sized nothing");
+    let cold_unique = unique.clone();
+    let cold_pos = pos.clone();
+    // warm passes must reuse capacity: zero allocations, same answer
+    for round in 0..3 {
+        let (allocs, bytes, ()) =
+            measure(|| coalesce_seeds_into(&seeds, &mut unique, &mut pos, &mut seen));
+        assert_eq!(
+            allocs, 0,
+            "warm coalesce round {round} allocated ({allocs} allocs, {bytes} B)"
+        );
+        assert_eq!(unique, cold_unique, "warm coalesce changed the dedup result");
+        assert_eq!(pos, cold_pos);
+    }
+}
+
+/// Same contract for the partition frontier exchange: grouping a frontier
+/// by owning partition into a warm [`FrontierExchange`] is allocation-free.
+#[test]
+fn warm_frontier_exchange_allocates_nothing() {
+    use labor_gnn::graph::{FrontierExchange, PartitionMap};
+    let map = PartitionMap::from_bounds(vec![0, 100, 250, 400]).unwrap();
+    let frontier: Vec<u32> = (0..300u32).map(|i| (i * 13) % 400).collect();
+    let mut ex = FrontierExchange::new();
+    let (cold_allocs, _, ()) = measure(|| ex.group(&map, &frontier));
+    assert!(cold_allocs > 0, "probe broken: cold grouping sized nothing");
+    let cold_grouped = ex.grouped().to_vec();
+    for round in 0..3 {
+        let (allocs, bytes, ()) = measure(|| ex.group(&map, &frontier));
+        assert_eq!(
+            allocs, 0,
+            "warm frontier exchange round {round} allocated ({allocs} allocs, {bytes} B)"
+        );
+        assert_eq!(ex.grouped(), &cold_grouped[..], "warm grouping changed the result");
+    }
+}
+
 /// Steady-state allocation count stays a small constant — essentially the
 /// returned MFG's own vectors.
 #[test]

@@ -363,7 +363,7 @@ fn worker_panic_reaches_waiters_and_shutdown() {
         labor0(&[3]),
         ServingConfig {
             window: Duration::from_millis(1),
-            data_plane: Some(DataPlaneConfig { store, labels: None }),
+            data_plane: Some(DataPlaneConfig { store, labels: None, partitioned: None }),
             ..ServingConfig::default()
         },
     );
@@ -451,6 +451,7 @@ fn relabeled_serving_speaks_original_ids_end_to_end() {
             data_plane: Some(DataPlaneConfig {
                 store: store.clone(),
                 labels: Some(Arc::new(LabelStore::Single(Arc::new(labels)))),
+                partitioned: None,
             }),
             output_perm: Some(Arc::new(perm)),
             ..ServingConfig::default()
@@ -505,7 +506,11 @@ fn degree_cache_hit_rate_grows_with_request_skew() {
             ServingConfig {
                 window: Duration::ZERO,
                 max_batch: 1,
-                data_plane: Some(DataPlaneConfig { store: store.clone(), labels: None }),
+                data_plane: Some(DataPlaneConfig {
+                    store: store.clone(),
+                    labels: None,
+                    partitioned: None,
+                }),
                 ..ServingConfig::default()
             },
         );

@@ -15,12 +15,14 @@
 //! All trials run through one reused [`SamplerScratch`] — doubling as a
 //! long-haul soak of the arena (hundreds of epoch-map generations).
 
-use labor_gnn::coordinator::coalesce_seeds;
+use labor_gnn::coordinator::{coalesce_seeds, DegreeOrderedCache, FeatureStore, TierModel};
 use labor_gnn::graph::gen::{dc_sbm, DcSbmConfig};
+use labor_gnn::graph::partition::{ldg_partition, partition_layout};
 use labor_gnn::graph::CscGraph;
 use labor_gnn::sampler::{
     EpochMap, IterSpec, MfgSeedView, MultiLayerSampler, SamplerKind, SamplerScratch,
 };
+use std::sync::Arc;
 
 /// Same construction as the crate-internal `testutil::test_graph()`:
 /// dense, deterministic, 500 vertices, avg in-degree ≈ 60.
@@ -270,4 +272,150 @@ fn coalesced_labor_unique_vertices_never_exceed_sum_of_solo_runs() {
         "coalescing saved nothing over {trials} trials \
          ({coalesced_total} vs {solo_total} vertices)"
     );
+}
+
+/// The dense graph renumbered partition-major (LDG, K=4) — LABOR's
+/// guarantees are per-vertex-id, so a relabel must not disturb them, but
+/// the RNG *is* keyed by id: every variate changes under the relabel,
+/// which makes this a fresh Monte-Carlo draw, not a rerun.
+fn partition_ordered_graph() -> CscGraph {
+    let g = dense_graph();
+    let assign = ldg_partition(&g, 4, 1.05);
+    let (perm, _map) = partition_layout(&assign, 4).unwrap();
+    perm.apply_to_graph(&g)
+}
+
+/// §3.2 degree floor, re-asserted on the partition-ordered graph: the
+/// partition-major relabel (the layout the partition engine serves from)
+/// must not cost any seed its expected sampled degree.
+#[test]
+fn labor_degree_floor_holds_on_partition_ordered_graphs() {
+    let pg = partition_ordered_graph();
+    let seeds: Vec<u32> = (0..40).collect();
+    let k = 5usize;
+    let trials = 250u64;
+    let tol = 0.45; // > 3σ of the trial mean, as in the original-layout test
+    let mut scratch = SamplerScratch::new();
+    for iterations in [IterSpec::Fixed(0), IterSpec::Fixed(1)] {
+        let kind = SamplerKind::Labor { iterations, layer_dependent: false };
+        let label = kind.label();
+        let sampler = MultiLayerSampler::new(kind, &[k]);
+        let mut mean_deg = vec![0.0f64; seeds.len()];
+        for trial in 0..trials {
+            let mfg = sampler.sample(&pg, &seeds, 0x9A67 ^ trial, &mut scratch);
+            for (si, d) in mfg.layers[0].sampled_degrees().iter().enumerate() {
+                mean_deg[si] += *d as f64;
+            }
+        }
+        for (si, &s) in seeds.iter().enumerate() {
+            let floor = pg.in_degree(s).min(k) as f64;
+            let got = mean_deg[si] / trials as f64;
+            assert!(
+                got >= floor - tol,
+                "{label} on partition-major: seed {s} E[d̃]={got:.3} < min(k, d)={floor} - {tol}"
+            );
+        }
+    }
+}
+
+/// The vertex-savings claim, re-asserted on the partition-ordered graph:
+/// LABOR-0 still samples strictly fewer unique inputs than NS after the
+/// partition-major relabel — smaller frontiers stay smaller cross-partition
+/// traffic no matter how the ids are laid out.
+#[test]
+fn labor0_beats_ns_on_partition_ordered_graphs() {
+    let pg = partition_ordered_graph();
+    let seeds: Vec<u32> = (0..200).collect();
+    let k = 10usize;
+    let trials = 250u64;
+    let labor = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[k],
+    );
+    let ns = MultiLayerSampler::new(SamplerKind::Neighbor, &[k]);
+    let mut scratch = SamplerScratch::new();
+    let mut labor_total = 0usize;
+    let mut ns_total = 0usize;
+    let mut labor_wins = 0usize;
+    for trial in 0..trials {
+        let lv = labor.sample(&pg, &seeds, trial, &mut scratch).layers[0].num_inputs();
+        let nv = ns.sample(&pg, &seeds, trial, &mut scratch).layers[0].num_inputs();
+        labor_total += lv;
+        ns_total += nv;
+        if lv < nv {
+            labor_wins += 1;
+        }
+    }
+    assert!(
+        labor_total < ns_total,
+        "partition-major: LABOR-0 sampled {labor_total} unique inputs vs NS {ns_total}"
+    );
+    assert!(
+        labor_wins as f64 >= 0.95 * trials as f64,
+        "partition-major: LABOR-0 beat NS in only {labor_wins}/{trials} batches"
+    );
+}
+
+/// [`DegreeOrderedCache`] fronting a *partition-local* feature store
+/// (partition 0's rows of the partition-major layout): hit rate is
+/// monotone non-decreasing in capacity on a fixed LABOR-frontier
+/// workload, and a full-capacity cache hits every row. The partition
+/// relabel breaks the degree-order/id-order alignment, so this pins the
+/// cache's general (non-prefix) membership path, not the `id < k` fast
+/// path the degree layout enjoys.
+#[test]
+fn degree_ordered_cache_hit_rate_is_monotone_over_a_partition_local_store() {
+    let g = dense_graph();
+    let assign = ldg_partition(&g, 4, 1.05);
+    let (perm, map) = partition_layout(&assign, 4).unwrap();
+    let pg = perm.apply_to_graph(&g);
+    let nv = pg.num_vertices();
+    let n0 = map.range(0).end as usize; // partition 0 is the id range 0..n0
+    assert!(n0 > 0 && n0 < nv, "degenerate partition 0");
+    let dim = 4usize;
+    let feats: Vec<f32> = (0..n0 * dim).map(|x| x as f32).collect();
+    // workload: LABOR-0 frontiers on the partition-major graph, cut down
+    // to the ids partition 0's worker gathers from its local store
+    let sampler = MultiLayerSampler::new(
+        SamplerKind::Labor { iterations: IterSpec::Fixed(0), layer_dependent: false },
+        &[8, 8],
+    );
+    let mut scratch = SamplerScratch::new();
+    let workload: Vec<Vec<u32>> = (0..30u64)
+        .map(|b| {
+            let start = (b as u32 * 37) % nv as u32;
+            let mut seeds: Vec<u32> = (0..60).map(|i| (start + i * 3) % nv as u32).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            sampler
+                .sample(&pg, &seeds, b, &mut scratch)
+                .feature_vertices()
+                .iter()
+                .copied()
+                .filter(|&v| (v as usize) < n0)
+                .collect()
+        })
+        .collect();
+    assert!(workload.iter().any(|ids| !ids.is_empty()), "workload never touched partition 0");
+    let mut prev = -1.0f64;
+    for cap in [0usize, 16, 48, 96, nv] {
+        let cache = Arc::new(DegreeOrderedCache::new(&pg, cap));
+        if cap == 48 {
+            // the top-48 degrees are spread across partitions, so the
+            // resident set cannot be an id prefix here
+            assert!(!cache.is_prefix(), "partition-major layout took the prefix fast path");
+        }
+        let store = FeatureStore::new(feats.clone(), dim, TierModel::local()).with_cache(cache);
+        let mut out = Vec::new();
+        for ids in &workload {
+            store.gather(ids, &mut out);
+        }
+        let hr = store.hit_rate();
+        assert!(
+            hr >= prev,
+            "hit rate regressed when capacity grew to {cap}: {hr:.4} < {prev:.4}"
+        );
+        prev = hr;
+    }
+    assert!((prev - 1.0).abs() < 1e-12, "full-capacity cache must hit every row, got {prev}");
 }
